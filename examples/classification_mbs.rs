@@ -1,0 +1,60 @@
+//! Classification workload (paper section 4.3.2, table 4 shape): sweep
+//! mini-batch sizes far past the memory frontier on the ResNet analogue,
+//! reporting accuracy and epoch time for both arms.
+//!
+//! Run: `cargo run --release --example classification_mbs [-- --epochs 3]`
+
+use mbs::memory::{Footprint, MemoryModel};
+use mbs::metrics::Table;
+use mbs::prelude::*;
+use mbs::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>())
+        .map_err(MbsError::Config)?;
+    let epochs: usize = args.get_parse_or("epochs", 2).map_err(MbsError::Config)?;
+    let dataset_len: usize = args.get_parse_or("dataset-len", 256).map_err(MbsError::Config)?;
+
+    let manifest = Manifest::load("artifacts")?;
+    let mut engine = Engine::new(manifest)?;
+
+    // capacity: native max = 16 (paper's ResNet-50 row of table 2)
+    let entry = engine.manifest().model("microresnet18")?.clone();
+    let variant = entry.variant(16, 16)?.clone();
+    let fp = Footprint::from_manifest(&entry, &variant);
+    let cap_mib = MemoryModel::capacity_for_native_max(&fp, 16).div_ceil(MIB);
+
+    let mut table = Table::new(&[
+        "batch", "mu", "acc w/o MBS", "acc w/ MBS", "epoch s w/o", "epoch s w/",
+    ]);
+    for batch in [16usize, 32, 64, 128, 256] {
+        let mut cells = vec![batch.to_string(), "16".to_string()];
+        let mut times = vec!["Failed".to_string(), "-".to_string()];
+        for (slot, use_mbs) in [(0usize, false), (1usize, true)] {
+            let mut cfg = TrainConfig::builder("microresnet18")
+                .mu(16)
+                .batch(batch)
+                .epochs(epochs)
+                .dataset_len(dataset_len)
+                .eval_len(64)
+                .capacity_mib(cap_mib)
+                .build();
+            cfg.use_mbs = use_mbs;
+            match mbs::train(&mut engine, &cfg) {
+                Ok(r) => {
+                    cells.push(format!("{:.2}%", 100.0 * r.best_metric()));
+                    times[slot] = format!("{:.2}", r.epoch_wall_mean.as_secs_f64());
+                }
+                Err(e) if e.is_oom() => cells.push("Failed".into()),
+                Err(e) => return Err(e),
+            }
+        }
+        cells.push(times[0].clone());
+        cells.push(times[1].clone());
+        table.row(&cells);
+    }
+    println!("microresnet18 (ResNet-50 analogue), capacity {cap_mib} MiB, native max 16:\n");
+    println!("{}", table.render());
+    println!("shape check vs paper table 4: native trains only at 16; MBS trains every row.");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md E2E): train the transformer LM for a few
+//! hundred optimizer steps on synthetic token data, under a memory budget
+//! its mini-batch could never fit natively, and log the loss curve.
+//!
+//! This is the run recorded in EXPERIMENTS.md (E2E): it proves all layers
+//! compose — synthetic data (L3) -> streaming + loss-normalized
+//! accumulation (L3) -> the jax-lowered transformer fwd/bwd with pallas
+//! matmul + fused CE inside (L2/L1) -> Adam update — with python nowhere on
+//! the path.
+//!
+//! Run: `cargo run --release --example e2e_transformer [-- --steps 200]`
+
+use mbs::memory::{Footprint, MemoryModel};
+use mbs::prelude::*;
+use mbs::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>())
+        .map_err(MbsError::Config)?;
+    let steps: usize = args.get_parse_or("steps", 200).map_err(MbsError::Config)?;
+    let batch: usize = args.get_parse_or("batch", 32).map_err(MbsError::Config)?;
+    let mu: usize = args.get_parse_or("mu", 8).map_err(MbsError::Config)?;
+    let csv = args.get_or("csv", "e2e_transformer_curve.csv").to_string();
+
+    let manifest = Manifest::load("artifacts")?;
+    let mut engine = Engine::new(manifest)?;
+
+    // capacity: just enough for the mu-sized step -> batch/mu x beyond limit
+    let entry = engine.manifest().model("microformer")?.clone();
+    let variant = entry.variant(64, mu)?.clone();
+    let fp = Footprint::from_manifest(&entry, &variant);
+    let cap_mib = MemoryModel::capacity_for_native_max(&fp, mu).div_ceil(MIB);
+
+    // `steps` optimizer updates = steps mini-batches; one epoch per
+    // dataset pass, so pick dataset_len = batch * steps_per_epoch
+    let steps_per_epoch = 20usize;
+    let epochs = steps.div_ceil(steps_per_epoch);
+    let cfg = TrainConfig::builder("microformer")
+        .size(64)
+        .mu(mu)
+        .batch(batch)
+        .epochs(epochs)
+        .dataset_len(batch * steps_per_epoch)
+        .eval_len(64)
+        .capacity_mib(cap_mib)
+        .lr(3e-4)
+        .build();
+
+    println!(
+        "e2e transformer: {} params, batch {batch} (native max {}), mu {mu}, {} updates",
+        entry.param_bytes / 4,
+        MemoryModel::new(cap_mib * MIB, fp.clone()).native_max_batch(),
+        epochs * steps_per_epoch,
+    );
+
+    // native arm must fail at this batch
+    let mut native = cfg.clone();
+    native.use_mbs = false;
+    match mbs::train(&mut engine, &native) {
+        Err(e) if e.is_oom() => println!("native arm: {e}"),
+        other => println!("native arm unexpectedly: {:?}", other.map(|r| r.batch)),
+    }
+
+    let report = mbs::train(&mut engine, &cfg)?;
+    println!("\nepoch, train_loss, eval_loss, token_acc, wall_s");
+    let mut curve = mbs::metrics::CurveWriter::default();
+    for (t, e) in report.train_epochs.iter().zip(&report.eval_epochs) {
+        println!(
+            "{:>4}, {:.4}, {:.4}, {:.4}, {:.2}",
+            t.epoch, t.mean_loss, e.mean_loss, e.primary_metric, t.wall.as_secs_f64()
+        );
+        curve.push("train", t.clone());
+        curve.push("eval", e.clone());
+    }
+    curve.write_file(std::path::Path::new(&csv))?;
+    let first = report.train_epochs.first().unwrap().mean_loss;
+    let last = report.train_epochs.last().unwrap().mean_loss;
+    println!(
+        "\nloss {first:.4} -> {last:.4} over {} updates ({}x batch headroom vs native); curve -> {csv}",
+        report.updates,
+        batch / mu
+    );
+    assert!(last < first, "LM loss should improve");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Memory-frontier explorer (table 1 / section 1 motivation): for each
+//! model and image size, show how the native max batch shrinks as
+//! resolution grows and capacity falls — and that the MBS-feasible batch is
+//! unbounded whenever one micro-batch fits.
+//!
+//! Run: `cargo run --release --example memory_frontier`
+
+use mbs::memory::{Footprint, MemoryModel};
+use mbs::metrics::Table;
+use mbs::prelude::*;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let mut table = Table::new(&[
+        "model", "size", "capacity MiB", "native max batch", "MBS max batch (mu)",
+    ]);
+    for entry in manifest.models.values() {
+        for v in &entry.variants {
+            let fp = Footprint::from_manifest(entry, v);
+            for cap_mib in [64u64, 128, 256, 512] {
+                let mem = MemoryModel::new(cap_mib * MIB, fp.clone());
+                let native = mem.native_max_batch();
+                let mbs_ok = mem.check_step(v.mu, "mu").is_ok();
+                table.row(&[
+                    entry.name.clone(),
+                    v.size.to_string(),
+                    cap_mib.to_string(),
+                    native.to_string(),
+                    if mbs_ok { format!("unbounded (mu={})", v.mu) } else { "Failed".into() },
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "reading: wherever 'native max batch' < desired batch but the mu column is\n\
+         'unbounded', the paper's method turns a Failed cell into a trainable one.\n\
+         higher resolutions (size column) shrink the native frontier fastest —\n\
+         the table-1 motivation."
+    );
+    Ok(())
+}

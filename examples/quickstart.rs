@@ -1,0 +1,50 @@
+//! Quickstart: train a classifier with a mini-batch 4x larger than the
+//! simulated device can hold, then show the native baseline failing at the
+//! same batch size — the paper's core claim in ~40 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mbs::prelude::*;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let mut engine = Engine::new(manifest)?;
+
+    // capacity sized so the native maximum batch is 16 (paper table 2 row 1)
+    let capacity_mib = 96;
+
+    // --- with MBS: batch 64 streams as 4 micro-batches of 16 -------------
+    let cfg = TrainConfig::builder("microresnet18")
+        .batch(64)
+        .mu(16)
+        .epochs(2)
+        .dataset_len(256)
+        .eval_len(64)
+        .capacity_mib(capacity_mib)
+        .build();
+    let report = mbs::train(&mut engine, &cfg)?;
+    println!("w/ MBS : batch 64 trained fine.");
+    for (t, e) in report.train_epochs.iter().zip(&report.eval_epochs) {
+        println!(
+            "  epoch {}  train loss {:.4}  eval acc {:.2}%  ({:.2}s)",
+            t.epoch,
+            t.mean_loss,
+            100.0 * e.primary_metric,
+            t.wall.as_secs_f64()
+        );
+    }
+    println!(
+        "  device: {:.0} MiB capacity, native max batch {}",
+        report.capacity_bytes as f64 / MIB as f64,
+        report.native_max_batch
+    );
+
+    // --- without MBS: same batch OOMs ------------------------------------
+    let mut native = cfg.clone();
+    native.use_mbs = false;
+    match mbs::train(&mut engine, &native) {
+        Err(e) if e.is_oom() => println!("w/o MBS: batch 64 -> {e}"),
+        other => println!("unexpected: {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT export.
+
+Nothing in this package is imported at runtime; ``python -m compile.aot``
+produces ``artifacts/`` (HLO text + manifest + initial params) and the rust
+binary is self-contained afterwards.
+"""

@@ -1,0 +1,113 @@
+"""L1/L2 performance analysis: XLA cost analysis per variant + Pallas
+block-shape sweep (VMEM footprint / MXU utilization estimates).
+
+Usage:  cd python && python -m compile.analyze [--models m1 m2]
+
+This is the profiling half of the SSPerf deliverable for the build-time
+layers: interpret=True wall-clock is CPU-numpy time and NOT a TPU proxy, so
+L1 is evaluated structurally — does each candidate block shape fit VMEM,
+and what fraction of MXU work is useful — while L2 is evaluated with XLA's
+own cost model on the compiled executable (flops, bytes accessed, peak
+memory, fusion quality).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from . import shapes
+from .aot import VARIANTS
+from .kernels import matmul_pallas
+from .model import MODELS, build_accum_step, init_params
+
+
+def xla_cost(model_key: str, size: int, mu: int, seed: int = 0) -> dict:
+    """Compile the accum step and read XLA's cost analysis."""
+    spec = MODELS[model_key]
+    params = init_params(spec, seed)
+    accum = build_accum_step(spec)
+    (x_shape, x_dtype), (y_shape, y_dtype) = spec.io_shapes(mu, size)
+    args = (
+        params,
+        jax.tree_util.tree_map(jnp.zeros_like, params),
+        jnp.zeros(x_shape, x_dtype),
+        jnp.zeros(y_shape, y_dtype),
+        jnp.ones((mu,), jnp.float32),
+        jnp.array([1.0 / mu], jnp.float32),
+    )
+    compiled = jax.jit(accum).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "intensity": float(cost.get("flops", 0.0))
+        / max(float(cost.get("bytes accessed", 1.0)), 1.0),
+    }
+
+
+def block_sweep(m: int, k: int, n: int) -> list[dict]:
+    """Evaluate candidate matmul block shapes for an MxKxN hot-spot."""
+    rows = []
+    for bm, bk, bn in [
+        (32, 32, 32),
+        (64, 64, 64),
+        (128, 128, 128),
+        (128, 256, 128),
+        (256, 128, 256),
+        (512, 512, 512),
+    ]:
+        vmem = matmul_pallas.vmem_footprint_bytes(bm, bk, bn)
+        util = matmul_pallas.mxu_utilization_estimate(m, k, n, bm=bm, bk=bk, bn=bn)
+        rows.append(
+            {
+                "block": f"{bm}x{bk}x{bn}",
+                "vmem_kib": vmem / 1024,
+                # budget: 16 MiB core / (fwd+bwd operand sets) / double
+                # buffering -> ~2 MiB per in-flight block set
+                "fits_vmem": vmem <= 2 * 2**20,
+                "mxu_util": util,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", nargs="*", default=None)
+    args = ap.parse_args()
+
+    print("== L2: XLA cost analysis of accum_step (per micro-batch) ==")
+    print(f"{'variant':34s} {'GFLOP':>8s} {'MB moved':>9s} {'intensity':>9s}")
+    for mk, size, mu in VARIANTS:
+        if args.models and mk not in args.models:
+            continue
+        c = xla_cost(mk, size, mu)
+        print(
+            f"{mk + f'_s{size}_mu{mu}':34s} {c['flops']/1e9:8.3f} "
+            f"{c['bytes']/1e6:9.2f} {c['intensity']:9.1f}"
+        )
+
+    print("\n== L1: pallas matmul block-shape sweep ==")
+    # representative hot-spots: transformer ffn (512x128 @ 128x512 per token
+    # block) and the unet 1x1 bottleneck
+    for (m, k, n, label) in [
+        (512, 128, 512, "microformer ffn (B*T=512)"),
+        (1152, 64, 64, "microunet 1x1 (24x24x. @ mu8)"),
+        (128, 128, 102, "classifier head"),
+    ]:
+        print(f"\n  hot-spot: {label}  ({m}x{k}x{n})")
+        print(f"  {'block':16s} {'VMEM KiB':>9s} {'fits':>5s} {'MXU util':>9s}")
+        for row in block_sweep(m, k, n):
+            print(
+                f"  {row['block']:16s} {row['vmem_kib']:9.0f} "
+                f"{str(row['fits_vmem']):>5s} {row['mxu_util']:9.2%}"
+            )
+
+
+if __name__ == "__main__":
+    main()

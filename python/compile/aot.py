@@ -1,0 +1,185 @@
+"""AOT exporter: lowers every (model x size x mu) variant to HLO text.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces:
+  artifacts/<model>_s<size>_mu<mu>.accum.hlo.txt
+  artifacts/<model>_s<size>_mu<mu>.eval.hlo.txt
+  artifacts/<model>.apply.hlo.txt
+  artifacts/<model>.params.bin          (f32 LE, leaves in tree order)
+  artifacts/manifest.json               (shapes, offsets, memory estimates)
+
+Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects jax>=0.5
+serialized HloModuleProto (64-bit instruction ids), but its text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import optim, shapes
+from .model import MODELS, build_accum_step, build_apply, build_eval_step, init_params
+
+# (model, image-size-or-seqlen, mu). The mu values give: the paper's
+# "half-native" mu for the Fig.3 / T3 comparisons and the "native max" mu
+# used for every large-batch row of T4/T5 (section 4.3.2: "the maximum size
+# that can compute on GPU").
+VARIANTS: List[Tuple[str, int, int]] = [
+    ("microresnet18", 16, 8),
+    ("microresnet18", 16, 16),
+    ("microresnet18", 32, 16),  # Table 1 high-res point
+    ("microresnet34", 16, 4),
+    ("microresnet34", 16, 8),
+    ("amoebacell", 24, 16),
+    ("amoebacell", 24, 32),
+    ("microunet", 24, 8),
+    ("microunet", 24, 16),
+    ("microunet", 48, 16),  # Table 1 high-res point
+    ("microformer", 64, 4),
+    ("microformer", 64, 8),
+]
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(lambda l: _sds(l.shape, l.dtype), tree)
+
+
+def export_model(model_key: str, out_dir: str, seed: int, quiet: bool) -> dict:
+    spec = MODELS[model_key]
+    params = init_params(spec, seed)
+    names, leaves = shapes.flatten_params(params)
+    pbin = f"{model_key}.params.bin"
+    index = shapes.dump_params(params, os.path.join(out_dir, pbin))
+    pbytes = shapes.param_bytes(params)
+
+    info = optim.OPTIMIZERS[spec.optimizer]
+    apply_fn, _ = build_apply(spec)
+    aparams = _abstract(params)
+    hyper = _sds((len(info["hyper"]),), jnp.float32)
+    slot_args = [aparams] * info["slots"]
+    lowered = jax.jit(apply_fn).lower(aparams, aparams, *slot_args, hyper)
+    apply_name = f"{model_key}.apply.hlo.txt"
+    with open(os.path.join(out_dir, apply_name), "w") as f:
+        f.write(to_hlo_text(lowered))
+    if not quiet:
+        print(f"  apply   -> {apply_name}")
+
+    entry = {
+        "task": spec.task,
+        "optimizer": {
+            "kind": spec.optimizer,
+            "slots": info["slots"],
+            "hyper_names": info["hyper"],
+            "hyper_defaults": list(spec.hyper),
+        },
+        "params_bin": pbin,
+        "param_leaves": index,
+        "param_bytes": pbytes,
+        "apply_hlo": apply_name,
+        "metric_semantics": spec.task,
+        "default_size": spec.default_size,
+        "variants": [],
+    }
+
+    accum = build_accum_step(spec)
+    eval_step = build_eval_step(spec)
+    for mk, size, mu in VARIANTS:
+        if mk != model_key:
+            continue
+        (x_shape, x_dtype), (y_shape, y_dtype) = spec.io_shapes(mu, size)
+        x = _sds(x_shape, x_dtype)
+        y = _sds(y_shape, y_dtype)
+        mask = _sds((mu,), jnp.float32)
+        scale = _sds((1,), jnp.float32)
+
+        tag = f"{model_key}_s{size}_mu{mu}"
+        acc_lowered = jax.jit(accum).lower(aparams, aparams, x, y, mask, scale)
+        accum_name = f"{tag}.accum.hlo.txt"
+        with open(os.path.join(out_dir, accum_name), "w") as f:
+            f.write(to_hlo_text(acc_lowered))
+        ev_lowered = jax.jit(eval_step).lower(aparams, x, y, mask)
+        eval_name = f"{tag}.eval.hlo.txt"
+        with open(os.path.join(out_dir, eval_name), "w") as f:
+            f.write(to_hlo_text(ev_lowered))
+
+        # activation residency estimate for the rust memory model, from the
+        # jaxpr of the fwd+bwd step (see shapes.py docstring)
+        def step_for_mem(p, xx, yy, mm, ss):
+            def lf(q):
+                out = spec.apply(q, xx)
+                return ss[0] * jnp.sum(spec.loss(out, yy) * mm)
+
+            return jax.value_and_grad(lf)(p)
+
+        per_sample, fixed = shapes.activation_bytes(
+            step_for_mem, aparams, x, y, mask, scale, batch=mu
+        )
+        entry["variants"].append(
+            {
+                "mu": mu,
+                "size": size,
+                "x_shape": list(x_shape),
+                "x_dtype": DTYPE_NAMES[jnp.dtype(x_dtype)],
+                "y_shape": list(y_shape),
+                "y_dtype": DTYPE_NAMES[jnp.dtype(y_dtype)],
+                "accum_hlo": accum_name,
+                "eval_hlo": eval_name,
+                "activation_bytes_per_sample": per_sample,
+                "fixed_bytes": fixed,
+            }
+        )
+        if not quiet:
+            print(
+                f"  variant -> {tag}: act/sample={per_sample/1e3:.1f}KB"
+                f" fixed={fixed/1e6:.2f}MB"
+            )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--models", nargs="*", default=None, help="subset of model keys")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    model_keys = args.models or sorted({mk for mk, _, _ in VARIANTS})
+    manifest = {"version": 1, "seed": args.seed, "models": {}}
+    for mk in model_keys:
+        if not args.quiet:
+            print(f"[aot] {mk}")
+        manifest["models"][mk] = export_model(mk, args.out_dir, args.seed, args.quiet)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not args.quiet:
+        print(f"[aot] wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the compute hot-spots (tiled matmul, fused CE).
+
+All kernels run under ``interpret=True`` so they lower to plain HLO the CPU
+PJRT client can execute; see DESIGN.md (Hardware-Adaptation) for the TPU
+mapping and EXPERIMENTS.md (Perf) for the VMEM/MXU analysis.
+"""
+
+from .fused_ce import cross_entropy
+from .matmul_pallas import matmul, matmul_raw
+
+__all__ = ["cross_entropy", "matmul", "matmul_raw"]

@@ -1,0 +1,138 @@
+"""L1 Pallas fused softmax-cross-entropy with normalization scale.
+
+This is the loss-normalization hot path of the paper (Alg. 1 line 10-11):
+per-sample CE losses are produced in one VMEM-resident pass (max, exp-sum,
+log-sum-exp, label pick) instead of staging softmax intermediates to HBM the
+way a chain of jnp ops would between kernel launches. The softmax
+probabilities are kept as the VJP residual, so the backward pass is a second
+single-pass kernel computing (probs - onehot(y)) * g.
+
+Shapes: logits f32[B, C], labels int32[B]. The class axis is padded to a lane
+multiple with -inf so padding classes get zero probability; the batch axis is
+tiled by `bb` rows per grid step.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BB = 8  # batch rows per grid step
+LANE = 128      # class-axis padding multiple (TPU lane width)
+
+_NEG_INF = -1e30
+
+
+def _ce_fwd_kernel(logits_ref, labels_ref, loss_ref, probs_ref, *, num_classes: int):
+    """One batch tile: per-row LSE loss + softmax probs, all in VMEM."""
+    logits = logits_ref[...]  # [bb, Cp]
+    labels = labels_ref[...]  # [bb]
+    row_max = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - row_max
+    exp = jnp.exp(shifted)
+    denom = jnp.sum(exp, axis=-1, keepdims=True)
+    probs = exp / denom
+    lse = jnp.log(denom)[:, 0] + row_max[:, 0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    onehot = (cols == labels[:, None]).astype(jnp.float32)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    loss_ref[...] = lse - picked
+    probs_ref[...] = probs
+
+
+def _ce_bwd_kernel(probs_ref, labels_ref, g_ref, dlogits_ref):
+    probs = probs_ref[...]
+    labels = labels_ref[...]
+    g = g_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    onehot = (cols == labels[:, None]).astype(jnp.float32)
+    dlogits_ref[...] = (probs - onehot) * g[:, None]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad_class_axis(logits: jax.Array) -> jax.Array:
+    c = logits.shape[-1]
+    cp = _round_up(c, LANE)
+    if cp == c:
+        return logits
+    return jnp.pad(logits, ((0, 0), (0, cp - c)), constant_values=_NEG_INF)
+
+
+def _fwd_raw(logits: jax.Array, labels: jax.Array, *, bb: int = DEFAULT_BB):
+    b, c = logits.shape
+    lp = _pad_class_axis(logits)
+    cp = lp.shape[-1]
+    bb = min(bb, b)
+    bp = _round_up(b, bb)
+    if bp != b:
+        lp = jnp.pad(lp, ((0, bp - b), (0, 0)))
+        labels = jnp.pad(labels, (0, bp - b))
+    grid = (bp // bb,)
+    loss, probs = pl.pallas_call(
+        functools.partial(_ce_fwd_kernel, num_classes=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, cp), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, cp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+            jax.ShapeDtypeStruct((bp, cp), jnp.float32),
+        ],
+        interpret=True,
+    )(lp, labels)
+    return loss[:b], probs, bp, cp
+
+
+@jax.custom_vjp
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-sample softmax cross-entropy: f32[B,C], int32[B] -> f32[B]."""
+    loss, _, _, _ = _fwd_raw(logits, labels)
+    return loss
+
+
+def _ce_fwd(logits, labels):
+    loss, probs, bp, cp = _fwd_raw(logits, labels)
+    return loss, (probs, labels, logits.shape, bp, cp)
+
+
+def _ce_bwd(res, g):
+    probs, labels, (b, c), bp, cp = res
+    bb = min(DEFAULT_BB, b)
+    gp = jnp.pad(g, (0, bp - b)) if bp != b else g
+    labp = jnp.pad(labels, (0, bp - b)) if bp != b else labels
+    grid = (bp // bb,)
+    dlogits = pl.pallas_call(
+        _ce_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, cp), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, cp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, cp), jnp.float32),
+        interpret=True,
+    )(probs, labp, gp)
+    return dlogits[:b, :c], None
+
+
+cross_entropy.defvjp(_ce_fwd, _ce_bwd)
+
+
+def vmem_footprint_bytes(bb: int, num_classes: int) -> int:
+    """Forward-pass VMEM bytes per grid step (logits tile + probs tile + rows)."""
+    cp = _round_up(num_classes, LANE)
+    return 4 * (2 * bb * cp + 3 * bb)

@@ -1,0 +1,136 @@
+"""L1 Pallas tiled matmul — the compute hot-spot of every model in the zoo.
+
+TPU-shaped: the grid tiles (M, N, K) into VMEM-resident blocks sized for the
+MXU systolic array (128x128 native; smaller tiles are used for the scaled-down
+models so a block never exceeds the VMEM budget). The K axis is the innermost
+grid dimension and revisits the same output block, accumulating partial
+products in place — the BlockSpec index maps express the HBM<->VMEM schedule
+that a CUDA implementation would express with threadblocks + shared memory.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO. Real-TPU perf is estimated
+analytically in DESIGN.md / EXPERIMENTS.md SSPerf from the VMEM footprint and
+MXU utilization of the chosen block shapes.
+
+A `jax.custom_vjp` wrapper makes the kernel differentiable (dA = g @ B^T,
+dB = A^T @ g, both computed with the same tiled kernel) so the whole model
+fwd/bwd lowers into one HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes. The K/N edges stay at 128 (MXU edge); the M edge is
+# 512 after the SSPerf block sweep (EXPERIMENTS.md): M-rows stream through
+# the systolic array, so a taller M block amortizes grid-step overhead 2.5x
+# at 589 KiB VMEM/step (3.6% of a core), with zero utilization loss — the
+# padding helper rounds every operand up so blocks evenly divide the padded
+# problem, and `_block_dims` shrinks blocks for small problems.
+DEFAULT_BM = 512
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j].
+
+    The output block is revisited for every k, so it doubles as the VMEM
+    accumulator; it is zeroed on the first K-step and holds the finished
+    tile after the last one.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _block_dims(m: int, k: int, n: int, bm: int, bk: int, bn: int):
+    """Shrink blocks for problems smaller than one default tile."""
+    return min(bm, _round_up(m, 8)), min(bk, _round_up(k, 8)), min(bn, _round_up(n, 8))
+
+
+def matmul_raw(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """Tiled pallas matmul for f32[M,K] @ f32[K,N]; pads to block multiples."""
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul_raw expects rank-2 operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    bm, bk, bn = _block_dims(m, k, n, bm, bk, bn)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else y
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable tiled pallas matmul (f32[M,K] @ f32[K,N] -> f32[M,N])."""
+    return matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # Both cotangents reuse the tiled kernel so the backward pass stays on
+    # the same MXU schedule as the forward pass.
+    return matmul_raw(g, y.T), matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm: int = DEFAULT_BM, bk: int = DEFAULT_BK, bn: int = DEFAULT_BN) -> int:
+    """Bytes of VMEM one grid step touches (x, y blocks + output accumulator).
+
+    Used by the SSPerf analysis: must stay well under ~16 MiB/core.
+    """
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, *, bm: int = DEFAULT_BM,
+                             bk: int = DEFAULT_BK, bn: int = DEFAULT_BN) -> float:
+    """Fraction of MXU work that is useful (non-padding) for an MxKxN problem."""
+    bm, bk, bn = _block_dims(m, k, n, bm, bk, bn)
+    useful = m * k * n
+    padded = _round_up(m, bm) * _round_up(k, bk) * _round_up(n, bn)
+    return useful / padded

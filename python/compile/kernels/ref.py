@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references the pytest suite (and hypothesis shape
+sweeps) compare the kernels against. They intentionally use the most naive
+formulation so any cleverness in the kernels is checked against arithmetic
+that is obviously right.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """f32[M,K] @ f32[K,N] -> f32[M,N]."""
+    return jnp.matmul(x, y)
+
+
+def cross_entropy_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-sample softmax cross-entropy, numerically stable log-sum-exp."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - picked
+
+
+def cross_entropy_grad_ref(logits: jax.Array, labels: jax.Array, g: jax.Array) -> jax.Array:
+    """d(sum(g * ce)) / dlogits = (softmax - onehot) * g."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return (probs - onehot) * g[:, None]

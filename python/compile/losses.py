@@ -1,0 +1,89 @@
+"""Task losses + metric vectors for the step functions.
+
+Every loss returns a *per-sample* loss vector f32[B]; the accumulation step
+multiplies by the sample mask and the normalization scale (Alg. 1), so one
+exported executable serves every mini-batch size and both normalization
+modes (paper 1/N_Smu vs exact 1/N_B).
+
+Metrics are a fixed f32[4] vector so the rust side has one ABI for every
+task; the manifest records the semantics:
+  classification: [correct, valid, 0, 0]
+  segmentation:   [intersection, union, 2*|A.B|, |A|+|B|]  (IoU + Dice parts)
+  lm:             [correct_tokens, total_tokens, 0, 0]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# classification (paper: cross-entropy, ResNet/AmoebaNet)
+# ---------------------------------------------------------------------------
+
+def ce_per_sample(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """f32[B,C], int32[B] -> f32[B] via the L1 fused pallas CE kernel."""
+    return cross_entropy(logits, labels)
+
+
+def classification_metric(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == labels).astype(jnp.float32) * mask)
+    return jnp.stack([correct, jnp.sum(mask), 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# segmentation (paper: BCE + Dice, U-Net; eqs. 18-20)
+# ---------------------------------------------------------------------------
+
+def bce_dice_per_sample(logits: jax.Array, target: jax.Array) -> jax.Array:
+    """f32[B,H,W,1] logits + f32[B,H,W,1] {0,1} masks -> f32[B].
+
+    L_total = L_bce + L_dc, with L_dc = 1 - 2|A.B| / (|A|+|B|) computed on
+    sigmoid probabilities (soft Dice), matching the paper's eq. 19-20.
+    """
+    b = logits.shape[0]
+    lf = logits.reshape(b, -1)
+    tf = target.reshape(b, -1)
+    # stable BCE-with-logits, mean over pixels
+    bce = jnp.mean(jnp.maximum(lf, 0.0) - lf * tf + jnp.log1p(jnp.exp(-jnp.abs(lf))), axis=-1)
+    probs = jax.nn.sigmoid(lf)
+    inter = jnp.sum(probs * tf, axis=-1)
+    denom = jnp.sum(probs, axis=-1) + jnp.sum(tf, axis=-1)
+    dice = 1.0 - (2.0 * inter + 1.0) / (denom + 1.0)
+    return bce + dice
+
+
+def segmentation_metric(logits: jax.Array, target: jax.Array, mask: jax.Array) -> jax.Array:
+    """Hard IoU + Dice component sums at threshold logit>0 (prob>0.5)."""
+    b = logits.shape[0]
+    pred = (logits.reshape(b, -1) > 0.0).astype(jnp.float32)
+    tf = target.reshape(b, -1)
+    inter = jnp.sum(pred * tf, axis=-1) * mask
+    union = (jnp.sum(jnp.maximum(pred, tf), axis=-1)) * mask
+    dice_num = 2.0 * jnp.sum(pred * tf, axis=-1) * mask
+    dice_den = (jnp.sum(pred, axis=-1) + jnp.sum(tf, axis=-1)) * mask
+    return jnp.stack([jnp.sum(inter), jnp.sum(union), jnp.sum(dice_num), jnp.sum(dice_den)])
+
+
+# ---------------------------------------------------------------------------
+# language modelling (e2e driver)
+# ---------------------------------------------------------------------------
+
+def lm_ce_per_sample(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """f32[B,T,V], int32[B,T] -> f32[B] (mean next-token CE per sequence)."""
+    b, t, v = logits.shape
+    per_tok = cross_entropy(logits.reshape(b * t, v), targets.reshape(b * t))
+    return jnp.mean(per_tok.reshape(b, t), axis=-1)
+
+
+def lm_metric(logits: jax.Array, targets: jax.Array, mask: jax.Array) -> jax.Array:
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    per_seq = jnp.sum((pred == targets).astype(jnp.float32), axis=-1)
+    t = logits.shape[1]
+    correct = jnp.sum(per_seq * mask)
+    total = jnp.sum(mask) * t
+    return jnp.stack([correct, total, 0.0, 0.0])

@@ -1,0 +1,80 @@
+"""L2 step-function builders: the units the AOT exporter lowers to HLO.
+
+Three executables per (model x mu-size) variant + one per model:
+
+  accum_step(params, acc, x, y, mask, scale)
+      -> (loss_sum, metric[4], acc')
+    One micro-batch of Alg. 1: forward, per-sample loss, loss normalization
+    (multiply by `scale`), backward, gradient accumulation — all inside XLA,
+    so the rust hot loop never sees a gradient. `mask` zeroes padded tail
+    samples; `scale` carries the normalization mode:
+        paper mode  (eq. 14): scale = 1 / (N_Smu * n_actual_in_ubatch)
+        exact mode           : scale = 1 / N_B
+    Both reduce to the same executable — the policy lives in rust
+    (coordinator/accumulator.rs).
+
+  eval_step(params, x, y, mask) -> (loss_sum, metric[4])
+
+  apply (per model): optimizer update, see optim.py.
+
+`baseline` (w/o MBS) training is accum_step with N_Smu = 1 and scale =
+1/N_B — the identical math the paper's native mini-batch run performs,
+which is what makes the with/without-MBS comparison apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .models import MODELS, ModelSpec
+
+
+def build_accum_step(spec: ModelSpec):
+    def accum_step(params, acc, x, y, mask, scale):
+        def loss_fn(p):
+            out = spec.apply(p, x)
+            per = spec.loss(out, y)
+            loss_sum = jnp.sum(per * mask)
+            return scale[0] * loss_sum, (loss_sum, spec.metric(out, y, mask))
+
+        (_, (loss_sum, metric)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        acc2 = jax.tree_util.tree_map(jnp.add, acc, grads)
+        return loss_sum, metric, acc2
+
+    return accum_step
+
+
+def build_eval_step(spec: ModelSpec):
+    def eval_step(params, x, y, mask):
+        out = spec.apply(params, x)
+        per = spec.loss(out, y)
+        return jnp.sum(per * mask), spec.metric(out, y, mask)
+
+    return eval_step
+
+
+def build_apply(spec: ModelSpec):
+    kind = spec.optimizer
+    info = optim.OPTIMIZERS[kind]
+    if kind == "sgdm":
+
+        def apply_fn(params, acc, mom, hyper):
+            return optim.sgdm_apply(params, acc, mom, hyper)
+
+    elif kind == "adam":
+
+        def apply_fn(params, acc, m, v, hyper):
+            return optim.adam_apply(params, acc, m, v, hyper)
+
+    else:  # pragma: no cover - registry is closed
+        raise ValueError(f"unknown optimizer {kind}")
+    return apply_fn, info
+
+
+def init_params(spec: ModelSpec, seed: int = 0):
+    return spec.init(jax.random.key(seed))
+
+
+__all__ = ["MODELS", "build_accum_step", "build_eval_step", "build_apply", "init_params"]

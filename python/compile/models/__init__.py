@@ -1,0 +1,138 @@
+"""L2 model zoo registry.
+
+Each entry binds a model's init/apply to its task's loss + metric and its
+paper-prescribed optimizer, giving the AOT exporter and the tests one
+uniform interface:
+
+    spec = MODELS["microresnet18"]
+    params = spec.init(jax.random.key(0))
+    out = spec.apply(params, x)          # logits / mask-logits
+    per = spec.loss(out, y)              # f32[B]
+    met = spec.metric(out, y, mask)      # f32[4]
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+from .. import losses
+from . import amoeba, resnet, transformer, unet
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    key: str
+    task: str  # classification | segmentation | lm
+    optimizer: str  # sgdm | adam
+    init: Callable
+    apply: Callable
+    loss: Callable
+    metric: Callable
+    # (mu, image_size_or_seqlen) -> ((x_shape, x_dtype), (y_shape, y_dtype))
+    io_shapes: Callable
+    default_size: int  # default image size (px) or sequence length
+    # paper-corresponding hyper defaults (section 4.2.4)
+    hyper: Tuple[float, ...]
+
+
+def _img_io(task: str):
+    def io(mu: int, size: int):
+        x = ((mu, size, size, 3), jnp.float32)
+        if task == "classification":
+            y = ((mu,), jnp.int32)
+        else:
+            y = ((mu, size, size, 1), jnp.float32)
+        return x, y
+
+    return io
+
+
+def _lm_io(mu: int, seq: int):
+    return ((mu, seq), jnp.int32), ((mu, seq), jnp.int32)
+
+
+_resnet18_cfg = resnet.ResNetConfig(blocks_per_stage=(2, 2, 2))
+_resnet34_cfg = resnet.ResNetConfig(blocks_per_stage=(3, 4, 3))
+_amoeba_cfg = amoeba.AmoebaConfig()
+_unet_cfg = unet.UNetConfig()
+_tfm_cfg = transformer.TransformerConfig()
+
+MODELS = {
+    # ResNet-50 analogue: SGD lr=0.01 momentum=0.9 wd=5e-4 (section 4.2.4)
+    "microresnet18": ModelSpec(
+        key="microresnet18",
+        task="classification",
+        optimizer="sgdm",
+        init=lambda k: resnet.init(k, _resnet18_cfg),
+        apply=lambda p, x: resnet.apply(p, x, _resnet18_cfg),
+        loss=losses.ce_per_sample,
+        metric=losses.classification_metric,
+        io_shapes=_img_io("classification"),
+        default_size=16,
+        hyper=(0.01, 0.9, 5e-4),
+    ),
+    # ResNet-101 analogue (deeper; same recipe)
+    "microresnet34": ModelSpec(
+        key="microresnet34",
+        task="classification",
+        optimizer="sgdm",
+        init=lambda k: resnet.init(k, _resnet34_cfg),
+        apply=lambda p, x: resnet.apply(p, x, _resnet34_cfg),
+        loss=losses.ce_per_sample,
+        metric=losses.classification_metric,
+        io_shapes=_img_io("classification"),
+        default_size=16,
+        hyper=(0.01, 0.9, 5e-4),
+    ),
+    # AmoebaNet-D analogue: SGD lr=0.1 momentum=0.9 wd=1e-4, linear LR decay
+    # (the decay schedule lives in the rust coordinator)
+    "amoebacell": ModelSpec(
+        key="amoebacell",
+        task="classification",
+        optimizer="sgdm",
+        init=lambda k: amoeba.init(k, _amoeba_cfg),
+        apply=lambda p, x: amoeba.apply(p, x, _amoeba_cfg),
+        loss=losses.ce_per_sample,
+        metric=losses.classification_metric,
+        io_shapes=_img_io("classification"),
+        default_size=24,
+        hyper=(0.1, 0.9, 1e-4),
+    ),
+    # U-Net: Adam lr=0.01 wd=5e-4, BCE+Dice (section 4.2.4)
+    "microunet": ModelSpec(
+        key="microunet",
+        task="segmentation",
+        optimizer="adam",
+        init=lambda k: unet.init(k, _unet_cfg),
+        apply=lambda p, x: unet.apply(p, x, _unet_cfg),
+        loss=losses.bce_dice_per_sample,
+        metric=losses.segmentation_metric,
+        io_shapes=_img_io("segmentation"),
+        default_size=24,
+        hyper=(0.01, 0.9, 0.999, 1e-8, 5e-4, 1.0),
+    ),
+    # e2e driver LM (Adam, standard LM recipe)
+    "microformer": ModelSpec(
+        key="microformer",
+        task="lm",
+        optimizer="adam",
+        init=lambda k: transformer.init(k, _tfm_cfg),
+        apply=lambda p, x: transformer.apply(p, x, _tfm_cfg),
+        loss=losses.lm_ce_per_sample,
+        metric=losses.lm_metric,
+        io_shapes=_lm_io,
+        default_size=_tfm_cfg.seq_len,
+        hyper=(3e-4, 0.9, 0.999, 1e-8, 0.01, 1.0),
+    ),
+}
+
+CONFIGS = {
+    "microresnet18": _resnet18_cfg,
+    "microresnet34": _resnet34_cfg,
+    "amoebacell": _amoeba_cfg,
+    "microunet": _unet_cfg,
+    "microformer": _tfm_cfg,
+}

@@ -1,0 +1,78 @@
+"""AmoebaCell: scaled-down analogue of the paper's AmoebaNet-D baseline.
+
+AmoebaNet's evolved cells are multi-branch: separable convs, pooling branches
+and skip connections feeding a concat + projection. We keep that topology
+(which is what stresses activation memory, the quantity MBS trades against)
+at micro scale: a stem conv followed by `num_cells` cells, each with four
+branches -> concat -> 1x1 projection (pallas matmul) -> residual.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+@dataclass(frozen=True)
+class AmoebaConfig:
+    num_classes: int = 102
+    stem_channels: int = 24
+    cell_channels: int = 24
+    num_cells: int = 3
+
+    @property
+    def name(self) -> str:
+        return "amoebacell"
+
+
+def _cell_init(key, cin: int, ch: int) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "sep3": cm.sep_conv_init(k1, 3, cin, ch),
+        "sep5": cm.sep_conv_init(k2, 5, cin, ch),
+        "pw": cm.conv1x1_init(k3, cin, ch),
+        # concat of [sep3, sep5, pw, avgpool(cin)] -> project back to ch
+        "proj": cm.conv1x1_init(k4, 3 * ch + cin, ch),
+        "gn": cm.groupnorm_init(ch),
+    }
+
+
+def _cell_apply(p: dict, x: jax.Array, reduce: bool) -> jax.Array:
+    stride = 2 if reduce else 1
+    b1 = cm.sep_conv(p["sep3"], x, stride=stride)
+    b2 = cm.sep_conv(p["sep5"], x, stride=stride)
+    b3 = cm.conv1x1(p["pw"], x, stride=stride)
+    b4 = cm.avg_pool(x, 3, stride=stride)
+    h = jnp.concatenate([b1, b2, b3, b4], axis=-1)
+    h = cm.conv1x1(p["proj"], h)
+    h = cm.relu(cm.groupnorm(p["gn"], h))
+    if not reduce and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h
+
+
+def init(key, cfg: AmoebaConfig) -> dict:
+    keys = jax.random.split(key, 2 + cfg.num_cells)
+    params = {
+        "stem": cm.conv_init(keys[0], 3, 3, 3, cfg.stem_channels),
+        "stem_gn": cm.groupnorm_init(cfg.stem_channels),
+        "head": cm.dense_init(keys[1], cfg.cell_channels, cfg.num_classes),
+    }
+    cin = cfg.stem_channels
+    for ci in range(cfg.num_cells):
+        params[f"cell{ci}"] = _cell_init(keys[2 + ci], cin, cfg.cell_channels)
+        cin = cfg.cell_channels
+    return params
+
+
+def apply(params: dict, x: jax.Array, cfg: AmoebaConfig) -> jax.Array:
+    """f32[B,H,W,3] -> logits f32[B,num_classes]."""
+    h = cm.relu(cm.groupnorm(params["stem_gn"], cm.conv(params["stem"], x)))
+    for ci in range(cfg.num_cells):
+        h = _cell_apply(params[f"cell{ci}"], h, reduce=(ci % 2 == 1))
+    pooled = cm.global_avg_pool(h)
+    return cm.dense(params["head"], pooled)

@@ -1,0 +1,182 @@
+"""Shared layer library for the L2 model zoo.
+
+Conventions:
+  * params are nested dicts of f32 arrays; flattening order is
+    ``jax.tree_util.tree_flatten`` order (dicts sorted by key), and the AOT
+    manifest records leaf names in exactly that order so the rust side can
+    address leaves positionally.
+  * images are NHWC; convs are HWIO.
+  * dense layers and 1x1 convs route through the L1 pallas tiled matmul so
+    the MXU-shaped kernel is on the hot path of every model.
+  * normalization is GroupNorm, not BatchNorm: GN has no cross-sample
+    statistics, so MBS gradient equivalence (DESIGN.md invariant 2) holds
+    exactly. The BatchNorm caveat the paper glosses over is demonstrated in
+    python/tests/test_grad_equivalence.py::test_batchnorm_breaks_equivalence.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+Params = Dict[str, object]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_normal(key, shape):
+    """He-normal init; fan_in from all but the last axis."""
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    std = (2.0 / max(fan_in, 1)) ** 0.5
+    return std * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def zeros(shape):
+    return jnp.zeros(shape, dtype=jnp.float32)
+
+
+def ones(shape):
+    return jnp.ones(shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense / conv layers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int) -> Params:
+    return {"w": he_normal(key, (in_dim, out_dim)), "b": zeros((out_dim,))}
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    """f32[..., in] -> f32[..., out] via the pallas tiled matmul."""
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, x.shape[-1]))
+    out = matmul(flat, p["w"]) + p["b"]
+    return out.reshape(lead + (p["w"].shape[1],))
+
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int) -> Params:
+    return {"w": he_normal(key, (kh, kw, cin, cout)), "b": zeros((cout,))}
+
+
+def conv(p: Params, x: jax.Array, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    """NHWC conv with HWIO weights (XLA conv; 3x3s stay in L2)."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + p["b"]
+
+
+def conv1x1_init(key, cin: int, cout: int) -> Params:
+    return dense_init(key, cin, cout)
+
+
+def conv1x1(p: Params, x: jax.Array, stride: int = 1) -> jax.Array:
+    """1x1 conv lowered onto the pallas matmul: [B,H,W,Cin] @ [Cin,Cout]."""
+    if stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    return dense(p, x)
+
+
+def sep_conv_init(key, k: int, cin: int, cout: int) -> Params:
+    """Depthwise k x k followed by pointwise 1x1 (AmoebaNet-style)."""
+    kd, kp = jax.random.split(key)
+    return {
+        "dw": he_normal(kd, (k, k, 1, cin)),
+        "pw": conv1x1_init(kp, cin, cout),
+    }
+
+
+def sep_conv(p: Params, x: jax.Array, stride: int = 1) -> jax.Array:
+    cin = x.shape[-1]
+    dw = jax.lax.conv_general_dilated(
+        x,
+        p["dw"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=cin,
+    )
+    return conv1x1(p["pw"], dw)
+
+
+def conv_transpose_init(key, k: int, cin: int, cout: int) -> Params:
+    return {"w": he_normal(key, (k, k, cin, cout)), "b": zeros((cout,))}
+
+
+def conv_transpose(p: Params, x: jax.Array, stride: int = 2) -> jax.Array:
+    """NHWC transpose conv for U-Net upsampling."""
+    out = jax.lax.conv_transpose(
+        x,
+        p["w"],
+        strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# normalization / pooling / misc
+# ---------------------------------------------------------------------------
+
+def groupnorm_init(channels: int) -> Params:
+    return {"scale": ones((channels,)), "bias": zeros((channels,))}
+
+
+def groupnorm(p: Params, x: jax.Array, groups: int = 8, eps: float = 1e-5) -> jax.Array:
+    """Per-sample GroupNorm over (H, W, C/groups) — no cross-sample stats."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * p["scale"] + p["bias"]
+
+
+def layernorm_init(dim: int) -> Params:
+    return {"scale": ones((dim,)), "bias": zeros((dim,))}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def avg_pool(x: jax.Array, k: int = 2, stride: int | None = None) -> jax.Array:
+    stride = stride or k
+    out = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, k, k, 1), (1, stride, stride, 1), "SAME"
+    )
+    return out / float(k * k)
+
+
+def max_pool(x: jax.Array, k: int = 2, stride: int | None = None) -> jax.Array:
+    stride = stride or k
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "SAME"
+    )
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jax.nn.relu(x)

@@ -1,0 +1,81 @@
+"""Micro-ResNet: scaled-down analogue of the paper's ResNet-50/101 baselines.
+
+Basic residual blocks (3x3 conv, GN, ReLU) in three stages; ``depth`` selects
+the stage repeat counts the way 50 vs 101 does in the paper. Downsampling
+skips use 1x1 convs routed through the pallas matmul.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    num_classes: int = 102
+    stem_channels: int = 16
+    stage_channels: Tuple[int, ...] = (16, 32, 64)
+    blocks_per_stage: Tuple[int, ...] = (2, 2, 2)  # "18"-ish; (3,4,3) for "34"-ish
+
+    @property
+    def name(self) -> str:
+        return f"microresnet{sum(self.blocks_per_stage) * 2 + 2}"
+
+
+def _block_init(key, cin: int, cout: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "conv1": cm.conv_init(k1, 3, 3, cin, cout),
+        "gn1": cm.groupnorm_init(cout),
+        "conv2": cm.conv_init(k2, 3, 3, cout, cout),
+        "gn2": cm.groupnorm_init(cout),
+    }
+    if cin != cout:
+        p["proj"] = cm.conv1x1_init(k3, cin, cout)
+    return p
+
+
+def _block_apply(p: dict, x: jax.Array, stride: int) -> jax.Array:
+    h = cm.conv(p["conv1"], x, stride=stride)
+    h = cm.relu(cm.groupnorm(p["gn1"], h))
+    h = cm.conv(p["conv2"], h)
+    h = cm.groupnorm(p["gn2"], h)
+    if "proj" in p:
+        x = cm.conv1x1(p["proj"], x, stride=stride)
+    elif stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    return cm.relu(h + x)
+
+
+def init(key, cfg: ResNetConfig) -> dict:
+    keys = jax.random.split(key, 2 + sum(cfg.blocks_per_stage))
+    params = {
+        "stem": cm.conv_init(keys[0], 3, 3, 3, cfg.stem_channels),
+        "stem_gn": cm.groupnorm_init(cfg.stem_channels),
+        "head": cm.dense_init(keys[1], cfg.stage_channels[-1], cfg.num_classes),
+    }
+    ki = 2
+    cin = cfg.stem_channels
+    for si, (ch, nb) in enumerate(zip(cfg.stage_channels, cfg.blocks_per_stage)):
+        for bi in range(nb):
+            params[f"s{si}b{bi}"] = _block_init(keys[ki], cin if bi == 0 else ch, ch)
+            ki += 1
+        cin = ch
+    return params
+
+
+def apply(params: dict, x: jax.Array, cfg: ResNetConfig) -> jax.Array:
+    """f32[B,H,W,3] -> logits f32[B,num_classes]."""
+    h = cm.relu(cm.groupnorm(params["stem_gn"], cm.conv(params["stem"], x)))
+    for si, nb in enumerate(cfg.blocks_per_stage):
+        for bi in range(nb):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = _block_apply(params[f"s{si}b{bi}"], h, stride)
+    pooled = cm.global_avg_pool(h)
+    return cm.dense(params["head"], pooled)

@@ -1,0 +1,93 @@
+"""Micro-Former: decoder-only transformer LM for the end-to-end driver.
+
+The paper evaluates CNNs, but MBS is model-agnostic; the e2e example
+(examples/e2e_transformer.rs) trains this causal LM for a few hundred steps
+under a memory budget it could not fit natively, logging the loss curve
+(EXPERIMENTS.md E2E). QKV/out projections and the MLP run on the pallas
+tiled matmul; attention probability math stays in L2 jnp.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    seq_len: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+
+    @property
+    def name(self) -> str:
+        return "microformer"
+
+
+def _layer_init(key, cfg: TransformerConfig) -> dict:
+    kq, kk, kv, ko, k1, k2 = jax.random.split(key, 6)
+    d = cfg.d_model
+    return {
+        "ln1": cm.layernorm_init(d),
+        "wq": cm.dense_init(kq, d, d),
+        "wk": cm.dense_init(kk, d, d),
+        "wv": cm.dense_init(kv, d, d),
+        "wo": cm.dense_init(ko, d, d),
+        "ln2": cm.layernorm_init(d),
+        "ff1": cm.dense_init(k1, d, cfg.d_ff),
+        "ff2": cm.dense_init(k2, cfg.d_ff, d),
+    }
+
+
+def _attention(p: dict, x: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    b, t, d = x.shape
+    hn, hd = cfg.n_heads, d // cfg.n_heads
+    q = cm.dense(p["wq"], x).reshape(b, t, hn, hd).transpose(0, 2, 1, 3)
+    k = cm.dense(p["wk"], x).reshape(b, t, hn, hd).transpose(0, 2, 1, 3)
+    v = cm.dense(p["wv"], x).reshape(b, t, hn, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return cm.dense(p["wo"], out)
+
+
+def _layer_apply(p: dict, x: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    x = x + _attention(p, cm.layernorm(p["ln1"], x), cfg)
+    h = cm.layernorm(p["ln2"], x)
+    h = cm.dense(p["ff2"], jax.nn.gelu(cm.dense(p["ff1"], h)))
+    return x + h
+
+
+def init(key, cfg: TransformerConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params = {
+        "tok_emb": 0.02 * jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)),
+        "pos_emb": 0.02 * jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)),
+        "ln_f": cm.layernorm_init(cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        params[f"layer{i}"] = _layer_init(keys[2 + i], cfg)
+    return params
+
+
+def apply(params: dict, tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """int32[B,T] -> next-token logits f32[B,T,vocab] (weight-tied head)."""
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :, :]
+    for i in range(cfg.n_layers):
+        h = _layer_apply(params[f"layer{i}"], h, cfg)
+    h = cm.layernorm(params["ln_f"], h)
+    b, t, d = h.shape
+    from ..kernels import matmul
+
+    logits = matmul(h.reshape(b * t, d), params["tok_emb"].T)
+    return logits.reshape(b, t, cfg.vocab)

@@ -1,0 +1,81 @@
+"""Micro-U-Net: scaled-down analogue of the paper's Carvana U-Net baseline.
+
+Three-level encoder/decoder with skip connections and transpose-conv
+upsampling. Output is single-channel mask logits (sigmoid applied in the
+BCE+Dice loss, matching the paper's setup).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+@dataclass(frozen=True)
+class UNetConfig:
+    channels: Tuple[int, ...] = (16, 32, 64)
+
+    @property
+    def name(self) -> str:
+        return "microunet"
+
+
+def _double_conv_init(key, cin: int, cout: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "conv1": cm.conv_init(k1, 3, 3, cin, cout),
+        "gn1": cm.groupnorm_init(cout),
+        "conv2": cm.conv_init(k2, 3, 3, cout, cout),
+        "gn2": cm.groupnorm_init(cout),
+    }
+
+
+def _double_conv(p: dict, x: jax.Array) -> jax.Array:
+    h = cm.relu(cm.groupnorm(p["gn1"], cm.conv(p["conv1"], x)))
+    return cm.relu(cm.groupnorm(p["gn2"], cm.conv(p["conv2"], h)))
+
+
+def init(key, cfg: UNetConfig) -> dict:
+    chs = cfg.channels
+    n_enc = len(chs)
+    keys = jax.random.split(key, 2 * n_enc + 2 * (n_enc - 1) + 1)
+    params: dict = {}
+    cin = 3
+    ki = 0
+    for i, ch in enumerate(chs):
+        params[f"enc{i}"] = _double_conv_init(keys[ki], cin, ch)
+        ki += 1
+        cin = ch
+    params["mid"] = _double_conv_init(keys[ki], chs[-1], chs[-1])
+    ki += 1
+    for i in range(n_enc - 2, -1, -1):
+        params[f"up{i}"] = cm.conv_transpose_init(keys[ki], 2, chs[i + 1], chs[i])
+        ki += 1
+        params[f"dec{i}"] = _double_conv_init(keys[ki], 2 * chs[i], chs[i])
+        ki += 1
+    params["out"] = cm.conv1x1_init(keys[ki], chs[0], 1)
+    return params
+
+
+def apply(params: dict, x: jax.Array, cfg: UNetConfig) -> jax.Array:
+    """f32[B,H,W,3] -> mask logits f32[B,H,W,1]."""
+    chs = cfg.channels
+    n_enc = len(chs)
+    skips = []
+    h = x
+    for i in range(n_enc):
+        h = _double_conv(params[f"enc{i}"], h)
+        if i < n_enc - 1:
+            skips.append(h)
+            h = cm.max_pool(h, 2)
+    h = _double_conv(params["mid"], h)
+    for i in range(n_enc - 2, -1, -1):
+        h = cm.conv_transpose(params[f"up{i}"], h, stride=2)
+        h = jnp.concatenate([h, skips[i]], axis=-1)
+        h = _double_conv(params[f"dec{i}"], h)
+    return cm.conv1x1(params["out"], h)

@@ -1,0 +1,65 @@
+"""Optimizer apply functions, exported as standalone HLO executables.
+
+The rust coordinator owns optimizer *state lifecycle* (allocation, threading
+through execute_b calls); the *math* lives here so it lowers into XLA next to
+the model. Each apply takes (params, acc, slots..., hyper) and returns
+(params', slots'..., acc_zero) — returning a zeroed accumulator keeps the
+entire update on-device: no host round-trip is needed between mini-batches.
+
+Semantics follow PyTorch (the paper's substrate):
+  SGD+momentum:  g += wd*p ; v = m*v + g ; p -= lr*v
+  Adam (classic L2 decay): g += wd*p ; m,v EMA ; p -= lr*mhat/(sqrt(vhat)+eps)
+
+Hyper-parameters arrive as a small f32 vector so one executable serves every
+schedule (the LR scheduler lives in rust, per the AmoebaNet linear-decay
+setup in the paper's section 4.2.4). Duplicate sub-expressions between the
+per-output tree_maps are CSE'd by XLA, so each executable computes the
+update once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SGDM_HYPER = ["lr", "momentum", "weight_decay"]
+ADAM_HYPER = ["lr", "beta1", "beta2", "eps", "weight_decay", "step"]
+
+_tmap = jax.tree_util.tree_map
+
+
+def sgdm_apply(params, acc, mom, hyper):
+    """(params, acc, mom, f32[3]) -> (params', mom', acc_zero)."""
+    lr, m, wd = hyper[0], hyper[1], hyper[2]
+
+    def new_v(p, g, v):
+        return m * v + (g + wd * p)
+
+    mom2 = _tmap(new_v, params, acc, mom)
+    params2 = _tmap(lambda p, v2: p - lr * v2, params, mom2)
+    acc0 = _tmap(jnp.zeros_like, acc)
+    return params2, mom2, acc0
+
+
+def adam_apply(params, acc, m, v, hyper):
+    """(params, acc, m, v, f32[6]) -> (params', m', v', acc_zero)."""
+    lr, b1, b2, eps, wd, t = (hyper[0], hyper[1], hyper[2], hyper[3], hyper[4], hyper[5])
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    m2 = _tmap(lambda p, g, mi: b1 * mi + (1.0 - b1) * (g + wd * p), params, acc, m)
+    v2 = _tmap(lambda p, g, vi: b2 * vi + (1.0 - b2) * (g + wd * p) ** 2, params, acc, v)
+    params2 = _tmap(
+        lambda p, mi2, vi2: p - lr * (mi2 / bc1) / (jnp.sqrt(vi2 / bc2) + eps),
+        params,
+        m2,
+        v2,
+    )
+    acc0 = _tmap(jnp.zeros_like, acc)
+    return params2, m2, v2, acc0
+
+
+OPTIMIZERS = {
+    "sgdm": {"slots": 1, "hyper": SGDM_HYPER, "apply": sgdm_apply},
+    "adam": {"slots": 2, "hyper": ADAM_HYPER, "apply": adam_apply},
+}

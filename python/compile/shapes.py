@@ -1,0 +1,99 @@
+"""Param-tree flattening + activation-memory estimation for the manifest.
+
+The rust memory model (rust/src/memory/) reproduces the paper's capacity
+arithmetic: a step fits iff resident_state + activation_bytes(batch) <=
+capacity. The activation estimate is derived here from the jaxpr of the
+model's value_and_grad step: every intermediate whose leading axis equals the
+batch size is counted as batch-proportional (it must be live for the backward
+pass), everything else as constant overhead. That mirrors what an eager
+framework (the paper's PyTorch) keeps resident between forward and backward.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flatten_params(params) -> Tuple[List[str], List[jax.Array]]:
+    """Deterministic (tree_flatten) order with dotted path names."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    names, leaves = [], []
+    for path, leaf in leaves_with_path:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+        leaves.append(leaf)
+    return names, leaves
+
+
+def unflatten_like(params, leaves):
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_bytes(params) -> int:
+    return sum(int(np.prod(l.shape)) * 4 for l in jax.tree_util.tree_leaves(params))
+
+
+def dump_params(params, path: str) -> List[dict]:
+    """Concatenate all leaves (f32 little-endian) into one .bin; return index."""
+    names, leaves = flatten_params(params)
+    index = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, leaf in zip(names, leaves):
+            arr = np.asarray(leaf, dtype="<f4")
+            f.write(arr.tobytes())
+            index.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "elems": int(arr.size),
+                }
+            )
+            offset += arr.size * 4
+    return index
+
+
+def activation_bytes(fn, *example_args, batch: int) -> Tuple[int, int]:
+    """(bytes_per_sample, fixed_bytes) from the jaxpr of `fn`.
+
+    Sums sizes of every intermediate value; those with leading dim == batch
+    are attributed per-sample, the rest to the fixed pool. Conservative in
+    the same direction as eager-mode residency (no rematerialization).
+    """
+    jaxpr = jax.make_jaxpr(fn)(*example_args)
+    per_batch_elems = 0
+    fixed_elems = 0
+
+    def visit(jp):
+        nonlocal per_batch_elems, fixed_elems
+        for eqn in jp.eqns:
+            for sub in eqn.params.values():
+                if isinstance(sub, jax.extend.core.ClosedJaxpr):
+                    visit(sub.jaxpr)
+                elif isinstance(sub, jax.extend.core.Jaxpr):
+                    visit(sub)
+            for var in eqn.outvars:
+                aval = var.aval
+                if not hasattr(aval, "shape"):
+                    continue
+                n = int(np.prod(aval.shape)) if aval.shape else 1
+                # batch-proportional if the leading axis is the batch or a
+                # flattened multiple of it (e.g. [B*T, d] after a reshape)
+                if aval.shape and aval.shape[0] >= batch and aval.shape[0] % batch == 0:
+                    per_batch_elems += n
+                else:
+                    fixed_elems += n
+
+    visit(jaxpr.jaxpr)
+    return (per_batch_elems * 4) // batch, fixed_elems * 4

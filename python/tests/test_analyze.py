@@ -1,0 +1,30 @@
+"""Analysis tooling: XLA cost model access + block sweep sanity."""
+
+from compile import analyze
+from compile.kernels import matmul_pallas
+
+
+def test_xla_cost_positive_and_scales_with_mu():
+    small = analyze.xla_cost("microresnet18", 16, 8)
+    large = analyze.xla_cost("microresnet18", 16, 16)
+    assert small["flops"] > 1e6
+    assert large["flops"] > 1.5 * small["flops"]  # ~2x work per step
+    assert small["bytes"] > 0
+    assert small["intensity"] > 0
+
+
+def test_block_sweep_structure():
+    rows = analyze.block_sweep(512, 128, 512)
+    assert len(rows) == 6
+    by_block = {r["block"]: r for r in rows}
+    # default 128^3 must fit VMEM with good utilization on aligned shapes
+    assert by_block["128x128x128"]["fits_vmem"]
+    assert by_block["128x128x128"]["mxu_util"] == 1.0
+    # monster blocks exceed the VMEM budget
+    assert not by_block["512x512x512"]["fits_vmem"]
+
+
+def test_vmem_monotone_in_block_size():
+    assert matmul_pallas.vmem_footprint_bytes(64, 64, 64) < matmul_pallas.vmem_footprint_bytes(
+        128, 128, 128
+    )

@@ -1,0 +1,88 @@
+"""AOT exporter output: manifest structure + HLO text loadability.
+
+These tests run against the already-built ../artifacts (skipped if `make
+artifacts` has not run) plus a from-scratch export of the smallest model
+into a tmpdir to exercise the exporter itself.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import MODELS
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_variants():
+    man = _manifest()
+    listed = {(mk, v["size"], v["mu"]) for mk, e in man["models"].items() for v in e["variants"]}
+    assert listed == set(aot.VARIANTS)
+
+
+def test_manifest_files_exist_and_nonempty():
+    man = _manifest()
+    for mk, e in man["models"].items():
+        for fname in [e["params_bin"], e["apply_hlo"]] + [
+            v[k] for v in e["variants"] for k in ("accum_hlo", "eval_hlo")
+        ]:
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), fname
+            assert os.path.getsize(path) > 1000, fname
+
+
+def test_manifest_param_accounting():
+    man = _manifest()
+    for mk, e in man["models"].items():
+        total = sum(le["elems"] for le in e["param_leaves"]) * 4
+        assert total == e["param_bytes"]
+        assert os.path.getsize(os.path.join(ART, e["params_bin"])) == total
+        # offsets are contiguous and ordered
+        off = 0
+        for le in e["param_leaves"]:
+            assert le["offset"] == off
+            assert le["elems"] == int(np.prod(le["shape"])) if le["shape"] else 1
+            off += le["elems"] * 4
+
+
+def test_manifest_optimizer_matches_registry():
+    man = _manifest()
+    for mk, e in man["models"].items():
+        assert e["optimizer"]["kind"] == MODELS[mk].optimizer
+        assert len(e["optimizer"]["hyper_defaults"]) == len(e["optimizer"]["hyper_names"])
+
+
+def test_hlo_text_is_parseable_hlo():
+    man = _manifest()
+    e = man["models"]["microresnet18"]
+    with open(os.path.join(ART, e["variants"][0]["accum_hlo"])) as f:
+        text = f.read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_activation_estimates_monotone_in_resolution():
+    man = _manifest()
+    rn = man["models"]["microresnet18"]["variants"]
+    by_size = {(v["size"], v["mu"]): v["activation_bytes_per_sample"] for v in rn}
+    assert by_size[(32, 16)] > 2.5 * by_size[(16, 16)]
+
+
+def test_export_smallest_model_roundtrip(tmp_path):
+    entry = aot.export_model("microresnet18", str(tmp_path), seed=0, quiet=True)
+    assert entry["task"] == "classification"
+    assert len(entry["variants"]) == 3
+    for v in entry["variants"]:
+        assert (tmp_path / v["accum_hlo"]).exists()
+        assert v["activation_bytes_per_sample"] > 0

@@ -1,0 +1,160 @@
+"""The paper's core invariant (section 3.4, eqs. 14-17): accumulated
+loss-normalized micro-batch gradients equal the full mini-batch gradient.
+
+Verified here in pure JAX for every model; the same invariant is re-verified
+through the rust runtime on the exported HLO in rust/tests/. Also includes
+the BatchNorm counterexample the paper glosses over (cross-sample statistics
+break exact equivalence), documenting why the zoo uses GroupNorm.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import MODELS, build_accum_step, init_params
+
+settings.register_profile("equiv", max_examples=8, deadline=None)
+settings.load_profile("equiv")
+
+
+def _make_batch(spec, n, size, seed):
+    kx, ky = jax.random.split(jax.random.key(seed))
+    (xs, xdt), (ys, ydt) = spec.io_shapes(n, size)
+    if xdt == jnp.int32:
+        x = jax.random.randint(kx, xs, 0, 512, dtype=jnp.int32)
+    else:
+        x = jax.random.normal(kx, xs, dtype=jnp.float32)
+    if ydt == jnp.int32:
+        hi = 512 if spec.task == "lm" else 102
+        y = jax.random.randint(ky, ys, 0, hi, dtype=jnp.int32)
+    else:
+        y = (jax.random.uniform(ky, ys) > 0.5).astype(jnp.float32)
+    return x, y
+
+
+def _full_batch_grad(spec, params, x, y):
+    n = x.shape[0]
+
+    def lf(p):
+        per = spec.loss(spec.apply(p, x), y)
+        return jnp.mean(per)
+
+    return jax.grad(lf)(params)
+
+
+def _mbs_grad(spec, params, x, y, mu, mode):
+    """Run the exported accum_step semantics over micro-batch slices."""
+    n = x.shape[0]
+    accum = build_accum_step(spec)
+    acc = jax.tree_util.tree_map(jnp.zeros_like, params)
+    n_smu = -(-n // mu)
+    for j in range(n_smu):
+        lo, hi = j * mu, min((j + 1) * mu, n)
+        actual = hi - lo
+        # pad ragged tail to the static mu shape, mask the padding
+        idx = jnp.arange(mu)
+        src = jnp.clip(lo + idx, 0, n - 1)
+        xj = x[src]
+        yj = y[src]
+        mask = (idx < actual).astype(jnp.float32)
+        if mode == "exact":
+            scale = jnp.array([1.0 / n], jnp.float32)
+        else:  # paper (eq. 14): mean over the micro-batch, then 1/N_Smu
+            scale = jnp.array([1.0 / (n_smu * actual)], jnp.float32)
+        _, _, acc = accum(params, acc, xj, yj, mask, scale)
+    return acc
+
+
+# microformer's positional table is fixed to seq_len=64
+SMALL_SIZE = {"microresnet18": 8, "microresnet34": 8, "amoebacell": 8, "microunet": 8, "microformer": 64}
+
+
+@pytest.mark.parametrize("key", list(MODELS))
+def test_even_split_equivalence_both_modes(key):
+    spec = MODELS[key]
+    params = init_params(spec, seed=0)
+    size = SMALL_SIZE[key]
+    x, y = _make_batch(spec, 8, size, seed=1)
+    ref = _full_batch_grad(spec, params, x, y)
+    for mode in ("exact", "paper"):
+        acc = _mbs_grad(spec, params, x, y, mu=4, mode=mode)
+        for a, r in zip(jax.tree_util.tree_leaves(acc), jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_allclose(a, r, rtol=2e-4, atol=2e-5)
+
+
+@given(n=st.integers(3, 12), mu=st.integers(1, 8), seed=st.integers(0, 100))
+def test_exact_mode_equivalence_ragged(n, mu, seed):
+    """exact mode (scale=1/N_B + tail mask) is equivalent for ANY (N_B, mu)."""
+    spec = MODELS["microresnet18"]
+    params = init_params(spec, seed=0)
+    x, y = _make_batch(spec, n, 8, seed=seed)
+    ref = _full_batch_grad(spec, params, x, y)
+    acc = _mbs_grad(spec, params, x, y, mu=mu, mode="exact")
+    for a, r in zip(jax.tree_util.tree_leaves(acc), jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(a, r, rtol=3e-4, atol=3e-5)
+
+
+def test_paper_mode_biased_on_ragged_tail():
+    """Paper mode (eq. 14) weights the ragged tail's samples more — the bias
+    the A1 ablation quantifies. With N_B=6, mu=4 the tail has 2 samples that
+    get weight 1/(2*2) vs 1/(2*4) for the rest, so gradients differ."""
+    spec = MODELS["microresnet18"]
+    params = init_params(spec, seed=0)
+    x, y = _make_batch(spec, 6, 8, seed=3)
+    ref = _full_batch_grad(spec, params, x, y)
+    acc = _mbs_grad(spec, params, x, y, mu=4, mode="paper")
+    max_rel = 0.0
+    for a, r in zip(jax.tree_util.tree_leaves(acc), jax.tree_util.tree_leaves(ref)):
+        denom = np.maximum(np.abs(np.asarray(r)), 1e-8)
+        max_rel = max(max_rel, float(np.max(np.abs(np.asarray(a - r)) / denom)))
+    assert max_rel > 1e-3  # visibly biased, unlike exact mode
+
+
+def test_loss_normalization_is_required():
+    """Without the 1/N_Smu scale (plain accumulation), the gradient is
+    N_Smu x too large — eq. 13's inequality."""
+    spec = MODELS["microresnet18"]
+    params = init_params(spec, seed=0)
+    x, y = _make_batch(spec, 8, 8, seed=5)
+    ref = _full_batch_grad(spec, params, x, y)
+    accum = build_accum_step(spec)
+    acc = jax.tree_util.tree_map(jnp.zeros_like, params)
+    for j in range(2):
+        xj, yj = x[j * 4 : (j + 1) * 4], y[j * 4 : (j + 1) * 4]
+        mask = jnp.ones((4,), jnp.float32)
+        scale = jnp.array([1.0 / 4.0], jnp.float32)  # mean, but NO 1/N_Smu
+        _, _, acc = accum(params, acc, xj, yj, mask, scale)
+    ratios = []
+    for a, r in zip(jax.tree_util.tree_leaves(acc), jax.tree_util.tree_leaves(ref)):
+        r = np.asarray(r)
+        big = np.abs(r) > 1e-4
+        if big.any():
+            ratios.append(float(np.median(np.asarray(a)[big] / r[big])))
+    assert np.isclose(np.median(ratios), 2.0, rtol=0.05)  # N_Smu = 2
+
+
+def test_batchnorm_breaks_equivalence():
+    """Train-mode BatchNorm statistics couple samples across the batch, so
+    micro-batching changes the function itself — not just the gradient
+    schedule. This is why the zoo normalizes with GroupNorm."""
+
+    tgt = jax.random.normal(jax.random.key(2), (8, 4), dtype=jnp.float32)
+
+    def bn_net(p, x, t):  # toy net with batch statistics + per-sample target
+        h = jax.nn.tanh(x @ p["w"])
+        mean = jnp.mean(h, axis=0, keepdims=True)
+        var = jnp.var(h, axis=0, keepdims=True)
+        h = (h - mean) / jnp.sqrt(var + 1e-5)
+        return jnp.mean((h - t) ** 2, axis=-1)
+
+    key = jax.random.key(0)
+    p = {"w": jax.random.normal(key, (6, 4), dtype=jnp.float32)}
+    x = jax.random.normal(jax.random.key(1), (8, 6), dtype=jnp.float32)
+
+    full = jax.grad(lambda q: jnp.mean(bn_net(q, x, tgt)))(p)["w"]
+    acc = jnp.zeros_like(p["w"])
+    for xh, th in ((x[:4], tgt[:4]), (x[4:], tgt[4:])):
+        acc += jax.grad(lambda q: jnp.mean(bn_net(q, xh, th)) / 2.0)(p)["w"]
+    assert float(jnp.max(jnp.abs(acc - full))) > 1e-3

@@ -1,0 +1,79 @@
+"""Loss + metric vector semantics (the fixed f32[4] ABI the rust side reads)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import losses
+
+
+def test_ce_per_sample_shape():
+    logits = jax.random.normal(jax.random.key(0), (6, 102), dtype=jnp.float32)
+    labels = jnp.arange(6, dtype=jnp.int32)
+    per = losses.ce_per_sample(logits, labels)
+    assert per.shape == (6,)
+    assert float(jnp.min(per)) > 0.0
+
+
+def test_classification_metric_counts_correct():
+    logits = jnp.array(
+        [[10.0, 0.0, 0.0], [0.0, 10.0, 0.0], [0.0, 0.0, 10.0], [10.0, 0.0, 0.0]], jnp.float32
+    )
+    labels = jnp.array([0, 1, 0, 0], jnp.int32)  # 3 correct
+    mask = jnp.ones((4,), jnp.float32)
+    m = losses.classification_metric(logits, labels, mask)
+    np.testing.assert_allclose(m, [3.0, 4.0, 0.0, 0.0])
+
+
+def test_classification_metric_respects_mask():
+    logits = jnp.eye(4, dtype=jnp.float32) * 10.0
+    labels = jnp.arange(4, dtype=jnp.int32)  # all correct
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    m = losses.classification_metric(logits, labels, mask)
+    np.testing.assert_allclose(m, [2.0, 2.0, 0.0, 0.0])
+
+
+def test_bce_dice_perfect_prediction_low_loss():
+    target = (jax.random.uniform(jax.random.key(1), (2, 8, 8, 1)) > 0.5).astype(jnp.float32)
+    logits = (target * 2 - 1) * 20.0  # confident correct logits
+    per = losses.bce_dice_per_sample(logits, target)
+    assert per.shape == (2,)
+    assert float(jnp.max(per)) < 0.05
+
+
+def test_bce_dice_wrong_prediction_high_loss():
+    target = jnp.ones((1, 8, 8, 1), jnp.float32)
+    logits = -20.0 * jnp.ones((1, 8, 8, 1), jnp.float32)
+    per = losses.bce_dice_per_sample(logits, target)
+    assert float(per[0]) > 10.0
+
+
+def test_segmentation_metric_iou_dice_components():
+    # pred mask: logit>0. 2x2 image, pred = [[1,1],[0,0]], target = [[1,0],[1,0]]
+    logits = jnp.array([[[[1.0], [1.0]], [[-1.0], [-1.0]]]], jnp.float32)
+    target = jnp.array([[[[1.0], [0.0]], [[1.0], [0.0]]]], jnp.float32)
+    mask = jnp.ones((1,), jnp.float32)
+    m = losses.segmentation_metric(logits, target, mask)
+    # inter=1, union=3, dice_num=2*1, dice_den=2+2
+    np.testing.assert_allclose(m, [1.0, 3.0, 2.0, 4.0])
+
+
+def test_lm_loss_and_metric():
+    b, t, v = 2, 5, 16
+    logits = jnp.zeros((b, t, v), jnp.float32)
+    logits = logits.at[:, :, 3].set(10.0)  # always predicts token 3
+    targets = jnp.full((b, t), 3, jnp.int32)
+    per = losses.lm_ce_per_sample(logits, targets)
+    assert per.shape == (b,)
+    assert float(jnp.max(per)) < 1e-3
+    m = losses.lm_metric(logits, targets, jnp.ones((b,), jnp.float32))
+    np.testing.assert_allclose(m, [b * t, b * t, 0.0, 0.0])
+
+
+def test_lm_metric_masked():
+    b, t, v = 3, 4, 8
+    logits = jnp.zeros((b, t, v), jnp.float32).at[:, :, 0].set(5.0)
+    targets = jnp.zeros((b, t), jnp.int32)
+    mask = jnp.array([1.0, 0.0, 1.0], jnp.float32)
+    m = losses.lm_metric(logits, targets, mask)
+    np.testing.assert_allclose(m, [2 * t, 2 * t, 0.0, 0.0])

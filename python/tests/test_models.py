@@ -1,0 +1,133 @@
+"""L2 model zoo: shapes, dtypes, finiteness, parameter accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import shapes
+from compile.model import MODELS, init_params
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.key(42)
+
+
+CLASSIFIERS = ["microresnet18", "microresnet34", "amoebacell"]
+
+
+@pytest.mark.parametrize("key", CLASSIFIERS)
+def test_classifier_output_shape(key, rng):
+    spec = MODELS[key]
+    params = init_params(spec, seed=1)
+    b, s = 2, spec.default_size
+    x = jax.random.normal(rng, (b, s, s, 3), dtype=jnp.float32)
+    logits = spec.apply(params, x)
+    assert logits.shape == (b, 102)
+    assert logits.dtype == jnp.float32
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_unet_output_shape(rng):
+    spec = MODELS["microunet"]
+    params = init_params(spec, seed=1)
+    x = jax.random.normal(rng, (2, 24, 24, 3), dtype=jnp.float32)
+    out = spec.apply(params, x)
+    assert out.shape == (2, 24, 24, 1)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_unet_handles_other_resolutions(rng):
+    spec = MODELS["microunet"]
+    params = init_params(spec, seed=1)
+    x = jax.random.normal(rng, (1, 48, 48, 3), dtype=jnp.float32)
+    assert spec.apply(params, x).shape == (1, 48, 48, 1)
+
+
+def test_transformer_output_shape(rng):
+    spec = MODELS["microformer"]
+    params = init_params(spec, seed=1)
+    tokens = jax.random.randint(rng, (2, 64), 0, 512, dtype=jnp.int32)
+    logits = spec.apply(params, tokens)
+    assert logits.shape == (2, 64, 512)
+
+
+def test_transformer_is_causal(rng):
+    """Changing a future token must not change past logits."""
+    spec = MODELS["microformer"]
+    params = init_params(spec, seed=1)
+    t1 = jax.random.randint(rng, (1, 64), 0, 512, dtype=jnp.int32)
+    t2 = t1.at[0, 63].set((t1[0, 63] + 1) % 512)
+    l1 = spec.apply(params, t1)
+    l2 = spec.apply(params, t2)
+    np.testing.assert_allclose(l1[0, :63], l2[0, :63], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("key", list(MODELS))
+def test_param_flatten_roundtrip(key):
+    spec = MODELS[key]
+    params = init_params(spec, seed=0)
+    names, leaves = shapes.flatten_params(params)
+    assert len(names) == len(leaves) == len(set(names))
+    rebuilt = shapes.unflatten_like(params, leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(rebuilt)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("key", list(MODELS))
+def test_param_bytes_positive_and_consistent(key):
+    spec = MODELS[key]
+    params = init_params(spec, seed=0)
+    pb = shapes.param_bytes(params)
+    _, leaves = shapes.flatten_params(params)
+    assert pb == sum(l.size * 4 for l in leaves)
+    assert pb > 10_000  # not a degenerate model
+
+
+def test_init_deterministic():
+    a = init_params(MODELS["microresnet18"], seed=7)
+    b = init_params(MODELS["microresnet18"], seed=7)
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_init_seed_sensitivity():
+    a = init_params(MODELS["microresnet18"], seed=7)
+    b = init_params(MODELS["microresnet18"], seed=8)
+    diffs = [
+        float(jnp.max(jnp.abs(x - y)))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    ]
+    assert max(diffs) > 0.0
+
+
+def test_dump_params_roundtrip(tmp_path):
+    spec = MODELS["microresnet18"]
+    params = init_params(spec, seed=3)
+    path = tmp_path / "p.bin"
+    index = shapes.dump_params(params, str(path))
+    raw = np.fromfile(path, dtype="<f4")
+    names, leaves = shapes.flatten_params(params)
+    assert [e["name"] for e in index] == names
+    for entry, leaf in zip(index, leaves):
+        start = entry["offset"] // 4
+        seg = raw[start : start + entry["elems"]].reshape(entry["shape"])
+        np.testing.assert_array_equal(seg, np.asarray(leaf))
+
+
+def test_activation_bytes_scales_with_resolution():
+    spec = MODELS["microresnet18"]
+    params = init_params(spec, seed=0)
+
+    def make(size):
+        x = jax.ShapeDtypeStruct((4, size, size, 3), jnp.float32)
+        y = jax.ShapeDtypeStruct((4,), jnp.int32)
+
+        def f(p, xx, yy):
+            return jnp.sum(spec.loss(spec.apply(p, xx), yy))
+
+        return shapes.activation_bytes(f, params, x, y, batch=4)[0]
+
+    small, large = make(16), make(32)
+    assert large > 2.5 * small  # ~4x pixels => ~4x activations

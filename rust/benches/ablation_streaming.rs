@@ -1,0 +1,50 @@
+//! A2 ablation (ours): double-buffered vs synchronous streaming.
+//!
+//! The stream-based pipeline's job (paper section 3.1) is to hide host-side
+//! batch assembly behind device execution. This bench measures epoch
+//! wall-clock under both policies on an assembly-heavy workload (the
+//! high-resolution U-Net variant, whose per-pixel procedural generation is
+//! the most expensive assemble in the repo) and reports the overlap gain.
+
+mod common;
+
+use mbs::coordinator::StreamingPolicy;
+use mbs::metrics::Table;
+use mbs::{Result, TrainConfig};
+
+fn main() -> Result<()> {
+    let mut engine = common::engine()?;
+    let epochs = common::scale(2);
+
+    let mut table = Table::new(&["workload", "sync epoch (s)", "double-buffered epoch (s)", "gain"]);
+    for (model, size, mu) in [
+        ("microunet", 48usize, 16usize),   // assembly-heavy (48x48 gen)
+        ("microresnet18", 16, 16),         // compute-dominated
+    ] {
+        let mut walls = Vec::new();
+        for policy in [StreamingPolicy::Synchronous, StreamingPolicy::DoubleBuffered] {
+            let cfg = TrainConfig::builder(model)
+                .size(size)
+                .mu(mu)
+                .batch(4 * mu)
+                .epochs(epochs)
+                .dataset_len(common::scale(128))
+                .eval_len(16)
+                .streaming(policy)
+                .skip_eval()
+                .build();
+            let r = mbs::train(&mut engine, &cfg)?;
+            walls.push(r.epoch_wall_mean.as_secs_f64());
+        }
+        table.row(&[
+            format!("{model} s{size}"),
+            format!("{:.3}", walls[0]),
+            format!("{:.3}", walls[1]),
+            format!("{:+.1}%", 100.0 * (walls[0] - walls[1]) / walls[0]),
+        ]);
+    }
+    println!("ABLATION A2 — streaming policy (overlap assembly with execution):\n");
+    println!("{}", table.render());
+    println!("\nreading: overlap pays where assembly is expensive; both policies compute\nbit-identical results (tests/determinism.rs).");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Shared harness for the table/figure benches (criterion is unavailable
+//! offline; these are `harness = false` binaries that print the same rows
+//! the paper reports).
+
+#![allow(dead_code)]
+
+use mbs::memory::{Footprint, MemoryModel, MIB};
+use mbs::{Engine, Manifest, Result, TrainConfig};
+
+pub fn engine() -> Result<Engine> {
+    Engine::new(Manifest::load(artifacts())?)
+}
+
+pub fn artifacts() -> String {
+    std::env::var("MBS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Scale factor for bench workloads: MBS_BENCH_SCALE=2 doubles dataset
+/// sizes/epochs (slower, tighter error bars); 0.5 halves them.
+pub fn scale(n: usize) -> usize {
+    let s: f64 = std::env::var("MBS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    ((n as f64 * s).round() as usize).max(1)
+}
+
+/// Capacity (MiB) that makes `native_max` the largest native batch for the
+/// given variant — how bench configs translate the paper's RTX-3090
+/// frontier to the micro models.
+pub fn capacity_mib_for(
+    engine: &Engine,
+    model: &str,
+    size: usize,
+    mu: usize,
+    native_max: usize,
+) -> Result<u64> {
+    let entry = engine.manifest().model(model)?;
+    let variant = entry.variant(size, mu)?;
+    let fp = Footprint::from_manifest(entry, variant);
+    Ok(MemoryModel::capacity_for_native_max(&fp, native_max).div_ceil(MIB))
+}
+
+/// Mean +- std formatted like the paper's tables.
+pub fn pm(xs: &[f64]) -> String {
+    let (m, s) = mbs::util::stats::mean_std(xs);
+    format!("{m:.2} +-{s:.2}")
+}
+
+/// Run one config across seeds; returns (best metric %, epoch secs) samples.
+pub fn run_seeds(
+    engine: &mut Engine,
+    base: &TrainConfig,
+    seeds: &[u64],
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let mut metrics = Vec::new();
+    let mut walls = Vec::new();
+    for &seed in seeds {
+        let mut cfg = base.clone();
+        cfg.seed = seed;
+        let r = mbs::train(engine, &cfg)?;
+        metrics.push(100.0 * r.best_metric());
+        walls.push(r.epoch_wall_mean.as_secs_f64());
+    }
+    Ok((metrics, walls))
+}

@@ -1,0 +1,96 @@
+//! Hot-path microbenchmarks (feeds EXPERIMENTS.md SSPerf): per-stage
+//! latency of the micro-batch step across models —
+//!   assemble: host-side synthetic-data generation + padding
+//!   accum:    upload x/y/mask/scale + execute fwd/bwd + state swap
+//!   apply:    optimizer update executable
+//!   eval:     forward-only executable
+//! plus the L3-only overhead (splitter + scale arithmetic), which must be
+//! noise-level compared to the XLA work.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mbs::coordinator::{NormalizationMode, SplitPlan};
+use mbs::data::{loader, Dataset};
+use mbs::coordinator::datasets_for;
+use mbs::metrics::Table;
+use mbs::{Result, TrainConfig};
+
+fn bench<F: FnMut() -> Result<()>>(iters: usize, mut f: F) -> Result<f64> {
+    // warmup
+    f()?;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f()?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / iters as f64 * 1e3)
+}
+
+fn main() -> Result<()> {
+    let mut engine = common::engine()?;
+    let iters = common::scale(10);
+
+    let mut table = Table::new(&[
+        "model", "mu", "assemble (ms)", "accum (ms)", "apply (ms)", "eval (ms)",
+    ]);
+    let setups = [
+        ("microresnet18", 16usize, 8usize),
+        ("microresnet18", 16, 16),
+        ("microresnet34", 16, 8),
+        ("amoebacell", 24, 16),
+        ("microunet", 24, 8),
+        ("microunet", 48, 16),
+        ("microformer", 64, 8),
+    ];
+    for (model, size, mu) in setups {
+        let entry = engine.manifest().model(model)?.clone();
+        let cfg = TrainConfig::builder(model).build();
+        let (ds, _): (Arc<dyn Dataset>, _) = datasets_for(&entry.task, size, &cfg)?;
+        let indices: Vec<usize> = (0..mu).collect();
+
+        let t_assemble = bench(iters, || {
+            let mb = loader::assemble(ds.as_ref(), &indices, mu, 0);
+            std::hint::black_box(&mb);
+            Ok(())
+        })?;
+
+        let mut rt = engine.load_model(model, size, mu)?;
+        let mb = loader::assemble(ds.as_ref(), &indices, mu, 0);
+        let plan = SplitPlan::new(mu, mu);
+        let scale = NormalizationMode::Paper.scale(&plan, 0);
+
+        let t_accum = bench(iters, || rt.accum_step(&mb, scale).map(|_| ()))?;
+        let t_apply = bench(iters, || rt.apply(&rt.default_hyper()))?;
+        let t_eval = bench(iters, || rt.eval_step(&mb).map(|_| ()))?;
+
+        table.row(&[
+            model.to_string(),
+            mu.to_string(),
+            format!("{t_assemble:.2}"),
+            format!("{t_accum:.2}"),
+            format!("{t_apply:.2}"),
+            format!("{t_eval:.2}"),
+        ]);
+    }
+    println!("MICROBENCH — per-stage hot-path latency ({iters} iters, state: see below):\n");
+    println!("{}", table.render());
+
+    // L3 bookkeeping cost: splitter + scale for a large epoch, no XLA
+    let t0 = Instant::now();
+    let mut sink = 0f32;
+    let reps = 10_000usize;
+    for i in 0..reps {
+        let plan = SplitPlan::new(1024 + (i % 7), 16);
+        for j in 0..plan.n_smu() {
+            sink += NormalizationMode::Paper.scale(&plan, j);
+        }
+    }
+    let l3_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    println!(
+        "\nL3 bookkeeping (split + normalize, N_B=1024): {l3_ns:.0} ns per mini-batch\n\
+         (sink {sink:.1}) — vs milliseconds per XLA step: coordinator is not the bottleneck."
+    );
+    Ok(())
+}

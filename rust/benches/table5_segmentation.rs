@@ -1,0 +1,54 @@
+//! Table 5: U-Net IoU and training time across mini-batch sizes beyond the
+//! memory limit (paper: native max 16, MBS up to 1024 with IoU peaking at
+//! an interior batch, 128).
+
+mod common;
+
+use mbs::metrics::Table;
+use mbs::{MbsError, Result, TrainConfig};
+
+fn main() -> Result<()> {
+    let mut engine = common::engine()?;
+    let epochs = common::scale(3);
+    let seeds = [0u64, 1, 2];
+    let (model, size, mu, native_max) = ("microunet", 24usize, 16usize, 16usize);
+    let cap = common::capacity_mib_for(&engine, model, size, mu, native_max)?;
+
+    let mut table = Table::new(&[
+        "batch", "mu", "IoU w/o MBS (%)", "IoU w/ MBS (%)", "time w/o (s)", "time w/ (s)",
+    ]);
+    for batch in [16usize, 32, 64, 128, 256] {
+        let mut cells = vec![batch.to_string(), mu.to_string()];
+        let mut times = vec!["Failed".to_string(), "-".to_string()];
+        for (slot, use_mbs) in [(0usize, false), (1usize, true)] {
+            let mut cfg = TrainConfig::builder(model)
+                .size(size)
+                .mu(mu)
+                .batch(batch)
+                .epochs(epochs)
+                .dataset_len(common::scale(192).max(batch))
+                .eval_len(common::scale(48))
+                .capacity_mib(cap)
+                .build();
+            cfg.use_mbs = use_mbs;
+            match common::run_seeds(&mut engine, &cfg, &seeds) {
+                Ok((metrics, walls)) => {
+                    cells.push(common::pm(&metrics));
+                    times[slot] = common::pm(&walls);
+                }
+                Err(MbsError::Oom { .. }) => cells.push("Failed".into()),
+                Err(e) => return Err(e),
+            }
+        }
+        cells.push(times[0].clone());
+        cells.push(times[1].clone());
+        table.row(&cells);
+    }
+    println!("TABLE 5 — {model} (size {size}, capacity {cap} MiB, native max {native_max}):\n");
+    println!("{}", table.render());
+    println!(
+        "\npaper shape: w/o MBS fails past 16; w/ MBS all batches train; IoU peaks at\n\
+         an interior batch; epoch time grows mildly with batch."
+    );
+    Ok(())
+}

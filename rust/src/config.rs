@@ -1,0 +1,328 @@
+//! Typed training configuration + builder + file/CLI loading.
+//!
+//! Configs come from three layers, later overriding earlier:
+//!   1. model defaults (manifest hyper-parameters, paper section 4.2.4)
+//!   2. a flat `key = value` config file (`--config run.cfg`)
+//!   3. CLI flags (`--batch 128 --mu 16 ...`)
+
+use crate::coordinator::accumulator::NormalizationMode;
+use crate::coordinator::streamer::StreamingPolicy;
+use crate::error::{MbsError, Result};
+use crate::memory::MIB;
+use crate::util::cli::Args;
+
+/// Learning-rate schedule (the AmoebaNet recipe uses linear decay).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Linearly decay from the base LR to `final_frac * base` over training.
+    LinearDecay { final_frac: f32 },
+}
+
+impl LrSchedule {
+    pub fn factor(&self, update: u64, total_updates: u64) -> f32 {
+        match self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::LinearDecay { final_frac } => {
+                if total_updates <= 1 {
+                    return 1.0;
+                }
+                let t = (update as f32 / (total_updates - 1) as f32).min(1.0);
+                1.0 - t * (1.0 - final_frac)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Manifest model key (microresnet18 / microresnet34 / amoebacell /
+    /// microunet / microformer).
+    pub model: String,
+    /// Image size or sequence length; `None` = manifest default.
+    pub size: Option<usize>,
+    /// Micro-batch size (must match an exported variant).
+    pub mu: usize,
+    /// Mini-batch size N_B.
+    pub batch: usize,
+    pub epochs: usize,
+    /// Training set size (synthetic, generated on the fly).
+    pub dataset_len: usize,
+    /// Held-out eval set size.
+    pub eval_len: usize,
+    /// Simulated device capacity; `None` = headroom for exactly the MBS
+    /// step (mu samples) times two.
+    pub capacity_mib: Option<u64>,
+    /// Distinct classes the synthetic classification data actually uses.
+    /// The exported heads are 102-wide (Flower-102), but at micro scale a
+    /// 102-way problem does not move within a few epochs; 16 effective
+    /// classes keeps the accuracy curves informative (paper fig. 3 shape)
+    /// while exercising the same code path.
+    pub num_classes: usize,
+    /// Use MBS (true) or the native baseline (false). The native baseline
+    /// computes the whole mini-batch in one step and OOMs past the memory
+    /// frontier — the paper's "w/o MBS" column.
+    pub use_mbs: bool,
+    pub norm_mode: NormalizationMode,
+    pub streaming: StreamingPolicy,
+    /// Micro-batches staged ahead of the one executing.
+    pub prefetch: usize,
+    pub seed: u64,
+    pub lr_schedule: LrSchedule,
+    /// Override the manifest's base learning rate.
+    pub lr: Option<f32>,
+    /// Skip the eval pass after each epoch (benches that only need timing).
+    pub skip_eval: bool,
+}
+
+impl TrainConfig {
+    pub fn builder(model: &str) -> TrainConfigBuilder {
+        TrainConfigBuilder { cfg: TrainConfig::default_for(model) }
+    }
+
+    pub fn default_for(model: &str) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            size: None,
+            mu: 8,
+            batch: 16,
+            epochs: 3,
+            dataset_len: 512,
+            eval_len: 128,
+            capacity_mib: None,
+            num_classes: 16,
+            use_mbs: true,
+            norm_mode: NormalizationMode::Paper,
+            streaming: StreamingPolicy::DoubleBuffered,
+            prefetch: 2,
+            seed: 0,
+            lr_schedule: LrSchedule::Constant,
+            lr: None,
+            skip_eval: false,
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> Option<u64> {
+        self.capacity_mib.map(|m| m * MIB)
+    }
+
+    /// Apply `key = value` overrides (config-file lines or CLI pairs).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let bad = |k: &str, v: &str| MbsError::Config(format!("invalid value {v:?} for {k}"));
+        match key {
+            "model" => self.model = value.to_string(),
+            "size" => self.size = Some(value.parse().map_err(|_| bad(key, value))?),
+            "mu" => self.mu = value.parse().map_err(|_| bad(key, value))?,
+            "batch" => self.batch = value.parse().map_err(|_| bad(key, value))?,
+            "epochs" => self.epochs = value.parse().map_err(|_| bad(key, value))?,
+            "dataset-len" | "dataset_len" => {
+                self.dataset_len = value.parse().map_err(|_| bad(key, value))?
+            }
+            "eval-len" | "eval_len" => {
+                self.eval_len = value.parse().map_err(|_| bad(key, value))?
+            }
+            "capacity-mib" | "capacity_mib" => {
+                self.capacity_mib = Some(value.parse().map_err(|_| bad(key, value))?)
+            }
+            "num-classes" | "num_classes" => {
+                self.num_classes = value.parse().map_err(|_| bad(key, value))?
+            }
+            "mbs" => self.use_mbs = value.parse().map_err(|_| bad(key, value))?,
+            "norm" => {
+                self.norm_mode =
+                    NormalizationMode::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "streaming" => {
+                self.streaming = StreamingPolicy::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "prefetch" => self.prefetch = value.parse().map_err(|_| bad(key, value))?,
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            "lr" => self.lr = Some(value.parse().map_err(|_| bad(key, value))?),
+            "lr-decay" | "lr_decay" => {
+                self.lr_schedule = LrSchedule::LinearDecay {
+                    final_frac: value.parse().map_err(|_| bad(key, value))?,
+                }
+            }
+            "skip-eval" | "skip_eval" => {
+                self.skip_eval = value.parse().map_err(|_| bad(key, value))?
+            }
+            other => return Err(MbsError::Config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Flat `key = value` config file ('#' comments, blank lines ok).
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                MbsError::Config(format!("{path}:{}: expected key = value", lineno + 1))
+            })?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Overlay CLI flags (every config key doubles as a flag).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        for key in [
+            "model", "size", "mu", "batch", "epochs", "dataset-len", "eval-len",
+            "capacity-mib", "num-classes", "mbs", "norm", "streaming", "prefetch",
+            "seed", "lr", "lr-decay", "skip-eval",
+        ] {
+            if let Some(v) = args.get(key) {
+                self.set(key, v)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub const ARG_KEYS: &'static [&'static str] = &[
+        "model", "size", "mu", "batch", "epochs", "dataset-len", "eval-len",
+        "capacity-mib", "num-classes", "mbs", "norm", "streaming", "prefetch",
+        "seed", "lr", "lr-decay", "skip-eval", "config",
+    ];
+
+    pub fn validate(&self) -> Result<()> {
+        if self.mu == 0 || self.batch == 0 || self.epochs == 0 {
+            return Err(MbsError::Config("mu, batch, epochs must be positive".into()));
+        }
+        if self.dataset_len == 0 {
+            return Err(MbsError::Config("dataset-len must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Fluent builder used by examples and benches.
+pub struct TrainConfigBuilder {
+    cfg: TrainConfig,
+}
+
+impl TrainConfigBuilder {
+    pub fn size(mut self, v: usize) -> Self {
+        self.cfg.size = Some(v);
+        self
+    }
+    pub fn mu(mut self, v: usize) -> Self {
+        self.cfg.mu = v;
+        self
+    }
+    pub fn batch(mut self, v: usize) -> Self {
+        self.cfg.batch = v;
+        self
+    }
+    pub fn epochs(mut self, v: usize) -> Self {
+        self.cfg.epochs = v;
+        self
+    }
+    pub fn dataset_len(mut self, v: usize) -> Self {
+        self.cfg.dataset_len = v;
+        self
+    }
+    pub fn eval_len(mut self, v: usize) -> Self {
+        self.cfg.eval_len = v;
+        self
+    }
+    pub fn capacity_mib(mut self, v: u64) -> Self {
+        self.cfg.capacity_mib = Some(v);
+        self
+    }
+    pub fn baseline(mut self) -> Self {
+        self.cfg.use_mbs = false;
+        self
+    }
+    pub fn norm(mut self, m: NormalizationMode) -> Self {
+        self.cfg.norm_mode = m;
+        self
+    }
+    pub fn streaming(mut self, p: StreamingPolicy) -> Self {
+        self.cfg.streaming = p;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.lr = Some(lr);
+        self
+    }
+    pub fn lr_decay(mut self, final_frac: f32) -> Self {
+        self.cfg.lr_schedule = LrSchedule::LinearDecay { final_frac };
+        self
+    }
+    pub fn skip_eval(mut self) -> Self {
+        self.cfg.skip_eval = true;
+        self
+    }
+    pub fn build(self) -> TrainConfig {
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let c = TrainConfig::builder("microresnet18").batch(128).mu(16).epochs(2).build();
+        assert_eq!(c.model, "microresnet18");
+        assert_eq!(c.batch, 128);
+        assert_eq!(c.mu, 16);
+        assert!(c.use_mbs);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn set_parses_all_keys() {
+        let mut c = TrainConfig::default_for("m");
+        c.set("batch", "64").unwrap();
+        c.set("norm", "exact").unwrap();
+        c.set("streaming", "sync").unwrap();
+        c.set("capacity-mib", "128").unwrap();
+        c.set("mbs", "false").unwrap();
+        c.set("lr-decay", "0.1").unwrap();
+        assert_eq!(c.batch, 64);
+        assert_eq!(c.norm_mode, NormalizationMode::Exact);
+        assert_eq!(c.streaming, StreamingPolicy::Synchronous);
+        assert_eq!(c.capacity_bytes(), Some(128 * MIB));
+        assert!(!c.use_mbs);
+        assert!(matches!(c.lr_schedule, LrSchedule::LinearDecay { .. }));
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("batch", "abc").is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let path = std::env::temp_dir().join(format!("mbs-cfg-{}.cfg", std::process::id()));
+        std::fs::write(&path, "# comment\nbatch = 256\nmu=32 # inline\n\nnorm = paper\n").unwrap();
+        let mut c = TrainConfig::default_for("m");
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.batch, 256);
+        assert_eq!(c.mu, 32);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = TrainConfig::default_for("m");
+        c.mu = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lr_schedule_factors() {
+        let s = LrSchedule::LinearDecay { final_frac: 0.0 };
+        assert_eq!(s.factor(0, 11), 1.0);
+        assert!((s.factor(10, 11) - 0.0).abs() < 1e-6);
+        assert!((s.factor(5, 11) - 0.5).abs() < 1e-6);
+        assert_eq!(LrSchedule::Constant.factor(7, 10), 1.0);
+        assert_eq!(s.factor(0, 1), 1.0); // degenerate
+    }
+}

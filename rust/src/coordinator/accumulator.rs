@@ -1,0 +1,204 @@
+//! Loss-normalization policy + per-mini-batch accumulation bookkeeping
+//! (paper section 3.4, Alg. 1 lines 10-11).
+//!
+//! The exported `accum_step` executable computes
+//! `acc += d(scale * sum_k mask_k * L_k)/dw`, so the normalization mode is
+//! purely a choice of `scale`:
+//!
+//!  * [`NormalizationMode::Paper`] — eq. 14: each micro-batch contributes
+//!    its *mean* loss divided by `N_Smu`, i.e. `scale = 1/(N_Smu * n_j)`
+//!    with `n_j` the actual sample count of micro-batch j. Exact for even
+//!    splits; over-weights ragged-tail samples (quantified by the A1
+//!    ablation bench).
+//!  * [`NormalizationMode::Exact`] — `scale = 1/N_B` for every micro-batch:
+//!    the accumulated gradient equals the full mini-batch mean-loss gradient
+//!    for any (N_B, mu), ragged or not.
+//!  * [`NormalizationMode::None`] — no normalization (`scale = 1/n_j`,
+//!    plain summed gradient accumulation): reproduces the eq. 13 mismatch
+//!    the paper's method exists to fix; used by the ablation.
+
+use super::splitter::SplitPlan;
+use crate::runtime::StepOutput;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormalizationMode {
+    Paper,
+    Exact,
+    None,
+}
+
+impl NormalizationMode {
+    pub fn parse(s: &str) -> Option<NormalizationMode> {
+        match s {
+            "paper" => Some(NormalizationMode::Paper),
+            "exact" => Some(NormalizationMode::Exact),
+            "none" => Some(NormalizationMode::None),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NormalizationMode::Paper => "paper",
+            NormalizationMode::Exact => "exact",
+            NormalizationMode::None => "none",
+        }
+    }
+
+    /// The `scale` input for micro-batch `j` of `plan`.
+    pub fn scale(&self, plan: &SplitPlan, j: usize) -> f32 {
+        let n_j = plan.ranges[j].len() as f32;
+        match self {
+            NormalizationMode::Paper => 1.0 / (plan.n_smu() as f32 * n_j),
+            NormalizationMode::Exact => 1.0 / plan.n_b as f32,
+            NormalizationMode::None => 1.0 / n_j,
+        }
+    }
+}
+
+/// Aggregates loss and metric sums across the micro-batches of one
+/// mini-batch (and across mini-batches of an epoch).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulation {
+    pub loss_sum: f64,
+    pub metric: [f64; 4],
+    pub samples: usize,
+    pub micro_steps: usize,
+}
+
+impl Accumulation {
+    pub fn add(&mut self, out: &StepOutput, samples: usize) {
+        self.loss_sum += out.loss_sum as f64;
+        for (a, m) in self.metric.iter_mut().zip(out.metric) {
+            *a += m as f64;
+        }
+        self.samples += samples;
+        self.micro_steps += 1;
+    }
+
+    pub fn merge(&mut self, other: &Accumulation) {
+        self.loss_sum += other.loss_sum;
+        for (a, m) in self.metric.iter_mut().zip(other.metric) {
+            *a += m;
+        }
+        self.samples += other.samples;
+        self.micro_steps += other.micro_steps;
+    }
+
+    /// Mean per-sample loss.
+    pub fn mean_loss(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.samples as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn paper_mode_even_split_equals_exact() {
+        let plan = SplitPlan::new(16, 4);
+        for j in 0..plan.n_smu() {
+            let p = NormalizationMode::Paper.scale(&plan, j);
+            let e = NormalizationMode::Exact.scale(&plan, j);
+            assert!((p - e).abs() < 1e-9, "j={j}: paper {p} != exact {e}");
+            assert!((e - 1.0 / 16.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn paper_mode_overweights_ragged_tail() {
+        let plan = SplitPlan::new(6, 4); // ranges: 4 + 2
+        let head = NormalizationMode::Paper.scale(&plan, 0); // 1/(2*4)
+        let tail = NormalizationMode::Paper.scale(&plan, 1); // 1/(2*2)
+        assert!((head - 0.125).abs() < 1e-9);
+        assert!((tail - 0.25).abs() < 1e-9);
+        // exact mode weights every sample equally
+        assert!((NormalizationMode::Exact.scale(&plan, 1) - 1.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn none_mode_is_nsmu_times_larger() {
+        // eq. 13: plain accumulation of mean losses = N_Smu x the eq. 10 grad
+        let plan = SplitPlan::new(32, 8);
+        for j in 0..plan.n_smu() {
+            let none = NormalizationMode::None.scale(&plan, j);
+            let paper = NormalizationMode::Paper.scale(&plan, j);
+            assert!((none / paper - plan.n_smu() as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn exact_mode_total_sample_weight_is_one() {
+        // sum over all samples of their loss weight must be 1/N_B * N_B = 1
+        forall(
+            "weights sum to 1",
+            300,
+            0x11,
+            |r| ((r.below(512) + 1) as usize, (r.below(32) + 1) as usize),
+            |&(n_b, n_mu)| {
+                let plan = SplitPlan::new(n_b, n_mu);
+                let total: f64 = plan
+                    .ranges
+                    .iter()
+                    .map(|rg| {
+                        NormalizationMode::Exact.scale(&plan, rg.j) as f64 * rg.len() as f64
+                    })
+                    .sum();
+                ensure((total - 1.0).abs() < 1e-6, format!("total {total}"))
+            },
+        );
+    }
+
+    #[test]
+    fn paper_mode_microbatch_weight_uniform() {
+        // paper mode gives every micro-batch (not sample) weight 1/N_Smu
+        forall(
+            "ubatch weight",
+            300,
+            0x12,
+            |r| ((r.below(512) + 1) as usize, (r.below(32) + 1) as usize),
+            |&(n_b, n_mu)| {
+                let plan = SplitPlan::new(n_b, n_mu);
+                for rg in &plan.ranges {
+                    let w = NormalizationMode::Paper.scale(&plan, rg.j) as f64 * rg.len() as f64;
+                    ensure(
+                        (w - 1.0 / plan.n_smu() as f64).abs() < 1e-6,
+                        format!("ubatch weight {w}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn accumulation_aggregates() {
+        let mut acc = Accumulation::default();
+        acc.add(&StepOutput { loss_sum: 4.0, metric: [2.0, 4.0, 0.0, 0.0] }, 4);
+        acc.add(&StepOutput { loss_sum: 2.0, metric: [1.0, 2.0, 0.0, 0.0] }, 2);
+        assert_eq!(acc.samples, 6);
+        assert_eq!(acc.micro_steps, 2);
+        assert!((acc.mean_loss() - 1.0).abs() < 1e-9);
+        assert_eq!(acc.metric[0], 3.0);
+
+        let mut total = Accumulation::default();
+        total.merge(&acc);
+        total.merge(&acc);
+        assert_eq!(total.samples, 12);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(NormalizationMode::parse("paper"), Some(NormalizationMode::Paper));
+        assert_eq!(NormalizationMode::parse("exact"), Some(NormalizationMode::Exact));
+        assert_eq!(NormalizationMode::parse("none"), Some(NormalizationMode::None));
+        assert_eq!(NormalizationMode::parse("bogus"), None);
+        assert_eq!(NormalizationMode::Paper.name(), "paper");
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`splitter`] — mini -> micro batch split plan (Alg. 1 lines 1-6)
+//! * [`streamer`] — the stream-based pipeline (section 3.1, fig. 1)
+//! * [`accumulator`] — loss-normalization policy (section 3.4, eq. 14-17)
+//! * [`scheduler`] — update points + LR schedules (section 3.3 step 5)
+//! * [`trainer`] — the MBS training loop and the native "w/o MBS" baseline
+
+pub mod accumulator;
+pub mod scheduler;
+pub mod splitter;
+pub mod streamer;
+pub mod trainer;
+
+pub use accumulator::{Accumulation, NormalizationMode};
+pub use scheduler::UpdateScheduler;
+pub use splitter::{MicroRange, SplitPlan};
+pub use streamer::{stream_epoch, EpochStream, StreamingPolicy};
+pub use trainer::{datasets_for, evaluate, train, TrainReport};

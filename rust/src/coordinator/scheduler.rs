@@ -1,0 +1,111 @@
+//! Update scheduling: when the optimizer fires and with which
+//! hyper-parameters (paper section 3.3 step 5 + the LR schedules of 4.2.4).
+//!
+//! MBS's defining scheduling rule: the optimizer applies only after the
+//! *last* micro-batch of a mini-batch — from the optimizer's point of view
+//! the update timing is indistinguishable from native mini-batch training.
+
+use crate::config::{LrSchedule, TrainConfig};
+use crate::manifest::OptimizerInfo;
+
+/// Computes the hyper-parameter vector for each optimizer update.
+#[derive(Debug, Clone)]
+pub struct UpdateScheduler {
+    base_hyper: Vec<f32>,
+    schedule: LrSchedule,
+    total_updates: u64,
+    adam_step_index: Option<usize>,
+}
+
+impl UpdateScheduler {
+    pub fn new(opt: &OptimizerInfo, cfg: &TrainConfig, total_updates: u64) -> UpdateScheduler {
+        let mut base_hyper = opt.hyper_defaults.clone();
+        if let Some(lr) = cfg.lr {
+            if !base_hyper.is_empty() {
+                base_hyper[0] = lr; // convention: hyper[0] is the LR
+            }
+        }
+        let adam_step_index = opt.hyper_names.iter().position(|n| n == "step");
+        UpdateScheduler { base_hyper, schedule: cfg.lr_schedule, total_updates, adam_step_index }
+    }
+
+    /// Hyper vector for update number `update` (0-based).
+    pub fn hyper_for(&self, update: u64) -> Vec<f32> {
+        let mut h = self.base_hyper.clone();
+        if !h.is_empty() {
+            h[0] *= self.schedule.factor(update, self.total_updates);
+        }
+        if let Some(i) = self.adam_step_index {
+            h[i] = (update + 1) as f32; // Adam bias correction is 1-based
+        }
+        h
+    }
+
+    pub fn base_lr(&self) -> f32 {
+        self.base_hyper.first().copied().unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accumulator::NormalizationMode;
+
+    fn opt(kind: &str) -> OptimizerInfo {
+        match kind {
+            "sgdm" => OptimizerInfo {
+                kind: "sgdm".into(),
+                slots: 1,
+                hyper_names: vec!["lr".into(), "momentum".into(), "weight_decay".into()],
+                hyper_defaults: vec![0.01, 0.9, 5e-4],
+            },
+            _ => OptimizerInfo {
+                kind: "adam".into(),
+                slots: 2,
+                hyper_names: vec![
+                    "lr".into(),
+                    "beta1".into(),
+                    "beta2".into(),
+                    "eps".into(),
+                    "weight_decay".into(),
+                    "step".into(),
+                ],
+                hyper_defaults: vec![0.01, 0.9, 0.999, 1e-8, 5e-4, 1.0],
+            },
+        }
+    }
+
+    fn cfg() -> TrainConfig {
+        let mut c = TrainConfig::default_for("m");
+        c.norm_mode = NormalizationMode::Paper;
+        c
+    }
+
+    #[test]
+    fn sgdm_constant_lr() {
+        let s = UpdateScheduler::new(&opt("sgdm"), &cfg(), 100);
+        assert_eq!(s.hyper_for(0), vec![0.01, 0.9, 5e-4]);
+        assert_eq!(s.hyper_for(99), vec![0.01, 0.9, 5e-4]);
+    }
+
+    #[test]
+    fn lr_override_and_decay() {
+        let mut c = cfg();
+        c.lr = Some(0.1);
+        c.lr_schedule = LrSchedule::LinearDecay { final_frac: 0.0 };
+        let s = UpdateScheduler::new(&opt("sgdm"), &c, 11);
+        assert!((s.hyper_for(0)[0] - 0.1).abs() < 1e-7);
+        assert!((s.hyper_for(5)[0] - 0.05).abs() < 1e-7);
+        assert!(s.hyper_for(10)[0].abs() < 1e-7);
+        assert_eq!(s.base_lr(), 0.1);
+    }
+
+    #[test]
+    fn adam_step_counter_advances() {
+        let s = UpdateScheduler::new(&opt("adam"), &cfg(), 10);
+        assert_eq!(s.hyper_for(0)[5], 1.0);
+        assert_eq!(s.hyper_for(6)[5], 7.0);
+        // other fields untouched
+        assert_eq!(s.hyper_for(6)[1], 0.9);
+    }
+}

@@ -1,0 +1,145 @@
+//! Mini-batch -> micro-batch split plan (paper section 3.2 + Alg. 1 lines 1-6).
+//!
+//! Given a mini-batch of `n_b` samples and a configured micro-batch size
+//! `n_mu`, the plan is `N_Smu = ceil(n_b / n_mu)` contiguous ranges; if the
+//! mini-batch is smaller than the micro-batch, the micro-batch size clamps
+//! down to it (Alg. 1 lines 2-4). The ranges partition the mini-batch
+//! exactly (eq. 1-3) — a tested property.
+
+/// One micro-batch: samples `[lo, hi)` of the mini-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MicroRange {
+    pub j: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl MicroRange {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+/// Split plan for one mini-batch.
+#[derive(Debug, Clone)]
+pub struct SplitPlan {
+    pub n_b: usize,
+    /// Effective micro-batch size after the Alg. 1 clamp.
+    pub n_mu: usize,
+    pub ranges: Vec<MicroRange>,
+}
+
+impl SplitPlan {
+    /// Alg. 1 lines 1-6.
+    pub fn new(n_b: usize, n_mu: usize) -> SplitPlan {
+        assert!(n_b > 0, "empty mini-batch");
+        assert!(n_mu > 0, "zero micro-batch size");
+        let n_mu = n_mu.min(n_b); // lines 2-4
+        let n_smu = n_b.div_ceil(n_mu); // line 5 (round-up)
+        let ranges = (0..n_smu)
+            .map(|j| MicroRange { j, lo: j * n_mu, hi: ((j + 1) * n_mu).min(n_b) })
+            .collect();
+        SplitPlan { n_b, n_mu, ranges }
+    }
+
+    /// `N_Smu`, the number of micro-batches.
+    pub fn n_smu(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// True if every micro-batch has the full `n_mu` samples (no ragged tail).
+    pub fn is_even(&self) -> bool {
+        self.n_b % self.n_mu == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn even_split() {
+        let p = SplitPlan::new(16, 8);
+        assert_eq!(p.n_smu(), 2);
+        assert!(p.is_even());
+        assert_eq!(p.ranges[0], MicroRange { j: 0, lo: 0, hi: 8 });
+        assert_eq!(p.ranges[1], MicroRange { j: 1, lo: 8, hi: 16 });
+    }
+
+    #[test]
+    fn ragged_tail() {
+        let p = SplitPlan::new(10, 4);
+        assert_eq!(p.n_smu(), 3);
+        assert!(!p.is_even());
+        assert_eq!(p.ranges[2].len(), 2);
+    }
+
+    #[test]
+    fn clamp_when_minibatch_smaller() {
+        // Alg. 1 lines 2-4: N_mu <- N_B
+        let p = SplitPlan::new(3, 8);
+        assert_eq!(p.n_mu, 3);
+        assert_eq!(p.n_smu(), 1);
+        assert_eq!(p.ranges[0].len(), 3);
+    }
+
+    #[test]
+    fn single_sample() {
+        let p = SplitPlan::new(1, 16);
+        assert_eq!(p.n_smu(), 1);
+        assert_eq!(p.n_mu, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty mini-batch")]
+    fn rejects_empty() {
+        SplitPlan::new(0, 4);
+    }
+
+    // DESIGN.md invariant 1 as properties
+    #[test]
+    fn union_is_exact_partition() {
+        forall(
+            "partition",
+            500,
+            0x5EED,
+            |r| ((r.below(2048) + 1) as usize, (r.below(64) + 1) as usize),
+            |&(n_b, n_mu)| {
+                let p = SplitPlan::new(n_b, n_mu);
+                ensure(p.n_smu() == n_b.div_ceil(p.n_mu), "count != ceil")?;
+                let mut covered = 0usize;
+                for (i, r) in p.ranges.iter().enumerate() {
+                    ensure(r.j == i, "j misnumbered")?;
+                    ensure(r.lo == covered, "gap or overlap")?;
+                    ensure(r.len() >= 1 && r.len() <= p.n_mu, "range size out of bounds")?;
+                    covered = r.hi;
+                }
+                ensure(covered == n_b, "union != mini-batch")?;
+                // eq. 3: mu size <= mini size
+                ensure(p.n_mu <= n_b, "mu > n_b after clamp")
+            },
+        );
+    }
+
+    #[test]
+    fn only_last_range_is_short() {
+        forall(
+            "tail",
+            300,
+            0xD00D,
+            |r| ((r.below(1024) + 1) as usize, (r.below(64) + 1) as usize),
+            |&(n_b, n_mu)| {
+                let p = SplitPlan::new(n_b, n_mu);
+                for r in &p.ranges[..p.n_smu() - 1] {
+                    ensure(r.len() == p.n_mu, "non-tail range short")?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! Stream-based pipeline (paper section 3.1, fig. 1): micro-batches are
+//! assembled on the host and streamed to the device in sequence.
+//!
+//! Policies:
+//!  * [`StreamingPolicy::DoubleBuffered`] — a worker thread assembles the
+//!    next micro-batch(es) while the runtime thread executes the current
+//!    one, over a bounded channel (the CUDA-stream copy/compute overlap of
+//!    the paper, expressed with std threads since the device here is the
+//!    PJRT CPU client).
+//!  * [`StreamingPolicy::Synchronous`] — assemble inline on the runtime
+//!    thread; the ablation baseline (A2) that quantifies what the overlap
+//!    buys.
+//!
+//! The bounded channel *is* the memory backpressure: at most `prefetch`
+//! assembled micro-batches exist beyond the one executing, so host staging
+//! memory is bounded by `(prefetch + 1) * mu * sample_bytes`.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use crate::data::{loader, Dataset, EpochPlan, MicroBatchHost};
+
+use super::splitter::SplitPlan;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamingPolicy {
+    DoubleBuffered,
+    Synchronous,
+}
+
+impl StreamingPolicy {
+    pub fn parse(s: &str) -> Option<StreamingPolicy> {
+        match s {
+            "double-buffered" | "double_buffered" | "async" => {
+                Some(StreamingPolicy::DoubleBuffered)
+            }
+            "synchronous" | "sync" => Some(StreamingPolicy::Synchronous),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamingPolicy::DoubleBuffered => "double-buffered",
+            StreamingPolicy::Synchronous => "synchronous",
+        }
+    }
+}
+
+/// One streamed micro-batch, tagged with its position in the epoch.
+#[derive(Debug)]
+pub struct StreamItem {
+    /// Mini-batch index within the epoch.
+    pub batch: usize,
+    /// Mini-batch sample count (for split-plan reconstruction).
+    pub n_b: usize,
+    pub mb: MicroBatchHost,
+}
+
+/// Iterator over every micro-batch of an epoch under a streaming policy.
+pub enum EpochStream {
+    Buffered {
+        rx: mpsc::Receiver<StreamItem>,
+        handle: Option<thread::JoinHandle<()>>,
+    },
+    Sync {
+        ds: Arc<dyn Dataset>,
+        plan: EpochPlan,
+        mu: usize,
+        batch: usize,
+        j: usize,
+    },
+}
+
+/// Start streaming an epoch: every mini-batch of `plan`, split into
+/// micro-batches of (at most) `mu`, in order.
+pub fn stream_epoch(
+    policy: StreamingPolicy,
+    ds: Arc<dyn Dataset>,
+    plan: EpochPlan,
+    mu: usize,
+    prefetch: usize,
+) -> EpochStream {
+    match policy {
+        StreamingPolicy::DoubleBuffered => {
+            let (tx, rx) = mpsc::sync_channel(prefetch.max(1));
+            let handle = thread::Builder::new()
+                .name("mbs-streamer".into())
+                .spawn(move || {
+                    'outer: for b in 0..plan.num_batches() {
+                        let indices = plan.batch_indices(b);
+                        let split = SplitPlan::new(indices.len(), mu);
+                        for j in 0..split.n_smu() {
+                            let mb = loader::assemble(ds.as_ref(), indices, mu, j); // pad to static mu
+                            let item = StreamItem { batch: b, n_b: indices.len(), mb };
+                            if tx.send(item).is_err() {
+                                break 'outer; // consumer dropped early
+                            }
+                        }
+                    }
+                })
+                .expect("spawn streamer thread");
+            EpochStream::Buffered { rx, handle: Some(handle) }
+        }
+        StreamingPolicy::Synchronous => {
+            EpochStream::Sync { ds, plan, mu, batch: 0, j: 0 }
+        }
+    }
+}
+
+impl Iterator for EpochStream {
+    type Item = StreamItem;
+
+    fn next(&mut self) -> Option<StreamItem> {
+        match self {
+            EpochStream::Buffered { rx, .. } => rx.recv().ok(),
+            EpochStream::Sync { ds, plan, mu, batch, j } => {
+                if *batch >= plan.num_batches() {
+                    return None;
+                }
+                let indices = plan.batch_indices(*batch);
+                let split = SplitPlan::new(indices.len(), *mu);
+                let mb = loader::assemble(ds.as_ref(), indices, *mu, *j); // pad to static mu
+                let item = StreamItem { batch: *batch, n_b: indices.len(), mb };
+                *j += 1;
+                if *j >= split.n_smu() {
+                    *j = 0;
+                    *batch += 1;
+                }
+                Some(item)
+            }
+        }
+    }
+}
+
+impl Drop for EpochStream {
+    fn drop(&mut self) {
+        if let EpochStream::Buffered { rx, handle } = self {
+            // unblock the producer if the consumer stopped early
+            while rx.try_recv().is_ok() {}
+            drop(std::mem::replace(rx, mpsc::sync_channel(1).1));
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthFlowers;
+
+    fn collect(policy: StreamingPolicy, ds_len: usize, batch: usize, mu: usize) -> Vec<(usize, usize, usize)> {
+        let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, ds_len, 3));
+        let plan = EpochPlan::new(ds_len, batch, 1, 0);
+        stream_epoch(policy, ds, plan, mu, 2)
+            .map(|item| (item.batch, item.mb.j, item.mb.actual))
+            .collect()
+    }
+
+    #[test]
+    fn policies_yield_identical_streams() {
+        let a = collect(StreamingPolicy::DoubleBuffered, 50, 16, 8);
+        let b = collect(StreamingPolicy::Synchronous, 50, 16, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn covers_all_microbatches_with_ragged_tail() {
+        // 50 items, batch 16 -> batches of 16,16,16,2; mu=8 ->
+        // 2+2+2+1 = 7 micro-batches; final one has 2 actual samples
+        let items = collect(StreamingPolicy::Synchronous, 50, 16, 8);
+        assert_eq!(items.len(), 7);
+        assert_eq!(items[6], (3, 0, 2));
+        let total: usize = items.iter().map(|&(_, _, a)| a).sum();
+        assert_eq!(total, 50);
+    }
+
+    #[test]
+    fn payloads_identical_across_policies() {
+        let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 40, 3));
+        let plan = EpochPlan::new(40, 12, 1, 0);
+        let a: Vec<_> =
+            stream_epoch(StreamingPolicy::DoubleBuffered, ds.clone(), plan.clone(), 8, 2).collect();
+        let b: Vec<_> = stream_epoch(StreamingPolicy::Synchronous, ds, plan, 8, 2).collect();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.mb.x, y.mb.x);
+            assert_eq!(x.mb.y, y.mb.y);
+            assert_eq!(x.mb.mask, y.mb.mask);
+        }
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 1000, 3));
+        let plan = EpochPlan::new(1000, 32, 1, 0);
+        let mut s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, 16, 2);
+        let _ = s.next();
+        drop(s); // must join cleanly, not deadlock
+    }
+}

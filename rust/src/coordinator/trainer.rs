@@ -1,0 +1,251 @@
+//! The MBS training loop (paper fig. 2) and the native baseline.
+//!
+//! Both paths run the *identical* arithmetic through the same `accum_step`
+//! executable; they differ only in (a) how many samples sit on the device
+//! at once — which the memory model checks — and (b) how many accumulation
+//! steps precede each optimizer update:
+//!
+//!   native ("w/o MBS"): one step with N_B samples; OOMs past the frontier
+//!   MBS    ("w/ MBS") : N_Smu steps with mu samples, loss-normalized
+//!
+//! That identity is what makes the with/without comparison of the paper's
+//! tables apples-to-apples, and it is what the grad-equivalence integration
+//! test checks end-to-end.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::TrainConfig;
+use crate::data::{loader, Dataset, EpochPlan, SynthCarvana, SynthFlowers, SynthText};
+use crate::error::{MbsError, Result};
+use crate::memory::{Footprint, MemoryModel};
+use crate::metrics::{EpochStats, MetricKind};
+use crate::runtime::{Engine, ModelRuntime};
+
+use super::accumulator::Accumulation;
+use super::scheduler::UpdateScheduler;
+use super::splitter::SplitPlan;
+use super::streamer::stream_epoch;
+
+/// Everything a finished run reports (feeds the tables and figures).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub model: String,
+    pub use_mbs: bool,
+    pub batch: usize,
+    pub mu: usize,
+    pub train_epochs: Vec<EpochStats>,
+    pub eval_epochs: Vec<EpochStats>,
+    pub final_eval: EpochStats,
+    pub total_wall: Duration,
+    /// Mean wall-clock per training epoch (the paper's "training time" column).
+    pub epoch_wall_mean: Duration,
+    pub native_max_batch: usize,
+    pub capacity_bytes: u64,
+    pub output_mode: String,
+    pub updates: u64,
+}
+
+impl TrainReport {
+    /// Best (max) eval primary metric across epochs — the paper reports
+    /// "maximum accuracy/IoU".
+    pub fn best_metric(&self) -> f64 {
+        self.eval_epochs
+            .iter()
+            .map(|e| e.primary_metric)
+            .fold(self.final_eval.primary_metric, f64::max)
+    }
+}
+
+/// Build the task-appropriate synthetic datasets for a config.
+pub fn datasets_for(
+    task: &str,
+    size: usize,
+    cfg: &TrainConfig,
+) -> Result<(Arc<dyn Dataset>, Arc<dyn Dataset>)> {
+    let train_seed = cfg.seed.wrapping_mul(2).wrapping_add(1);
+    let eval_seed = cfg.seed.wrapping_mul(2).wrapping_add(2);
+    Ok(match task {
+        "classification" => (
+            Arc::new(SynthFlowers::new(size, cfg.num_classes, cfg.dataset_len, train_seed)),
+            Arc::new(SynthFlowers::new(size, cfg.num_classes, cfg.eval_len, eval_seed)),
+        ),
+        "segmentation" => (
+            Arc::new(SynthCarvana::new(size, cfg.dataset_len, train_seed)),
+            Arc::new(SynthCarvana::new(size, cfg.eval_len, eval_seed)),
+        ),
+        "lm" => (
+            Arc::new(SynthText::new(512, size, cfg.dataset_len, train_seed)),
+            Arc::new(SynthText::new(512, size, cfg.eval_len, eval_seed)),
+        ),
+        other => return Err(MbsError::Config(format!("unknown task '{other}'"))),
+    })
+}
+
+/// Train according to `cfg`, returning the full report. Returns
+/// [`MbsError::Oom`] when the configuration does not fit the simulated
+/// device — the paper tables' "Failed" cells.
+pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
+    cfg.validate()?;
+    let entry = engine.manifest().model(&cfg.model)?.clone();
+    let size = cfg.size.unwrap_or(entry.default_size);
+    let variant = entry.variant(size, cfg.mu)?.clone();
+    let kind = MetricKind::parse(&entry.metric_semantics)?;
+
+    // ------------------------------------------------------------------
+    // memory admission (paper section 1: "the mini-batch cannot be
+    // allocated ... and the model cannot be trained")
+    // ------------------------------------------------------------------
+    let footprint = Footprint::from_manifest(&entry, &variant);
+    let capacity = cfg
+        .capacity_bytes()
+        .unwrap_or_else(|| MemoryModel::capacity_for_native_max(&footprint, 2 * cfg.mu));
+    let mem = MemoryModel::new(capacity, footprint);
+    mem.check_resident()?;
+    let samples_on_device = if cfg.use_mbs { cfg.mu.min(cfg.batch) } else { cfg.batch };
+    let label = if cfg.use_mbs {
+        format!("MBS step mu={samples_on_device}")
+    } else {
+        format!("native step N_B={samples_on_device}")
+    };
+    mem.check_step(samples_on_device, &label)?;
+    if !cfg.use_mbs && cfg.batch > variant.mu {
+        // capacity admits it but no executable was exported that large —
+        // configs keep native-max == exported max so this is a config error
+        return Err(MbsError::Config(format!(
+            "native baseline needs an exported variant with batch {} (max exported mu is {})",
+            cfg.batch, variant.mu
+        )));
+    }
+
+    // ------------------------------------------------------------------
+    // runtime + data
+    // ------------------------------------------------------------------
+    let mut rt: ModelRuntime = engine.load_model(&cfg.model, size, cfg.mu)?;
+    let (train_ds, eval_ds) = datasets_for(&entry.task, size, cfg)?;
+
+    let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
+    let total_updates = (batches_per_epoch * cfg.epochs) as u64;
+    let sched = UpdateScheduler::new(&entry.optimizer, cfg, total_updates);
+
+    let mut train_epochs = Vec::with_capacity(cfg.epochs);
+    let mut eval_epochs = Vec::with_capacity(cfg.epochs);
+    let run_start = Instant::now();
+
+    for epoch in 0..cfg.epochs {
+        let t0 = Instant::now();
+        let acc = if cfg.use_mbs {
+            train_epoch_mbs(&mut rt, cfg, &train_ds, &sched, epoch)?
+        } else {
+            train_epoch_native(&mut rt, cfg, &train_ds, &sched, epoch)?
+        };
+        let wall = t0.elapsed();
+        train_epochs.push(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, wall));
+
+        if !cfg.skip_eval {
+            eval_epochs.push(evaluate(&mut rt, kind, &eval_ds, epoch)?);
+        }
+    }
+    let total_wall = run_start.elapsed();
+    let final_eval = if cfg.skip_eval {
+        evaluate(&mut rt, kind, &eval_ds, cfg.epochs.saturating_sub(1))?
+    } else {
+        eval_epochs.last().cloned().ok_or_else(|| MbsError::Config("zero epochs".into()))?
+    };
+
+    let epoch_walls: Vec<f64> = train_epochs.iter().map(|e| e.wall.as_secs_f64()).collect();
+    let epoch_wall_mean = Duration::from_secs_f64(crate::util::stats::mean(&epoch_walls));
+
+    Ok(TrainReport {
+        model: cfg.model.clone(),
+        use_mbs: cfg.use_mbs,
+        batch: cfg.batch,
+        mu: cfg.mu,
+        train_epochs,
+        eval_epochs,
+        final_eval,
+        total_wall,
+        epoch_wall_mean,
+        native_max_batch: mem.native_max_batch(),
+        capacity_bytes: capacity,
+        output_mode: rt.output_mode_name().to_string(),
+        updates: rt.updates,
+    })
+}
+
+/// One MBS epoch: stream micro-batches, accumulate, update at mini-batch
+/// boundaries (fig. 2 steps 1-5).
+fn train_epoch_mbs(
+    rt: &mut ModelRuntime,
+    cfg: &TrainConfig,
+    ds: &Arc<dyn Dataset>,
+    sched: &UpdateScheduler,
+    epoch: usize,
+) -> Result<Accumulation> {
+    let plan = EpochPlan::new(ds.len().min(cfg.dataset_len), cfg.batch, cfg.seed, epoch as u64);
+    let mut epoch_acc = Accumulation::default();
+    let mut current_split: Option<SplitPlan> = None;
+    let stream = stream_epoch(cfg.streaming, ds.clone(), plan, cfg.mu, cfg.prefetch);
+    for item in stream {
+        let split = current_split
+            .take()
+            .filter(|s: &SplitPlan| s.n_b == item.n_b)
+            .unwrap_or_else(|| SplitPlan::new(item.n_b, cfg.mu));
+        let scale = cfg.norm_mode.scale(&split, item.mb.j);
+        let out = rt.accum_step(&item.mb, scale)?;
+        epoch_acc.add(&out, item.mb.actual);
+        if item.mb.j + 1 == split.n_smu() {
+            // last micro-batch of the mini-batch: optimizer update (step 5)
+            rt.apply(&sched.hyper_for(rt.updates))?;
+        } else {
+            current_split = Some(split);
+        }
+    }
+    Ok(epoch_acc)
+}
+
+/// One native epoch: the whole mini-batch as a single accumulation step
+/// (N_Smu = 1) followed by the update — the paper's "w/o MBS" arm. The
+/// memory model has already admitted N_B samples on the device; execution
+/// uses the exported mu-shaped step with padding when N_B < mu.
+fn train_epoch_native(
+    rt: &mut ModelRuntime,
+    cfg: &TrainConfig,
+    ds: &Arc<dyn Dataset>,
+    sched: &UpdateScheduler,
+    epoch: usize,
+) -> Result<Accumulation> {
+    let plan = EpochPlan::new(ds.len().min(cfg.dataset_len), cfg.batch, cfg.seed, epoch as u64);
+    let mut epoch_acc = Accumulation::default();
+    for b in 0..plan.num_batches() {
+        let indices = plan.batch_indices(b);
+        // single "micro"-batch covering the entire mini-batch
+        let mb = loader::assemble(ds.as_ref(), indices, rt.variant.mu, 0);
+        let n = indices.len().min(rt.variant.mu);
+        let scale = 1.0 / n as f32;
+        let out = rt.accum_step(&mb, scale)?;
+        epoch_acc.add(&out, mb.actual);
+        rt.apply(&sched.hyper_for(rt.updates))?;
+    }
+    Ok(epoch_acc)
+}
+
+/// Masked, padded eval pass over a dataset.
+pub fn evaluate(
+    rt: &mut ModelRuntime,
+    kind: MetricKind,
+    ds: &Arc<dyn Dataset>,
+    epoch: usize,
+) -> Result<EpochStats> {
+    let t0 = Instant::now();
+    let mu = rt.variant.mu;
+    let indices: Vec<usize> = (0..ds.len()).collect();
+    let split = SplitPlan::new(indices.len(), mu);
+    let mut acc = Accumulation::default();
+    for j in 0..split.n_smu() {
+        let mb = loader::assemble(ds.as_ref(), &indices, mu, j); // pad to static mu
+        let out = rt.eval_step(&mb)?;
+        acc.add(&out, mb.actual);
+    }
+    Ok(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, t0.elapsed()))
+}

@@ -1,0 +1,148 @@
+//! Epoch planning + micro-batch assembly.
+//!
+//! [`EpochPlan`] shuffles item indices once per epoch (seeded, reproducible)
+//! and yields mini-batch index ranges; [`MicroBatchHost`] is the padded,
+//! masked host-side tensor block for one micro-batch — the unit the streamer
+//! uploads to the device (paper fig. 1, step 1).
+
+use crate::util::rng::Rng;
+
+use super::{Buf, Dataset};
+
+/// Host tensors for one micro-batch: x/y padded to the static `mu` shape,
+/// plus the 0/1 sample mask that zeroes padding in loss and metrics.
+#[derive(Debug, Clone)]
+pub struct MicroBatchHost {
+    pub x: Buf,
+    pub y: Buf,
+    pub mask: Vec<f32>,
+    /// Samples actually present (<= mu).
+    pub actual: usize,
+    /// Index of this micro-batch within its mini-batch.
+    pub j: usize,
+}
+
+/// Assemble the `j`-th micro-batch of a mini-batch given by `indices`.
+pub fn assemble(
+    ds: &dyn Dataset,
+    indices: &[usize],
+    mu: usize,
+    j: usize,
+) -> MicroBatchHost {
+    let lo = j * mu;
+    let hi = ((j + 1) * mu).min(indices.len());
+    assert!(lo < indices.len(), "micro-batch {j} out of range");
+    let actual = hi - lo;
+    let (xe, ye) = (ds.x_elems(), ds.y_elems());
+    let mut x = Buf::zeros(&ds.x_dtype(), mu * xe);
+    let mut y = Buf::zeros(&ds.y_dtype(), mu * ye);
+    let mut mask = vec![0.0f32; mu];
+    for (k, &idx) in indices[lo..hi].iter().enumerate() {
+        ds.fill(idx, x.slice_mut(k * xe, (k + 1) * xe), y.slice_mut(k * ye, (k + 1) * ye));
+        mask[k] = 1.0;
+    }
+    MicroBatchHost { x, y, mask, actual, j }
+}
+
+/// Shuffled mini-batch index ranges for one epoch.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    indices: Vec<usize>,
+    batch: usize,
+    /// Drop the ragged final mini-batch? (paper keeps it; Alg. 1 line 1-5
+    /// handles non-uniform mini-batches, so the default is keep.)
+    drop_last: bool,
+}
+
+impl EpochPlan {
+    pub fn new(ds_len: usize, batch: usize, seed: u64, epoch: u64) -> EpochPlan {
+        assert!(batch > 0, "batch size 0");
+        let mut indices: Vec<usize> = (0..ds_len).collect();
+        Rng::new(seed).fork(epoch).shuffle(&mut indices);
+        EpochPlan { indices, batch, drop_last: false }
+    }
+
+    pub fn drop_last(mut self, yes: bool) -> EpochPlan {
+        self.drop_last = yes;
+        self
+    }
+
+    pub fn num_batches(&self) -> usize {
+        if self.drop_last {
+            self.indices.len() / self.batch
+        } else {
+            self.indices.len().div_ceil(self.batch)
+        }
+    }
+
+    /// Index slice for mini-batch `b`.
+    pub fn batch_indices(&self, b: usize) -> &[usize] {
+        let lo = b * self.batch;
+        let hi = ((b + 1) * self.batch).min(self.indices.len());
+        &self.indices[lo..hi]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthFlowers;
+
+    #[test]
+    fn plan_covers_every_item_once() {
+        let plan = EpochPlan::new(103, 16, 7, 0);
+        assert_eq!(plan.num_batches(), 7);
+        let mut seen: Vec<usize> = (0..plan.num_batches())
+            .flat_map(|b| plan.batch_indices(b).to_vec())
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ragged_final_batch() {
+        let plan = EpochPlan::new(100, 16, 7, 0);
+        assert_eq!(plan.batch_indices(6).len(), 4);
+        let dropped = EpochPlan::new(100, 16, 7, 0).drop_last(true);
+        assert_eq!(dropped.num_batches(), 6);
+    }
+
+    #[test]
+    fn epochs_shuffle_differently_but_deterministically() {
+        let a0 = EpochPlan::new(50, 10, 3, 0);
+        let a0b = EpochPlan::new(50, 10, 3, 0);
+        let a1 = EpochPlan::new(50, 10, 3, 1);
+        assert_eq!(a0.batch_indices(0), a0b.batch_indices(0));
+        assert_ne!(a0.batch_indices(0), a1.batch_indices(0));
+    }
+
+    #[test]
+    fn assemble_pads_and_masks_tail() {
+        let ds = SynthFlowers::new(8, 10, 100, 1);
+        let indices: Vec<usize> = (0..6).collect();
+        let mb = assemble(&ds, &indices, 4, 1); // samples 4..6 -> 2 actual
+        assert_eq!(mb.actual, 2);
+        assert_eq!(mb.mask, vec![1.0, 1.0, 0.0, 0.0]);
+        // padded x region must be zeros
+        let x = mb.x.as_f32().unwrap();
+        assert!(x[2 * ds.x_elems()..].iter().all(|&v| v == 0.0));
+        // labels of padded region are 0
+        assert_eq!(mb.y.as_i32().unwrap()[2..], [0, 0]);
+    }
+
+    #[test]
+    fn assemble_fills_real_samples() {
+        let ds = SynthFlowers::new(8, 10, 100, 1);
+        let mb = assemble(&ds, &[5, 15, 25], 4, 0);
+        assert_eq!(mb.actual, 3);
+        let y = mb.y.as_i32().unwrap();
+        assert_eq!(&y[..3], &[5, 5, 5]); // class = idx % 10
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn assemble_rejects_out_of_range() {
+        let ds = SynthFlowers::new(8, 10, 100, 1);
+        assemble(&ds, &[1, 2], 4, 1);
+    }
+}

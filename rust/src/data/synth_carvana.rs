@@ -1,0 +1,151 @@
+//! SynthCarvana: procedural foreground-object segmentation standing in for
+//! the Carvana car-masking dataset.
+//!
+//! Each item renders a smooth background gradient plus a randomly placed,
+//! randomly sized superellipse "vehicle" with a distinct colour and soft
+//! shading; the target is the exact binary mask of the object. Object and
+//! background colour distributions overlap enough that the model has to use
+//! shape, not a colour threshold.
+
+use crate::manifest::Dtype;
+use crate::util::rng::Rng;
+
+use super::{Dataset, SliceMut};
+
+#[derive(Debug, Clone)]
+pub struct SynthCarvana {
+    size: usize,
+    len: usize,
+    seed: u64,
+}
+
+impl SynthCarvana {
+    pub fn new(size: usize, len: usize, seed: u64) -> SynthCarvana {
+        SynthCarvana { size, len, seed }
+    }
+}
+
+impl Dataset for SynthCarvana {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn x_elems(&self) -> usize {
+        self.size * self.size * 3
+    }
+
+    fn y_elems(&self) -> usize {
+        self.size * self.size
+    }
+
+    fn x_dtype(&self) -> Dtype {
+        Dtype::F32
+    }
+
+    fn y_dtype(&self) -> Dtype {
+        Dtype::F32
+    }
+
+    fn fill(&self, idx: usize, mut x: SliceMut<'_>, mut y: SliceMut<'_>) {
+        let mut r = Rng::new(self.seed ^ 0xCA2).fork(idx as u64);
+        let s = self.size;
+        // superellipse object: |((u-cx)/a)|^p + |((v-cy)/b)|^p < 1
+        let cx = r.range_f32(0.3, 0.7);
+        let cy = r.range_f32(0.3, 0.7);
+        let a = r.range_f32(0.15, 0.35);
+        let b = r.range_f32(0.12, 0.3);
+        let p = r.range_f32(1.5, 4.0);
+        let rot = r.range_f32(0.0, std::f32::consts::PI);
+        let (cr, sr) = (rot.cos(), rot.sin());
+        let obj_color = [r.range_f32(0.1, 0.9), r.range_f32(0.1, 0.9), r.range_f32(0.1, 0.9)];
+        let bg_a = [r.range_f32(0.1, 0.9), r.range_f32(0.1, 0.9), r.range_f32(0.1, 0.9)];
+        let bg_b = [r.range_f32(0.1, 0.9), r.range_f32(0.1, 0.9), r.range_f32(0.1, 0.9)];
+        let grad_theta = r.range_f32(0.0, std::f32::consts::TAU);
+        let (gc, gs) = (grad_theta.cos(), grad_theta.sin());
+        let noise = 0.08;
+
+        let img = x.f32();
+        let mask = y.f32();
+        for i in 0..s {
+            for j in 0..s {
+                let u = i as f32 / s as f32;
+                let v = j as f32 / s as f32;
+                // rotated object coordinates
+                let du = u - cx;
+                let dv = v - cy;
+                let ru = (du * cr + dv * sr) / a;
+                let rv = (-du * sr + dv * cr) / b;
+                let inside = ru.abs().powf(p) + rv.abs().powf(p) < 1.0;
+                mask[i * s + j] = if inside { 1.0 } else { 0.0 };
+                let t = 0.5 + 0.5 * (u * gc + v * gs);
+                for ch in 0..3 {
+                    let bg = bg_a[ch] * (1.0 - t) + bg_b[ch] * t;
+                    let val = if inside {
+                        // soft shading toward the object boundary
+                        let shade = 1.0 - 0.3 * (ru * ru + rv * rv).min(1.0);
+                        obj_color[ch] * shade
+                    } else {
+                        bg
+                    };
+                    img[(i * s + j) * 3 + ch] = (val + noise * r.normal()).clamp(-0.5, 1.5);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fill_to_vecs;
+
+    #[test]
+    fn deterministic() {
+        let ds = SynthCarvana::new(24, 100, 3);
+        assert_eq!(fill_to_vecs(&ds, 5), fill_to_vecs(&ds, 5));
+    }
+
+    #[test]
+    fn mask_is_binary_and_nontrivial() {
+        let ds = SynthCarvana::new(24, 100, 3);
+        for i in 0..20 {
+            let (_, y) = fill_to_vecs(&ds, i);
+            let m = y.as_f32().unwrap();
+            assert!(m.iter().all(|&v| v == 0.0 || v == 1.0));
+            let fg: f32 = m.iter().sum();
+            let frac = fg / m.len() as f32;
+            assert!(
+                (0.02..0.8).contains(&frac),
+                "item {i}: degenerate foreground fraction {frac}"
+            );
+        }
+    }
+
+    #[test]
+    fn mask_matches_object_extent() {
+        // foreground pixels must be spatially contiguous-ish: the bounding
+        // box of the mask should be much smaller than the whole image for a
+        // mid-size object
+        let ds = SynthCarvana::new(32, 10, 11);
+        let (_, y) = fill_to_vecs(&ds, 0);
+        let m = y.as_f32().unwrap();
+        let s = 32;
+        let (mut lo_i, mut hi_i) = (s, 0usize);
+        for i in 0..s {
+            for j in 0..s {
+                if m[i * s + j] > 0.5 {
+                    lo_i = lo_i.min(i);
+                    hi_i = hi_i.max(i);
+                }
+            }
+        }
+        assert!(hi_i > lo_i);
+        assert!(hi_i - lo_i < s - 2, "object spans the whole image");
+    }
+
+    #[test]
+    fn items_differ() {
+        let ds = SynthCarvana::new(24, 100, 3);
+        assert_ne!(fill_to_vecs(&ds, 1).1, fill_to_vecs(&ds, 2).1);
+    }
+}

@@ -1,0 +1,120 @@
+//! SynthText: deterministic token sequences for the e2e transformer driver.
+//!
+//! Each sequence follows an affine recurrence t_{i+1} = (a*t_i + b) mod V
+//! with (a, b) drawn per-sequence from a small family, interrupted by
+//! occasional noise tokens. Next-token prediction is therefore learnable
+//! (the model must infer the family from the prefix) but not trivial, so
+//! LM loss curves show clear learning over a few hundred steps.
+
+use crate::manifest::Dtype;
+use crate::util::rng::Rng;
+
+use super::{Dataset, SliceMut};
+
+#[derive(Debug, Clone)]
+pub struct SynthText {
+    vocab: usize,
+    seq: usize,
+    len: usize,
+    seed: u64,
+    /// number of distinct (a, b) families
+    families: usize,
+    noise_prob: f32,
+}
+
+impl SynthText {
+    pub fn new(vocab: usize, seq: usize, len: usize, seed: u64) -> SynthText {
+        SynthText { vocab, seq, len, seed, families: 16, noise_prob: 0.05 }
+    }
+
+    fn family(&self, f: usize) -> (i64, i64) {
+        let mut r = Rng::new(self.seed ^ 0x7E47).fork(f as u64);
+        // odd multiplier so the map is a bijection mod 2^k-ish vocab sizes
+        let a = 2 * (r.below((self.vocab / 2) as u64 - 1) as i64) + 1;
+        let b = r.below(self.vocab as u64) as i64;
+        (a, b)
+    }
+}
+
+impl Dataset for SynthText {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn x_elems(&self) -> usize {
+        self.seq
+    }
+
+    fn y_elems(&self) -> usize {
+        self.seq
+    }
+
+    fn x_dtype(&self) -> Dtype {
+        Dtype::I32
+    }
+
+    fn y_dtype(&self) -> Dtype {
+        Dtype::I32
+    }
+
+    fn fill(&self, idx: usize, mut x: SliceMut<'_>, mut y: SliceMut<'_>) {
+        let mut r = Rng::new(self.seed).fork(idx as u64);
+        let (a, b) = self.family(r.usize_below(self.families));
+        let v = self.vocab as i64;
+        let mut t = r.below(self.vocab as u64) as i64;
+        let xs = x.i32();
+        let ys = y.i32();
+        for i in 0..self.seq {
+            xs[i] = t as i32;
+            let mut next = (a * t + b).rem_euclid(v);
+            if r.f32() < self.noise_prob {
+                next = r.below(self.vocab as u64) as i64;
+            }
+            ys[i] = next as i32; // next-token target
+            t = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fill_to_vecs;
+
+    #[test]
+    fn deterministic() {
+        let ds = SynthText::new(512, 64, 100, 5);
+        assert_eq!(fill_to_vecs(&ds, 9), fill_to_vecs(&ds, 9));
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let ds = SynthText::new(512, 64, 100, 5);
+        for i in 0..20 {
+            let (x, y) = fill_to_vecs(&ds, i);
+            for &t in x.as_i32().unwrap().iter().chain(y.as_i32().unwrap()) {
+                assert!((0..512).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn target_is_shifted_input() {
+        // y[i] must equal x[i+1] wherever no noise token intervened
+        let ds = SynthText::new(512, 64, 100, 5);
+        let (x, y) = fill_to_vecs(&ds, 3);
+        let xs = x.as_i32().unwrap();
+        let ys = y.as_i32().unwrap();
+        let matches = (0..63).filter(|&i| ys[i] == xs[i + 1]).count();
+        assert_eq!(matches, 63); // x is built from the same chain incl. noise
+    }
+
+    #[test]
+    fn sequences_learnable_not_constant() {
+        let ds = SynthText::new(512, 64, 100, 5);
+        let (x, _) = fill_to_vecs(&ds, 0);
+        let xs = x.as_i32().unwrap();
+        let distinct: std::collections::BTreeSet<_> = xs.iter().collect();
+        assert!(distinct.len() > 8, "sequence nearly constant");
+    }
+}

@@ -1,0 +1,52 @@
+//! Library error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum MbsError {
+    /// The simulated device cannot fit the requested step — this is the
+    /// paper's "Failed" table cell. Carries the arithmetic so reports can
+    /// show *why* it failed.
+    #[error("device OOM: need {needed_bytes} B but only {available_bytes} B of {capacity_bytes} B available ({context})")]
+    Oom {
+        needed_bytes: u64,
+        available_bytes: u64,
+        capacity_bytes: u64,
+        context: String,
+    },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for MbsError {
+    fn from(e: xla::Error) -> Self {
+        MbsError::Runtime(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for MbsError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        MbsError::Manifest(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, MbsError>;
+
+impl MbsError {
+    pub fn is_oom(&self) -> bool {
+        matches!(self, MbsError::Oom { .. })
+    }
+}

@@ -1,0 +1,61 @@
+//! # Micro-Batch Streaming (MBS)
+//!
+//! Production-oriented reproduction of *"Enabling Large Batch Size Training
+//! for DNN Models Beyond the Memory Limit While Maintaining Performance"*
+//! (Piao, Synn, Park, Kim — IEEE Access 2023; preprint title "Micro Batch
+//! Streaming"), as a three-layer rust + JAX + Pallas stack:
+//!
+//!  * **L3 (this crate)** — the rust coordinator: mini->micro batch
+//!    splitting (paper Alg. 1), the stream-based pipeline, loss
+//!    normalization policy, gradient-accumulation lifecycle, the simulated
+//!    device-memory model that reproduces the paper's OOM frontier, and the
+//!    synthetic datasets.
+//!  * **L2** — JAX model zoo (`python/compile/models/`), lowered AOT to HLO
+//!    text and executed here via the PJRT CPU client ([`runtime`]).
+//!  * **L1** — Pallas kernels (tiled MXU matmul, fused CE) embedded in the
+//!    L2 HLO.
+//!
+//! Quickstart (after `make artifacts`):
+//!
+//! ```no_run
+//! use mbs::prelude::*;
+//!
+//! let manifest = Manifest::load("artifacts").unwrap();
+//! let mut engine = Engine::new(manifest).unwrap();
+//! let config = TrainConfig::builder("microresnet18")
+//!     .batch(128)
+//!     .mu(16)
+//!     .epochs(2)
+//!     .capacity_mib(96)
+//!     .build();
+//! let report = train(&mut engine, &config).unwrap();
+//! println!("final accuracy {:.2}%", 100.0 * report.final_eval.primary_metric);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod manifest;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use coordinator::{train, NormalizationMode, TrainReport};
+pub use error::{MbsError, Result};
+pub use manifest::Manifest;
+pub use runtime::Engine;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::config::TrainConfig;
+    pub use crate::coordinator::{train, NormalizationMode, TrainReport};
+    pub use crate::data::{Dataset, SynthCarvana, SynthFlowers, SynthText};
+    pub use crate::error::{MbsError, Result};
+    pub use crate::manifest::Manifest;
+    pub use crate::memory::{Footprint, MemoryModel, MIB};
+    pub use crate::metrics::EpochStats;
+    pub use crate::runtime::Engine;
+}

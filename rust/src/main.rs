@@ -1,0 +1,200 @@
+//! `mbs` — Micro-Batch Streaming CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train    train one configuration (MBS or native baseline), print report
+//!   sweep    batch-size sweep at fixed capacity (one table-4/5 row block)
+//!   inspect  show manifest variants, footprints and native-max batches
+//!   info     platform / artifact summary
+
+use std::process::ExitCode;
+
+use mbs::coordinator::train;
+use mbs::memory::{Footprint, MIB};
+use mbs::metrics::Table;
+use mbs::util::cli::Args;
+use mbs::{Engine, Manifest, MbsError, TrainConfig};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "mbs — Micro-Batch Streaming (IEEE Access 2023 reproduction)
+
+USAGE: mbs <subcommand> [flags]
+
+  train    --model <key> [--batch N] [--mu N] [--epochs N] [--capacity-mib N]
+           [--mbs true|false] [--norm paper|exact|none]
+           [--streaming double-buffered|sync] [--size N] [--seed N]
+           [--dataset-len N] [--eval-len N] [--lr F] [--lr-decay F]
+           [--config file.cfg] [--artifacts dir] [--csv out.csv]
+  sweep    --model <key> --batches 16,32,64 [same flags as train]
+  inspect  [--artifacts dir]           variants, footprints, native max batch
+  info     [--artifacts dir]           platform + artifact summary
+"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig, MbsError> {
+    let model = args
+        .get("model")
+        .ok_or_else(|| MbsError::Config("--model is required".into()))?;
+    let mut cfg = TrainConfig::default_for(model);
+    if let Some(path) = args.get("config") {
+        cfg.load_file(path)?;
+    }
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<(), MbsError> {
+    let cfg = build_config(args)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut engine = Engine::new(manifest)?;
+    println!(
+        "[mbs] training {} batch={} mu={} mbs={} norm={} streaming={}",
+        cfg.model,
+        cfg.batch,
+        cfg.mu,
+        cfg.use_mbs,
+        cfg.norm_mode.name(),
+        cfg.streaming.name()
+    );
+    match train(&mut engine, &cfg) {
+        Ok(report) => {
+            let mut curves = mbs::metrics::CurveWriter::default();
+            for (t, e) in report.train_epochs.iter().zip(report.eval_epochs.iter()) {
+                println!(
+                    "  epoch {:>3}  train loss {:.4}  eval loss {:.4}  eval metric {:.4}  ({:.2}s)",
+                    t.epoch, t.mean_loss, e.mean_loss, e.primary_metric, t.wall.as_secs_f64()
+                );
+                curves.push("train", t.clone());
+                curves.push("eval", e.clone());
+            }
+            println!(
+                "[mbs] done: best metric {:.4}  updates {}  epoch wall {:.2}s  state {}",
+                report.best_metric(),
+                report.updates,
+                report.epoch_wall_mean.as_secs_f64(),
+                report.output_mode
+            );
+            println!(
+                "[mbs] device: capacity {:.1} MiB, native max batch {}",
+                report.capacity_bytes as f64 / MIB as f64,
+                report.native_max_batch
+            );
+            if let Some(path) = args.get("csv") {
+                curves.write_file(std::path::Path::new(path))?;
+                println!("[mbs] wrote {path}");
+            }
+            Ok(())
+        }
+        Err(e) if e.is_oom() => {
+            println!("[mbs] FAILED (the paper's table cell): {e}");
+            Err(e)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
+    let cfg0 = build_config(args)?;
+    let batches: Vec<usize> = args
+        .get_or("batches", "16,32,64,128")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| MbsError::Config(format!("bad batch '{s}'"))))
+        .collect::<Result<_, _>>()?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut engine = Engine::new(manifest)?;
+    let mut table = Table::new(&["batch", "mu", "w/o MBS", "w/ MBS", "time w/o", "time w/"]);
+    for &batch in &batches {
+        let mut row = vec![batch.to_string(), cfg0.mu.to_string()];
+        for use_mbs in [false, true] {
+            let mut cfg = cfg0.clone();
+            cfg.batch = batch;
+            cfg.use_mbs = use_mbs;
+            match train(&mut engine, &cfg) {
+                Ok(r) => row.insert(
+                    if use_mbs { 3 } else { 2 },
+                    format!("{:.2}%", 100.0 * r.best_metric()),
+                ),
+                Err(e) if e.is_oom() => {
+                    row.insert(if use_mbs { 3 } else { 2 }, "Failed".into())
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // timing columns re-run quickly with skip_eval? keep simple: dash
+        row.push("-".into());
+        row.push("-".into());
+        table.row(&row);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), MbsError> {
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut table = Table::new(&[
+        "model", "task", "opt", "size", "mu", "params (KiB)", "act/sample (KiB)",
+        "resident (MiB)", "step(mu) (MiB)",
+    ]);
+    for entry in manifest.models.values() {
+        for v in &entry.variants {
+            let fp = Footprint::from_manifest(entry, v);
+            table.row(&[
+                entry.name.clone(),
+                entry.task.clone(),
+                entry.optimizer.kind.clone(),
+                v.size.to_string(),
+                v.mu.to_string(),
+                format!("{:.0}", entry.param_bytes as f64 / 1024.0),
+                format!("{:.0}", v.activation_bytes_per_sample as f64 / 1024.0),
+                format!("{:.1}", fp.resident_bytes() as f64 / MIB as f64),
+                format!("{:.1}", fp.step_bytes(v.mu) as f64 / MIB as f64),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("(paper table 2 mapping: mini-batch = largest exported mu, u-batch = mini/2)");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), MbsError> {
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let engine = Engine::new(manifest)?;
+    println!("platform: {}", engine.platform());
+    println!("models:   {}", engine.manifest().models.len());
+    let variants: usize = engine.manifest().models.values().map(|m| m.variants.len()).sum();
+    println!("variants: {variants}");
+    Ok(())
+}

@@ -1,0 +1,337 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m compile.aot`).
+//!
+//! The manifest is the single contract between the build-time python layers
+//! (L1/L2) and the runtime rust layer (L3): artifact file names, parameter
+//! leaf order/offsets, IO shapes per (model x size x mu) variant, optimizer
+//! slot counts, and the activation-memory estimates the simulated device
+//! model feeds on.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{MbsError, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(MbsError::Manifest(format!("unknown dtype {other}"))),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset into the params .bin file.
+    pub offset: usize,
+    pub elems: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct OptimizerInfo {
+    pub kind: String,
+    pub slots: usize,
+    pub hyper_names: Vec<String>,
+    pub hyper_defaults: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub mu: usize,
+    /// Image size (px) or sequence length.
+    pub size: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: Dtype,
+    pub accum_hlo: String,
+    pub eval_hlo: String,
+    pub activation_bytes_per_sample: u64,
+    pub fixed_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub task: String,
+    pub optimizer: OptimizerInfo,
+    pub params_bin: String,
+    pub param_leaves: Vec<ParamLeaf>,
+    pub param_bytes: u64,
+    pub apply_hlo: String,
+    pub metric_semantics: String,
+    pub default_size: usize,
+    pub variants: Vec<Variant>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn req<'a>(v: &'a Json, key: &str, ctx: &str) -> Result<&'a Json> {
+    v.get(key)
+        .ok_or_else(|| MbsError::Manifest(format!("{ctx}: missing field '{key}'")))
+}
+
+fn req_str(v: &Json, key: &str, ctx: &str) -> Result<String> {
+    req(v, key, ctx)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| MbsError::Manifest(format!("{ctx}: '{key}' not a string")))
+}
+
+fn req_u64(v: &Json, key: &str, ctx: &str) -> Result<u64> {
+    req(v, key, ctx)?
+        .as_u64()
+        .ok_or_else(|| MbsError::Manifest(format!("{ctx}: '{key}' not a non-negative integer")))
+}
+
+fn req_usize_arr(v: &Json, key: &str, ctx: &str) -> Result<Vec<usize>> {
+    req(v, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| MbsError::Manifest(format!("{ctx}: '{key}' not an array")))?
+        .iter()
+        .map(|e| {
+            e.as_u64()
+                .map(|n| n as usize)
+                .ok_or_else(|| MbsError::Manifest(format!("{ctx}: '{key}' element not integer")))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            MbsError::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let seed = root.get("seed").and_then(Json::as_u64).unwrap_or(0);
+        let models_json = req(&root, "models", "manifest")?
+            .as_obj()
+            .ok_or_else(|| MbsError::Manifest("'models' not an object".into()))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in models_json {
+            let ctx = format!("models.{name}");
+            let opt = req(m, "optimizer", &ctx)?;
+            let optimizer = OptimizerInfo {
+                kind: req_str(opt, "kind", &ctx)?,
+                slots: req_u64(opt, "slots", &ctx)? as usize,
+                hyper_names: req(opt, "hyper_names", &ctx)?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|j| j.as_str().map(str::to_string))
+                    .collect(),
+                hyper_defaults: req(opt, "hyper_defaults", &ctx)?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|j| j.as_f64().map(|f| f as f32))
+                    .collect(),
+            };
+            let mut param_leaves = Vec::new();
+            for leaf in req(m, "param_leaves", &ctx)?.as_arr().unwrap_or(&[]) {
+                param_leaves.push(ParamLeaf {
+                    name: req_str(leaf, "name", &ctx)?,
+                    shape: req_usize_arr(leaf, "shape", &ctx)?,
+                    offset: req_u64(leaf, "offset", &ctx)? as usize,
+                    elems: req_u64(leaf, "elems", &ctx)? as usize,
+                });
+            }
+            let mut variants = Vec::new();
+            for v in req(m, "variants", &ctx)?.as_arr().unwrap_or(&[]) {
+                variants.push(Variant {
+                    mu: req_u64(v, "mu", &ctx)? as usize,
+                    size: req_u64(v, "size", &ctx)? as usize,
+                    x_shape: req_usize_arr(v, "x_shape", &ctx)?,
+                    x_dtype: Dtype::parse(&req_str(v, "x_dtype", &ctx)?)?,
+                    y_shape: req_usize_arr(v, "y_shape", &ctx)?,
+                    y_dtype: Dtype::parse(&req_str(v, "y_dtype", &ctx)?)?,
+                    accum_hlo: req_str(v, "accum_hlo", &ctx)?,
+                    eval_hlo: req_str(v, "eval_hlo", &ctx)?,
+                    activation_bytes_per_sample: req_u64(v, "activation_bytes_per_sample", &ctx)?,
+                    fixed_bytes: req_u64(v, "fixed_bytes", &ctx)?,
+                });
+            }
+            let entry = ModelEntry {
+                name: name.clone(),
+                task: req_str(m, "task", &ctx)?,
+                optimizer,
+                params_bin: req_str(m, "params_bin", &ctx)?,
+                param_leaves,
+                param_bytes: req_u64(m, "param_bytes", &ctx)?,
+                apply_hlo: req_str(m, "apply_hlo", &ctx)?,
+                metric_semantics: req_str(m, "metric_semantics", &ctx)?,
+                default_size: req_u64(m, "default_size", &ctx)? as usize,
+                variants,
+            };
+            entry.validate(&ctx)?;
+            models.insert(name.clone(), entry);
+        }
+        Ok(Manifest { dir, seed, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            MbsError::Manifest(format!(
+                "model '{name}' not in manifest (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+impl ModelEntry {
+    fn validate(&self, ctx: &str) -> Result<()> {
+        // leaf offsets must be contiguous and account for param_bytes
+        let mut offset = 0usize;
+        for leaf in &self.param_leaves {
+            if leaf.offset != offset {
+                return Err(MbsError::Manifest(format!(
+                    "{ctx}: leaf {} offset {} != expected {offset}",
+                    leaf.name, leaf.offset
+                )));
+            }
+            let shape_elems: usize = leaf.shape.iter().product::<usize>().max(1);
+            if shape_elems != leaf.elems {
+                return Err(MbsError::Manifest(format!(
+                    "{ctx}: leaf {} shape/elems mismatch",
+                    leaf.name
+                )));
+            }
+            offset += leaf.elems * 4;
+        }
+        if offset as u64 != self.param_bytes {
+            return Err(MbsError::Manifest(format!(
+                "{ctx}: param_bytes {} != leaf total {offset}",
+                self.param_bytes
+            )));
+        }
+        if self.variants.is_empty() {
+            return Err(MbsError::Manifest(format!("{ctx}: no variants")));
+        }
+        for v in &self.variants {
+            if v.x_shape.first() != Some(&v.mu) {
+                return Err(MbsError::Manifest(format!(
+                    "{ctx}: variant mu {} not leading dim of x_shape {:?}",
+                    v.mu, v.x_shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Find the variant with this (size, mu).
+    pub fn variant(&self, size: usize, mu: usize) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.size == size && v.mu == mu)
+            .ok_or_else(|| {
+                MbsError::Manifest(format!(
+                    "{}: no variant size={size} mu={mu} (have: {})",
+                    self.name,
+                    self.variants
+                        .iter()
+                        .map(|v| format!("s{}mu{}", v.size, v.mu))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    /// Largest exported mu for a given size — the "native maximum" micro-batch.
+    pub fn max_mu(&self, size: usize) -> Option<usize> {
+        self.variants.iter().filter(|v| v.size == size).map(|v| v.mu).max()
+    }
+
+    /// All sizes this model was exported at.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s: Vec<usize> = self.variants.iter().map(|v| v.size).collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = art_dir() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.models.contains_key("microresnet18"));
+        let rn = man.model("microresnet18").unwrap();
+        assert_eq!(rn.task, "classification");
+        assert_eq!(rn.optimizer.kind, "sgdm");
+        assert_eq!(rn.optimizer.slots, 1);
+        let v = rn.variant(16, 8).unwrap();
+        assert_eq!(v.x_shape, vec![8, 16, 16, 3]);
+        assert_eq!(v.x_dtype, Dtype::F32);
+        assert!(v.activation_bytes_per_sample > 0);
+        assert!(man.path(&v.accum_hlo).exists());
+        assert!(man.path(&rn.params_bin).exists());
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let Some(dir) = art_dir() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.model("nonexistent").is_err());
+        assert!(man.model("microresnet18").unwrap().variant(999, 1).is_err());
+    }
+
+    #[test]
+    fn max_mu_and_sizes() {
+        let Some(dir) = art_dir() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        let rn = man.model("microresnet18").unwrap();
+        assert_eq!(rn.max_mu(16), Some(16));
+        assert!(rn.sizes().contains(&32));
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join(format!("mbs-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"models\": 3}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,157 @@
+//! Allocation ledger for the simulated device.
+//!
+//! The [`MemoryModel`](super::MemoryModel) answers "does this step fit?";
+//! the ledger additionally *tracks* live allocations so integration tests
+//! can assert the coordinator's sequencing never exceeds capacity at any
+//! instant (e.g. during the double-buffered streaming window, when two
+//! micro-batch input buffers are briefly live at once).
+
+use std::collections::BTreeMap;
+
+use crate::error::{MbsError, Result};
+
+/// Handle to a live allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct AllocId(u64);
+
+#[derive(Debug)]
+pub struct Ledger {
+    capacity: u64,
+    live: BTreeMap<AllocId, (String, u64)>,
+    used: u64,
+    next_id: u64,
+    peak: u64,
+}
+
+impl Ledger {
+    pub fn new(capacity: u64) -> Ledger {
+        Ledger { capacity, live: BTreeMap::new(), used: 0, next_id: 0, peak: 0 }
+    }
+
+    /// Allocate `bytes` under `tag`; fails with a structured OOM when the
+    /// request does not fit.
+    pub fn alloc(&mut self, tag: &str, bytes: u64) -> Result<AllocId> {
+        if self.used + bytes > self.capacity {
+            return Err(MbsError::Oom {
+                needed_bytes: self.used + bytes,
+                available_bytes: self.capacity - self.used,
+                capacity_bytes: self.capacity,
+                context: format!("ledger alloc '{tag}'"),
+            });
+        }
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.live.insert(id, (tag.to_string(), bytes));
+        Ok(id)
+    }
+
+    pub fn free(&mut self, id: AllocId) -> Result<()> {
+        match self.live.remove(&id) {
+            Some((_, bytes)) => {
+                self.used -= bytes;
+                Ok(())
+            }
+            None => Err(MbsError::Runtime(format!("double free of {id:?}"))),
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Tag breakdown of live bytes, for diagnostics.
+    pub fn by_tag(&self) -> BTreeMap<String, u64> {
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for (tag, bytes) in self.live.values() {
+            *out.entry(tag.clone()).or_default() += bytes;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut l = Ledger::new(100);
+        let a = l.alloc("a", 60).unwrap();
+        assert_eq!(l.used(), 60);
+        assert!(l.alloc("b", 50).is_err()); // would exceed
+        let b = l.alloc("b", 40).unwrap();
+        assert_eq!(l.used(), 100);
+        l.free(a).unwrap();
+        assert_eq!(l.used(), 40);
+        l.free(b).unwrap();
+        assert_eq!(l.used(), 0);
+        assert_eq!(l.peak(), 100);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut l = Ledger::new(10);
+        let a = l.alloc("a", 5).unwrap();
+        l.free(a).unwrap();
+        assert!(l.free(a).is_err());
+    }
+
+    #[test]
+    fn tag_breakdown() {
+        let mut l = Ledger::new(1000);
+        l.alloc("params", 300).unwrap();
+        l.alloc("input", 100).unwrap();
+        l.alloc("input", 100).unwrap();
+        let tags = l.by_tag();
+        assert_eq!(tags["params"], 300);
+        assert_eq!(tags["input"], 200);
+    }
+
+    mod properties {
+        use super::*;
+        use crate::util::prop::{ensure, forall};
+
+        #[test]
+        fn used_never_exceeds_capacity() {
+            forall(
+                "ledger bound",
+                100,
+                0xAB,
+                |r| {
+                    let ops: Vec<u64> = (0..50).map(|_| r.below(40)).collect();
+                    ops
+                },
+                |ops| {
+                    let mut l = Ledger::new(200);
+                    let mut live = Vec::new();
+                    for &sz in ops {
+                        match l.alloc("x", sz) {
+                            Ok(id) => live.push(id),
+                            Err(_) => {
+                                if let Some(id) = live.pop() {
+                                    l.free(id).map_err(|e| e.to_string())?;
+                                }
+                            }
+                        }
+                        ensure(l.used() <= l.capacity(), "used > capacity")?;
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}

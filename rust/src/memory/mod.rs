@@ -1,0 +1,295 @@
+//! Simulated device memory model — the substitution for the paper's
+//! RTX 3090 (DESIGN.md "Hardware adaptation & substitutions").
+//!
+//! The paper's phenomenon is capacity arithmetic: a training step fits iff
+//!
+//!   resident_state + batch_footprint(batch) <= capacity
+//!
+//! where resident_state is everything that lives on the device for the whole
+//! run (params + gradient accumulator + optimizer slots + framework fixed
+//! pool) and batch_footprint covers inputs plus the forward activations kept
+//! for the backward pass, which scale linearly with the number of samples on
+//! the device at once. Without MBS that number is the full mini-batch N_B;
+//! with MBS it is the micro-batch mu — that single substitution is the whole
+//! paper.
+//!
+//! [`MemoryModel`] does the arithmetic and produces structured
+//! [`MbsError::Oom`] errors (the tables' `Failed` cells); [`Ledger`] is a
+//! bump-style allocation tracker used to assert the invariant that the
+//! coordinator never plans a step that exceeds capacity.
+
+pub mod ledger;
+
+pub use ledger::Ledger;
+
+use crate::error::{MbsError, Result};
+use crate::manifest::{ModelEntry, Variant};
+
+pub const MIB: u64 = 1 << 20;
+
+/// Static footprint description for one (model, variant) pair.
+#[derive(Debug, Clone)]
+pub struct Footprint {
+    pub param_bytes: u64,
+    /// Gradient accumulator (same layout as params).
+    pub grad_bytes: u64,
+    /// Optimizer slots (momentum / adam m,v), each param-sized.
+    pub opt_slot_bytes: u64,
+    /// Per-sample activation residency (fwd intermediates kept for bwd).
+    pub activation_bytes_per_sample: u64,
+    /// Per-sample input bytes (x + y + mask).
+    pub input_bytes_per_sample: u64,
+    /// Batch-independent workspace (XLA temporaries etc.).
+    pub fixed_bytes: u64,
+}
+
+impl Footprint {
+    /// Derive from manifest metadata.
+    pub fn from_manifest(model: &ModelEntry, variant: &Variant) -> Footprint {
+        let elems = |shape: &[usize]| shape.iter().product::<usize>() as u64;
+        let per_sample_x = elems(&variant.x_shape) / variant.mu as u64;
+        let per_sample_y = elems(&variant.y_shape) / variant.mu as u64;
+        Footprint {
+            param_bytes: model.param_bytes,
+            grad_bytes: model.param_bytes,
+            opt_slot_bytes: model.param_bytes * model.optimizer.slots as u64,
+            activation_bytes_per_sample: variant.activation_bytes_per_sample,
+            input_bytes_per_sample: (per_sample_x + per_sample_y + 1) * 4,
+            fixed_bytes: variant.fixed_bytes,
+        }
+    }
+
+    /// Bytes resident for the whole training run (model parameter space in
+    /// the paper's fig. 2).
+    pub fn resident_bytes(&self) -> u64 {
+        self.param_bytes + self.grad_bytes + self.opt_slot_bytes + self.fixed_bytes
+    }
+
+    /// Bytes needed while `n` samples are being computed on the device
+    /// (the paper's data space).
+    pub fn batch_bytes(&self, n: usize) -> u64 {
+        (self.activation_bytes_per_sample + self.input_bytes_per_sample) * n as u64
+    }
+
+    /// Total for a step computing `n` samples at once.
+    pub fn step_bytes(&self, n: usize) -> u64 {
+        self.resident_bytes() + self.batch_bytes(n)
+    }
+
+    /// Largest per-device sample count that fits in `capacity`.
+    pub fn max_samples(&self, capacity: u64) -> usize {
+        let resident = self.resident_bytes();
+        if capacity <= resident {
+            return 0;
+        }
+        ((capacity - resident) / (self.activation_bytes_per_sample + self.input_bytes_per_sample))
+            as usize
+    }
+}
+
+/// The simulated device: capacity plus the footprint arithmetic.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub capacity_bytes: u64,
+    pub footprint: Footprint,
+}
+
+impl MemoryModel {
+    pub fn new(capacity_bytes: u64, footprint: Footprint) -> MemoryModel {
+        MemoryModel { capacity_bytes, footprint }
+    }
+
+    /// Check the resident state alone fits (model upload).
+    pub fn check_resident(&self) -> Result<()> {
+        let need = self.footprint.resident_bytes();
+        if need > self.capacity_bytes {
+            return Err(self.oom(need, "model + optimizer state upload"));
+        }
+        Ok(())
+    }
+
+    /// Check a step that keeps `n` samples on the device at once — `n = N_B`
+    /// for the native baseline, `n = mu` for MBS.
+    pub fn check_step(&self, n: usize, context: &str) -> Result<()> {
+        let need = self.footprint.step_bytes(n);
+        if need > self.capacity_bytes {
+            return Err(self.oom(need, context));
+        }
+        Ok(())
+    }
+
+    /// Largest batch the native (non-MBS) path can train.
+    pub fn native_max_batch(&self) -> usize {
+        self.footprint.max_samples(self.capacity_bytes)
+    }
+
+    fn oom(&self, needed: u64, context: &str) -> MbsError {
+        let available = self.capacity_bytes.saturating_sub(self.footprint.resident_bytes());
+        MbsError::Oom {
+            needed_bytes: needed,
+            available_bytes: available,
+            capacity_bytes: self.capacity_bytes,
+            context: context.to_string(),
+        }
+    }
+
+    /// Capacity that makes `want` the native max batch — used by the bench
+    /// configs to scale the paper's RTX-3090 frontier (table 2) down to the
+    /// micro models: e.g. choose capacity so microresnet18 fits 16 natively.
+    pub fn capacity_for_native_max(footprint: &Footprint, want: usize) -> u64 {
+        footprint.step_bytes(want)
+            + (footprint.activation_bytes_per_sample + footprint.input_bytes_per_sample) / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp() -> Footprint {
+        Footprint {
+            param_bytes: 1000,
+            grad_bytes: 1000,
+            opt_slot_bytes: 1000,
+            activation_bytes_per_sample: 500,
+            input_bytes_per_sample: 100,
+            fixed_bytes: 200,
+        }
+    }
+
+    #[test]
+    fn resident_and_step_arithmetic() {
+        let f = fp();
+        assert_eq!(f.resident_bytes(), 3200);
+        assert_eq!(f.batch_bytes(4), 2400);
+        assert_eq!(f.step_bytes(4), 5600);
+    }
+
+    #[test]
+    fn oom_exactly_at_frontier() {
+        let f = fp();
+        let m = MemoryModel::new(f.step_bytes(8), f.clone());
+        assert!(m.check_step(8, "t").is_ok());
+        assert!(m.check_step(9, "t").unwrap_err().is_oom());
+        assert_eq!(m.native_max_batch(), 8);
+    }
+
+    #[test]
+    fn resident_overflow_detected() {
+        let f = fp();
+        let m = MemoryModel::new(1000, f);
+        assert!(m.check_resident().unwrap_err().is_oom());
+    }
+
+    #[test]
+    fn capacity_for_native_max_roundtrips() {
+        let f = fp();
+        for want in [1usize, 2, 7, 16, 100] {
+            let cap = MemoryModel::capacity_for_native_max(&f, want);
+            let m = MemoryModel::new(cap, f.clone());
+            assert_eq!(m.native_max_batch(), want, "want={want}");
+        }
+    }
+
+    #[test]
+    fn max_samples_zero_when_model_does_not_fit() {
+        let f = fp();
+        assert_eq!(f.max_samples(100), 0);
+    }
+
+    #[test]
+    fn mbs_fits_where_native_fails() {
+        // the paper's headline: with capacity fitting only 16 samples,
+        // a 1024 mini-batch fails natively but streams fine at mu=16
+        let f = fp();
+        let m = MemoryModel::new(f.step_bytes(16), f.clone());
+        assert!(m.check_step(1024, "native N_B=1024").unwrap_err().is_oom());
+        assert!(m.check_step(16, "mbs mu=16").is_ok());
+    }
+
+    mod properties {
+        use super::*;
+        use crate::util::prop::{ensure, forall};
+        use crate::util::rng::Rng;
+
+        fn rand_fp(r: &mut Rng) -> Footprint {
+            Footprint {
+                param_bytes: r.below(1 << 20) + 1,
+                grad_bytes: r.below(1 << 20) + 1,
+                opt_slot_bytes: r.below(1 << 20),
+                activation_bytes_per_sample: r.below(1 << 16) + 1,
+                input_bytes_per_sample: r.below(1 << 12) + 1,
+                fixed_bytes: r.below(1 << 16),
+            }
+        }
+
+        #[test]
+        fn native_trains_iff_within_capacity() {
+            // DESIGN.md invariant 3 (memory frontier), property form
+            forall(
+                "frontier",
+                200,
+                0xF00D,
+                |r| {
+                    let f = rand_fp(r);
+                    let cap = f.resident_bytes() + r.below(1 << 22);
+                    let n = (r.below(64) + 1) as usize;
+                    (f, cap, n)
+                },
+                |(f, cap, n)| {
+                    let m = MemoryModel::new(*cap, f.clone());
+                    let fits = f.step_bytes(*n) <= *cap;
+                    ensure(
+                        m.check_step(*n, "p").is_ok() == fits,
+                        format!("fits={fits} step={} cap={cap}", f.step_bytes(*n)),
+                    )
+                },
+            );
+        }
+
+        #[test]
+        fn native_max_batch_is_tight() {
+            forall(
+                "tight max",
+                200,
+                0xBEEF,
+                |r| {
+                    let f = rand_fp(r);
+                    let cap = f.resident_bytes() + r.below(1 << 24);
+                    (f, cap)
+                },
+                |(f, cap)| {
+                    let m = MemoryModel::new(*cap, f.clone());
+                    let k = m.native_max_batch();
+                    ensure(
+                        f.step_bytes(k) <= *cap && f.step_bytes(k + 1) > *cap,
+                        format!("k={k} not tight"),
+                    )
+                },
+            );
+        }
+
+        #[test]
+        fn mbs_feasibility_independent_of_batch() {
+            // if mu fits, ANY N_B streams (the paper's theoretical claim:
+            // mini-batch up to the dataset size)
+            forall(
+                "mu independence",
+                200,
+                0xCAFE,
+                |r| {
+                    let f = rand_fp(r);
+                    let mu = (r.below(32) + 1) as usize;
+                    let cap = f.step_bytes(mu) + r.below(1 << 16);
+                    let nb = (r.below(1 << 20) + 1) as usize;
+                    (f, cap, mu, nb)
+                },
+                |(f, cap, mu, _nb)| {
+                    let m = MemoryModel::new(*cap, f.clone());
+                    // MBS checks mu, never N_B
+                    ensure(m.check_step(*mu, "mbs").is_ok(), "mu step must fit")
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Metric semantics + epoch aggregation + CSV/table emission.
+//!
+//! The exported step functions return a fixed `f32[4]` metric vector whose
+//! meaning depends on the task (python/compile/losses.py):
+//!   classification: [correct, valid, 0, 0]          -> accuracy
+//!   segmentation:   [inter, union, 2|A.B|, |A|+|B|] -> IoU + Dice
+//!   lm:             [correct_tokens, tokens, 0, 0]  -> token accuracy
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::coordinator::accumulator::Accumulation;
+use crate::error::{MbsError, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Classification,
+    Segmentation,
+    Lm,
+}
+
+impl MetricKind {
+    pub fn parse(s: &str) -> Result<MetricKind> {
+        match s {
+            "classification" => Ok(MetricKind::Classification),
+            "segmentation" => Ok(MetricKind::Segmentation),
+            "lm" => Ok(MetricKind::Lm),
+            other => Err(MbsError::Manifest(format!("unknown metric semantics {other}"))),
+        }
+    }
+
+    /// Primary headline metric in [0, 1]: accuracy / IoU / token accuracy.
+    pub fn primary(&self, m: &[f64; 4]) -> f64 {
+        match self {
+            MetricKind::Classification | MetricKind::Lm => safe_div(m[0], m[1]),
+            MetricKind::Segmentation => safe_div(m[0], m[1]),
+        }
+    }
+
+    /// Secondary metric: Dice for segmentation, None otherwise.
+    pub fn secondary(&self, m: &[f64; 4]) -> Option<f64> {
+        match self {
+            MetricKind::Segmentation => Some(safe_div(m[2], m[3])),
+            _ => None,
+        }
+    }
+
+    pub fn primary_name(&self) -> &'static str {
+        match self {
+            MetricKind::Classification => "accuracy",
+            MetricKind::Segmentation => "iou",
+            MetricKind::Lm => "token_accuracy",
+        }
+    }
+}
+
+fn safe_div(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        0.0
+    } else {
+        a / b
+    }
+}
+
+/// Aggregated result of one epoch (train or eval pass).
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    /// Headline metric in [0,1] (accuracy / IoU / token accuracy).
+    pub primary_metric: f64,
+    pub secondary_metric: Option<f64>,
+    pub samples: usize,
+    pub micro_steps: usize,
+    pub updates: u64,
+    pub wall: Duration,
+}
+
+impl EpochStats {
+    pub fn from_accumulation(
+        epoch: usize,
+        kind: MetricKind,
+        acc: &Accumulation,
+        updates: u64,
+        wall: Duration,
+    ) -> EpochStats {
+        EpochStats {
+            epoch,
+            mean_loss: acc.mean_loss(),
+            primary_metric: kind.primary(&acc.metric),
+            secondary_metric: kind.secondary(&acc.metric),
+            samples: acc.samples,
+            micro_steps: acc.micro_steps,
+            updates,
+            wall,
+        }
+    }
+}
+
+/// CSV emitter for loss/metric curves (fig. 3 reproduction artifacts).
+#[derive(Debug, Default)]
+pub struct CurveWriter {
+    rows: Vec<(String, EpochStats)>,
+}
+
+impl CurveWriter {
+    pub fn push(&mut self, series: &str, stats: EpochStats) {
+        self.rows.push((series.to_string(), stats));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "series,epoch,mean_loss,primary_metric,secondary_metric,samples,micro_steps,updates,wall_secs\n",
+        );
+        for (series, s) in &self.rows {
+            let _ = writeln!(
+                out,
+                "{series},{},{:.6},{:.6},{},{},{},{},{:.3}",
+                s.epoch,
+                s.mean_loss,
+                s.primary_metric,
+                s.secondary_metric.map(|d| format!("{d:.6}")).unwrap_or_default(),
+                s.samples,
+                s.micro_steps,
+                s.updates,
+                s.wall.as_secs_f64(),
+            );
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer for bench outputs (mirrors the paper tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(line, " {:width$} |", cell, width = widths[c]);
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_primary() {
+        let k = MetricKind::Classification;
+        assert_eq!(k.primary(&[30.0, 40.0, 0.0, 0.0]), 0.75);
+        assert_eq!(k.secondary(&[30.0, 40.0, 0.0, 0.0]), None);
+        assert_eq!(k.primary(&[0.0, 0.0, 0.0, 0.0]), 0.0); // no div-by-zero
+    }
+
+    #[test]
+    fn segmentation_iou_and_dice() {
+        let k = MetricKind::Segmentation;
+        let m = [1.0, 3.0, 2.0, 4.0];
+        assert_eq!(k.primary(&m), 1.0 / 3.0);
+        assert_eq!(k.secondary(&m), Some(0.5));
+        assert_eq!(k.primary_name(), "iou");
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert!(MetricKind::parse("classification").is_ok());
+        assert!(MetricKind::parse("segmentation").is_ok());
+        assert!(MetricKind::parse("lm").is_ok());
+        assert!(MetricKind::parse("other").is_err());
+    }
+
+    #[test]
+    fn csv_output_shape() {
+        let mut w = CurveWriter::default();
+        w.push(
+            "mbs",
+            EpochStats {
+                epoch: 0,
+                mean_loss: 1.5,
+                primary_metric: 0.25,
+                secondary_metric: None,
+                samples: 100,
+                micro_steps: 13,
+                updates: 7,
+                wall: Duration::from_millis(1500),
+            },
+        );
+        let csv = w.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("series,epoch"));
+        assert!(lines[1].starts_with("mbs,0,1.500000,0.250000,,100,13,7,1.500"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "acc"]);
+        t.row(&["microresnet18".into(), "88.9".into()]);
+        t.row(&["x".into(), "7".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+}

@@ -1,0 +1,64 @@
+//! Host <-> device transfer helpers around the `xla` crate.
+
+use crate::data::Buf;
+use crate::error::{MbsError, Result};
+
+/// Upload a flat f32 host slice as a device buffer with `dims`.
+pub fn upload_f32(
+    client: &xla::PjRtClient,
+    data: &[f32],
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer(data, dims, None)?)
+}
+
+/// Upload a flat i32 host slice as a device buffer with `dims`.
+pub fn upload_i32(
+    client: &xla::PjRtClient,
+    data: &[i32],
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer(data, dims, None)?)
+}
+
+/// Upload either flavour of [`Buf`].
+pub fn upload_buf(
+    client: &xla::PjRtClient,
+    data: &Buf,
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    match data {
+        Buf::F32(v) => upload_f32(client, v, dims),
+        Buf::I32(v) => upload_i32(client, v, dims),
+    }
+}
+
+/// Download a device buffer to a host f32 vector (blocking).
+///
+/// Goes through `to_literal_sync` + `to_vec` — this PJRT build (TFRT CPU,
+/// xla_extension 0.5.1) does not implement `CopyRawToHost`.
+pub fn download_f32(buf: &xla::PjRtBuffer, elems: usize) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync()?;
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != elems {
+        return Err(MbsError::Runtime(format!(
+            "downloaded {} elements, expected {elems}",
+            v.len()
+        )));
+    }
+    Ok(v)
+}
+
+/// Download a rank-0 or single-element buffer as a scalar.
+pub fn download_scalar(buf: &xla::PjRtBuffer) -> Result<f32> {
+    let v = download_f32(buf, 1)?;
+    v.first().copied().ok_or_else(|| MbsError::Runtime("empty scalar buffer".into()))
+}
+
+/// Element count of a device buffer from its on-device shape.
+pub fn element_count(buf: &xla::PjRtBuffer) -> Result<usize> {
+    let shape = buf.on_device_shape()?;
+    let arr = xla::ArrayShape::try_from(&shape)
+        .map_err(|e| MbsError::Runtime(format!("non-array buffer shape: {e}")))?;
+    Ok(arr.element_count())
+}

@@ -1,0 +1,112 @@
+//! Checkpointing: save / restore the full training state (params +
+//! optimizer slots + update counter) so long MBS runs can resume.
+//!
+//! Format: `<path>.bin` — little-endian f32 leaves in manifest order,
+//! params first, then each optimizer slot; `<path>.json` — metadata
+//! (model, leaf count, update counter, magic) validated on load.
+
+use std::path::Path;
+
+use crate::error::{MbsError, Result};
+use crate::util::json::Json;
+
+use super::buffers;
+use super::model::ModelRuntime;
+
+const MAGIC: &str = "mbs-checkpoint-v1";
+
+impl ModelRuntime {
+    /// Serialize params + optimizer slots to `<path>.bin` / `<path>.json`.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let params = self.params_to_host()?;
+        let slots = self.slots_to_host()?;
+        let mut bin: Vec<u8> = Vec::new();
+        for group in std::iter::once(&params).chain(slots.iter()) {
+            for leaf in group {
+                for v in leaf {
+                    bin.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(path.with_extension("bin"), &bin)?;
+        let meta = format!(
+            "{{\"magic\": \"{MAGIC}\", \"model\": \"{}\", \"n_leaves\": {}, \"slots\": {}, \"updates\": {}, \"bytes\": {}}}",
+            self.entry.name,
+            self.n_leaves(),
+            slots.len(),
+            self.updates,
+            bin.len()
+        );
+        std::fs::write(path.with_extension("json"), meta)?;
+        Ok(())
+    }
+
+    /// Restore a checkpoint written by [`save_checkpoint`]; validates model
+    /// identity and sizes. The gradient accumulator is reset to zero (a
+    /// checkpoint boundary is always an update boundary).
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let meta_text = std::fs::read_to_string(path.with_extension("json"))?;
+        let meta = Json::parse(&meta_text)?;
+        let get_str = |k: &str| meta.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+        let get_u64 = |k: &str| meta.get(k).and_then(Json::as_u64).unwrap_or(0);
+        if get_str("magic") != MAGIC {
+            return Err(MbsError::Runtime("not an mbs checkpoint".into()));
+        }
+        if get_str("model") != self.entry.name {
+            return Err(MbsError::Runtime(format!(
+                "checkpoint is for model '{}', runtime is '{}'",
+                get_str("model"),
+                self.entry.name
+            )));
+        }
+        let n_slots = get_u64("slots") as usize;
+        if n_slots != self.entry.optimizer.slots {
+            return Err(MbsError::Runtime("optimizer slot count mismatch".into()));
+        }
+        let bin = std::fs::read(path.with_extension("bin"))?;
+        let expected = (1 + n_slots) as u64 * self.entry.param_bytes;
+        if bin.len() as u64 != expected || get_u64("bytes") != bin.len() as u64 {
+            return Err(MbsError::Runtime(format!(
+                "checkpoint is {} bytes, expected {expected}",
+                bin.len()
+            )));
+        }
+
+        let client = self.client().clone();
+        let mut offset = 0usize;
+        let read_group = |offset: &mut usize| -> Result<Vec<xla::PjRtBuffer>> {
+            self.entry
+                .param_leaves
+                .iter()
+                .map(|leaf| {
+                    let mut host = Vec::with_capacity(leaf.elems);
+                    for i in 0..leaf.elems {
+                        let b = *offset + i * 4;
+                        host.push(f32::from_le_bytes([
+                            bin[b],
+                            bin[b + 1],
+                            bin[b + 2],
+                            bin[b + 3],
+                        ]));
+                    }
+                    *offset += leaf.elems * 4;
+                    let dims = if leaf.shape.is_empty() { vec![1] } else { leaf.shape.clone() };
+                    buffers::upload_f32(&client, &host, &dims)
+                })
+                .collect()
+        };
+        let params = read_group(&mut offset)?;
+        let mut slots = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            slots.push(read_group(&mut offset)?);
+        }
+        self.restore_state(params, slots, get_u64("updates"));
+        self.zero_acc()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised end-to-end in rust/tests/checkpoint.rs (needs artifacts)
+}

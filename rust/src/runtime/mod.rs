@@ -1,0 +1,114 @@
+//! PJRT runtime: loads the AOT HLO artifacts and runs them on the CPU
+//! client with device-resident training state.
+//!
+//! Design points (DESIGN.md "Key runtime design decisions"):
+//!  * `PjRtClient` is `Rc`-backed (not `Send`): everything XLA-facing lives
+//!    on the thread that created the [`Engine`]. The streaming overlap is
+//!    achieved by doing *host-side* batch assembly on worker threads
+//!    (coordinator/streamer.rs) while this thread executes.
+//!  * Params, the gradient accumulator, and optimizer slots stay on the
+//!    device as `PjRtBuffer`s and are threaded through `execute_b` calls;
+//!    the per-micro-batch hot path uploads only x/y/mask/scale and
+//!    downloads only two scalars (loss_sum) + a 4-vector (metrics).
+
+pub mod buffers;
+pub mod checkpoint;
+pub mod model;
+
+pub use model::{ModelRuntime, StepOutput};
+
+use std::collections::HashMap;
+
+use crate::error::{MbsError, Result};
+use crate::manifest::{Manifest, ModelEntry, Variant};
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exe_cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// CPU PJRT client over the given artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, exe_cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by file name).
+    pub fn load_executable(&mut self, file: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exe_cache.get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path(file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| MbsError::Runtime(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.exe_cache.insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached_executables(&self) -> usize {
+        self.exe_cache.len()
+    }
+
+    /// Build a [`ModelRuntime`] for `(model, size, mu)`: compiles accum /
+    /// eval / apply executables and uploads initial params + zeroed
+    /// accumulator + optimizer slots.
+    pub fn load_model(&mut self, model: &str, size: usize, mu: usize) -> Result<ModelRuntime> {
+        let entry: ModelEntry = self.manifest.model(model)?.clone();
+        let variant: Variant = entry.variant(size, mu)?.clone();
+        let accum = self.load_executable(&variant.accum_hlo)?;
+        let eval = self.load_executable(&variant.eval_hlo)?;
+        let apply = self.load_executable(&entry.apply_hlo)?;
+        ModelRuntime::new(self.client.clone(), entry, variant, accum, eval, apply, &self.manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Engine> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Engine::new(Manifest::load(dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(mut e) = engine() else { return };
+        let entry = e.manifest().model("microresnet18").unwrap().clone();
+        let file = entry.variants[0].eval_hlo.clone();
+        e.load_executable(&file).unwrap();
+        assert_eq!(e.cached_executables(), 1);
+        e.load_executable(&file).unwrap();
+        assert_eq!(e.cached_executables(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.load_executable("nope.hlo.txt").is_err());
+    }
+}

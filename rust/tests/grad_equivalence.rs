@@ -1,0 +1,136 @@
+//! DESIGN.md invariant 2, end-to-end through the real runtime: the
+//! accumulated loss-normalized micro-batch gradient computed by the
+//! exported HLO equals the single-step full-batch gradient.
+//!
+//! This is the rust-side twin of python/tests/test_grad_equivalence.py —
+//! here it additionally covers the manifest, the params.bin upload, the
+//! PJRT execution path and the coordinator's scale arithmetic.
+
+mod common;
+
+use std::sync::Arc;
+
+use mbs::coordinator::{NormalizationMode, SplitPlan};
+use mbs::data::{loader, Dataset, SynthFlowers};
+
+#[test]
+fn mbs_accumulated_grad_equals_native_grad() {
+    let Some(mut engine) = common::engine() else { return };
+    // native step: batch 16 in one mu=16 call
+    let mut native = engine.load_model("microresnet18", 16, 16).expect("load native");
+    // mbs: same 16 samples as two mu=8 micro-batches
+    let mut mbs = engine.load_model("microresnet18", 16, 8).expect("load mbs");
+
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 64, 7));
+    let indices: Vec<usize> = (0..16).collect();
+
+    let full = loader::assemble(ds.as_ref(), &indices, 16, 0);
+    native.accum_step(&full, 1.0 / 16.0).expect("native step");
+    let ref_grads = native.acc_to_host().expect("download native acc");
+
+    let plan = SplitPlan::new(16, 8);
+    for j in 0..plan.n_smu() {
+        let mb = loader::assemble(ds.as_ref(), &indices, 8, j);
+        let scale = NormalizationMode::Paper.scale(&plan, j);
+        mbs.accum_step(&mb, scale).expect("mbs step");
+    }
+    let mbs_grads = mbs.acc_to_host().expect("download mbs acc");
+
+    assert_eq!(ref_grads.len(), mbs_grads.len());
+    let rel = common::max_rel_diff(&mbs_grads, &ref_grads, 1e-6);
+    assert!(rel < 5e-3, "accumulated grad differs from native: max rel {rel}");
+    let abs = common::max_abs_diff(&mbs_grads, &ref_grads);
+    assert!(abs < 1e-4, "max abs {abs}");
+}
+
+#[test]
+fn exact_mode_handles_ragged_tail() {
+    let Some(mut engine) = common::engine() else { return };
+    let mut native = engine.load_model("microresnet18", 16, 16).expect("load native");
+    let mut mbs = engine.load_model("microresnet18", 16, 8).expect("load mbs");
+
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 64, 11));
+    // ragged: N_B = 13, mu = 8 -> micro-batches of 8 and 5
+    let indices: Vec<usize> = (0..13).collect();
+
+    let full = loader::assemble(ds.as_ref(), &indices, 16, 0);
+    native.accum_step(&full, 1.0 / 13.0).expect("native step");
+    let ref_grads = native.acc_to_host().unwrap();
+
+    let plan = SplitPlan::new(13, 8);
+    for j in 0..plan.n_smu() {
+        let mb = loader::assemble(ds.as_ref(), &indices, 8, j);
+        let scale = NormalizationMode::Exact.scale(&plan, j);
+        mbs.accum_step(&mb, scale).expect("mbs step");
+    }
+    let mbs_grads = mbs.acc_to_host().unwrap();
+    let rel = common::max_rel_diff(&mbs_grads, &ref_grads, 1e-6);
+    assert!(rel < 5e-3, "exact-mode ragged grad mismatch: max rel {rel}");
+}
+
+#[test]
+fn paper_mode_biased_on_ragged_tail_but_none_mode_worse() {
+    let Some(mut engine) = common::engine() else { return };
+    let mut native = engine.load_model("microresnet18", 16, 16).expect("load");
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 64, 13));
+    let indices: Vec<usize> = (0..12).collect();
+
+    let full = loader::assemble(ds.as_ref(), &indices, 16, 0);
+    native.accum_step(&full, 1.0 / 12.0).unwrap();
+    let ref_grads = native.acc_to_host().unwrap();
+
+    let run_mode = |engine: &mut mbs::Engine, mode: NormalizationMode| -> Vec<Vec<f32>> {
+        let mut rt = engine.load_model("microresnet18", 16, 8).unwrap();
+        let plan = SplitPlan::new(12, 8); // ranges 8 + 4 (ragged)
+        for j in 0..plan.n_smu() {
+            let mb = loader::assemble(ds.as_ref(), &indices, 8, j);
+            rt.accum_step(&mb, mode.scale(&plan, j)).unwrap();
+        }
+        rt.acc_to_host().unwrap()
+    };
+
+    let exact = run_mode(&mut engine, NormalizationMode::Exact);
+    let paper = run_mode(&mut engine, NormalizationMode::Paper);
+    let none = run_mode(&mut engine, NormalizationMode::None);
+
+    let d_exact = common::max_abs_diff(&exact, &ref_grads);
+    let d_paper = common::max_abs_diff(&paper, &ref_grads);
+    let d_none = common::max_abs_diff(&none, &ref_grads);
+    // exact ~ 0; paper visibly biased on the ragged tail; none (eq. 13,
+    // no normalization) much worse than both
+    assert!(d_exact < 1e-4, "exact should match: {d_exact}");
+    assert!(d_paper > d_exact * 5.0, "paper bias not visible: {d_paper} vs {d_exact}");
+    assert!(d_none > d_paper, "unnormalized should be worst: {d_none} vs {d_paper}");
+}
+
+#[test]
+fn accumulator_resets_after_apply() {
+    let Some(mut engine) = common::engine() else { return };
+    let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 64, 3));
+    let indices: Vec<usize> = (0..8).collect();
+    let mb = loader::assemble(ds.as_ref(), &indices, 8, 0);
+    rt.accum_step(&mb, 1.0 / 8.0).unwrap();
+    let before = rt.acc_to_host().unwrap();
+    assert!(before.iter().flatten().any(|&v| v != 0.0), "grad all zero?");
+    rt.apply(&rt.default_hyper()).unwrap();
+    let after = rt.acc_to_host().unwrap();
+    assert!(after.iter().flatten().all(|&v| v == 0.0), "acc not zeroed by apply");
+    assert_eq!(rt.updates, 1);
+}
+
+#[test]
+fn apply_changes_params_in_gradient_direction() {
+    let Some(mut engine) = common::engine() else { return };
+    let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
+    let p0 = rt.params_to_host().unwrap();
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 64, 5));
+    let indices: Vec<usize> = (0..8).collect();
+    let mb = loader::assemble(ds.as_ref(), &indices, 8, 0);
+    rt.accum_step(&mb, 1.0 / 8.0).unwrap();
+    rt.apply(&rt.default_hyper()).unwrap();
+    let p1 = rt.params_to_host().unwrap();
+    let moved = common::max_abs_diff(&p0, &p1);
+    assert!(moved > 0.0, "params did not move");
+    assert!(moved < 1.0, "params exploded: {moved}");
+}

@@ -1,0 +1,120 @@
+//! DESIGN.md invariant 3 end-to-end: the native baseline trains exactly up
+//! to the capacity frontier and fails ("Failed" cells) beyond it, while MBS
+//! trains any mini-batch whose micro-batch fits — the paper's headline.
+
+mod common;
+
+use mbs::memory::{Footprint, MemoryModel};
+use mbs::{MbsError, TrainConfig};
+
+fn capacity_for(engine: &mbs::Engine, model: &str, size: usize, mu: usize, native_max: usize) -> u64 {
+    let entry = engine.manifest().model(model).unwrap();
+    let variant = entry.variant(size, mu).unwrap();
+    let fp = Footprint::from_manifest(entry, variant);
+    MemoryModel::capacity_for_native_max(&fp, native_max)
+}
+
+#[test]
+fn native_fails_beyond_frontier_mbs_succeeds() {
+    let Some(mut engine) = common::engine() else { return };
+    // capacity chosen so the native max batch is exactly 16 (paper table 2)
+    let cap = capacity_for(&engine, "microresnet18", 16, 16, 16);
+
+    let mk = |batch: usize, use_mbs: bool| {
+        let mut c = TrainConfig::builder("microresnet18")
+            .mu(16)
+            .batch(batch)
+            .epochs(1)
+            .dataset_len(max_of(batch, 32))
+            .eval_len(16)
+            .skip_eval()
+            .build();
+        c.capacity_mib = None; // set bytes directly below
+        c.use_mbs = use_mbs;
+        (c, cap)
+    };
+
+    // batch 16 trains both ways
+    for use_mbs in [false, true] {
+        let (mut cfg, cap) = mk(16, use_mbs);
+        cfg.capacity_mib = Some(cap.div_ceil(1 << 20));
+        let r = mbs::train(&mut engine, &cfg);
+        assert!(r.is_ok(), "batch 16 use_mbs={use_mbs} should train: {:?}", r.err());
+    }
+
+    // batch 64: native fails with a structured OOM, MBS trains
+    let (mut cfg, _) = mk(64, false);
+    cfg.capacity_mib = Some(cap / (1 << 20)); // round DOWN so 64 can't sneak in
+    match mbs::train(&mut engine, &cfg) {
+        Err(MbsError::Oom { needed_bytes, capacity_bytes, .. }) => {
+            assert!(needed_bytes > capacity_bytes);
+        }
+        other => panic!("expected OOM, got {other:?}"),
+    }
+    let (mut cfg, _) = mk(64, true);
+    cfg.capacity_mib = Some(cap / (1 << 20));
+    let r = mbs::train(&mut engine, &cfg).expect("MBS batch 64 should train");
+    assert_eq!(r.batch, 64);
+    assert!(r.updates > 0);
+}
+
+fn max_of(a: usize, b: usize) -> usize {
+    a.max(b)
+}
+
+#[test]
+fn resident_state_too_big_fails_before_any_step() {
+    let Some(mut engine) = common::engine() else { return };
+    let mut cfg = TrainConfig::builder("microresnet18")
+        .mu(8)
+        .batch(8)
+        .epochs(1)
+        .dataset_len(16)
+        .skip_eval()
+        .build();
+    cfg.capacity_mib = Some(1); // smaller than params+grads+momentum+fixed
+    match mbs::train(&mut engine, &cfg) {
+        Err(e) if e.is_oom() => {}
+        other => panic!("expected resident OOM, got {other:?}"),
+    }
+}
+
+#[test]
+fn oom_error_carries_arithmetic() {
+    let Some(mut engine) = common::engine() else { return };
+    let mut cfg = TrainConfig::builder("microresnet18")
+        .mu(16)
+        .batch(512)
+        .epochs(1)
+        .dataset_len(512)
+        .skip_eval()
+        .build();
+    cfg.use_mbs = false;
+    cfg.capacity_mib = Some(64);
+    match mbs::train(&mut engine, &cfg) {
+        Err(MbsError::Oom { needed_bytes, available_bytes, capacity_bytes, context }) => {
+            assert!(needed_bytes > capacity_bytes);
+            assert!(available_bytes < capacity_bytes);
+            assert!(context.contains("512"), "context should name the batch: {context}");
+        }
+        other => panic!("expected OOM, got {other:?}"),
+    }
+}
+
+#[test]
+fn mbs_depends_only_on_mu_not_batch() {
+    let Some(mut engine) = common::engine() else { return };
+    let cap = capacity_for(&engine, "microresnet18", 16, 8, 8);
+    for batch in [8usize, 64, 256] {
+        let mut cfg = TrainConfig::builder("microresnet18")
+            .mu(8)
+            .batch(batch)
+            .epochs(1)
+            .dataset_len(batch.max(16))
+            .skip_eval()
+            .build();
+        cfg.capacity_mib = Some(cap.div_ceil(1 << 20));
+        let r = mbs::train(&mut engine, &cfg);
+        assert!(r.is_ok(), "MBS batch {batch} should fit: {:?}", r.err());
+    }
+}
