@@ -1,6 +1,8 @@
 //! Quickstart: train a classifier with a mini-batch 4x larger than the
-//! simulated device can hold, then show the native baseline failing at the
-//! same batch size — the paper's core claim in ~40 lines.
+//! simulated device can hold, letting the planner derive the micro-batch
+//! size from remaining memory (paper Alg. 1), then show the native
+//! baseline failing at the same batch size — the paper's core claim in
+//! ~40 lines.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -13,17 +15,19 @@ fn main() -> Result<()> {
     // capacity sized so the native maximum batch is 16 (paper table 2 row 1)
     let capacity_mib = 96;
 
-    // --- with MBS: batch 64 streams as 4 micro-batches of 16 -------------
+    // --- with MBS: mu is NOT configured. The planner picks the largest
+    // exported micro-batch that fits after the model is resident, and the
+    // 64-sample mini-batch streams through it. --------------------------
     let cfg = TrainConfig::builder("microresnet18")
         .batch(64)
-        .mu(16)
         .epochs(2)
         .dataset_len(256)
         .eval_len(64)
         .capacity_mib(capacity_mib)
         .build();
+    assert!(cfg.mu.is_auto()); // the default: derived, not guessed
     let report = mbs::train(&mut engine, &cfg)?;
-    println!("w/ MBS : batch 64 trained fine.");
+    println!("w/ MBS : batch 64 trained fine (planner chose mu={}).", report.mu);
     for (t, e) in report.train_epochs.iter().zip(&report.eval_epochs) {
         println!(
             "  epoch {}  train loss {:.4}  eval acc {:.2}%  ({:.2}s)",

@@ -5,11 +5,60 @@
 //!   2. a flat `key = value` config file (`--config run.cfg`)
 //!   3. CLI flags (`--batch 128 --mu 16 ...`)
 
+use std::fmt;
+
 use crate::coordinator::accumulator::NormalizationMode;
 use crate::coordinator::streamer::StreamingPolicy;
 use crate::error::{MbsError, Result};
 use crate::memory::MIB;
 use crate::util::cli::Args;
+
+/// How the micro-batch size is chosen (paper Alg. 1).
+///
+/// The paper's point is that `mu` is *derived* from the memory remaining
+/// after the model is resident — [`MicroBatchSpec::Auto`] asks the planner
+/// ([`crate::coordinator::planner`]) to pick the largest exported variant
+/// that fits the device; [`MicroBatchSpec::Fixed`] pins it by hand (the
+/// pre-planner behaviour, still used by ablations and the benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroBatchSpec {
+    /// Derive `mu` from the memory model: largest exported variant whose
+    /// step fits `capacity - resident_bytes`.
+    Auto,
+    /// Use exactly this exported micro-batch size.
+    Fixed(usize),
+}
+
+impl MicroBatchSpec {
+    pub fn parse(s: &str) -> Option<MicroBatchSpec> {
+        if s.eq_ignore_ascii_case("auto") {
+            Some(MicroBatchSpec::Auto)
+        } else {
+            s.parse().ok().map(MicroBatchSpec::Fixed)
+        }
+    }
+
+    /// The pinned size, if any.
+    pub fn fixed(&self) -> Option<usize> {
+        match self {
+            MicroBatchSpec::Auto => None,
+            MicroBatchSpec::Fixed(mu) => Some(*mu),
+        }
+    }
+
+    pub fn is_auto(&self) -> bool {
+        matches!(self, MicroBatchSpec::Auto)
+    }
+}
+
+impl fmt::Display for MicroBatchSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MicroBatchSpec::Auto => write!(f, "auto"),
+            MicroBatchSpec::Fixed(mu) => write!(f, "{mu}"),
+        }
+    }
+}
 
 /// Learning-rate schedule (the AmoebaNet recipe uses linear decay).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,8 +90,9 @@ pub struct TrainConfig {
     pub model: String,
     /// Image size or sequence length; `None` = manifest default.
     pub size: Option<usize>,
-    /// Micro-batch size (must match an exported variant).
-    pub mu: usize,
+    /// Micro-batch size: planner-derived (`Auto`, the default — paper
+    /// Alg. 1) or pinned to an exported variant (`Fixed`).
+    pub mu: MicroBatchSpec,
     /// Mini-batch size N_B.
     pub batch: usize,
     pub epochs: usize,
@@ -84,7 +134,7 @@ impl TrainConfig {
         TrainConfig {
             model: model.to_string(),
             size: None,
-            mu: 8,
+            mu: MicroBatchSpec::Auto,
             batch: 16,
             epochs: 3,
             dataset_len: 512,
@@ -112,7 +162,9 @@ impl TrainConfig {
         match key {
             "model" => self.model = value.to_string(),
             "size" => self.size = Some(value.parse().map_err(|_| bad(key, value))?),
-            "mu" => self.mu = value.parse().map_err(|_| bad(key, value))?,
+            "mu" => {
+                self.mu = MicroBatchSpec::parse(value).ok_or_else(|| bad(key, value))?
+            }
             "batch" => self.batch = value.parse().map_err(|_| bad(key, value))?,
             "epochs" => self.epochs = value.parse().map_err(|_| bad(key, value))?,
             "dataset-len" | "dataset_len" => {
@@ -188,8 +240,14 @@ impl TrainConfig {
     ];
 
     pub fn validate(&self) -> Result<()> {
-        if self.mu == 0 || self.batch == 0 || self.epochs == 0 {
-            return Err(MbsError::Config("mu, batch, epochs must be positive".into()));
+        // epochs == 0 in particular must be rejected up front: downstream
+        // reporting averages per-epoch wall times, and an empty run has no
+        // meaningful mean (regression: zero_epochs_rejected).
+        if self.batch == 0 || self.epochs == 0 {
+            return Err(MbsError::Config("batch and epochs must be positive".into()));
+        }
+        if self.mu == MicroBatchSpec::Fixed(0) {
+            return Err(MbsError::Config("mu must be positive (or 'auto')".into()));
         }
         if self.dataset_len == 0 {
             return Err(MbsError::Config("dataset-len must be positive".into()));
@@ -208,8 +266,15 @@ impl TrainConfigBuilder {
         self.cfg.size = Some(v);
         self
     }
+    /// Pin the micro-batch size to an exported variant.
     pub fn mu(mut self, v: usize) -> Self {
-        self.cfg.mu = v;
+        self.cfg.mu = MicroBatchSpec::Fixed(v);
+        self
+    }
+    /// Let the planner derive the micro-batch size from remaining memory
+    /// (the default; this resets an earlier `.mu(..)`).
+    pub fn mu_auto(mut self) -> Self {
+        self.cfg.mu = MicroBatchSpec::Auto;
         self
     }
     pub fn batch(mut self, v: usize) -> Self {
@@ -274,14 +339,35 @@ mod tests {
         let c = TrainConfig::builder("microresnet18").batch(128).mu(16).epochs(2).build();
         assert_eq!(c.model, "microresnet18");
         assert_eq!(c.batch, 128);
-        assert_eq!(c.mu, 16);
+        assert_eq!(c.mu, MicroBatchSpec::Fixed(16));
         assert!(c.use_mbs);
         c.validate().unwrap();
+        // the default (and `.mu_auto()`) asks the planner to derive mu
+        let d = TrainConfig::builder("microresnet18").build();
+        assert_eq!(d.mu, MicroBatchSpec::Auto);
+        let e = TrainConfig::builder("m").mu(8).mu_auto().build();
+        assert!(e.mu.is_auto());
+    }
+
+    #[test]
+    fn micro_batch_spec_parse_and_display() {
+        assert_eq!(MicroBatchSpec::parse("auto"), Some(MicroBatchSpec::Auto));
+        assert_eq!(MicroBatchSpec::parse("16"), Some(MicroBatchSpec::Fixed(16)));
+        assert_eq!(MicroBatchSpec::parse("x"), None);
+        assert_eq!(MicroBatchSpec::Auto.to_string(), "auto");
+        assert_eq!(MicroBatchSpec::Fixed(8).to_string(), "8");
+        assert_eq!(MicroBatchSpec::Fixed(8).fixed(), Some(8));
+        assert_eq!(MicroBatchSpec::Auto.fixed(), None);
     }
 
     #[test]
     fn set_parses_all_keys() {
         let mut c = TrainConfig::default_for("m");
+        c.set("mu", "auto").unwrap();
+        assert_eq!(c.mu, MicroBatchSpec::Auto);
+        c.set("mu", "32").unwrap();
+        assert_eq!(c.mu, MicroBatchSpec::Fixed(32));
+        assert!(c.set("mu", "huge").is_err());
         c.set("batch", "64").unwrap();
         c.set("norm", "exact").unwrap();
         c.set("streaming", "sync").unwrap();
@@ -305,15 +391,28 @@ mod tests {
         let mut c = TrainConfig::default_for("m");
         c.load_file(path.to_str().unwrap()).unwrap();
         assert_eq!(c.batch, 256);
-        assert_eq!(c.mu, 32);
+        assert_eq!(c.mu, MicroBatchSpec::Fixed(32));
         std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn invalid_configs_rejected() {
         let mut c = TrainConfig::default_for("m");
-        c.mu = 0;
+        c.mu = MicroBatchSpec::Fixed(0);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_epochs_rejected() {
+        // regression: epochs == 0 used to reach the reporting layer, where
+        // an empty per-epoch wall list poisons the mean wall-time duration
+        let mut c = TrainConfig::default_for("m");
+        c.epochs = 0;
+        let err = c.validate().unwrap_err();
+        assert!(matches!(err, MbsError::Config(_)), "want Config error, got {err:?}");
+        c.epochs = 1;
+        c.skip_eval = true;
+        c.validate().unwrap(); // skip-eval alone stays valid
     }
 
     #[test]

@@ -1,18 +1,25 @@
 //! L3 coordinator — the paper's system contribution.
 //!
+//! * [`planner`] — memory-driven micro-batch planning (Alg. 1 driven by
+//!   the `MemoryModel`): resolves `MicroBatchSpec` to an exported variant
+//!   and stamps every mini-batch with an [`ExecutionPlan`]
 //! * [`splitter`] — mini -> micro batch split plan (Alg. 1 lines 1-6)
-//! * [`streamer`] — the stream-based pipeline (section 3.1, fig. 1)
+//! * [`streamer`] — the stream-based pipeline (section 3.1, fig. 1),
+//!   streaming plan-tagged micro-batches
 //! * [`accumulator`] — loss-normalization policy (section 3.4, eq. 14-17)
 //! * [`scheduler`] — update points + LR schedules (section 3.3 step 5)
-//! * [`trainer`] — the MBS training loop and the native "w/o MBS" baseline
+//! * [`trainer`] — the single plan-driven epoch executor (MBS, the native
+//!   "w/o MBS" baseline and eval are all parameterizations of it)
 
 pub mod accumulator;
+pub mod planner;
 pub mod scheduler;
 pub mod splitter;
 pub mod streamer;
 pub mod trainer;
 
 pub use accumulator::{Accumulation, NormalizationMode};
+pub use planner::{auto_mu, default_capacity, ExecutionPlan, Planner, Resolution};
 pub use scheduler::UpdateScheduler;
 pub use splitter::{MicroRange, SplitPlan};
 pub use streamer::{stream_epoch, EpochStream, StreamingPolicy};

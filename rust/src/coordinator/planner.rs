@@ -1,0 +1,563 @@
+//! Memory-driven micro-batch planner (paper Alg. 1, driven by the memory
+//! model instead of the user).
+//!
+//! The paper's core claim is that the micro-batch size is *derived*: after
+//! the model (params + gradient accumulator + optimizer slots + fixed
+//! workspace) is resident, whatever capacity remains bounds how many
+//! samples can sit on the device at once. [`resolve`] turns a
+//! [`MicroBatchSpec`] into a concrete exported variant by querying the
+//! [`Ledger`](crate::memory::Ledger)'s admission API:
+//!
+//!  * `Auto`   — the largest exported `mu` whose training step (and
+//!               forward-only eval sweep) fits the remaining budget,
+//!               falling back to a structured [`MbsError::Oom`] naming the
+//!               smallest exported variant when nothing fits;
+//!  * `Fixed`  — the pre-planner behaviour: the named variant, admission-
+//!               checked exactly as before.
+//!
+//! [`Planner`] then stamps every mini-batch with an [`ExecutionPlan`] — the
+//! single source of truth for split geometry, loss-normalization scales and
+//! update timing that the streamer tags items with and the unified epoch
+//! executor (`trainer::run_epoch`) consumes. The native "w/o MBS" baseline
+//! is just the degenerate plan (`N_Smu = 1`), not a separate loop.
+
+use std::cmp::Reverse;
+
+use crate::config::{MicroBatchSpec, TrainConfig};
+use crate::error::{MbsError, Result};
+use crate::manifest::{ModelEntry, Variant};
+use crate::memory::{Footprint, Ledger, MemoryModel};
+
+use super::accumulator::NormalizationMode;
+use super::splitter::SplitPlan;
+
+/// Everything the executor needs to run one mini-batch: which executable
+/// (`mu` is its static batch dimension), how the mini-batch splits into
+/// micro-batches, the loss-normalization scale per micro-batch, and whether
+/// this is the degenerate native plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Static (exported) micro-batch size of the executable — the padding
+    /// target for every assembled micro-batch.
+    pub mu: usize,
+    pub split: SplitPlan,
+    /// Loss-normalization scale for micro-batch `j` (ignored by eval).
+    pub scales: Vec<f32>,
+    /// Degenerate plan: the whole mini-batch in one accumulation step
+    /// (`N_Smu = 1`) — the paper's "w/o MBS" arm.
+    pub native: bool,
+}
+
+impl ExecutionPlan {
+    /// `N_Smu`, the number of micro-batches (accumulation steps).
+    pub fn n_smu(&self) -> usize {
+        self.split.n_smu()
+    }
+
+    /// Is micro-batch `j` the last one — i.e. does the optimizer update
+    /// (paper fig. 2 step 5) follow it?
+    pub fn is_last(&self, j: usize) -> bool {
+        j + 1 == self.split.n_smu()
+    }
+
+    /// Samples concurrently on the device for one step of this plan — what
+    /// the memory ledger is charged per step: the whole mini-batch for the
+    /// native plan, the (clamped) micro-batch otherwise.
+    pub fn device_samples(&self) -> usize {
+        if self.native {
+            self.split.n_b
+        } else {
+            self.split.n_mu
+        }
+    }
+}
+
+/// Stamps mini-batches with [`ExecutionPlan`]s for one resolved run. Plain
+/// data, cheap to clone across the streamer thread boundary.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    mu: usize,
+    native: bool,
+    norm: NormalizationMode,
+}
+
+impl Planner {
+    pub fn new(mu: usize, native: bool, norm: NormalizationMode) -> Planner {
+        assert!(mu > 0, "zero micro-batch size");
+        Planner { mu, native, norm }
+    }
+
+    /// The resolved executable micro-batch size.
+    pub fn mu(&self) -> usize {
+        self.mu
+    }
+
+    pub fn is_native(&self) -> bool {
+        self.native
+    }
+
+    /// Plan one mini-batch of `n_b` samples (Alg. 1 lines 1-6 plus the
+    /// section 3.4 normalization scales).
+    pub fn plan_minibatch(&self, n_b: usize) -> ExecutionPlan {
+        if self.native {
+            // one accumulation step covering the whole mini-batch; the
+            // executable's static shape (mu) pads and masks the remainder
+            let split = SplitPlan::new(n_b, n_b);
+            ExecutionPlan { mu: self.mu, split, scales: vec![1.0 / n_b as f32], native: true }
+        } else {
+            let split = SplitPlan::new(n_b, self.mu);
+            let scales = (0..split.n_smu()).map(|j| self.norm.scale(&split, j)).collect();
+            ExecutionPlan { mu: self.mu, split, scales, native: false }
+        }
+    }
+}
+
+/// A resolved run: the chosen variant plus its memory footprint.
+#[derive(Debug, Clone)]
+pub struct Resolution {
+    pub mu: usize,
+    pub variant: Variant,
+    pub footprint: Footprint,
+}
+
+/// Exported variants of `entry` at `size`, sorted by ascending `mu`.
+fn candidates(entry: &ModelEntry, size: usize) -> Result<Vec<&Variant>> {
+    let mut cands: Vec<&Variant> =
+        entry.variants.iter().filter(|v| v.size == size).collect();
+    if cands.is_empty() {
+        return Err(MbsError::Manifest(format!(
+            "{}: no exported variants at size {size} (have sizes: {:?})",
+            entry.name,
+            entry.sizes()
+        )));
+    }
+    cands.sort_by_key(|v| v.mu);
+    Ok(cands)
+}
+
+/// The native arm needs one exported executable covering the whole batch;
+/// configs keep native-max == exported max, so a gap is a config error.
+fn coverage_error(batch: usize, max_mu: usize) -> MbsError {
+    MbsError::Config(format!(
+        "native baseline needs an exported variant with batch {batch} (max exported mu is {max_mu})"
+    ))
+}
+
+/// Evaluation holds `min(mu, eval_len)` forward-only samples on the
+/// device; admission covers it up front so a run that trains never OOMs
+/// at its first eval sweep.
+fn check_eval(fp: &Footprint, mu: usize, eval_len: usize, budget: u64) -> Result<()> {
+    let n = mu.min(eval_len);
+    let need = fp.resident_bytes() + fp.eval_bytes(n);
+    if need > budget {
+        return Err(MbsError::Oom {
+            needed_bytes: need,
+            available_bytes: budget.saturating_sub(fp.resident_bytes()),
+            capacity_bytes: budget,
+            context: format!("eval step mu={n}"),
+        });
+    }
+    Ok(())
+}
+
+/// Peak bytes this variant's run needs: the training step with
+/// `min(mu, batch)` samples, or the forward-only eval sweep with
+/// `min(mu, eval_len)` samples — whichever is larger.
+fn peak_bytes(fp: &Footprint, mu: usize, batch: usize, eval_len: usize) -> u64 {
+    fp.step_bytes(mu.min(batch)).max(fp.resident_bytes() + fp.eval_bytes(mu.min(eval_len)))
+}
+
+/// The Alg. 1 selection: the exported variant whose step keeps the most
+/// samples on the device within `budget` (counting the eval sweep's
+/// occupancy too), preferring less padding on ties (every `mu >= batch`
+/// computes the same single padded micro-batch). Returns a structured
+/// [`MbsError::Oom`] naming the smallest exported variant when even that
+/// one does not fit.
+pub fn auto_mu(
+    entry: &ModelEntry,
+    size: usize,
+    batch: usize,
+    eval_len: usize,
+    budget: u64,
+) -> Result<Resolution> {
+    let cands = candidates(entry, size)?;
+    let chosen = cands
+        .iter()
+        .copied()
+        .filter(|v| {
+            let fp = Footprint::from_manifest(entry, v);
+            peak_bytes(&fp, v.mu, batch, eval_len) <= budget
+        })
+        .max_by_key(|v| (v.mu.min(batch), Reverse(v.mu)));
+    match chosen {
+        Some(v) => Ok(Resolution {
+            mu: v.mu,
+            variant: v.clone(),
+            footprint: Footprint::from_manifest(entry, v),
+        }),
+        None => {
+            let smallest = cands[0];
+            let fp = Footprint::from_manifest(entry, smallest);
+            let needed = peak_bytes(&fp, smallest.mu, batch, eval_len);
+            Err(MbsError::Oom {
+                needed_bytes: needed,
+                available_bytes: budget.saturating_sub(fp.resident_bytes()),
+                capacity_bytes: budget,
+                context: format!(
+                    "auto micro-batch planning: smallest exported variant (mu={}) does not fit",
+                    smallest.mu
+                ),
+            })
+        }
+    }
+}
+
+/// Resolve `cfg.mu` against the manifest and the memory ledger's remaining
+/// budget, running the same admission checks (resident state, then one
+/// step) the trainer always performed.
+pub fn resolve(
+    entry: &ModelEntry,
+    size: usize,
+    cfg: &TrainConfig,
+    ledger: &Ledger,
+) -> Result<Resolution> {
+    let budget = ledger.remaining();
+    match cfg.mu {
+        MicroBatchSpec::Fixed(mu) => {
+            let variant = entry.variant(size, mu)?.clone();
+            let footprint = Footprint::from_manifest(entry, &variant);
+            let mem = MemoryModel::new(budget, footprint.clone());
+            mem.check_resident()?;
+            if cfg.use_mbs {
+                let n = mu.min(cfg.batch);
+                mem.check_step(n, &format!("MBS step mu={n}"))?;
+            } else {
+                mem.check_step(cfg.batch, &format!("native step N_B={}", cfg.batch))?;
+                if cfg.batch > variant.mu {
+                    // capacity admits it but no executable was exported
+                    // that large
+                    return Err(coverage_error(cfg.batch, variant.mu));
+                }
+            }
+            check_eval(&footprint, mu, cfg.eval_len, budget)?;
+            Ok(Resolution { mu, variant, footprint })
+        }
+        MicroBatchSpec::Auto if cfg.use_mbs => {
+            auto_mu(entry, size, cfg.batch, cfg.eval_len, budget)
+        }
+        MicroBatchSpec::Auto => {
+            // native arm: the whole mini-batch sits on the device at once.
+            // Admission must be checked against the footprint of the variant
+            // that will actually execute — the smallest one covering the
+            // batch (least padding).
+            let cands = candidates(entry, size)?;
+            let label = format!("native step N_B={}", cfg.batch);
+            match cands.iter().copied().find(|v| v.mu >= cfg.batch) {
+                Some(v) => {
+                    let footprint = Footprint::from_manifest(entry, v);
+                    let mem = MemoryModel::new(budget, footprint.clone());
+                    mem.check_resident()?;
+                    mem.check_step(cfg.batch, &label)?;
+                    check_eval(&footprint, v.mu, cfg.eval_len, budget)?;
+                    Ok(Resolution { mu: v.mu, variant: v.clone(), footprint })
+                }
+                None => {
+                    // no exported executable covers the batch: capacity
+                    // (checked against the largest footprint) decides OOM —
+                    // the tables' "Failed" cells — before coverage decides
+                    // Config
+                    let largest = *cands.last().expect("candidates are non-empty");
+                    let mem =
+                        MemoryModel::new(budget, Footprint::from_manifest(entry, largest));
+                    mem.check_resident()?;
+                    mem.check_step(cfg.batch, &label)?;
+                    Err(coverage_error(cfg.batch, largest.mu))
+                }
+            }
+        }
+    }
+}
+
+/// Default simulated capacity when the config does not pin one: headroom
+/// for exactly two micro-batch steps of the governing variant — the largest
+/// exported one under `Auto`, the named one under `Fixed`.
+pub fn default_capacity(entry: &ModelEntry, size: usize, spec: &MicroBatchSpec) -> Result<u64> {
+    let variant = match spec {
+        MicroBatchSpec::Fixed(mu) => entry.variant(size, *mu)?,
+        MicroBatchSpec::Auto => *candidates(entry, size)?
+            .last()
+            .expect("candidates are non-empty"),
+    };
+    let fp = Footprint::from_manifest(entry, variant);
+    Ok(MemoryModel::capacity_for_native_max(&fp, 2 * variant.mu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Dtype, OptimizerInfo};
+    use crate::util::prop::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    /// Synthetic manifest entry exporting one variant per `mu`, with simple
+    /// linear footprints so capacities are easy to reason about.
+    fn entry_with_mus(mus: &[usize], act_per_sample: u64, fixed: u64, param_bytes: u64) -> ModelEntry {
+        ModelEntry {
+            name: "synthetic".into(),
+            task: "classification".into(),
+            optimizer: OptimizerInfo {
+                kind: "sgdm".into(),
+                slots: 1,
+                hyper_names: vec!["lr".into()],
+                hyper_defaults: vec![0.01],
+            },
+            params_bin: "params.bin".into(),
+            param_leaves: Vec::new(),
+            param_bytes,
+            apply_hlo: "apply.hlo".into(),
+            metric_semantics: "classification".into(),
+            default_size: 16,
+            variants: mus
+                .iter()
+                .map(|&mu| Variant {
+                    mu,
+                    size: 16,
+                    x_shape: vec![mu, 4],
+                    x_dtype: Dtype::F32,
+                    y_shape: vec![mu],
+                    y_dtype: Dtype::I32,
+                    accum_hlo: String::new(),
+                    eval_hlo: String::new(),
+                    activation_bytes_per_sample: act_per_sample,
+                    fixed_bytes: fixed,
+                })
+                .collect(),
+        }
+    }
+
+    fn mbs_cfg(batch: usize) -> TrainConfig {
+        let mut c = TrainConfig::default_for("synthetic");
+        c.batch = batch;
+        c.mu = MicroBatchSpec::Auto;
+        c
+    }
+
+    #[test]
+    fn auto_picks_largest_fitting_mu() {
+        let entry = entry_with_mus(&[2, 4, 8, 16], 1000, 0, 100);
+        let fp8 = Footprint::from_manifest(&entry, entry.variant(16, 8).unwrap());
+        // budget fits the mu=8 step but not the mu=16 step
+        let budget = fp8.step_bytes(8);
+        let r = auto_mu(&entry, 16, 1024, 0, budget).unwrap();
+        assert_eq!(r.mu, 8);
+        assert!(r.footprint.step_bytes(8) <= budget);
+    }
+
+    #[test]
+    fn auto_prefers_least_padding_when_batch_is_small() {
+        // batch 4: every mu >= 4 computes one padded micro-batch of 4
+        // samples, so the planner picks the smallest such executable
+        let entry = entry_with_mus(&[2, 4, 8, 16], 1000, 0, 100);
+        let fp16 = Footprint::from_manifest(&entry, entry.variant(16, 16).unwrap());
+        let r = auto_mu(&entry, 16, 4, 0, fp16.step_bytes(16)).unwrap();
+        assert_eq!(r.mu, 4);
+    }
+
+    #[test]
+    fn auto_falls_back_to_structured_oom() {
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp2 = Footprint::from_manifest(&entry, entry.variant(16, 2).unwrap());
+        let err = auto_mu(&entry, 16, 64, 0, fp2.step_bytes(2) - 1).unwrap_err();
+        assert!(err.is_oom(), "want Oom, got {err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("mu=2"), "should name the smallest variant: {msg}");
+    }
+
+    #[test]
+    fn resolve_queries_ledger_remaining() {
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp4 = Footprint::from_manifest(&entry, entry.variant(16, 4).unwrap());
+        let mut ledger = Ledger::new(fp4.step_bytes(4) + 500);
+        let r = resolve(&entry, 16, &mbs_cfg(64), &ledger).unwrap();
+        assert_eq!(r.mu, 4);
+        // shrink the remaining budget: the planner must downsize
+        ledger.alloc("pinned", 2000).unwrap();
+        let r = resolve(&entry, 16, &mbs_cfg(64), &ledger).unwrap();
+        assert_eq!(r.mu, 2);
+    }
+
+    #[test]
+    fn resolve_native_auto_oom_before_coverage_error() {
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let mut cfg = mbs_cfg(64);
+        cfg.use_mbs = false;
+        let fp8 = Footprint::from_manifest(&entry, entry.variant(16, 8).unwrap());
+        // batch 64 never fits on this budget: structured OOM (table "Failed")
+        let err = resolve(&entry, 16, &cfg, &Ledger::new(fp8.step_bytes(8))).unwrap_err();
+        assert!(err.is_oom(), "want Oom, got {err:?}");
+        // with room for 64 samples but no exported variant that big: Config
+        let err = resolve(&entry, 16, &cfg, &Ledger::new(fp8.step_bytes(64))).unwrap_err();
+        assert!(matches!(err, MbsError::Config(_)), "want Config, got {err:?}");
+        // batch 8 resolves to the mu=8 executable, one step per mini-batch
+        cfg.batch = 8;
+        let r = resolve(&entry, 16, &cfg, &Ledger::new(fp8.step_bytes(8))).unwrap();
+        assert_eq!(r.mu, 8);
+    }
+
+    #[test]
+    fn admission_covers_eval_occupancy() {
+        // input-dominated footprint with mu > batch: the eval sweep holds
+        // more on the device than any training step, so admission must
+        // reject it up front instead of OOMing mid-run at the first eval
+        let entry = entry_with_mus(&[16], 1, 0, 100);
+        let mut cfg = mbs_cfg(1);
+        cfg.mu = MicroBatchSpec::Fixed(16);
+        cfg.eval_len = 64;
+        let fp = Footprint::from_manifest(&entry, entry.variant(16, 16).unwrap());
+        let eval_need = fp.resident_bytes() + fp.eval_bytes(16);
+        assert!(eval_need > fp.step_bytes(1), "eval must be the binding constraint");
+        let err = resolve(&entry, 16, &cfg, &Ledger::new(eval_need - 1)).unwrap_err();
+        assert!(err.is_oom(), "want Oom, got {err:?}");
+        assert!(err.to_string().contains("eval step"), "{err}");
+        // one more byte and the run is admitted
+        resolve(&entry, 16, &cfg, &Ledger::new(eval_need)).unwrap();
+    }
+
+    #[test]
+    fn resolve_native_auto_checks_chosen_variant_footprint() {
+        // mu=8 cheap, mu=16 expensive: native batch 8 executes the mu=8
+        // variant, so admission must use that footprint — not the largest
+        let mut entry = entry_with_mus(&[8, 16], 1000, 0, 100);
+        entry.variants[1].activation_bytes_per_sample = 10_000;
+        let mut cfg = mbs_cfg(8);
+        cfg.use_mbs = false;
+        let fp8 = Footprint::from_manifest(&entry, entry.variant(16, 8).unwrap());
+        let budget = fp8.step_bytes(8); // fits the mu=8 step, far from mu=16's
+        let r = resolve(&entry, 16, &cfg, &Ledger::new(budget)).unwrap();
+        assert_eq!(r.mu, 8);
+        assert_eq!(r.footprint.step_bytes(8), fp8.step_bytes(8));
+    }
+
+    #[test]
+    fn native_plan_is_degenerate() {
+        let p = Planner::new(16, true, NormalizationMode::Paper);
+        for n_b in [1usize, 7, 16] {
+            let plan = p.plan_minibatch(n_b);
+            assert!(plan.native);
+            assert_eq!(plan.n_smu(), 1);
+            assert_eq!(plan.device_samples(), n_b);
+            assert!(plan.is_last(0));
+            assert!((plan.scales[0] - 1.0 / n_b as f32).abs() < 1e-9);
+        }
+    }
+
+    mod properties {
+        use super::*;
+
+        fn rand_entry(r: &mut Rng) -> ModelEntry {
+            // 1-5 distinct power-of-two mus
+            let k = (r.below(5) + 1) as usize;
+            let mus: Vec<usize> = (0..k).map(|i| 1usize << i).collect();
+            entry_with_mus(
+                &mus,
+                r.below(1 << 12) + 1,
+                r.below(1 << 10),
+                r.below(1 << 14) + 1,
+            )
+        }
+
+        #[test]
+        fn auto_mu_always_fits_budget() {
+            forall(
+                "auto mu fits",
+                300,
+                0xA11,
+                |r| {
+                    let entry = rand_entry(r);
+                    let budget = r.below(1 << 20);
+                    let batch = (r.below(256) + 1) as usize;
+                    (entry, budget, batch)
+                },
+                |(entry, budget, batch)| {
+                    match auto_mu(entry, 16, *batch, 0, *budget) {
+                        Ok(res) => {
+                            let n = res.mu.min(*batch);
+                            ensure(
+                                res.footprint.step_bytes(n) <= *budget,
+                                format!("step({n}) exceeds budget"),
+                            )
+                        }
+                        Err(e) => ensure(e.is_oom(), format!("non-Oom fallback: {e}")),
+                    }
+                },
+            );
+        }
+
+        #[test]
+        fn auto_mu_is_maximal() {
+            // no larger exported mu (still <= batch) would also have fit
+            forall(
+                "auto mu maximal",
+                300,
+                0xA12,
+                |r| {
+                    let entry = rand_entry(r);
+                    let budget = r.below(1 << 20);
+                    (entry, budget)
+                },
+                |(entry, budget)| {
+                    let batch = 1 << 20; // batch >> every mu: no clamping
+                    let Ok(res) = auto_mu(entry, 16, batch, 0, *budget) else {
+                        return Ok(()); // fallback covered by auto_mu_always_fits_budget
+                    };
+                    for v in &entry.variants {
+                        if v.mu > res.mu {
+                            let fp = Footprint::from_manifest(entry, v);
+                            ensure(
+                                fp.step_bytes(v.mu) > *budget,
+                                format!("mu={} also fits but wasn't chosen", v.mu),
+                            )?;
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+
+        #[test]
+        fn fixed_plans_match_legacy_split_and_scales() {
+            // Fixed(mu) plans must be byte-identical to the pre-planner
+            // SplitPlan + NormalizationMode arithmetic
+            forall(
+                "fixed plan equivalence",
+                500,
+                0xA13,
+                |r| {
+                    let n_b = (r.below(512) + 1) as usize;
+                    let mu = (r.below(64) + 1) as usize;
+                    let norm = match r.below(3) {
+                        0 => NormalizationMode::Paper,
+                        1 => NormalizationMode::Exact,
+                        _ => NormalizationMode::None,
+                    };
+                    (n_b, mu, norm)
+                },
+                |&(n_b, mu, norm)| {
+                    let plan = Planner::new(mu, false, norm).plan_minibatch(n_b);
+                    let legacy = SplitPlan::new(n_b, mu);
+                    ensure(plan.split == legacy, "split diverged from SplitPlan::new")?;
+                    ensure(plan.mu == mu, "padding target changed")?;
+                    ensure(!plan.native, "fixed MBS plan marked native")?;
+                    for j in 0..legacy.n_smu() {
+                        let want = norm.scale(&legacy, j);
+                        ensure(
+                            plan.scales[j].to_bits() == want.to_bits(),
+                            format!("scale[{j}] {} != {want}", plan.scales[j]),
+                        )?;
+                    }
+                    ensure(plan.is_last(legacy.n_smu() - 1), "update timing moved")
+                },
+            );
+        }
+    }
+}

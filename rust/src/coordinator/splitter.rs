@@ -25,7 +25,7 @@ impl MicroRange {
 }
 
 /// Split plan for one mini-batch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SplitPlan {
     pub n_b: usize,
     /// Effective micro-batch size after the Alg. 1 clamp.

@@ -11,6 +11,11 @@
 //!    thread; the ablation baseline (A2) that quantifies what the overlap
 //!    buys.
 //!
+//! Every item carries the [`ExecutionPlan`] of its mini-batch (computed
+//! once, on the producing side, by the [`Planner`]) so the consumer never
+//! re-derives split geometry or normalization scales — the plan is the
+//! single source of truth shared across the thread boundary.
+//!
 //! The bounded channel *is* the memory backpressure: at most `prefetch`
 //! assembled micro-batches exist beyond the one executing, so host staging
 //! memory is bounded by `(prefetch + 1) * mu * sample_bytes`.
@@ -21,7 +26,7 @@ use std::thread;
 
 use crate::data::{loader, Dataset, EpochPlan, MicroBatchHost};
 
-use super::splitter::SplitPlan;
+use super::planner::{ExecutionPlan, Planner};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StreamingPolicy {
@@ -48,38 +53,42 @@ impl StreamingPolicy {
     }
 }
 
-/// One streamed micro-batch, tagged with its position in the epoch.
+/// One streamed micro-batch, tagged with its mini-batch's execution plan.
 #[derive(Debug)]
 pub struct StreamItem {
     /// Mini-batch index within the epoch.
     pub batch: usize,
-    /// Mini-batch sample count (for split-plan reconstruction).
-    pub n_b: usize,
+    /// The plan governing this micro-batch's mini-batch (shared across all
+    /// of its micro-batches).
+    pub plan: Arc<ExecutionPlan>,
     pub mb: MicroBatchHost,
 }
 
 /// Iterator over every micro-batch of an epoch under a streaming policy.
 pub enum EpochStream {
     Buffered {
-        rx: mpsc::Receiver<StreamItem>,
+        /// `Some` until dropped; taken (disconnecting the producer) before
+        /// the join in `Drop`.
+        rx: Option<mpsc::Receiver<StreamItem>>,
         handle: Option<thread::JoinHandle<()>>,
     },
     Sync {
         ds: Arc<dyn Dataset>,
         plan: EpochPlan,
-        mu: usize,
+        planner: Planner,
+        current: Option<Arc<ExecutionPlan>>,
         batch: usize,
         j: usize,
     },
 }
 
-/// Start streaming an epoch: every mini-batch of `plan`, split into
-/// micro-batches of (at most) `mu`, in order.
+/// Start streaming an epoch: every mini-batch of `plan`, stamped with the
+/// `planner`'s [`ExecutionPlan`] and split into micro-batches accordingly.
 pub fn stream_epoch(
     policy: StreamingPolicy,
     ds: Arc<dyn Dataset>,
     plan: EpochPlan,
-    mu: usize,
+    planner: Planner,
     prefetch: usize,
 ) -> EpochStream {
     match policy {
@@ -90,10 +99,11 @@ pub fn stream_epoch(
                 .spawn(move || {
                     'outer: for b in 0..plan.num_batches() {
                         let indices = plan.batch_indices(b);
-                        let split = SplitPlan::new(indices.len(), mu);
-                        for j in 0..split.n_smu() {
-                            let mb = loader::assemble(ds.as_ref(), indices, mu, j); // pad to static mu
-                            let item = StreamItem { batch: b, n_b: indices.len(), mb };
+                        let xplan = Arc::new(planner.plan_minibatch(indices.len()));
+                        for j in 0..xplan.n_smu() {
+                            // pad to the plan's static mu
+                            let mb = loader::assemble(ds.as_ref(), indices, xplan.mu, j);
+                            let item = StreamItem { batch: b, plan: xplan.clone(), mb };
                             if tx.send(item).is_err() {
                                 break 'outer; // consumer dropped early
                             }
@@ -101,10 +111,10 @@ pub fn stream_epoch(
                     }
                 })
                 .expect("spawn streamer thread");
-            EpochStream::Buffered { rx, handle: Some(handle) }
+            EpochStream::Buffered { rx: Some(rx), handle: Some(handle) }
         }
         StreamingPolicy::Synchronous => {
-            EpochStream::Sync { ds, plan, mu, batch: 0, j: 0 }
+            EpochStream::Sync { ds, plan, planner, current: None, batch: 0, j: 0 }
         }
     }
 }
@@ -114,19 +124,23 @@ impl Iterator for EpochStream {
 
     fn next(&mut self) -> Option<StreamItem> {
         match self {
-            EpochStream::Buffered { rx, .. } => rx.recv().ok(),
-            EpochStream::Sync { ds, plan, mu, batch, j } => {
+            EpochStream::Buffered { rx, .. } => rx.as_ref()?.recv().ok(),
+            EpochStream::Sync { ds, plan, planner, current, batch, j } => {
                 if *batch >= plan.num_batches() {
                     return None;
                 }
                 let indices = plan.batch_indices(*batch);
-                let split = SplitPlan::new(indices.len(), *mu);
-                let mb = loader::assemble(ds.as_ref(), indices, *mu, *j); // pad to static mu
-                let item = StreamItem { batch: *batch, n_b: indices.len(), mb };
+                let xplan = current
+                    .get_or_insert_with(|| Arc::new(planner.plan_minibatch(indices.len())))
+                    .clone();
+                // pad to the plan's static mu
+                let mb = loader::assemble(ds.as_ref(), indices, xplan.mu, *j);
+                let item = StreamItem { batch: *batch, plan: xplan.clone(), mb };
                 *j += 1;
-                if *j >= split.n_smu() {
+                if *j >= xplan.n_smu() {
                     *j = 0;
                     *batch += 1;
+                    *current = None;
                 }
                 Some(item)
             }
@@ -137,9 +151,11 @@ impl Iterator for EpochStream {
 impl Drop for EpochStream {
     fn drop(&mut self) {
         if let EpochStream::Buffered { rx, handle } = self {
-            // unblock the producer if the consumer stopped early
-            while rx.try_recv().is_ok() {}
-            drop(std::mem::replace(rx, mpsc::sync_channel(1).1));
+            // Drop the receiver FIRST: this disconnects the channel, so a
+            // producer parked on a full `send` (or about to send) errors out
+            // and exits instead of racing a drain loop that can fill back
+            // up between the last `try_recv` and the join.
+            drop(rx.take());
             if let Some(h) = handle.take() {
                 let _ = h.join();
             }
@@ -150,12 +166,23 @@ impl Drop for EpochStream {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::accumulator::NormalizationMode;
+    use crate::coordinator::splitter::SplitPlan;
     use crate::data::SynthFlowers;
 
-    fn collect(policy: StreamingPolicy, ds_len: usize, batch: usize, mu: usize) -> Vec<(usize, usize, usize)> {
+    fn planner(mu: usize) -> Planner {
+        Planner::new(mu, false, NormalizationMode::Paper)
+    }
+
+    fn collect(
+        policy: StreamingPolicy,
+        ds_len: usize,
+        batch: usize,
+        mu: usize,
+    ) -> Vec<(usize, usize, usize)> {
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, ds_len, 3));
         let plan = EpochPlan::new(ds_len, batch, 1, 0);
-        stream_epoch(policy, ds, plan, mu, 2)
+        stream_epoch(policy, ds, plan, planner(mu), 2)
             .map(|item| (item.batch, item.mb.j, item.mb.actual))
             .collect()
     }
@@ -183,13 +210,46 @@ mod tests {
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 40, 3));
         let plan = EpochPlan::new(40, 12, 1, 0);
         let a: Vec<_> =
-            stream_epoch(StreamingPolicy::DoubleBuffered, ds.clone(), plan.clone(), 8, 2).collect();
-        let b: Vec<_> = stream_epoch(StreamingPolicy::Synchronous, ds, plan, 8, 2).collect();
+            stream_epoch(StreamingPolicy::DoubleBuffered, ds.clone(), plan.clone(), planner(8), 2)
+                .collect();
+        let b: Vec<_> =
+            stream_epoch(StreamingPolicy::Synchronous, ds, plan, planner(8), 2).collect();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.mb.x, y.mb.x);
             assert_eq!(x.mb.y, y.mb.y);
             assert_eq!(x.mb.mask, y.mb.mask);
+            assert_eq!(x.plan, y.plan);
+        }
+    }
+
+    #[test]
+    fn fixed_plan_stream_matches_legacy_assembly() {
+        // the plan-driven stream must be byte-identical to the pre-planner
+        // loop: SplitPlan::new per mini-batch + assemble(.., mu, j)
+        let (ds_len, batch, mu) = (50usize, 16usize, 8usize);
+        let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, ds_len, 3));
+        let plan = EpochPlan::new(ds_len, batch, 1, 0);
+        let streamed: Vec<_> =
+            stream_epoch(StreamingPolicy::Synchronous, ds.clone(), plan.clone(), planner(mu), 2)
+                .collect();
+        let mut legacy = Vec::new();
+        for b in 0..plan.num_batches() {
+            let indices = plan.batch_indices(b);
+            let split = SplitPlan::new(indices.len(), mu);
+            for j in 0..split.n_smu() {
+                legacy.push((b, split.clone(), loader::assemble(ds.as_ref(), indices, mu, j)));
+            }
+        }
+        assert_eq!(streamed.len(), legacy.len());
+        for (item, (b, split, mb)) in streamed.iter().zip(&legacy) {
+            assert_eq!(item.batch, *b);
+            assert_eq!(&item.plan.split, split);
+            assert_eq!(item.mb.x, mb.x);
+            assert_eq!(item.mb.y, mb.y);
+            assert_eq!(item.mb.mask, mb.mask);
+            assert_eq!(item.mb.actual, mb.actual);
+            assert_eq!(item.mb.j, mb.j);
         }
     }
 
@@ -197,8 +257,21 @@ mod tests {
     fn early_drop_does_not_hang() {
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 1000, 3));
         let plan = EpochPlan::new(1000, 32, 1, 0);
-        let mut s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, 16, 2);
+        let mut s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, planner(16), 2);
         let _ = s.next();
         drop(s); // must join cleanly, not deadlock
+    }
+
+    #[test]
+    fn early_drop_with_producer_blocked_on_full_channel_does_not_hang() {
+        // prefetch=1 bounds the channel at one item; with nothing consumed
+        // the producer fills it and parks inside `send` — dropping the
+        // stream must disconnect and join rather than deadlock
+        let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 1000, 3));
+        let plan = EpochPlan::new(1000, 32, 1, 0);
+        let s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, planner(16), 1);
+        // give the producer time to fill the channel and block on the next send
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        drop(s);
     }
 }

@@ -1,31 +1,37 @@
-//! The MBS training loop (paper fig. 2) and the native baseline.
+//! The unified, plan-driven epoch executor (paper fig. 2).
 //!
-//! Both paths run the *identical* arithmetic through the same `accum_step`
-//! executable; they differ only in (a) how many samples sit on the device
-//! at once — which the memory model checks — and (b) how many accumulation
-//! steps precede each optimizer update:
+//! There is exactly ONE epoch loop: `run_epoch` consumes
+//! [`ExecutionPlan`](super::planner::ExecutionPlan)-tagged micro-batches
+//! from the streamer and drives the runtime. The three historical variants
+//! are all parameterizations of it:
 //!
-//!   native ("w/o MBS"): one step with N_B samples; OOMs past the frontier
-//!   MBS    ("w/ MBS") : N_Smu steps with mu samples, loss-normalized
+//!   MBS    ("w/ MBS") : N_Smu accumulation steps of mu samples, loss-
+//!                       normalized, optimizer update after the last one
+//!   native ("w/o MBS"): the degenerate plan — one step with N_B samples
+//!                       (`N_Smu = 1`); OOMs past the memory frontier
+//!   eval              : the same streamed sweep with `eval_step` and no
+//!                       updates
 //!
 //! That identity is what makes the with/without comparison of the paper's
 //! tables apples-to-apples, and it is what the grad-equivalence integration
-//! test checks end-to-end.
+//! test checks end-to-end. The memory [`Ledger`] is charged for every step
+//! the executor runs, so a plan that would exceed capacity fails loudly at
+//! the exact step — not just at admission time.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::TrainConfig;
-use crate::data::{loader, Dataset, EpochPlan, SynthCarvana, SynthFlowers, SynthText};
+use crate::data::{Dataset, EpochPlan, SynthCarvana, SynthFlowers, SynthText};
 use crate::error::{MbsError, Result};
-use crate::memory::{Footprint, MemoryModel};
+use crate::memory::{Footprint, Ledger, MemoryModel};
 use crate::metrics::{EpochStats, MetricKind};
 use crate::runtime::{Engine, ModelRuntime};
 
-use super::accumulator::Accumulation;
+use super::accumulator::{Accumulation, NormalizationMode};
+use super::planner::{self, Planner};
 use super::scheduler::UpdateScheduler;
-use super::splitter::SplitPlan;
-use super::streamer::stream_epoch;
+use super::streamer::{stream_epoch, StreamingPolicy};
 
 /// Everything a finished run reports (feeds the tables and figures).
 #[derive(Debug, Clone)]
@@ -33,6 +39,8 @@ pub struct TrainReport {
     pub model: String,
     pub use_mbs: bool,
     pub batch: usize,
+    /// The micro-batch size the run executed with — planner-derived under
+    /// `MicroBatchSpec::Auto`, the pinned value under `Fixed`.
     pub mu: usize,
     pub train_epochs: Vec<EpochStats>,
     pub eval_epochs: Vec<EpochStats>,
@@ -82,6 +90,113 @@ pub fn datasets_for(
     })
 }
 
+/// What one pass through the data does with each micro-batch.
+#[derive(Clone, Copy)]
+enum Pass<'a> {
+    /// Accumulate gradients; optimizer update after each mini-batch's last
+    /// micro-batch (fig. 2 step 5).
+    Train { sched: &'a UpdateScheduler },
+    /// Masked, padded metric sweep; never touches gradients or params.
+    Eval,
+}
+
+/// THE epoch loop. Streams plan-tagged micro-batches and executes them,
+/// charging the ledger for every step so planned residency is asserted
+/// against capacity at the moment it would be live on the device.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch(
+    rt: &mut ModelRuntime,
+    ledger: &mut Ledger,
+    fp: &Footprint,
+    policy: StreamingPolicy,
+    prefetch: usize,
+    ds: &Arc<dyn Dataset>,
+    epoch_plan: EpochPlan,
+    planner: &Planner,
+    pass: Pass<'_>,
+) -> Result<Accumulation> {
+    let mut acc = Accumulation::default();
+    let stream = stream_epoch(policy, ds.clone(), epoch_plan, planner.clone(), prefetch);
+    for item in stream {
+        // training holds activations for the backward pass; eval is
+        // forward-only and holds just the input buffers
+        let (tag, bytes) = match pass {
+            Pass::Train { .. } => ("train step", fp.batch_bytes(item.plan.device_samples())),
+            Pass::Eval => ("eval step", fp.eval_bytes(item.plan.device_samples())),
+        };
+        let step = ledger.alloc(tag, bytes)?;
+        let out = match pass {
+            Pass::Train { .. } => rt.accum_step(&item.mb, item.plan.scales[item.mb.j])?,
+            Pass::Eval => rt.eval_step(&item.mb)?,
+        };
+        ledger.free(step)?;
+        acc.add(&out, item.mb.actual);
+        if let Pass::Train { sched } = pass {
+            if item.plan.is_last(item.mb.j) {
+                rt.apply(&sched.hyper_for(rt.updates))?;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+/// One eval sweep through the executor: the whole set as a single
+/// sequential mini-batch, split by the runtime's static mu.
+fn eval_epoch(
+    rt: &mut ModelRuntime,
+    ledger: &mut Ledger,
+    fp: &Footprint,
+    kind: MetricKind,
+    ds: &Arc<dyn Dataset>,
+    epoch: usize,
+) -> Result<EpochStats> {
+    let t0 = Instant::now();
+    let len = ds.len();
+    let acc = if len == 0 {
+        Accumulation::default() // empty eval set: zero samples, zero stats
+    } else {
+        let planner = Planner::new(rt.variant.mu, false, NormalizationMode::Exact);
+        run_epoch(
+            rt,
+            ledger,
+            fp,
+            StreamingPolicy::Synchronous,
+            0,
+            ds,
+            EpochPlan::sequential(len, len),
+            &planner,
+            Pass::Eval,
+        )?
+    };
+    Ok(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, t0.elapsed()))
+}
+
+/// Masked, padded eval pass over a dataset (standalone entry point for
+/// benches and tests; `train` runs the same executor with its own ledger).
+pub fn evaluate(
+    rt: &mut ModelRuntime,
+    kind: MetricKind,
+    ds: &Arc<dyn Dataset>,
+    epoch: usize,
+) -> Result<EpochStats> {
+    let fp = Footprint::from_manifest(&rt.entry, &rt.variant);
+    let mut ledger = Ledger::new(fp.step_bytes(rt.variant.mu));
+    ledger.alloc("resident state", fp.resident_bytes())?;
+    eval_epoch(rt, &mut ledger, &fp, kind, ds, epoch)
+}
+
+/// Mean per-epoch wall time, guarded so an empty or degenerate list can
+/// never feed a non-finite value into `Duration::from_secs_f64` (which
+/// panics on NaN).
+fn mean_epoch_wall(walls: &[f64]) -> Duration {
+    let m = crate::util::stats::mean(walls);
+    if m.is_finite() && m >= 0.0 {
+        Duration::from_secs_f64(m)
+    } else {
+        Duration::ZERO
+    }
+}
+
 /// Train according to `cfg`, returning the full report. Returns
 /// [`MbsError::Oom`] when the configuration does not fit the simulated
 /// device — the paper tables' "Failed" cells.
@@ -89,39 +204,27 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     cfg.validate()?;
     let entry = engine.manifest().model(&cfg.model)?.clone();
     let size = cfg.size.unwrap_or(entry.default_size);
-    let variant = entry.variant(size, cfg.mu)?.clone();
     let kind = MetricKind::parse(&entry.metric_semantics)?;
 
     // ------------------------------------------------------------------
-    // memory admission (paper section 1: "the mini-batch cannot be
-    // allocated ... and the model cannot be trained")
+    // memory admission + planning (paper section 1 + Alg. 1): the ledger's
+    // remaining budget drives the micro-batch choice; the resident state is
+    // then charged for the whole run
     // ------------------------------------------------------------------
-    let footprint = Footprint::from_manifest(&entry, &variant);
-    let capacity = cfg
-        .capacity_bytes()
-        .unwrap_or_else(|| MemoryModel::capacity_for_native_max(&footprint, 2 * cfg.mu));
-    let mem = MemoryModel::new(capacity, footprint);
-    mem.check_resident()?;
-    let samples_on_device = if cfg.use_mbs { cfg.mu.min(cfg.batch) } else { cfg.batch };
-    let label = if cfg.use_mbs {
-        format!("MBS step mu={samples_on_device}")
-    } else {
-        format!("native step N_B={samples_on_device}")
+    let capacity = match cfg.capacity_bytes() {
+        Some(c) => c,
+        None => planner::default_capacity(&entry, size, &cfg.mu)?,
     };
-    mem.check_step(samples_on_device, &label)?;
-    if !cfg.use_mbs && cfg.batch > variant.mu {
-        // capacity admits it but no executable was exported that large —
-        // configs keep native-max == exported max so this is a config error
-        return Err(MbsError::Config(format!(
-            "native baseline needs an exported variant with batch {} (max exported mu is {})",
-            cfg.batch, variant.mu
-        )));
-    }
+    let mut ledger = Ledger::new(capacity);
+    let resolution = planner::resolve(&entry, size, cfg, &ledger)?;
+    let mem = MemoryModel::new(capacity, resolution.footprint.clone());
+    ledger.alloc("resident state", resolution.footprint.resident_bytes())?;
+    let planner = Planner::new(resolution.mu, !cfg.use_mbs, cfg.norm_mode);
 
     // ------------------------------------------------------------------
     // runtime + data
     // ------------------------------------------------------------------
-    let mut rt: ModelRuntime = engine.load_model(&cfg.model, size, cfg.mu)?;
+    let mut rt: ModelRuntime = engine.load_model(&cfg.model, size, resolution.mu)?;
     let (train_ds, eval_ds) = datasets_for(&entry.task, size, cfg)?;
 
     let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
@@ -134,33 +237,59 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
 
     for epoch in 0..cfg.epochs {
         let t0 = Instant::now();
-        let acc = if cfg.use_mbs {
-            train_epoch_mbs(&mut rt, cfg, &train_ds, &sched, epoch)?
-        } else {
-            train_epoch_native(&mut rt, cfg, &train_ds, &sched, epoch)?
-        };
+        let epoch_plan = EpochPlan::new(
+            train_ds.len().min(cfg.dataset_len),
+            cfg.batch,
+            cfg.seed,
+            epoch as u64,
+        );
+        let acc = run_epoch(
+            &mut rt,
+            &mut ledger,
+            &resolution.footprint,
+            cfg.streaming,
+            cfg.prefetch,
+            &train_ds,
+            epoch_plan,
+            &planner,
+            Pass::Train { sched: &sched },
+        )?;
         let wall = t0.elapsed();
         train_epochs.push(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, wall));
 
         if !cfg.skip_eval {
-            eval_epochs.push(evaluate(&mut rt, kind, &eval_ds, epoch)?);
+            eval_epochs.push(eval_epoch(
+                &mut rt,
+                &mut ledger,
+                &resolution.footprint,
+                kind,
+                &eval_ds,
+                epoch,
+            )?);
         }
     }
     let total_wall = run_start.elapsed();
     let final_eval = if cfg.skip_eval {
-        evaluate(&mut rt, kind, &eval_ds, cfg.epochs.saturating_sub(1))?
+        eval_epoch(
+            &mut rt,
+            &mut ledger,
+            &resolution.footprint,
+            kind,
+            &eval_ds,
+            cfg.epochs.saturating_sub(1),
+        )?
     } else {
         eval_epochs.last().cloned().ok_or_else(|| MbsError::Config("zero epochs".into()))?
     };
 
     let epoch_walls: Vec<f64> = train_epochs.iter().map(|e| e.wall.as_secs_f64()).collect();
-    let epoch_wall_mean = Duration::from_secs_f64(crate::util::stats::mean(&epoch_walls));
+    let epoch_wall_mean = mean_epoch_wall(&epoch_walls);
 
     Ok(TrainReport {
         model: cfg.model.clone(),
         use_mbs: cfg.use_mbs,
         batch: cfg.batch,
-        mu: cfg.mu,
+        mu: resolution.mu,
         train_epochs,
         eval_epochs,
         final_eval,
@@ -173,79 +302,17 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     })
 }
 
-/// One MBS epoch: stream micro-batches, accumulate, update at mini-batch
-/// boundaries (fig. 2 steps 1-5).
-fn train_epoch_mbs(
-    rt: &mut ModelRuntime,
-    cfg: &TrainConfig,
-    ds: &Arc<dyn Dataset>,
-    sched: &UpdateScheduler,
-    epoch: usize,
-) -> Result<Accumulation> {
-    let plan = EpochPlan::new(ds.len().min(cfg.dataset_len), cfg.batch, cfg.seed, epoch as u64);
-    let mut epoch_acc = Accumulation::default();
-    let mut current_split: Option<SplitPlan> = None;
-    let stream = stream_epoch(cfg.streaming, ds.clone(), plan, cfg.mu, cfg.prefetch);
-    for item in stream {
-        let split = current_split
-            .take()
-            .filter(|s: &SplitPlan| s.n_b == item.n_b)
-            .unwrap_or_else(|| SplitPlan::new(item.n_b, cfg.mu));
-        let scale = cfg.norm_mode.scale(&split, item.mb.j);
-        let out = rt.accum_step(&item.mb, scale)?;
-        epoch_acc.add(&out, item.mb.actual);
-        if item.mb.j + 1 == split.n_smu() {
-            // last micro-batch of the mini-batch: optimizer update (step 5)
-            rt.apply(&sched.hyper_for(rt.updates))?;
-        } else {
-            current_split = Some(split);
-        }
-    }
-    Ok(epoch_acc)
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-/// One native epoch: the whole mini-batch as a single accumulation step
-/// (N_Smu = 1) followed by the update — the paper's "w/o MBS" arm. The
-/// memory model has already admitted N_B samples on the device; execution
-/// uses the exported mu-shaped step with padding when N_B < mu.
-fn train_epoch_native(
-    rt: &mut ModelRuntime,
-    cfg: &TrainConfig,
-    ds: &Arc<dyn Dataset>,
-    sched: &UpdateScheduler,
-    epoch: usize,
-) -> Result<Accumulation> {
-    let plan = EpochPlan::new(ds.len().min(cfg.dataset_len), cfg.batch, cfg.seed, epoch as u64);
-    let mut epoch_acc = Accumulation::default();
-    for b in 0..plan.num_batches() {
-        let indices = plan.batch_indices(b);
-        // single "micro"-batch covering the entire mini-batch
-        let mb = loader::assemble(ds.as_ref(), indices, rt.variant.mu, 0);
-        let n = indices.len().min(rt.variant.mu);
-        let scale = 1.0 / n as f32;
-        let out = rt.accum_step(&mb, scale)?;
-        epoch_acc.add(&out, mb.actual);
-        rt.apply(&sched.hyper_for(rt.updates))?;
+    #[test]
+    fn mean_epoch_wall_guards_degenerate_inputs() {
+        // regression: an empty wall list (epochs == 0 reaching the report
+        // layer) or a NaN mean must not panic Duration::from_secs_f64
+        assert_eq!(mean_epoch_wall(&[]), Duration::ZERO);
+        assert_eq!(mean_epoch_wall(&[f64::NAN]), Duration::ZERO);
+        assert_eq!(mean_epoch_wall(&[-1.0]), Duration::ZERO);
+        assert_eq!(mean_epoch_wall(&[1.0, 3.0]), Duration::from_secs(2));
     }
-    Ok(epoch_acc)
-}
-
-/// Masked, padded eval pass over a dataset.
-pub fn evaluate(
-    rt: &mut ModelRuntime,
-    kind: MetricKind,
-    ds: &Arc<dyn Dataset>,
-    epoch: usize,
-) -> Result<EpochStats> {
-    let t0 = Instant::now();
-    let mu = rt.variant.mu;
-    let indices: Vec<usize> = (0..ds.len()).collect();
-    let split = SplitPlan::new(indices.len(), mu);
-    let mut acc = Accumulation::default();
-    for j in 0..split.n_smu() {
-        let mb = loader::assemble(ds.as_ref(), &indices, mu, j); // pad to static mu
-        let out = rt.eval_step(&mb)?;
-        acc.add(&out, mb.actual);
-    }
-    Ok(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, t0.elapsed()))
 }

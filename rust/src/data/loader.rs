@@ -62,6 +62,13 @@ impl EpochPlan {
         EpochPlan { indices, batch, drop_last: false }
     }
 
+    /// Unshuffled pass in dataset order — what evaluation uses, so the
+    /// plan-driven executor reproduces the classic sequential eval sweep.
+    pub fn sequential(ds_len: usize, batch: usize) -> EpochPlan {
+        assert!(batch > 0, "batch size 0");
+        EpochPlan { indices: (0..ds_len).collect(), batch, drop_last: false }
+    }
+
     pub fn drop_last(mut self, yes: bool) -> EpochPlan {
         self.drop_last = yes;
         self
@@ -105,6 +112,15 @@ mod tests {
         assert_eq!(plan.batch_indices(6).len(), 4);
         let dropped = EpochPlan::new(100, 16, 7, 0).drop_last(true);
         assert_eq!(dropped.num_batches(), 6);
+    }
+
+    #[test]
+    fn sequential_plan_is_identity_order() {
+        let plan = EpochPlan::sequential(10, 10);
+        assert_eq!(plan.num_batches(), 1);
+        assert_eq!(plan.batch_indices(0), (0..10).collect::<Vec<_>>());
+        // empty dataset: zero batches, nothing to iterate
+        assert_eq!(EpochPlan::sequential(0, 4).num_batches(), 0);
     }
 
     #[test]

@@ -5,17 +5,20 @@
 //! (Piao, Synn, Park, Kim — IEEE Access 2023; preprint title "Micro Batch
 //! Streaming"), as a three-layer rust + JAX + Pallas stack:
 //!
-//!  * **L3 (this crate)** — the rust coordinator: mini->micro batch
-//!    splitting (paper Alg. 1), the stream-based pipeline, loss
-//!    normalization policy, gradient-accumulation lifecycle, the simulated
-//!    device-memory model that reproduces the paper's OOM frontier, and the
-//!    synthetic datasets.
+//!  * **L3 (this crate)** — the rust coordinator: the memory-driven
+//!    micro-batch planner (paper Alg. 1), the stream-based pipeline, the
+//!    single plan-driven epoch executor, loss normalization policy, the
+//!    simulated device-memory model/ledger that reproduces the paper's OOM
+//!    frontier, and the synthetic datasets.
 //!  * **L2** — JAX model zoo (`python/compile/models/`), lowered AOT to HLO
 //!    text and executed here via the PJRT CPU client ([`runtime`]).
 //!  * **L1** — Pallas kernels (tiled MXU matmul, fused CE) embedded in the
 //!    L2 HLO.
 //!
-//! Quickstart (after `make artifacts`):
+//! Quickstart (after `make artifacts`): the micro-batch size defaults to
+//! [`MicroBatchSpec::Auto`], so the planner derives the largest exported
+//! `mu` that fits the memory remaining after the model is resident — the
+//! paper's core algorithm. No hand-tuned `mu` required:
 //!
 //! ```no_run
 //! use mbs::prelude::*;
@@ -23,14 +26,20 @@
 //! let manifest = Manifest::load("artifacts").unwrap();
 //! let mut engine = Engine::new(manifest).unwrap();
 //! let config = TrainConfig::builder("microresnet18")
-//!     .batch(128)
-//!     .mu(16)
+//!     .batch(128)        // far beyond what 96 MiB holds natively
 //!     .epochs(2)
-//!     .capacity_mib(96)
+//!     .capacity_mib(96)  // mu is derived from this, not guessed
 //!     .build();
 //! let report = train(&mut engine, &config).unwrap();
-//! println!("final accuracy {:.2}%", 100.0 * report.final_eval.primary_metric);
+//! println!(
+//!     "planned mu {}: final accuracy {:.2}%",
+//!     report.mu,
+//!     100.0 * report.final_eval.primary_metric
+//! );
 //! ```
+//!
+//! Pin a specific exported variant with `.mu(16)` (ablations, benches), or
+//! ask for the old behaviour on the CLI with `--mu 16` vs `--mu auto`.
 
 pub mod config;
 pub mod coordinator;
@@ -42,16 +51,18 @@ pub mod metrics;
 pub mod runtime;
 pub mod util;
 
-pub use config::TrainConfig;
-pub use coordinator::{train, NormalizationMode, TrainReport};
+pub use config::{MicroBatchSpec, TrainConfig};
+pub use coordinator::{train, ExecutionPlan, NormalizationMode, Planner, TrainReport};
 pub use error::{MbsError, Result};
 pub use manifest::Manifest;
 pub use runtime::Engine;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::config::TrainConfig;
-    pub use crate::coordinator::{train, NormalizationMode, TrainReport};
+    pub use crate::config::{MicroBatchSpec, TrainConfig};
+    pub use crate::coordinator::{
+        train, ExecutionPlan, NormalizationMode, Planner, TrainReport,
+    };
     pub use crate::data::{Dataset, SynthCarvana, SynthFlowers, SynthText};
     pub use crate::error::{MbsError, Result};
     pub use crate::manifest::Manifest;

@@ -48,7 +48,7 @@ fn print_usage() {
 
 USAGE: mbs <subcommand> [flags]
 
-  train    --model <key> [--batch N] [--mu N] [--epochs N] [--capacity-mib N]
+  train    --model <key> [--batch N] [--mu N|auto] [--epochs N] [--capacity-mib N]
            [--mbs true|false] [--norm paper|exact|none]
            [--streaming double-buffered|sync] [--size N] [--seed N]
            [--dataset-len N] [--eval-len N] [--lr F] [--lr-decay F]
@@ -107,6 +107,9 @@ fn cmd_train(args: &Args) -> Result<(), MbsError> {
                 report.epoch_wall_mean.as_secs_f64(),
                 report.output_mode
             );
+            if cfg.mu.is_auto() {
+                println!("[mbs] planner chose mu={} (paper Alg. 1)", report.mu);
+            }
             println!(
                 "[mbs] device: capacity {:.1} MiB, native max batch {}",
                 report.capacity_bytes as f64 / MIB as f64,
@@ -137,18 +140,32 @@ fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
     let mut engine = Engine::new(manifest)?;
     let mut table = Table::new(&["batch", "mu", "w/o MBS", "w/ MBS", "time w/o", "time w/"]);
     for &batch in &batches {
-        let mut row = vec![batch.to_string(), cfg0.mu.to_string()];
+        // mu column: the MBS arm's resolved micro-batch (planner-derived
+        // under the Auto default); "-" until that arm reports it
+        let mut row = vec![batch.to_string(), "-".to_string()];
         for use_mbs in [false, true] {
             let mut cfg = cfg0.clone();
             cfg.batch = batch;
             cfg.use_mbs = use_mbs;
             match train(&mut engine, &cfg) {
-                Ok(r) => row.insert(
-                    if use_mbs { 3 } else { 2 },
-                    format!("{:.2}%", 100.0 * r.best_metric()),
-                ),
+                Ok(r) => {
+                    if use_mbs {
+                        row[1] = r.mu.to_string();
+                    }
+                    row.insert(
+                        if use_mbs { 3 } else { 2 },
+                        format!("{:.2}%", 100.0 * r.best_metric()),
+                    );
+                }
                 Err(e) if e.is_oom() => {
                     row.insert(if use_mbs { 3 } else { 2 }, "Failed".into())
+                }
+                // the native arm can also fail because no exported
+                // executable covers the batch (a Config error, not OOM) —
+                // that's still a "Failed" table cell, not a sweep abort;
+                // genuine config mistakes surface on the MBS arm
+                Err(MbsError::Config(_)) if !use_mbs => {
+                    row.insert(2, "Failed".into())
                 }
                 Err(e) => return Err(e),
             }

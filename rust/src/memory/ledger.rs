@@ -61,6 +61,18 @@ impl Ledger {
         self.used
     }
 
+    /// Bytes still available for allocation — the budget the micro-batch
+    /// planner queries when deriving `mu` (paper Alg. 1: capacity minus
+    /// whatever is already resident).
+    pub fn remaining(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Would an allocation of `bytes` fit right now?
+    pub fn admits(&self, bytes: u64) -> bool {
+        bytes <= self.remaining()
+    }
+
     pub fn peak(&self) -> u64 {
         self.peak
     }
@@ -100,6 +112,18 @@ mod tests {
         l.free(b).unwrap();
         assert_eq!(l.used(), 0);
         assert_eq!(l.peak(), 100);
+    }
+
+    #[test]
+    fn remaining_and_admits_track_allocations() {
+        let mut l = Ledger::new(100);
+        assert_eq!(l.remaining(), 100);
+        assert!(l.admits(100) && !l.admits(101));
+        let a = l.alloc("resident", 60).unwrap();
+        assert_eq!(l.remaining(), 40);
+        assert!(l.admits(40) && !l.admits(41));
+        l.free(a).unwrap();
+        assert_eq!(l.remaining(), 100);
     }
 
     #[test]
@@ -148,6 +172,10 @@ mod tests {
                             }
                         }
                         ensure(l.used() <= l.capacity(), "used > capacity")?;
+                        ensure(
+                            l.remaining() == l.capacity() - l.used(),
+                            "remaining out of sync",
+                        )?;
                     }
                     Ok(())
                 },

@@ -15,8 +15,10 @@
 //!
 //! [`MemoryModel`] does the arithmetic and produces structured
 //! [`MbsError::Oom`] errors (the tables' `Failed` cells); [`Ledger`] is a
-//! bump-style allocation tracker used to assert the invariant that the
-//! coordinator never plans a step that exceeds capacity.
+//! bump-style allocation tracker whose `remaining()` budget drives the
+//! micro-batch planner (paper Alg. 1) and which the epoch executor charges
+//! per step, asserting that planned residency never exceeds capacity at
+//! any instant.
 
 pub mod ledger;
 
@@ -69,6 +71,14 @@ impl Footprint {
     /// (the paper's data space).
     pub fn batch_bytes(&self, n: usize) -> u64 {
         (self.activation_bytes_per_sample + self.input_bytes_per_sample) * n as u64
+    }
+
+    /// Bytes needed while `n` samples run a forward-only (eval) step: just
+    /// the input buffers — no activations are kept for a backward pass.
+    /// The planner admission-checks this occupancy alongside the training
+    /// step.
+    pub fn eval_bytes(&self, n: usize) -> u64 {
+        self.input_bytes_per_sample * n as u64
     }
 
     /// Total for a step computing `n` samples at once.
@@ -163,6 +173,9 @@ mod tests {
         assert_eq!(f.resident_bytes(), 3200);
         assert_eq!(f.batch_bytes(4), 2400);
         assert_eq!(f.step_bytes(4), 5600);
+        // forward-only eval keeps no bwd activations: inputs only
+        assert_eq!(f.eval_bytes(4), 400);
+        assert!(f.eval_bytes(4) < f.batch_bytes(4));
     }
 
     #[test]

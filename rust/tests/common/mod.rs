@@ -1,13 +1,42 @@
 //! Shared helpers for integration tests: engine construction + artifact
-//! gating (tests no-op when `make artifacts` has not been run).
+//! gating.
+//!
+//! The PJRT/artifact-dependent integration tests run when compiled
+//! artifacts are available: either auto-detected at the default
+//! `rust/artifacts` directory, or named explicitly via the
+//! `MBS_ARTIFACTS` environment variable (`1` for the default location, or
+//! a path). On a clean checkout (`cargo test -q` without `make artifacts`)
+//! they skip with a message instead of failing.
+
+#![allow(dead_code)] // each integration test binary uses a subset of these
 
 use std::path::PathBuf;
 
 use mbs::{Engine, Manifest};
 
 pub fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+    let default_dir = || PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = match std::env::var("MBS_ARTIFACTS") {
+        // no opt-in/override: auto-detect the default location
+        Err(_) => default_dir(),
+        Ok(v) if v.is_empty() || v == "1" || v == "true" => default_dir(),
+        // explicit opt-out, not a directory literally named "0"
+        Ok(v) if v == "0" || v == "false" => {
+            eprintln!("skipping artifact-dependent test: MBS_ARTIFACTS={v} (opt-out)");
+            return None;
+        }
+        Ok(path) => PathBuf::from(path),
+    };
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "skipping artifact-dependent test: no manifest.json under {} \
+             (run `make artifacts` first, or point MBS_ARTIFACTS at an artifact dir)",
+            dir.display()
+        );
+        None
+    }
 }
 
 pub fn engine() -> Option<Engine> {

@@ -5,7 +5,7 @@
 mod common;
 
 use mbs::memory::{Footprint, MemoryModel};
-use mbs::{MbsError, TrainConfig};
+use mbs::{MbsError, MicroBatchSpec, TrainConfig};
 
 fn capacity_for(engine: &mbs::Engine, model: &str, size: usize, mu: usize, native_max: usize) -> u64 {
     let entry = engine.manifest().model(model).unwrap();
@@ -60,6 +60,41 @@ fn native_fails_beyond_frontier_mbs_succeeds() {
 
 fn max_of(a: usize, b: usize) -> usize {
     a.max(b)
+}
+
+#[test]
+fn auto_mu_trains_where_native_fails() {
+    // the paper's actual algorithm: the user names only batch + capacity;
+    // the planner derives mu from the memory remaining after the model is
+    // resident, and trains where the native baseline OOMs
+    let Some(mut engine) = common::engine() else { return };
+    let cap = capacity_for(&engine, "microresnet18", 16, 8, 8); // native max 8
+    let cap_mib = cap.div_ceil(1 << 20);
+
+    let mut auto_cfg = TrainConfig::builder("microresnet18")
+        .batch(64)
+        .epochs(1)
+        .dataset_len(64)
+        .skip_eval()
+        .build();
+    assert_eq!(auto_cfg.mu, MicroBatchSpec::Auto, "auto is the default");
+    auto_cfg.capacity_mib = Some(cap_mib);
+    let r = mbs::train(&mut engine, &auto_cfg).expect("auto-mu run should fit");
+    assert!(r.mu >= 1, "chosen mu must be reported");
+    assert!(r.updates > 0);
+    // the plan honors the admission arithmetic it was derived from
+    let entry = engine.manifest().model("microresnet18").unwrap();
+    let variant = entry.variant(16, r.mu).unwrap();
+    let fp = Footprint::from_manifest(entry, variant);
+    assert!(fp.step_bytes(r.mu) <= cap_mib * (1 << 20));
+
+    // same batch + capacity natively: structured OOM (the "Failed" cell)
+    let mut native = auto_cfg.clone();
+    native.use_mbs = false;
+    match mbs::train(&mut engine, &native) {
+        Err(e) if e.is_oom() => {}
+        other => panic!("expected native OOM, got {other:?}"),
+    }
 }
 
 #[test]
