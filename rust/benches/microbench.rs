@@ -1,9 +1,12 @@
 //! Hot-path microbenchmarks (feeds EXPERIMENTS.md SSPerf): per-stage
 //! latency of the micro-batch step across models —
-//!   assemble: host-side synthetic-data generation + padding
-//!   accum:    upload x/y/mask/scale + execute fwd/bwd + state swap
-//!   apply:    optimizer update executable
-//!   eval:     forward-only executable
+//!   assemble:      host-side generation + padding, fresh allocation per
+//!                  call (the pre-pool baseline)
+//!   assemble_into: the pooled steady-state path — same work into a
+//!                  recycled staging buffer, zero allocations
+//!   accum:         upload x/y/mask/scale + execute fwd/bwd + state swap
+//!   apply:         optimizer update executable
+//!   eval:          forward-only executable
 //! plus the L3-only overhead (splitter + scale arithmetic), which must be
 //! noise-level compared to the XLA work.
 
@@ -33,7 +36,8 @@ fn main() -> Result<()> {
     let iters = common::scale(10);
 
     let mut table = Table::new(&[
-        "model", "mu", "assemble (ms)", "accum (ms)", "apply (ms)", "eval (ms)",
+        "model", "mu", "assemble (ms)", "assemble_into (ms)", "accum (ms)", "apply (ms)",
+        "eval (ms)",
     ]);
     let setups = [
         ("microresnet18", 16usize, 8usize),
@@ -56,6 +60,15 @@ fn main() -> Result<()> {
             Ok(())
         })?;
 
+        // the pooled steady-state path: same assembly into a recycled
+        // staging buffer — the delta vs `assemble` is what BufPool saves
+        let mut staging = loader::assemble(ds.as_ref(), &indices, mu, 0);
+        let t_assemble_into = bench(iters, || {
+            loader::assemble_into(&mut staging, ds.as_ref(), &indices, mu, 0);
+            std::hint::black_box(&staging);
+            Ok(())
+        })?;
+
         let mut rt = engine.load_model(model, size, mu)?;
         let mb = loader::assemble(ds.as_ref(), &indices, mu, 0);
         let plan = SplitPlan::new(mu, mu);
@@ -69,6 +82,7 @@ fn main() -> Result<()> {
             model.to_string(),
             mu.to_string(),
             format!("{t_assemble:.2}"),
+            format!("{t_assemble_into:.2}"),
             format!("{t_accum:.2}"),
             format!("{t_apply:.2}"),
             format!("{t_eval:.2}"),

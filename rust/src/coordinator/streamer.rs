@@ -19,12 +19,21 @@
 //! The bounded channel *is* the memory backpressure: at most `prefetch`
 //! assembled micro-batches exist beyond the one executing, so host staging
 //! memory is bounded by `(prefetch + 1) * mu * sample_bytes`.
+//!
+//! Staging buffers are leased from a shared [`BufPool`] and assembled
+//! in-place (`loader::assemble_into`); the consumer hands each buffer back
+//! through the pool's return channel after upload, so steady-state
+//! streaming performs zero host-buffer allocations — the same
+//! `max(prefetch, 1) + 2` buffers circulate for the whole run (the channel
+//! is 1-deep even at `prefetch == 0`). Every item also carries how long
+//! its assembly took, feeding the per-stage pipeline instrumentation.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
+use std::time::{Duration, Instant};
 
-use crate::data::{loader, Dataset, EpochPlan, MicroBatchHost};
+use crate::data::{loader, BufPool, Dataset, EpochPlan, MicroBatchHost};
 
 use super::planner::{ExecutionPlan, Planner};
 
@@ -62,6 +71,9 @@ pub struct StreamItem {
     /// of its micro-batches).
     pub plan: Arc<ExecutionPlan>,
     pub mb: MicroBatchHost,
+    /// Host-side assembly time for this micro-batch (stage instrumentation;
+    /// measured on whichever thread assembled it).
+    pub assemble: Duration,
 }
 
 /// Iterator over every micro-batch of an epoch under a streaming policy.
@@ -76,20 +88,39 @@ pub enum EpochStream {
         ds: Arc<dyn Dataset>,
         plan: EpochPlan,
         planner: Planner,
+        pool: Arc<BufPool>,
         current: Option<Arc<ExecutionPlan>>,
         batch: usize,
         j: usize,
     },
 }
 
+/// Lease a staging buffer from `pool`, assemble micro-batch `j` into it and
+/// time the assembly — the one hot-path assembly point both policies share.
+fn assemble_pooled(
+    pool: &BufPool,
+    ds: &dyn Dataset,
+    indices: &[usize],
+    mu: usize,
+    j: usize,
+) -> (MicroBatchHost, Duration) {
+    let t0 = Instant::now();
+    let mut mb = pool.lease();
+    loader::assemble_into(&mut mb, ds, indices, mu, j);
+    (mb, t0.elapsed())
+}
+
 /// Start streaming an epoch: every mini-batch of `plan`, stamped with the
 /// `planner`'s [`ExecutionPlan`] and split into micro-batches accordingly.
+/// Staging buffers come from `pool`; the consumer is expected to
+/// [`BufPool::give`] each one back once it is done with the payload.
 pub fn stream_epoch(
     policy: StreamingPolicy,
     ds: Arc<dyn Dataset>,
     plan: EpochPlan,
     planner: Planner,
     prefetch: usize,
+    pool: Arc<BufPool>,
 ) -> EpochStream {
     match policy {
         StreamingPolicy::DoubleBuffered => {
@@ -102,8 +133,10 @@ pub fn stream_epoch(
                         let xplan = Arc::new(planner.plan_minibatch(indices.len()));
                         for j in 0..xplan.n_smu() {
                             // pad to the plan's static mu
-                            let mb = loader::assemble(ds.as_ref(), indices, xplan.mu, j);
-                            let item = StreamItem { batch: b, plan: xplan.clone(), mb };
+                            let (mb, assemble) =
+                                assemble_pooled(&pool, ds.as_ref(), indices, xplan.mu, j);
+                            let item =
+                                StreamItem { batch: b, plan: xplan.clone(), mb, assemble };
                             if tx.send(item).is_err() {
                                 break 'outer; // consumer dropped early
                             }
@@ -114,7 +147,7 @@ pub fn stream_epoch(
             EpochStream::Buffered { rx: Some(rx), handle: Some(handle) }
         }
         StreamingPolicy::Synchronous => {
-            EpochStream::Sync { ds, plan, planner, current: None, batch: 0, j: 0 }
+            EpochStream::Sync { ds, plan, planner, pool, current: None, batch: 0, j: 0 }
         }
     }
 }
@@ -125,7 +158,7 @@ impl Iterator for EpochStream {
     fn next(&mut self) -> Option<StreamItem> {
         match self {
             EpochStream::Buffered { rx, .. } => rx.as_ref()?.recv().ok(),
-            EpochStream::Sync { ds, plan, planner, current, batch, j } => {
+            EpochStream::Sync { ds, plan, planner, pool, current, batch, j } => {
                 if *batch >= plan.num_batches() {
                     return None;
                 }
@@ -134,8 +167,9 @@ impl Iterator for EpochStream {
                     .get_or_insert_with(|| Arc::new(planner.plan_minibatch(indices.len())))
                     .clone();
                 // pad to the plan's static mu
-                let mb = loader::assemble(ds.as_ref(), indices, xplan.mu, *j);
-                let item = StreamItem { batch: *batch, plan: xplan.clone(), mb };
+                let (mb, assemble) =
+                    assemble_pooled(pool, ds.as_ref(), indices, xplan.mu, *j);
+                let item = StreamItem { batch: *batch, plan: xplan.clone(), mb, assemble };
                 *j += 1;
                 if *j >= xplan.n_smu() {
                     *j = 0;
@@ -174,6 +208,10 @@ mod tests {
         Planner::new(mu, false, NormalizationMode::Paper)
     }
 
+    fn pool() -> Arc<BufPool> {
+        Arc::new(BufPool::for_prefetch(2))
+    }
+
     fn collect(
         policy: StreamingPolicy,
         ds_len: usize,
@@ -182,7 +220,7 @@ mod tests {
     ) -> Vec<(usize, usize, usize)> {
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, ds_len, 3));
         let plan = EpochPlan::new(ds_len, batch, 1, 0);
-        stream_epoch(policy, ds, plan, planner(mu), 2)
+        stream_epoch(policy, ds, plan, planner(mu), 2, pool())
             .map(|item| (item.batch, item.mb.j, item.mb.actual))
             .collect()
     }
@@ -209,17 +247,82 @@ mod tests {
     fn payloads_identical_across_policies() {
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 40, 3));
         let plan = EpochPlan::new(40, 12, 1, 0);
-        let a: Vec<_> =
-            stream_epoch(StreamingPolicy::DoubleBuffered, ds.clone(), plan.clone(), planner(8), 2)
-                .collect();
+        let a: Vec<_> = stream_epoch(
+            StreamingPolicy::DoubleBuffered,
+            ds.clone(),
+            plan.clone(),
+            planner(8),
+            2,
+            pool(),
+        )
+        .collect();
         let b: Vec<_> =
-            stream_epoch(StreamingPolicy::Synchronous, ds, plan, planner(8), 2).collect();
+            stream_epoch(StreamingPolicy::Synchronous, ds.clone(), plan.clone(), planner(8), 2, pool())
+                .collect();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.mb.x, y.mb.x);
             assert_eq!(x.mb.y, y.mb.y);
             assert_eq!(x.mb.mask, y.mb.mask);
             assert_eq!(x.plan, y.plan);
+        }
+        // and the pooled stream is byte-identical to the fresh-allocation
+        // path (`loader::assemble`), dirty recycled buffers included
+        for item in &a {
+            let indices = plan.batch_indices(item.batch);
+            let fresh = loader::assemble(ds.as_ref(), indices, item.plan.mu, item.mb.j);
+            assert_eq!(item.mb.x, fresh.x);
+            assert_eq!(item.mb.y, fresh.y);
+            assert_eq!(item.mb.mask, fresh.mask);
+            assert_eq!(item.mb.actual, fresh.actual);
+        }
+    }
+
+    #[test]
+    fn recycled_epoch_allocates_nothing_and_stays_identical() {
+        // epoch 1 warms the pool; epoch 2 must run entirely on recycled
+        // buffers (allocs delta == 0) and still yield identical payloads.
+        // The consumer mirrors the executor: each buffer goes back through
+        // the return channel as soon as its payload has been consumed.
+        let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 40, 3));
+        let plan = EpochPlan::new(40, 12, 1, 0);
+        let shared = pool();
+        let run = |p: &Arc<BufPool>| -> Vec<MicroBatchHost> {
+            let mut out = Vec::new();
+            for item in stream_epoch(
+                StreamingPolicy::Synchronous,
+                ds.clone(),
+                plan.clone(),
+                planner(8),
+                2,
+                p.clone(),
+            ) {
+                out.push(item.mb.clone());
+                p.give(item.mb);
+            }
+            out
+        };
+        let payload1 = run(&shared);
+        let after_epoch1 = shared.stats();
+        assert!(after_epoch1.allocs > 0, "cold epoch must have allocated");
+        let payload2 = run(&shared);
+        let after_epoch2 = shared.stats();
+        assert_eq!(
+            after_epoch2.allocs, after_epoch1.allocs,
+            "steady-state epoch performed host-buffer allocations"
+        );
+        assert_eq!(
+            after_epoch2.hits - after_epoch1.hits,
+            payload2.len() as u64,
+            "every steady-state lease must be a pool hit"
+        );
+        assert_eq!(payload1.len(), payload2.len());
+        for (a, b) in payload1.iter().zip(&payload2) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.mask, b.mask);
+            assert_eq!(a.actual, b.actual);
+            assert_eq!(a.j, b.j);
         }
     }
 
@@ -230,9 +333,15 @@ mod tests {
         let (ds_len, batch, mu) = (50usize, 16usize, 8usize);
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, ds_len, 3));
         let plan = EpochPlan::new(ds_len, batch, 1, 0);
-        let streamed: Vec<_> =
-            stream_epoch(StreamingPolicy::Synchronous, ds.clone(), plan.clone(), planner(mu), 2)
-                .collect();
+        let streamed: Vec<_> = stream_epoch(
+            StreamingPolicy::Synchronous,
+            ds.clone(),
+            plan.clone(),
+            planner(mu),
+            2,
+            pool(),
+        )
+        .collect();
         let mut legacy = Vec::new();
         for b in 0..plan.num_batches() {
             let indices = plan.batch_indices(b);
@@ -257,7 +366,7 @@ mod tests {
     fn early_drop_does_not_hang() {
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 1000, 3));
         let plan = EpochPlan::new(1000, 32, 1, 0);
-        let mut s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, planner(16), 2);
+        let mut s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, planner(16), 2, pool());
         let _ = s.next();
         drop(s); // must join cleanly, not deadlock
     }
@@ -269,9 +378,32 @@ mod tests {
         // stream must disconnect and join rather than deadlock
         let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 1000, 3));
         let plan = EpochPlan::new(1000, 32, 1, 0);
-        let s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, planner(16), 1);
+        let s = stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, planner(16), 1, pool());
         // give the producer time to fill the channel and block on the next send
         std::thread::sleep(std::time::Duration::from_millis(50));
         drop(s);
+    }
+
+    #[test]
+    fn early_drop_with_outstanding_leases_joins_cleanly() {
+        // the consumer still holds leased buffers (never returned) when the
+        // stream is dropped mid-epoch: the producer — possibly parked on a
+        // full channel, leasing from a now-starved pool — must still exit,
+        // and late returns after the join must not corrupt the pool
+        let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 10, 1000, 3));
+        let plan = EpochPlan::new(1000, 32, 1, 0);
+        let p = pool();
+        let mut s =
+            stream_epoch(StreamingPolicy::DoubleBuffered, ds, plan, planner(16), 1, p.clone());
+        let held: Vec<_> = (0..2).filter_map(|_| s.next()).collect();
+        drop(s); // must join, not deadlock, despite outstanding leases
+        let before = p.stats();
+        assert_eq!(before.returns, 0);
+        for item in held {
+            p.give(item.mb); // returning after the stream died is fine
+        }
+        let after = p.stats();
+        assert_eq!(after.returns, 2);
+        assert!(p.retained() >= 2);
     }
 }

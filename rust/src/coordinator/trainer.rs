@@ -22,16 +22,16 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::TrainConfig;
-use crate::data::{Dataset, EpochPlan, SynthCarvana, SynthFlowers, SynthText};
+use crate::data::{BufPool, Dataset, EpochPlan, PoolStats, SynthCarvana, SynthFlowers, SynthText};
 use crate::error::{MbsError, Result};
 use crate::memory::{Footprint, Ledger, MemoryModel};
-use crate::metrics::{EpochStats, MetricKind};
+use crate::metrics::{EpochStats, MetricKind, StageTimers};
 use crate::runtime::{Engine, ModelRuntime};
 
 use super::accumulator::{Accumulation, NormalizationMode};
 use super::planner::{self, Planner};
 use super::scheduler::UpdateScheduler;
-use super::streamer::{stream_epoch, StreamingPolicy};
+use super::streamer::{stream_epoch, StreamItem, StreamingPolicy};
 
 /// Everything a finished run reports (feeds the tables and figures).
 #[derive(Debug, Clone)]
@@ -52,6 +52,12 @@ pub struct TrainReport {
     pub capacity_bytes: u64,
     pub output_mode: String,
     pub updates: u64,
+    /// Per-stage time summed over the training epochs (each epoch's own
+    /// breakdown lives in its [`EpochStats::stages`]).
+    pub stages: StageTimers,
+    /// Host staging-buffer pool traffic for the whole run — `allocs` stays
+    /// at the warm-up count when the hot path is allocation-free.
+    pub pool: PoolStats,
 }
 
 impl TrainReport {
@@ -102,7 +108,12 @@ enum Pass<'a> {
 
 /// THE epoch loop. Streams plan-tagged micro-batches and executes them,
 /// charging the ledger for every step so planned residency is asserted
-/// against capacity at the moment it would be live on the device.
+/// against capacity at the moment it would be live on the device. Staging
+/// buffers are leased from `pool` by the streamer and handed back through
+/// its return channel right after each step — the steady-state hot path
+/// allocates nothing. Returns the epoch's accumulation plus its per-stage
+/// time breakdown (assemble from the stream items, the device stages as
+/// deltas of the runtime's monotonic timers).
 #[allow(clippy::too_many_arguments)]
 fn run_epoch(
     rt: &mut ModelRuntime,
@@ -110,79 +121,114 @@ fn run_epoch(
     fp: &Footprint,
     policy: StreamingPolicy,
     prefetch: usize,
+    pool: &Arc<BufPool>,
     ds: &Arc<dyn Dataset>,
     epoch_plan: EpochPlan,
     planner: &Planner,
     pass: Pass<'_>,
-) -> Result<Accumulation> {
+) -> Result<(Accumulation, StageTimers)> {
     let mut acc = Accumulation::default();
-    let stream = stream_epoch(policy, ds.clone(), epoch_plan, planner.clone(), prefetch);
+    let mut assemble = Duration::ZERO;
+    let rt_before = rt.timers();
+    let stream =
+        stream_epoch(policy, ds.clone(), epoch_plan, planner.clone(), prefetch, pool.clone());
     for item in stream {
+        assemble += item.assemble;
+        let StreamItem { plan, mb, .. } = item;
         // training holds activations for the backward pass; eval is
         // forward-only and holds just the input buffers
         let (tag, bytes) = match pass {
-            Pass::Train { .. } => ("train step", fp.batch_bytes(item.plan.device_samples())),
-            Pass::Eval => ("eval step", fp.eval_bytes(item.plan.device_samples())),
+            Pass::Train { .. } => ("train step", fp.batch_bytes(plan.device_samples())),
+            Pass::Eval => ("eval step", fp.eval_bytes(plan.device_samples())),
         };
         let step = ledger.alloc(tag, bytes)?;
         let out = match pass {
-            Pass::Train { .. } => rt.accum_step(&item.mb, item.plan.scales[item.mb.j])?,
-            Pass::Eval => rt.eval_step(&item.mb)?,
+            Pass::Train { .. } => rt.accum_step(&mb, plan.scales[mb.j])?,
+            Pass::Eval => rt.eval_step(&mb)?,
         };
         ledger.free(step)?;
-        acc.add(&out, item.mb.actual);
-        if let Pass::Train { sched } = pass {
-            if item.plan.is_last(item.mb.j) {
+        acc.add(&out, mb.actual);
+        let update_due = matches!(pass, Pass::Train { .. }) && plan.is_last(mb.j);
+        // upload done: recycle the staging buffer before the (potentially
+        // long) optimizer update
+        pool.give(mb);
+        if update_due {
+            if let Pass::Train { sched } = pass {
                 rt.apply(&sched.hyper_for(rt.updates))?;
             }
         }
     }
-    Ok(acc)
+    let mut stages = rt.timers().minus(&rt_before);
+    stages.assemble = assemble;
+    Ok((acc, stages))
 }
 
 /// One eval sweep through the executor: the whole set as a single
-/// sequential mini-batch, split by the runtime's static mu.
+/// sequential mini-batch, split by the runtime's static mu and streamed
+/// under the run's configured policy.
+#[allow(clippy::too_many_arguments)]
 fn eval_epoch(
     rt: &mut ModelRuntime,
     ledger: &mut Ledger,
     fp: &Footprint,
+    policy: StreamingPolicy,
+    prefetch: usize,
+    pool: &Arc<BufPool>,
     kind: MetricKind,
     ds: &Arc<dyn Dataset>,
     epoch: usize,
 ) -> Result<EpochStats> {
     let t0 = Instant::now();
     let len = ds.len();
-    let acc = if len == 0 {
-        Accumulation::default() // empty eval set: zero samples, zero stats
+    let (acc, stages) = if len == 0 {
+        // empty eval set: zero samples, zero stats
+        (Accumulation::default(), StageTimers::default())
     } else {
         let planner = Planner::new(rt.variant.mu, false, NormalizationMode::Exact);
         run_epoch(
             rt,
             ledger,
             fp,
-            StreamingPolicy::Synchronous,
-            0,
+            policy,
+            prefetch,
+            pool,
             ds,
             EpochPlan::sequential(len, len),
             &planner,
             Pass::Eval,
         )?
     };
-    Ok(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, t0.elapsed()))
+    Ok(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, t0.elapsed(), stages))
 }
 
-/// Masked, padded eval pass over a dataset (standalone entry point for
-/// benches and tests; `train` runs the same executor with its own ledger).
+/// Masked, padded eval pass over a dataset under an explicit streaming
+/// policy (the standalone entry point for benches and tests; `train` runs
+/// the same executor with its own ledger and pool).
+pub fn evaluate_with(
+    rt: &mut ModelRuntime,
+    kind: MetricKind,
+    ds: &Arc<dyn Dataset>,
+    epoch: usize,
+    policy: StreamingPolicy,
+    prefetch: usize,
+) -> Result<EpochStats> {
+    let fp = Footprint::from_manifest(&rt.entry, &rt.variant);
+    let mut ledger = Ledger::new(fp.step_bytes(rt.variant.mu));
+    ledger.alloc("resident state", fp.resident_bytes())?;
+    let pool = Arc::new(BufPool::for_prefetch(prefetch));
+    pool.warm(BufPool::buffers_for(prefetch), ds.as_ref(), rt.variant.mu);
+    eval_epoch(rt, &mut ledger, &fp, policy, prefetch, &pool, kind, ds, epoch)
+}
+
+/// [`evaluate_with`] under the synchronous policy — the historical
+/// signature, kept for one-off callers.
 pub fn evaluate(
     rt: &mut ModelRuntime,
     kind: MetricKind,
     ds: &Arc<dyn Dataset>,
     epoch: usize,
 ) -> Result<EpochStats> {
-    let fp = Footprint::from_manifest(&rt.entry, &rt.variant);
-    let mut ledger = Ledger::new(fp.step_bytes(rt.variant.mu));
-    ledger.alloc("resident state", fp.resident_bytes())?;
-    eval_epoch(rt, &mut ledger, &fp, kind, ds, epoch)
+    evaluate_with(rt, kind, ds, epoch, StreamingPolicy::Synchronous, 0)
 }
 
 /// Mean per-epoch wall time, guarded so an empty or degenerate list can
@@ -231,8 +277,14 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     let total_updates = (batches_per_epoch * cfg.epochs) as u64;
     let sched = UpdateScheduler::new(&entry.optimizer, cfg, total_updates);
 
+    // one staging-buffer pool for the whole run: warmed once, every epoch
+    // (train and eval alike) circulates the same host allocations
+    let pool = Arc::new(BufPool::for_prefetch(cfg.prefetch));
+    pool.warm(BufPool::buffers_for(cfg.prefetch), train_ds.as_ref(), resolution.mu);
+
     let mut train_epochs = Vec::with_capacity(cfg.epochs);
     let mut eval_epochs = Vec::with_capacity(cfg.epochs);
+    let mut stage_totals = StageTimers::default();
     let run_start = Instant::now();
 
     for epoch in 0..cfg.epochs {
@@ -243,25 +295,31 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
             cfg.seed,
             epoch as u64,
         );
-        let acc = run_epoch(
+        let (acc, stages) = run_epoch(
             &mut rt,
             &mut ledger,
             &resolution.footprint,
             cfg.streaming,
             cfg.prefetch,
+            &pool,
             &train_ds,
             epoch_plan,
             &planner,
             Pass::Train { sched: &sched },
         )?;
         let wall = t0.elapsed();
-        train_epochs.push(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, wall));
+        stage_totals.merge(&stages);
+        train_epochs
+            .push(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, wall, stages));
 
         if !cfg.skip_eval {
             eval_epochs.push(eval_epoch(
                 &mut rt,
                 &mut ledger,
                 &resolution.footprint,
+                cfg.streaming,
+                cfg.prefetch,
+                &pool,
                 kind,
                 &eval_ds,
                 epoch,
@@ -274,6 +332,9 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
             &mut rt,
             &mut ledger,
             &resolution.footprint,
+            cfg.streaming,
+            cfg.prefetch,
+            &pool,
             kind,
             &eval_ds,
             cfg.epochs.saturating_sub(1),
@@ -299,6 +360,8 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
         capacity_bytes: capacity,
         output_mode: rt.output_mode_name().to_string(),
         updates: rt.updates,
+        stages: stage_totals,
+        pool: pool.stats(),
     })
 }
 

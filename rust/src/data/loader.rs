@@ -22,26 +22,62 @@ pub struct MicroBatchHost {
     pub j: usize,
 }
 
-/// Assemble the `j`-th micro-batch of a mini-batch given by `indices`.
+impl MicroBatchHost {
+    /// A zero-capacity staging buffer — what [`crate::data::BufPool`] hands
+    /// out on a cold miss; [`assemble_into`] sizes it on first use.
+    pub fn empty() -> MicroBatchHost {
+        MicroBatchHost {
+            x: Buf::F32(Vec::new()),
+            y: Buf::F32(Vec::new()),
+            mask: Vec::new(),
+            actual: 0,
+            j: 0,
+        }
+    }
+}
+
+/// Assemble the `j`-th micro-batch of a mini-batch given by `indices` into
+/// an existing staging buffer, reusing its capacity. This is the
+/// allocation-free steady-state form: a correctly-sized `mb` (e.g. one
+/// recycled through [`crate::data::BufPool`]) is re-zeroed and re-filled
+/// without touching the heap, and the result is byte-identical to
+/// [`assemble`].
+pub fn assemble_into(
+    mb: &mut MicroBatchHost,
+    ds: &dyn Dataset,
+    indices: &[usize],
+    mu: usize,
+    j: usize,
+) {
+    let lo = j * mu;
+    let hi = ((j + 1) * mu).min(indices.len());
+    assert!(lo < indices.len(), "micro-batch {j} out of range");
+    let actual = hi - lo;
+    let (xe, ye) = (ds.x_elems(), ds.y_elems());
+    mb.x.reset_zeroed(&ds.x_dtype(), mu * xe);
+    mb.y.reset_zeroed(&ds.y_dtype(), mu * ye);
+    mb.mask.clear();
+    mb.mask.resize(mu, 0.0);
+    for (k, &idx) in indices[lo..hi].iter().enumerate() {
+        ds.fill(idx, mb.x.slice_mut(k * xe, (k + 1) * xe), mb.y.slice_mut(k * ye, (k + 1) * ye));
+        mb.mask[k] = 1.0;
+    }
+    mb.actual = actual;
+    mb.j = j;
+}
+
+/// Assemble the `j`-th micro-batch of a mini-batch given by `indices` into
+/// a freshly allocated buffer (thin wrapper over [`assemble_into`], kept
+/// for tests and one-off callers).
 pub fn assemble(
     ds: &dyn Dataset,
     indices: &[usize],
     mu: usize,
     j: usize,
 ) -> MicroBatchHost {
-    let lo = j * mu;
-    let hi = ((j + 1) * mu).min(indices.len());
-    assert!(lo < indices.len(), "micro-batch {j} out of range");
-    let actual = hi - lo;
-    let (xe, ye) = (ds.x_elems(), ds.y_elems());
-    let mut x = Buf::zeros(&ds.x_dtype(), mu * xe);
-    let mut y = Buf::zeros(&ds.y_dtype(), mu * ye);
-    let mut mask = vec![0.0f32; mu];
-    for (k, &idx) in indices[lo..hi].iter().enumerate() {
-        ds.fill(idx, x.slice_mut(k * xe, (k + 1) * xe), y.slice_mut(k * ye, (k + 1) * ye));
-        mask[k] = 1.0;
-    }
-    MicroBatchHost { x, y, mask, actual, j }
+    let mut mb = MicroBatchHost::empty();
+    assemble_into(&mut mb, ds, indices, mu, j);
+    mb
 }
 
 /// Shuffled mini-batch index ranges for one epoch.
@@ -160,5 +196,41 @@ mod tests {
     fn assemble_rejects_out_of_range() {
         let ds = SynthFlowers::new(8, 10, 100, 1);
         assemble(&ds, &[1, 2], 4, 1);
+    }
+
+    #[test]
+    fn assemble_into_dirty_buffer_matches_fresh() {
+        // a recycled buffer full of stale data (different micro-batch, and
+        // a tail whose padding must be re-zeroed) reproduces the fresh path
+        let ds = SynthFlowers::new(8, 10, 100, 1);
+        let indices: Vec<usize> = (0..10).collect();
+        let mut mb = assemble(&ds, &indices, 4, 0); // dirty: full 4 samples
+        assemble_into(&mut mb, &ds, &indices, 4, 2); // tail: 2 actual
+        let fresh = assemble(&ds, &indices, 4, 2);
+        assert_eq!(mb.x, fresh.x);
+        assert_eq!(mb.y, fresh.y);
+        assert_eq!(mb.mask, fresh.mask);
+        assert_eq!(mb.actual, fresh.actual);
+        assert_eq!(mb.j, fresh.j);
+    }
+
+    #[test]
+    fn assemble_into_adapts_mismatched_dtype_and_size() {
+        // a buffer leased against a different dataset/mu still assembles
+        // correctly: dtype mismatches are replaced, sizes are re-fit
+        let ds = SynthFlowers::new(8, 10, 100, 1);
+        let mut mb = MicroBatchHost {
+            x: Buf::I32(vec![7; 3]), // wrong dtype and size
+            y: Buf::F32(vec![1.5; 2]),
+            mask: vec![9.0; 1],
+            actual: 99,
+            j: 99,
+        };
+        assemble_into(&mut mb, &ds, &[5, 15, 25], 4, 0);
+        let fresh = assemble(&ds, &[5, 15, 25], 4, 0);
+        assert_eq!(mb.x, fresh.x);
+        assert_eq!(mb.y, fresh.y);
+        assert_eq!(mb.mask, fresh.mask);
+        assert_eq!(mb.actual, 3);
     }
 }

@@ -1,0 +1,267 @@
+//! Recycling pool of host staging buffers for the streaming hot path.
+//!
+//! `loader::assemble` heap-allocates fresh `x`/`y`/`mask` vectors for every
+//! micro-batch — per-step host overhead that erodes exactly the throughput
+//! the paper's pipeline exists to buy (fig. 1). [`BufPool`] removes it:
+//! the streamer leases a [`MicroBatchHost`] before assembling into it
+//! ([`loader::assemble_into`] reuses the vectors' capacity), and after the
+//! executor has uploaded the micro-batch it hands the buffer back through
+//! the pool's return channel. In steady state every lease is a hit and the
+//! hot path performs **zero** host-buffer allocations — epoch N+1 runs
+//! entirely on epoch N's allocations.
+//!
+//! Sizing: the double-buffered streamer keeps at most `max(prefetch, 1)`
+//! assembled micro-batches in its channel, one more is being assembled by
+//! the producer and one is held by the consumer, so
+//! [`BufPool::buffers_for`]` = max(prefetch, 1) + 2` retained buffers
+//! (each `mu` samples) bound the pool. [`BufPool::bounded`] caps retention
+//! there; returns beyond the cap are dropped instead of growing the pool.
+//!
+//! All counters are monotonic, so callers can assert deltas across epoch
+//! boundaries (the zero-allocation acceptance test does exactly that).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::loader::MicroBatchHost;
+use super::{Buf, Dataset};
+
+/// Monotonic counters describing pool traffic. `allocs` counts leases that
+/// found the pool empty (the subsequent `assemble_into` must allocate);
+/// `hits` counts leases satisfied from recycled buffers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Total lease calls.
+    pub leases: u64,
+    /// Leases served from a recycled buffer (no allocation on the hot path).
+    pub hits: u64,
+    /// Leases that had to start from an empty buffer (cold misses).
+    pub allocs: u64,
+    /// Buffers handed back through the return channel.
+    pub returns: u64,
+    /// Returns dropped because the pool was already at its retention cap.
+    pub dropped: u64,
+    /// Buffers pre-allocated by [`BufPool::warm`].
+    pub warmed: u64,
+}
+
+impl PoolStats {
+    /// Fraction of leases served without allocating, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.leases == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.leases as f64
+        }
+    }
+}
+
+/// Thread-safe recycling pool of [`MicroBatchHost`] staging buffers.
+///
+/// The producing streamer thread calls [`lease`](BufPool::lease); the
+/// consuming executor thread calls [`give`](BufPool::give) once the upload
+/// is done. Shared via `Arc` so the same allocations survive across epochs.
+#[derive(Debug)]
+pub struct BufPool {
+    free: Mutex<Vec<MicroBatchHost>>,
+    /// Max buffers retained across lease cycles; extra returns are dropped.
+    max_retained: usize,
+    leases: AtomicU64,
+    hits: AtomicU64,
+    allocs: AtomicU64,
+    returns: AtomicU64,
+    dropped: AtomicU64,
+    warmed: AtomicU64,
+}
+
+impl BufPool {
+    /// Pool retaining at most `max_retained` idle buffers.
+    pub fn bounded(max_retained: usize) -> BufPool {
+        BufPool {
+            free: Mutex::new(Vec::with_capacity(max_retained)),
+            max_retained,
+            leases: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            allocs: AtomicU64::new(0),
+            returns: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            warmed: AtomicU64::new(0),
+        }
+    }
+
+    /// Buffers one streaming pipeline can have outstanding at once: the
+    /// channel (which holds at least one item even at `prefetch == 0`),
+    /// plus one being assembled by the producer and one held by the
+    /// executor. Warming a pool to this count guarantees every lease hits.
+    pub fn buffers_for(prefetch: usize) -> usize {
+        prefetch.max(1) + 2
+    }
+
+    /// Retention sized for one streaming pipeline ([`BufPool::buffers_for`]).
+    pub fn for_prefetch(prefetch: usize) -> BufPool {
+        BufPool::bounded(BufPool::buffers_for(prefetch))
+    }
+
+    fn free_list(&self) -> std::sync::MutexGuard<'_, Vec<MicroBatchHost>> {
+        // a panicking holder cannot leave the Vec in a broken state (push /
+        // pop are atomic wrt. its invariants), so poisoning is ignorable
+        self.free.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Pre-fill the pool with `n` buffers sized for `mu`-sample
+    /// micro-batches of `ds`, so even the first epoch's leases all hit.
+    pub fn warm(&self, n: usize, ds: &dyn Dataset, mu: usize) {
+        let mut free = self.free_list();
+        while free.len() < n.min(self.max_retained) {
+            free.push(MicroBatchHost {
+                x: Buf::zeros(&ds.x_dtype(), mu * ds.x_elems()),
+                y: Buf::zeros(&ds.y_dtype(), mu * ds.y_elems()),
+                mask: vec![0.0; mu],
+                actual: 0,
+                j: 0,
+            });
+            self.warmed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Take a staging buffer: a recycled one when available (hit), an empty
+    /// one otherwise (the caller's `assemble_into` then allocates — counted
+    /// as `allocs`).
+    pub fn lease(&self) -> MicroBatchHost {
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        match self.free_list().pop() {
+            Some(mb) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                mb
+            }
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                MicroBatchHost::empty()
+            }
+        }
+    }
+
+    /// Return channel: hand a buffer back after its upload. Dropped (not
+    /// retained) once `max_retained` idle buffers are already pooled.
+    pub fn give(&self, mb: MicroBatchHost) {
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        let mut free = self.free_list();
+        if free.len() < self.max_retained {
+            free.push(mb);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Idle buffers currently retained.
+    pub fn retained(&self) -> usize {
+        self.free_list().len()
+    }
+
+    /// Snapshot of the traffic counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            leases: self.leases.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            allocs: self.allocs.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            warmed: self.warmed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{loader, SynthFlowers};
+
+    #[test]
+    fn lease_give_round_trip_counts() {
+        let pool = BufPool::bounded(2);
+        let a = pool.lease(); // cold miss
+        let b = pool.lease(); // cold miss
+        pool.give(a);
+        pool.give(b);
+        assert_eq!(pool.retained(), 2);
+        let _c = pool.lease(); // hit
+        let s = pool.stats();
+        assert_eq!((s.leases, s.hits, s.allocs, s.returns), (3, 1, 2, 2));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retention_cap_drops_excess_returns() {
+        let pool = BufPool::bounded(1);
+        let a = pool.lease();
+        let b = pool.lease();
+        pool.give(a);
+        pool.give(b); // over cap: dropped
+        assert_eq!(pool.retained(), 1);
+        assert_eq!(pool.stats().dropped, 1);
+    }
+
+    #[test]
+    fn warm_fills_to_cap_and_makes_first_lease_hit() {
+        let ds = SynthFlowers::new(8, 10, 100, 1);
+        // prefetch 0 still means a 1-deep channel: cap = 1 + 2 = 3
+        assert_eq!(BufPool::buffers_for(0), 3);
+        let pool = BufPool::for_prefetch(0);
+        pool.warm(5, &ds, 4); // clamped to the cap
+        assert_eq!(pool.retained(), 3);
+        assert_eq!(pool.stats().warmed, 3);
+        let mb = pool.lease();
+        let s = pool.stats();
+        assert_eq!((s.hits, s.allocs), (1, 0));
+        // warmed buffers are full-size: assembling into them must not grow
+        assert_eq!(mb.x.len(), 4 * ds.x_elems());
+    }
+
+    #[test]
+    fn recycled_buffer_reassembles_byte_identical_without_growth() {
+        let ds = SynthFlowers::new(8, 10, 100, 1);
+        let indices: Vec<usize> = (0..6).collect();
+        let pool = BufPool::bounded(1);
+        pool.warm(1, &ds, 4);
+        // epoch 1: assemble, use, return
+        let mut mb = pool.lease();
+        loader::assemble_into(&mut mb, &ds, &indices, 4, 0);
+        let cap_before = (mb.x.capacity(), mb.y.capacity(), mb.mask.capacity());
+        pool.give(mb);
+        // epoch 2: the recycled (dirty) buffer must reproduce the fresh path
+        let mut mb = pool.lease();
+        loader::assemble_into(&mut mb, &ds, &indices, 4, 1);
+        let fresh = loader::assemble(&ds, &indices, 4, 1);
+        assert_eq!(mb.x, fresh.x);
+        assert_eq!(mb.y, fresh.y);
+        assert_eq!(mb.mask, fresh.mask);
+        assert_eq!(mb.actual, fresh.actual);
+        assert_eq!(mb.j, fresh.j);
+        // capacity reused, not reallocated
+        assert_eq!((mb.x.capacity(), mb.y.capacity(), mb.mask.capacity()), cap_before);
+        let s = pool.stats();
+        assert_eq!(s.allocs, 0, "steady state must not allocate");
+        assert_eq!(s.hits, 2);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        let pool = std::sync::Arc::new(BufPool::bounded(4));
+        let p2 = pool.clone();
+        let h = std::thread::spawn(move || {
+            for _ in 0..100 {
+                let mb = p2.lease();
+                p2.give(mb);
+            }
+        });
+        for _ in 0..100 {
+            let mb = pool.lease();
+            pool.give(mb);
+        }
+        h.join().unwrap();
+        let s = pool.stats();
+        assert_eq!(s.leases, 200);
+        assert_eq!(s.returns, 200);
+        assert_eq!(s.leases, s.hits + s.allocs);
+    }
+}

@@ -63,10 +63,10 @@ pub mod prelude {
     pub use crate::coordinator::{
         train, ExecutionPlan, NormalizationMode, Planner, TrainReport,
     };
-    pub use crate::data::{Dataset, SynthCarvana, SynthFlowers, SynthText};
+    pub use crate::data::{BufPool, Dataset, PoolStats, SynthCarvana, SynthFlowers, SynthText};
     pub use crate::error::{MbsError, Result};
     pub use crate::manifest::Manifest;
     pub use crate::memory::{Footprint, MemoryModel, MIB};
-    pub use crate::metrics::EpochStats;
+    pub use crate::metrics::{EpochStats, StageTimers};
     pub use crate::runtime::Engine;
 }

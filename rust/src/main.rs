@@ -3,16 +3,23 @@
 //! Subcommands:
 //!   train    train one configuration (MBS or native baseline), print report
 //!   sweep    batch-size sweep at fixed capacity (one table-4/5 row block)
+//!   bench    streaming hot-path benchmark -> machine-readable JSON
 //!   inspect  show manifest variants, footprints and native-max batches
 //!   info     platform / artifact summary
 
+use std::fmt::Write as _;
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use mbs::coordinator::train;
+use mbs::coordinator::{
+    datasets_for, stream_epoch, train, NormalizationMode, Planner, StreamingPolicy,
+};
+use mbs::data::{loader, BufPool, Dataset, EpochPlan, PoolStats};
 use mbs::memory::{Footprint, MIB};
-use mbs::metrics::Table;
+use mbs::metrics::{StageTimers, Table};
 use mbs::util::cli::Args;
-use mbs::{Engine, Manifest, MbsError, TrainConfig};
+use mbs::{Engine, Manifest, MbsError, TrainConfig, TrainReport};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -26,6 +33,7 @@ fn main() -> ExitCode {
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -54,6 +62,12 @@ USAGE: mbs <subcommand> [flags]
            [--dataset-len N] [--eval-len N] [--lr F] [--lr-decay F]
            [--config file.cfg] [--artifacts dir] [--csv out.csv]
   sweep    --model <key> --batches 16,32,64 [same flags as train]
+  bench    --model <key> [same flags as train] [--out BENCH_streaming.json]
+           full streaming hot-path benchmark (items/sec, per-stage means,
+           pool hit rate) -> machine-readable JSON; with --assemble-only
+           it needs no compiled artifacts: --task classification|segmentation|lm
+           [--size N] [--batch N] [--mu N] [--prefetch N] [--dataset-len N]
+           [--epochs N] [--seed N]
   inspect  [--artifacts dir]           variants, footprints, native max batch
   info     [--artifacts dir]           platform + artifact summary
 "
@@ -143,6 +157,8 @@ fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
         // mu column: the MBS arm's resolved micro-batch (planner-derived
         // under the Auto default); "-" until that arm reports it
         let mut row = vec![batch.to_string(), "-".to_string()];
+        // paper "training time" columns: mean wall-clock per epoch per arm
+        let mut times = ["-".to_string(), "-".to_string()];
         for use_mbs in [false, true] {
             let mut cfg = cfg0.clone();
             cfg.batch = batch;
@@ -156,6 +172,8 @@ fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
                         if use_mbs { 3 } else { 2 },
                         format!("{:.2}%", 100.0 * r.best_metric()),
                     );
+                    times[use_mbs as usize] =
+                        format!("{:.2}s", r.epoch_wall_mean.as_secs_f64());
                 }
                 Err(e) if e.is_oom() => {
                     row.insert(if use_mbs { 3 } else { 2 }, "Failed".into())
@@ -170,13 +188,224 @@ fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
                 Err(e) => return Err(e),
             }
         }
-        // timing columns re-run quickly with skip_eval? keep simple: dash
-        row.push("-".into());
-        row.push("-".into());
+        let [time_native, time_mbs] = times;
+        row.push(time_native);
+        row.push(time_mbs);
         table.row(&row);
     }
     println!("{}", table.render());
     Ok(())
+}
+
+/// `bench` — measure the streaming hot path and emit machine-readable JSON
+/// (`BENCH_streaming.json`): items/sec, per-stage means, pool hit rate.
+///
+/// Two modes:
+///  * default: a full training run through `train()` (needs compiled
+///    artifacts), reporting the real pipeline's stage breakdown;
+///  * `--assemble-only`: the host-side streamer/pool path against the
+///    synthetic datasets, with a fresh-allocation baseline arm — runs on a
+///    clean checkout, which is what the CI smoke job uses.
+fn cmd_bench(args: &Args) -> Result<(), MbsError> {
+    let out = args.get_or("out", "BENCH_streaming.json").to_string();
+    let json = if args.get_bool("assemble-only") {
+        bench_assemble_only(args)?
+    } else {
+        bench_full(args)?
+    };
+    std::fs::write(&out, &json)?;
+    println!("[mbs] wrote {out}");
+    Ok(())
+}
+
+fn json_pool(p: &PoolStats) -> String {
+    format!(
+        "{{\"leases\": {}, \"hits\": {}, \"allocs\": {}, \"returns\": {}, \
+         \"dropped\": {}, \"warmed\": {}, \"hit_rate\": {:.6}}}",
+        p.leases,
+        p.hits,
+        p.allocs,
+        p.returns,
+        p.dropped,
+        p.warmed,
+        p.hit_rate()
+    )
+}
+
+/// Mean milliseconds per event for each stage (apply is per optimizer
+/// update, the rest per micro-step).
+fn json_stage_means(stages: &StageTimers, micro_steps: u64, updates: u64) -> String {
+    let per = |d: Duration, n: u64| {
+        if n == 0 {
+            0.0
+        } else {
+            d.as_secs_f64() * 1e3 / n as f64
+        }
+    };
+    format!(
+        "{{\"assemble\": {:.6}, \"upload\": {:.6}, \"execute\": {:.6}, \
+         \"download\": {:.6}, \"apply\": {:.6}}}",
+        per(stages.assemble, micro_steps),
+        per(stages.upload, micro_steps),
+        per(stages.execute, micro_steps),
+        per(stages.download, micro_steps),
+        per(stages.apply, updates),
+    )
+}
+
+fn bench_full(args: &Args) -> Result<String, MbsError> {
+    let cfg = build_config(args)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut engine = Engine::new(manifest)?;
+    println!(
+        "[mbs] bench: full pipeline, {} batch={} streaming={} prefetch={}",
+        cfg.model,
+        cfg.batch,
+        cfg.streaming.name(),
+        cfg.prefetch
+    );
+    let report: TrainReport = train(&mut engine, &cfg)?;
+    let micro_steps: u64 = report.train_epochs.iter().map(|e| e.micro_steps as u64).sum();
+    let samples: u64 = report.train_epochs.iter().map(|e| e.samples as u64).sum();
+    let train_wall: f64 = report.train_epochs.iter().map(|e| e.wall.as_secs_f64()).sum();
+    let items_per_sec = if train_wall > 0.0 { samples as f64 / train_wall } else { 0.0 };
+    let mut j = String::from("{\n");
+    let _ = writeln!(j, "  \"bench\": \"streaming\",");
+    let _ = writeln!(j, "  \"mode\": \"train\",");
+    let _ = writeln!(j, "  \"model\": \"{}\",", report.model);
+    let _ = writeln!(j, "  \"batch\": {},", report.batch);
+    let _ = writeln!(j, "  \"mu\": {},", report.mu);
+    let _ = writeln!(j, "  \"epochs\": {},", report.train_epochs.len());
+    let _ = writeln!(j, "  \"streaming\": \"{}\",", cfg.streaming.name());
+    let _ = writeln!(j, "  \"prefetch\": {},", cfg.prefetch);
+    let _ = writeln!(j, "  \"updates\": {},", report.updates);
+    let _ = writeln!(j, "  \"micro_steps\": {micro_steps},");
+    let _ = writeln!(j, "  \"items_per_sec\": {items_per_sec:.3},");
+    let _ = writeln!(
+        j,
+        "  \"epoch_wall_mean_s\": {:.6},",
+        report.epoch_wall_mean.as_secs_f64()
+    );
+    let _ = writeln!(
+        j,
+        "  \"stage_means_ms\": {},",
+        json_stage_means(&report.stages, micro_steps, report.updates)
+    );
+    let _ = writeln!(j, "  \"pool\": {}", json_pool(&report.pool));
+    j.push_str("}\n");
+    Ok(j)
+}
+
+fn bench_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T, MbsError> {
+    args.get_parse_or(key, default).map_err(MbsError::Config)
+}
+
+fn bench_assemble_only(args: &Args) -> Result<String, MbsError> {
+    let task = args.get_or("task", "classification").to_string();
+    let size: usize = bench_flag(args, "size", 8)?;
+    let batch: usize = bench_flag(args, "batch", 32)?;
+    let mu: usize = bench_flag(args, "mu", 8)?;
+    let prefetch: usize = bench_flag(args, "prefetch", 2)?;
+    let dataset_len: usize = bench_flag(args, "dataset-len", 512)?;
+    let epochs: usize = bench_flag(args, "epochs", 3)?;
+    let seed: u64 = bench_flag(args, "seed", 0)?;
+    if batch == 0 || mu == 0 || dataset_len == 0 || epochs == 0 {
+        return Err(MbsError::Config(
+            "bench needs positive batch, mu, dataset-len and epochs".into(),
+        ));
+    }
+    let mut cfg = TrainConfig::default_for("assemble-bench");
+    cfg.dataset_len = dataset_len;
+    cfg.eval_len = 0;
+    cfg.seed = seed;
+    let (ds, _eval): (Arc<dyn Dataset>, _) = datasets_for(&task, size, &cfg)?;
+    let planner = Planner::new(mu, false, NormalizationMode::Paper);
+    println!(
+        "[mbs] bench: assemble-only, task={task} size={size} batch={batch} mu={mu} \
+         prefetch={prefetch} dataset-len={dataset_len} epochs={epochs}"
+    );
+
+    // arm 1: the fresh-allocation baseline (pre-pool hot path)
+    let mut fresh_secs = 0f64;
+    for epoch in 0..epochs {
+        let plan = EpochPlan::new(dataset_len, batch, seed, epoch as u64);
+        let t0 = Instant::now();
+        for b in 0..plan.num_batches() {
+            let indices = plan.batch_indices(b);
+            let xplan = planner.plan_minibatch(indices.len());
+            for jj in 0..xplan.n_smu() {
+                let mb = loader::assemble(ds.as_ref(), indices, xplan.mu, jj);
+                std::hint::black_box(&mb);
+            }
+        }
+        fresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    // arms 2+3: the pooled streamer (sync = pure assemble-path comparison,
+    // double-buffered = with copy/compute overlap); one shared warm pool
+    let pool = Arc::new(BufPool::for_prefetch(prefetch));
+    pool.warm(BufPool::buffers_for(prefetch), ds.as_ref(), mu);
+    let run_streamed = |policy: StreamingPolicy| -> (f64, Duration, u64) {
+        let mut secs = 0f64;
+        let mut assemble = Duration::ZERO;
+        let mut items = 0u64;
+        for epoch in 0..epochs {
+            let plan = EpochPlan::new(dataset_len, batch, seed, epoch as u64);
+            let t0 = Instant::now();
+            for item in
+                stream_epoch(policy, ds.clone(), plan, planner.clone(), prefetch, pool.clone())
+            {
+                assemble += item.assemble;
+                items += 1;
+                std::hint::black_box(&item.mb);
+                pool.give(item.mb);
+            }
+            secs += t0.elapsed().as_secs_f64();
+        }
+        (secs, assemble, items)
+    };
+    let (pooled_secs, pooled_assemble, micro_steps) =
+        run_streamed(StreamingPolicy::Synchronous);
+    let (overlap_secs, _, _) = run_streamed(StreamingPolicy::DoubleBuffered);
+
+    let total_items = (dataset_len * epochs) as f64;
+    let rate = |secs: f64| if secs > 0.0 { total_items / secs } else { 0.0 };
+    let fresh_rate = rate(fresh_secs);
+    let pooled_rate = rate(pooled_secs);
+    let overlap_rate = rate(overlap_secs);
+    let stats = pool.stats();
+
+    let mut j = String::from("{\n");
+    let _ = writeln!(j, "  \"bench\": \"streaming\",");
+    let _ = writeln!(j, "  \"mode\": \"assemble-only\",");
+    let _ = writeln!(j, "  \"task\": \"{task}\",");
+    let _ = writeln!(j, "  \"size\": {size},");
+    let _ = writeln!(j, "  \"batch\": {batch},");
+    let _ = writeln!(j, "  \"mu\": {mu},");
+    let _ = writeln!(j, "  \"prefetch\": {prefetch},");
+    let _ = writeln!(j, "  \"dataset_len\": {dataset_len},");
+    let _ = writeln!(j, "  \"epochs\": {epochs},");
+    let _ = writeln!(j, "  \"micro_steps\": {micro_steps},");
+    let _ = writeln!(j, "  \"fresh_items_per_sec\": {fresh_rate:.3},");
+    let _ = writeln!(j, "  \"pooled_items_per_sec\": {pooled_rate:.3},");
+    let _ = writeln!(j, "  \"overlapped_items_per_sec\": {overlap_rate:.3},");
+    let _ = writeln!(
+        j,
+        "  \"pooled_speedup\": {:.4},",
+        if fresh_rate > 0.0 { pooled_rate / fresh_rate } else { 0.0 }
+    );
+    let _ = writeln!(
+        j,
+        "  \"assemble_mean_ms\": {:.6},",
+        if micro_steps == 0 {
+            0.0
+        } else {
+            pooled_assemble.as_secs_f64() * 1e3 / micro_steps as f64
+        }
+    );
+    let _ = writeln!(j, "  \"pool\": {}", json_pool(&stats));
+    j.push_str("}\n");
+    Ok(j)
 }
 
 fn cmd_inspect(args: &Args) -> Result<(), MbsError> {

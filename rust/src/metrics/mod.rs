@@ -62,6 +62,49 @@ fn safe_div(a: f64, b: f64) -> f64 {
     }
 }
 
+/// Cumulative wall time per pipeline stage (fig. 1 instrumentation):
+/// host-side micro-batch assembly, host→device upload, device execution,
+/// device→host download of step scalars (plus any tupled-state round
+/// trip), and the optimizer-update executable. Accumulated monotonically
+/// by the runtime and the streamer; epoch deltas land in [`EpochStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTimers {
+    pub assemble: Duration,
+    pub upload: Duration,
+    pub execute: Duration,
+    pub download: Duration,
+    pub apply: Duration,
+}
+
+impl StageTimers {
+    pub fn merge(&mut self, other: &StageTimers) {
+        self.assemble += other.assemble;
+        self.upload += other.upload;
+        self.execute += other.execute;
+        self.download += other.download;
+        self.apply += other.apply;
+    }
+
+    /// Per-stage delta against an earlier snapshot of the same monotonic
+    /// counters (saturating, so a stale snapshot can never underflow).
+    pub fn minus(&self, earlier: &StageTimers) -> StageTimers {
+        StageTimers {
+            assemble: self.assemble.saturating_sub(earlier.assemble),
+            upload: self.upload.saturating_sub(earlier.upload),
+            execute: self.execute.saturating_sub(earlier.execute),
+            download: self.download.saturating_sub(earlier.download),
+            apply: self.apply.saturating_sub(earlier.apply),
+        }
+    }
+
+    /// Total instrumented time across all stages. Under double-buffered
+    /// streaming this exceeds wall time (assembly overlaps execution) —
+    /// that surplus is exactly the overlap the pipeline buys.
+    pub fn total(&self) -> Duration {
+        self.assemble + self.upload + self.execute + self.download + self.apply
+    }
+}
+
 /// Aggregated result of one epoch (train or eval pass).
 #[derive(Debug, Clone)]
 pub struct EpochStats {
@@ -74,6 +117,8 @@ pub struct EpochStats {
     pub micro_steps: usize,
     pub updates: u64,
     pub wall: Duration,
+    /// Where this epoch's wall time went, stage by stage.
+    pub stages: StageTimers,
 }
 
 impl EpochStats {
@@ -83,6 +128,7 @@ impl EpochStats {
         acc: &Accumulation,
         updates: u64,
         wall: Duration,
+        stages: StageTimers,
     ) -> EpochStats {
         EpochStats {
             epoch,
@@ -93,6 +139,7 @@ impl EpochStats {
             micro_steps: acc.micro_steps,
             updates,
             wall,
+            stages,
         }
     }
 }
@@ -225,6 +272,7 @@ mod tests {
                 micro_steps: 13,
                 updates: 7,
                 wall: Duration::from_millis(1500),
+                stages: StageTimers::default(),
             },
         );
         let csv = w.to_csv();
@@ -232,6 +280,26 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("series,epoch"));
         assert!(lines[1].starts_with("mbs,0,1.500000,0.250000,,100,13,7,1.500"));
+    }
+
+    #[test]
+    fn stage_timers_merge_minus_total() {
+        let mut a = StageTimers {
+            assemble: Duration::from_millis(10),
+            upload: Duration::from_millis(20),
+            execute: Duration::from_millis(30),
+            download: Duration::from_millis(40),
+            apply: Duration::from_millis(50),
+        };
+        let snapshot = a;
+        a.merge(&StageTimers { execute: Duration::from_millis(5), ..Default::default() });
+        assert_eq!(a.execute, Duration::from_millis(35));
+        let delta = a.minus(&snapshot);
+        assert_eq!(delta.execute, Duration::from_millis(5));
+        assert_eq!(delta.assemble, Duration::ZERO);
+        assert_eq!(a.total(), Duration::from_millis(155));
+        // saturating: a stale (larger) snapshot clamps to zero, no panic
+        assert_eq!(snapshot.minus(&a).execute, Duration::ZERO);
     }
 
     #[test]

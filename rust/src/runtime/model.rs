@@ -17,11 +17,14 @@
 //! training state never leaves the device; in `Tupled` mode leaves are
 //! round-tripped through host literals (slower, still correct).
 
+use std::collections::BTreeMap;
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use crate::data::MicroBatchHost;
 use crate::error::{MbsError, Result};
 use crate::manifest::{Manifest, ModelEntry, Variant};
+use crate::metrics::StageTimers;
 
 use super::buffers;
 
@@ -39,6 +42,17 @@ enum OutputMode {
     Flat,
     /// outputs[0] is a single tuple buffer (host round-trip per step)
     Tupled,
+}
+
+/// Freshly uploaded per-step inputs (`ModelRuntime::upload_inputs`).
+struct UploadedInputs {
+    x: xla::PjRtBuffer,
+    y: xla::PjRtBuffer,
+    /// `Some` only for ragged tails; `None` means the cached all-ones
+    /// device mask applies.
+    tail_mask: Option<xla::PjRtBuffer>,
+    /// Host→device upload wall time for these buffers.
+    elapsed: Duration,
 }
 
 pub struct ModelRuntime {
@@ -60,6 +74,16 @@ pub struct ModelRuntime {
     pending_micro_steps: usize,
     /// Total optimizer updates applied.
     pub updates: u64,
+    /// Device-resident all-ones sample mask (`[mu]`), uploaded once: every
+    /// full micro-batch reuses it, so only ragged tails re-upload a mask.
+    ones_mask: Option<xla::PjRtBuffer>,
+    /// Device-resident `[1]` loss-normalization scales, memoized by bit
+    /// pattern — a run uses only a handful of distinct scales, so each is
+    /// uploaded exactly once.
+    scale_cache: BTreeMap<u32, xla::PjRtBuffer>,
+    /// Cumulative per-stage wall time (upload / execute / download /
+    /// apply); the epoch executor snapshots deltas per epoch.
+    timers: StageTimers,
 }
 
 impl ModelRuntime {
@@ -87,11 +111,13 @@ impl ModelRuntime {
         for leaf in &entry.param_leaves {
             host_leaf.clear();
             host_leaf.reserve(leaf.elems);
-            let base = leaf.offset;
-            for i in 0..leaf.elems {
-                let b = base + i * 4;
-                host_leaf.push(f32::from_le_bytes([bin[b], bin[b + 1], bin[b + 2], bin[b + 3]]));
-            }
+            // decode the leaf in 4-byte windows rather than byte-at-a-time
+            let bytes = &bin[leaf.offset..leaf.offset + leaf.elems * 4];
+            host_leaf.extend(
+                bytes
+                    .chunks_exact(4)
+                    .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]])),
+            );
             let dims = if leaf.shape.is_empty() { vec![1] } else { leaf.shape.clone() };
             params.push(buffers::upload_f32(&client, &host_leaf, &dims)?);
         }
@@ -124,6 +150,9 @@ impl ModelRuntime {
             mode: OutputMode::Unknown,
             pending_micro_steps: 0,
             updates: 0,
+            ones_mask: None,
+            scale_cache: BTreeMap::new(),
+            timers: StageTimers::default(),
         })
     }
 
@@ -135,16 +164,43 @@ impl ModelRuntime {
         self.pending_micro_steps
     }
 
-    fn upload_inputs(&self, mb: &MicroBatchHost) -> Result<[xla::PjRtBuffer; 3]> {
-        let x = buffers::upload_buf(&self.client, &mb.x, &self.variant.x_shape)?;
-        let y = buffers::upload_buf(&self.client, &mb.y, &self.variant.y_shape)?;
-        let mask = buffers::upload_f32(&self.client, &mb.mask, &[self.variant.mu])?;
-        Ok([x, y, mask])
+    /// Is this micro-batch's mask the all-ones constant the cached device
+    /// buffer represents? True for every full (non-tail) micro-batch.
+    fn mask_is_all_ones(&self, mb: &MicroBatchHost) -> bool {
+        mb.actual == self.variant.mu && mb.mask.iter().all(|&m| m == 1.0)
     }
 
-    /// Run one micro-batch accumulation step (fwd + bwd + grad accumulate).
-    /// `scale` is the loss-normalization factor chosen by the coordinator.
-    pub fn accum_step(&mut self, mb: &MicroBatchHost, scale: f32) -> Result<StepOutput> {
+    /// Upload the device-resident all-ones mask once.
+    fn ensure_ones_mask(&mut self) -> Result<()> {
+        if self.ones_mask.is_none() {
+            let ones = vec![1.0f32; self.variant.mu];
+            self.ones_mask =
+                Some(buffers::upload_f32(&self.client, &ones, &[self.variant.mu])?);
+        }
+        Ok(())
+    }
+
+    /// Upload the `[1]` scale buffer for this bit pattern once.
+    fn ensure_scale(&mut self, scale: f32) -> Result<()> {
+        let key = scale.to_bits();
+        if !self.scale_cache.contains_key(&key) {
+            let buf = buffers::upload_f32(&self.client, &[scale], &[1])?;
+            self.scale_cache.insert(key, buf);
+        }
+        Ok(())
+    }
+
+    /// Distinct loss-normalization scales resident on the device.
+    pub fn cached_scales(&self) -> usize {
+        self.scale_cache.len()
+    }
+
+    /// Upload one micro-batch's inputs: x and y always, the mask only for
+    /// ragged tails (`tail_mask: None` means the batch is full and the
+    /// cached all-ones device mask — guaranteed populated on return —
+    /// applies). The caller resolves the mask reference once this `&mut`
+    /// borrow has ended.
+    fn upload_inputs(&mut self, mb: &MicroBatchHost) -> Result<UploadedInputs> {
         if mb.mask.len() != self.variant.mu {
             return Err(MbsError::Runtime(format!(
                 "micro-batch mask len {} != mu {}",
@@ -152,17 +208,46 @@ impl ModelRuntime {
                 self.variant.mu
             )));
         }
-        let [x, y, mask] = self.upload_inputs(mb)?;
-        let scale_buf = buffers::upload_f32(&self.client, &[scale], &[1])?;
+        let t0 = Instant::now();
+        let full = self.mask_is_all_ones(mb);
+        if full {
+            self.ensure_ones_mask()?;
+        }
+        let x = buffers::upload_buf(&self.client, &mb.x, &self.variant.x_shape)?;
+        let y = buffers::upload_buf(&self.client, &mb.y, &self.variant.y_shape)?;
+        let tail_mask = if full {
+            None
+        } else {
+            Some(buffers::upload_f32(&self.client, &mb.mask, &[self.variant.mu])?)
+        };
+        Ok(UploadedInputs { x, y, tail_mask, elapsed: t0.elapsed() })
+    }
+
+    /// Run one micro-batch accumulation step (fwd + bwd + grad accumulate).
+    /// `scale` is the loss-normalization factor chosen by the coordinator.
+    pub fn accum_step(&mut self, mb: &MicroBatchHost, scale: f32) -> Result<StepOutput> {
+        let t_scale = Instant::now();
+        self.ensure_scale(scale)?;
+        let scale_elapsed = t_scale.elapsed();
+        let up = self.upload_inputs(mb)?;
+        let mask: &xla::PjRtBuffer = match &up.tail_mask {
+            Some(m) => m,
+            None => self.ones_mask.as_ref().expect("ensured by upload_inputs"),
+        };
+        let scale_buf = self.scale_cache.get(&scale.to_bits()).expect("ensured above");
+        let upload_elapsed = up.elapsed + scale_elapsed;
         let mut args: Vec<&xla::PjRtBuffer> =
             Vec::with_capacity(2 * self.n_leaves + 4);
         args.extend(self.params.iter());
         args.extend(self.acc.iter());
-        args.push(&x);
-        args.push(&y);
-        args.push(&mask);
-        args.push(&scale_buf);
+        args.push(&up.x);
+        args.push(&up.y);
+        args.push(mask);
+        args.push(scale_buf);
+        let t_execute = Instant::now();
         let mut outs = self.accum_exe.execute_b(&args)?;
+        let execute_elapsed = t_execute.elapsed();
+        let t_download = Instant::now();
         let replica = outs
             .first_mut()
             .ok_or_else(|| MbsError::Runtime("no replica outputs".into()))?;
@@ -204,26 +289,37 @@ impl ModelRuntime {
             }
             OutputMode::Unknown => unreachable!(),
         };
+        self.timers.upload += upload_elapsed;
+        self.timers.execute += execute_elapsed;
+        self.timers.download += t_download.elapsed();
         self.pending_micro_steps += 1;
         Ok(out)
     }
 
     /// Evaluate one (padded, masked) micro-batch without touching gradients.
     pub fn eval_step(&mut self, mb: &MicroBatchHost) -> Result<StepOutput> {
-        let [x, y, mask] = self.upload_inputs(mb)?;
+        let up = self.upload_inputs(mb)?;
+        let mask: &xla::PjRtBuffer = match &up.tail_mask {
+            Some(m) => m,
+            None => self.ones_mask.as_ref().expect("ensured by upload_inputs"),
+        };
+        let upload_elapsed = up.elapsed;
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.n_leaves + 3);
         args.extend(self.params.iter());
-        args.push(&x);
-        args.push(&y);
-        args.push(&mask);
+        args.push(&up.x);
+        args.push(&up.y);
+        args.push(mask);
+        let t_execute = Instant::now();
         let mut outs = self.eval_exe.execute_b(&args)?;
+        let execute_elapsed = t_execute.elapsed();
+        let t_download = Instant::now();
         let replica = outs
             .first_mut()
             .ok_or_else(|| MbsError::Runtime("no replica outputs".into()))?;
-        if replica.len() == 2 {
+        let out = if replica.len() == 2 {
             let loss_sum = buffers::download_scalar(&replica[0])?;
             let mv = buffers::download_f32(&replica[1], 4)?;
-            Ok(StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] })
+            StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] }
         } else {
             let lit = replica[0].to_literal_sync()?;
             let parts = lit
@@ -231,14 +327,19 @@ impl ModelRuntime {
                 .map_err(|e| MbsError::Runtime(format!("untuple failed: {e}")))?;
             let loss_sum = parts[0].to_vec::<f32>()?[0];
             let mv = parts[1].to_vec::<f32>()?;
-            Ok(StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] })
-        }
+            StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] }
+        };
+        self.timers.upload += upload_elapsed;
+        self.timers.execute += execute_elapsed;
+        self.timers.download += t_download.elapsed();
+        Ok(out)
     }
 
     /// Apply the optimizer update from the accumulated gradient, then reset
     /// the accumulator (the zeroed accumulator comes back from the same
     /// executable, so the whole update is one device-side call).
     pub fn apply(&mut self, hyper: &[f32]) -> Result<()> {
+        let t_apply = Instant::now();
         let expected_hyper = self.entry.optimizer.hyper_names.len();
         if hyper.len() != expected_hyper {
             return Err(MbsError::Runtime(format!(
@@ -313,7 +414,14 @@ impl ModelRuntime {
         }
         self.pending_micro_steps = 0;
         self.updates += 1;
+        self.timers.apply += t_apply.elapsed();
         Ok(())
+    }
+
+    /// Snapshot of the cumulative per-stage timers (monotonic; take deltas
+    /// across two snapshots to attribute an epoch's time).
+    pub fn timers(&self) -> StageTimers {
+        self.timers
     }
 
     /// Download current parameter leaves (for checkpoints / tests).

@@ -79,6 +79,15 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Boolean flag: present (bare `--flag` parses as "true") and not
+    /// explicitly "false"/"0".
+    pub fn get_bool(&self, key: &str) -> bool {
+        match self.get(key) {
+            None => false,
+            Some(v) => v != "false" && v != "0",
+        }
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +123,16 @@ mod tests {
         assert!(a.check_unknown().is_err());
         a.declare(&["bad"]);
         assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["x", "--on", "--off=false", "--zero", "0", "--named=yes"]);
+        assert!(a.get_bool("on"));
+        assert!(!a.get_bool("off"));
+        assert!(!a.get_bool("zero"));
+        assert!(a.get_bool("named"));
+        assert!(!a.get_bool("absent"));
     }
 
     #[test]

@@ -113,6 +113,58 @@ fn report_fields_consistent() {
 }
 
 #[test]
+fn eval_stats_identical_across_streaming_policies() {
+    // ROADMAP follow-up: eval now routes through the configured streaming
+    // policy — the double-buffered sweep must produce exactly the stats the
+    // synchronous one does (same items, same order, same accumulation)
+    let Some(mut engine) = common::engine() else { return };
+    use mbs::coordinator::{evaluate_with, StreamingPolicy};
+    use mbs::data::{Dataset, SynthFlowers};
+    use mbs::metrics::MetricKind;
+    use std::sync::Arc;
+    let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 40, 7));
+    let sync = evaluate_with(&mut rt, MetricKind::Classification, &ds, 0, StreamingPolicy::Synchronous, 0)
+        .expect("sync eval");
+    let buffered = evaluate_with(
+        &mut rt,
+        MetricKind::Classification,
+        &ds,
+        0,
+        StreamingPolicy::DoubleBuffered,
+        2,
+    )
+    .expect("buffered eval");
+    assert_eq!(sync.mean_loss, buffered.mean_loss, "eval loss diverged across policies");
+    assert_eq!(sync.primary_metric, buffered.primary_metric);
+    assert_eq!(sync.samples, buffered.samples);
+    assert_eq!(sync.micro_steps, buffered.micro_steps);
+}
+
+#[test]
+fn pooled_run_is_allocation_free_and_instrumented() {
+    // the tentpole invariant end-to-end: a warmed pool serves every lease
+    // of a full training run (hit rate 1.0, zero cold allocations), and the
+    // stage timers actually attribute time to the pipeline
+    let Some(mut engine) = common::engine() else { return };
+    let cfg = TrainConfig::builder("microresnet18")
+        .mu(8)
+        .batch(24)
+        .epochs(2)
+        .dataset_len(48)
+        .eval_len(16)
+        .build();
+    let r = mbs::train(&mut engine, &cfg).expect("train");
+    assert_eq!(r.pool.allocs, 0, "hot path allocated host buffers: {:?}", r.pool);
+    assert!(r.pool.leases > 0);
+    assert_eq!(r.pool.hits, r.pool.leases, "every lease must be a pool hit");
+    assert!((r.pool.hit_rate() - 1.0).abs() < 1e-12);
+    assert!(r.stages.execute > std::time::Duration::ZERO, "execute stage untimed");
+    assert!(r.stages.assemble > std::time::Duration::ZERO, "assemble stage untimed");
+    assert!(r.train_epochs.iter().all(|e| e.stages.upload > std::time::Duration::ZERO));
+}
+
+#[test]
 fn eval_is_side_effect_free() {
     let Some(mut engine) = common::engine() else { return };
     let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
