@@ -30,6 +30,14 @@ pub enum MicroBatchSpec {
 }
 
 impl MicroBatchSpec {
+    /// Parse `"auto"` or a positive integer (CLI `--mu` values).
+    ///
+    /// ```
+    /// use mbs::MicroBatchSpec;
+    /// assert_eq!(MicroBatchSpec::parse("auto"), Some(MicroBatchSpec::Auto));
+    /// assert_eq!(MicroBatchSpec::parse("16"), Some(MicroBatchSpec::Fixed(16)));
+    /// assert_eq!(MicroBatchSpec::parse("huge"), None);
+    /// ```
     pub fn parse(s: &str) -> Option<MicroBatchSpec> {
         if s.eq_ignore_ascii_case("auto") {
             Some(MicroBatchSpec::Auto)
@@ -46,6 +54,7 @@ impl MicroBatchSpec {
         }
     }
 
+    /// Is this the planner-derived (`Auto`) spec?
     pub fn is_auto(&self) -> bool {
         matches!(self, MicroBatchSpec::Auto)
     }
@@ -63,12 +72,17 @@ impl fmt::Display for MicroBatchSpec {
 /// Learning-rate schedule (the AmoebaNet recipe uses linear decay).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LrSchedule {
+    /// The base learning rate for the whole run.
     Constant,
     /// Linearly decay from the base LR to `final_frac * base` over training.
-    LinearDecay { final_frac: f32 },
+    LinearDecay {
+        /// Fraction of the base LR reached at the final update.
+        final_frac: f32,
+    },
 }
 
 impl LrSchedule {
+    /// Multiplier applied to the base LR at 0-based update `update`.
     pub fn factor(&self, update: u64, total_updates: u64) -> f32 {
         match self {
             LrSchedule::Constant => 1.0,
@@ -83,6 +97,7 @@ impl LrSchedule {
     }
 }
 
+/// One training run's full configuration (model, geometry, memory, policy).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Manifest model key (microresnet18 / microresnet34 / amoebacell /
@@ -95,6 +110,7 @@ pub struct TrainConfig {
     pub mu: MicroBatchSpec,
     /// Mini-batch size N_B.
     pub batch: usize,
+    /// Training epochs (must be ≥ 1).
     pub epochs: usize,
     /// Training set size (synthetic, generated on the fly).
     pub dataset_len: usize,
@@ -113,11 +129,15 @@ pub struct TrainConfig {
     /// computes the whole mini-batch in one step and OOMs past the memory
     /// frontier — the paper's "w/o MBS" column.
     pub use_mbs: bool,
+    /// Loss-normalization policy (paper section 3.4).
     pub norm_mode: NormalizationMode,
+    /// Assemble micro-batches inline or on an overlapped worker thread.
     pub streaming: StreamingPolicy,
     /// Micro-batches staged ahead of the one executing.
     pub prefetch: usize,
+    /// Seed for dataset generation and epoch shuffles.
     pub seed: u64,
+    /// Learning-rate schedule applied across optimizer updates.
     pub lr_schedule: LrSchedule,
     /// Override the manifest's base learning rate.
     pub lr: Option<f32>,
@@ -126,10 +146,13 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
+    /// Start a fluent [`TrainConfigBuilder`] from the model defaults.
     pub fn builder(model: &str) -> TrainConfigBuilder {
         TrainConfigBuilder { cfg: TrainConfig::default_for(model) }
     }
 
+    /// The default configuration for a model key (paper section 4.2.4
+    /// hyper-parameters come from the manifest at resolve time).
     pub fn default_for(model: &str) -> TrainConfig {
         TrainConfig {
             model: model.to_string(),
@@ -152,6 +175,7 @@ impl TrainConfig {
         }
     }
 
+    /// The pinned capacity in bytes, if `capacity_mib` is set.
     pub fn capacity_bytes(&self) -> Option<u64> {
         self.capacity_mib.map(|m| m * MIB)
     }
@@ -233,12 +257,14 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Every config key that doubles as a CLI flag (plus `config` itself).
     pub const ARG_KEYS: &'static [&'static str] = &[
         "model", "size", "mu", "batch", "epochs", "dataset-len", "eval-len",
         "capacity-mib", "num-classes", "mbs", "norm", "streaming", "prefetch",
         "seed", "lr", "lr-decay", "skip-eval", "config",
     ];
 
+    /// Reject configurations no run mode can execute.
     pub fn validate(&self) -> Result<()> {
         // epochs == 0 in particular must be rejected up front: downstream
         // reporting averages per-epoch wall times, and an empty run has no
@@ -262,6 +288,7 @@ pub struct TrainConfigBuilder {
 }
 
 impl TrainConfigBuilder {
+    /// Image size / sequence length (default: the manifest's).
     pub fn size(mut self, v: usize) -> Self {
         self.cfg.size = Some(v);
         self
@@ -277,54 +304,67 @@ impl TrainConfigBuilder {
         self.cfg.mu = MicroBatchSpec::Auto;
         self
     }
+    /// Mini-batch size `N_B`.
     pub fn batch(mut self, v: usize) -> Self {
         self.cfg.batch = v;
         self
     }
+    /// Training epochs.
     pub fn epochs(mut self, v: usize) -> Self {
         self.cfg.epochs = v;
         self
     }
+    /// Synthetic training-set size.
     pub fn dataset_len(mut self, v: usize) -> Self {
         self.cfg.dataset_len = v;
         self
     }
+    /// Held-out eval-set size.
     pub fn eval_len(mut self, v: usize) -> Self {
         self.cfg.eval_len = v;
         self
     }
+    /// Simulated device capacity in MiB.
     pub fn capacity_mib(mut self, v: u64) -> Self {
         self.cfg.capacity_mib = Some(v);
         self
     }
+    /// Run the native "w/o MBS" baseline instead of MBS.
     pub fn baseline(mut self) -> Self {
         self.cfg.use_mbs = false;
         self
     }
+    /// Loss-normalization policy.
     pub fn norm(mut self, m: NormalizationMode) -> Self {
         self.cfg.norm_mode = m;
         self
     }
+    /// Streaming policy (overlapped vs synchronous assembly).
     pub fn streaming(mut self, p: StreamingPolicy) -> Self {
         self.cfg.streaming = p;
         self
     }
+    /// Run seed (datasets + shuffles).
     pub fn seed(mut self, s: u64) -> Self {
         self.cfg.seed = s;
         self
     }
+    /// Override the manifest's base learning rate.
     pub fn lr(mut self, lr: f32) -> Self {
         self.cfg.lr = Some(lr);
         self
     }
+    /// Linearly decay the LR to `final_frac * base` over the run.
     pub fn lr_decay(mut self, final_frac: f32) -> Self {
         self.cfg.lr_schedule = LrSchedule::LinearDecay { final_frac };
         self
     }
+    /// Skip the per-epoch eval pass (timing-only benches).
     pub fn skip_eval(mut self) -> Self {
         self.cfg.skip_eval = true;
         self
     }
+    /// Finish the builder.
     pub fn build(self) -> TrainConfig {
         self.cfg
     }

@@ -20,14 +20,20 @@
 use super::splitter::SplitPlan;
 use crate::runtime::StepOutput;
 
+/// Which loss-normalization scale each micro-batch contributes with
+/// (paper section 3.4; see the module docs for the arithmetic).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NormalizationMode {
+    /// Eq. 14: per-micro-batch mean divided by `N_Smu`.
     Paper,
+    /// `1/N_B` everywhere: exact mini-batch-mean gradient, ragged or not.
     Exact,
+    /// No normalization (the eq. 13 mismatch, kept for the ablation).
     None,
 }
 
 impl NormalizationMode {
+    /// Parse a CLI `--norm` value (`paper` / `exact` / `none`).
     pub fn parse(s: &str) -> Option<NormalizationMode> {
         match s {
             "paper" => Some(NormalizationMode::Paper),
@@ -37,6 +43,7 @@ impl NormalizationMode {
         }
     }
 
+    /// CLI/report name of the mode.
     pub fn name(&self) -> &'static str {
         match self {
             NormalizationMode::Paper => "paper",
@@ -60,13 +67,18 @@ impl NormalizationMode {
 /// mini-batch (and across mini-batches of an epoch).
 #[derive(Debug, Clone, Default)]
 pub struct Accumulation {
+    /// Sum of per-sample losses.
     pub loss_sum: f64,
+    /// Task-dependent metric sums (see `metrics::MetricKind`).
     pub metric: [f64; 4],
+    /// Samples accumulated.
     pub samples: usize,
+    /// Micro-batch steps accumulated.
     pub micro_steps: usize,
 }
 
 impl Accumulation {
+    /// Fold one step's output (covering `samples` real samples) in.
     pub fn add(&mut self, out: &StepOutput, samples: usize) {
         self.loss_sum += out.loss_sum as f64;
         for (a, m) in self.metric.iter_mut().zip(out.metric) {
@@ -76,6 +88,7 @@ impl Accumulation {
         self.micro_steps += 1;
     }
 
+    /// Fold another accumulation in (mini-batch totals into epoch totals).
     pub fn merge(&mut self, other: &Accumulation) {
         self.loss_sum += other.loss_sum;
         for (a, m) in self.metric.iter_mut().zip(other.metric) {

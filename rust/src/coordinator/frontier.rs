@@ -1,0 +1,713 @@
+//! Capacity × batch feasibility sweeps — the paper's headline figure as an
+//! instrument.
+//!
+//! The paper's core claim is that MBS lets a fixed-memory device train at
+//! mini-batch sizes far beyond its native capacity; this module maps the
+//! *shape* of that trade. Given a grid of simulated device capacities and
+//! global batch sizes, [`FrontierGrid::sweep`] calls the PR 1 planner at
+//! every `(capacity, batch)` point — **without training** — and classifies
+//! it:
+//!
+//!  * [`Feasibility::Native`] — an exported executable covers the whole
+//!    mini-batch and the single `N_B`-sample step fits: the "w/o MBS" arm
+//!    trains here too.
+//!  * [`Feasibility::Mbs`] — the native step does not fit (or no exported
+//!    executable is that large), but the planner derives a micro-batch
+//!    `mu < batch` whose streamed step does: the paper's headline region.
+//!  * [`Feasibility::Oom`] — even the smallest exported variant's step
+//!    exceeds capacity: the tables' "Failed" cells.
+//!
+//! This frames the same (capacity × batch) frontier as You et al. ("The
+//! Limit of the Batch Size", 2020) and McCandlish et al. ("An Empirical
+//! Model of Large-Batch Training", 2018), driven by the simulated memory
+//! model instead of a GPU farm. The `mbs frontier` CLI subcommand renders
+//! the grid as a terminal table and a `BENCH_frontier.json` artifact
+//! (schema shared with `BENCH_streaming.json` via
+//! [`bench_report`](crate::metrics::bench_report)), and can attach measured
+//! throughput to the feasibility boundary by running short timed epochs.
+//!
+//! Classification is pure capacity arithmetic over the manifest metadata,
+//! so it needs no compiled artifacts: [`synthetic_entry`] provides a
+//! task-shaped stand-in model for clean checkouts (`--dry-run` in CI).
+
+use crate::data::PoolStats;
+use crate::error::{MbsError, Result};
+use crate::manifest::{Dtype, ModelEntry, OptimizerInfo, Variant};
+use crate::memory::{Footprint, Ledger, MIB};
+use crate::metrics::bench_report::{self, BenchReport, JsonValue};
+use crate::metrics::StageTimers;
+use crate::util::table::Table;
+
+use super::planner;
+
+/// How one `(capacity, batch)` grid point trains, per the planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Feasibility {
+    /// The whole mini-batch fits in one step ("w/o MBS" also trains).
+    Native {
+        /// Static batch dimension of the covering executable (≥ batch).
+        mu: usize,
+    },
+    /// Trains only by streaming planner-sized micro-batches.
+    Mbs {
+        /// Planner-derived micro-batch size (paper Alg. 1).
+        mu: usize,
+        /// Accumulation steps per mini-batch, `ceil(batch / mu)`.
+        n_smu: usize,
+    },
+    /// Does not train: even the smallest exported variant exceeds capacity.
+    Oom {
+        /// Bytes the smallest variant's step would have needed.
+        needed_bytes: u64,
+    },
+}
+
+impl Feasibility {
+    /// Does this point train at all (natively or via MBS)?
+    pub fn is_feasible(&self) -> bool {
+        !matches!(self, Feasibility::Oom { .. })
+    }
+
+    /// The micro-batch size the point would execute with, if feasible.
+    pub fn mu(&self) -> Option<usize> {
+        match self {
+            Feasibility::Native { mu } | Feasibility::Mbs { mu, .. } => Some(*mu),
+            Feasibility::Oom { .. } => None,
+        }
+    }
+
+    /// Machine-readable class name (`native` / `mbs` / `oom`).
+    pub fn class_name(&self) -> &'static str {
+        match self {
+            Feasibility::Native { .. } => "native",
+            Feasibility::Mbs { .. } => "mbs",
+            Feasibility::Oom { .. } => "oom",
+        }
+    }
+
+    /// Terminal-table cell label.
+    pub fn label(&self) -> String {
+        match self {
+            Feasibility::Native { .. } => "native".to_string(),
+            Feasibility::Mbs { mu, n_smu } => format!("mu={mu} x{n_smu}"),
+            Feasibility::Oom { .. } => "OOM".to_string(),
+        }
+    }
+}
+
+/// Throughput measured by a short timed run at a boundary point.
+#[derive(Debug, Clone)]
+pub struct BoundaryTiming {
+    /// Training samples per second over the timed epochs.
+    pub items_per_sec: f64,
+    /// Mean wall-clock per training epoch, seconds.
+    pub epoch_wall_mean_s: f64,
+    /// Micro-batch steps executed across the timed epochs.
+    pub micro_steps: u64,
+    /// Optimizer updates applied.
+    pub updates: u64,
+    /// Per-stage time totals across the timed epochs.
+    pub stages: StageTimers,
+    /// Staging-buffer pool traffic of the timed run.
+    pub pool: PoolStats,
+}
+
+/// One classified grid point.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    /// Simulated device capacity, bytes.
+    pub capacity_bytes: u64,
+    /// Global (mini-)batch size `N_B`.
+    pub batch: usize,
+    /// The planner's verdict for this point.
+    pub feasibility: Feasibility,
+    /// Measured throughput, when a timed boundary run was attached.
+    pub timing: Option<BoundaryTiming>,
+}
+
+/// A classified capacity × batch grid for one model.
+#[derive(Debug, Clone)]
+pub struct FrontierGrid {
+    /// Model key the grid was swept for.
+    pub model: String,
+    /// Image size / sequence length of the swept variants.
+    pub size: usize,
+    /// Eval-set occupancy the admission check covered (0 = train-only).
+    pub eval_len: usize,
+    /// Capacity axis, bytes, as given.
+    pub capacities_bytes: Vec<u64>,
+    /// Batch axis, as given.
+    pub batches: Vec<usize>,
+    /// Points in row-major order: for each capacity, every batch.
+    pub points: Vec<GridPoint>,
+}
+
+/// Classify one `(capacity, batch)` point against the ledger's remaining
+/// budget — the same budget-driven arithmetic `planner::resolve` runs at
+/// admission time, made grid-callable.
+///
+/// A point is [`Feasibility::Native`] when some exported variant covers the
+/// whole batch *and* the single `N_B`-sample step (plus the forward-only
+/// eval sweep, if `eval_len > 0`) fits; otherwise the planner's
+/// [`auto_mu`](crate::coordinator::planner::auto_mu) either derives a
+/// streaming micro-batch ([`Feasibility::Mbs`]) or reports the structured
+/// OOM ([`Feasibility::Oom`]).
+pub fn classify(
+    entry: &ModelEntry,
+    size: usize,
+    batch: usize,
+    eval_len: usize,
+    ledger: &Ledger,
+) -> Result<Feasibility> {
+    let budget = ledger.remaining();
+    // native arm: the smallest exported executable covering the whole batch
+    // (least padding), admission-checked exactly like `resolve`'s native path
+    let covering = entry
+        .variants
+        .iter()
+        .filter(|v| v.size == size && v.mu >= batch)
+        .min_by_key(|v| v.mu);
+    if let Some(v) = covering {
+        let fp = Footprint::from_manifest(entry, v);
+        let need = fp
+            .step_bytes(batch)
+            .max(fp.resident_bytes() + fp.eval_bytes(v.mu.min(eval_len)));
+        if need <= budget {
+            return Ok(Feasibility::Native { mu: v.mu });
+        }
+    }
+    match planner::auto_mu(entry, size, batch, eval_len, budget) {
+        // a manifest with non-uniform per-variant footprints can admit a
+        // *different* covering variant than the one checked above; a single
+        // step covering the whole batch is native execution, not streaming
+        Ok(res) if res.mu >= batch => Ok(Feasibility::Native { mu: res.mu }),
+        Ok(res) => Ok(Feasibility::Mbs { mu: res.mu, n_smu: batch.div_ceil(res.mu) }),
+        Err(MbsError::Oom { needed_bytes, .. }) => Ok(Feasibility::Oom { needed_bytes }),
+        Err(e) => Err(e),
+    }
+}
+
+impl FrontierGrid {
+    /// Classify every point of `capacities_bytes` × `batches` for
+    /// `entry` at `size`. Each capacity is materialized as a fresh
+    /// [`Ledger`] so the classification exercises the same remaining-budget
+    /// query the training path uses.
+    pub fn sweep(
+        entry: &ModelEntry,
+        size: usize,
+        eval_len: usize,
+        capacities_bytes: &[u64],
+        batches: &[usize],
+    ) -> Result<FrontierGrid> {
+        if capacities_bytes.is_empty() || batches.is_empty() {
+            return Err(MbsError::Config("frontier needs ≥1 capacity and ≥1 batch".into()));
+        }
+        if batches.contains(&0) {
+            return Err(MbsError::Config("frontier batches must be positive".into()));
+        }
+        let mut points = Vec::with_capacity(capacities_bytes.len() * batches.len());
+        for &capacity in capacities_bytes {
+            let ledger = Ledger::new(capacity);
+            for &batch in batches {
+                let feasibility = classify(entry, size, batch, eval_len, &ledger)?;
+                points.push(GridPoint {
+                    capacity_bytes: capacity,
+                    batch,
+                    feasibility,
+                    timing: None,
+                });
+            }
+        }
+        Ok(FrontierGrid {
+            model: entry.name.clone(),
+            size,
+            eval_len,
+            capacities_bytes: capacities_bytes.to_vec(),
+            batches: batches.to_vec(),
+            points,
+        })
+    }
+
+    /// Mutable point lookup by `(capacity, batch)`.
+    pub fn point_mut(&mut self, capacity_bytes: u64, batch: usize) -> Option<&mut GridPoint> {
+        self.points
+            .iter_mut()
+            .find(|p| p.capacity_bytes == capacity_bytes && p.batch == batch)
+    }
+
+    /// The feasibility boundary: for each capacity (in grid order), the
+    /// `(capacity, batch)` of the largest feasible batch, if any. These are
+    /// the points worth paying a timed run for — the frontier itself.
+    pub fn boundary(&self) -> Vec<(u64, usize)> {
+        self.capacities_bytes
+            .iter()
+            .filter_map(|&c| {
+                self.points
+                    .iter()
+                    .filter(|p| p.capacity_bytes == c && p.feasibility.is_feasible())
+                    .max_by_key(|p| p.batch)
+                    .map(|p| (c, p.batch))
+            })
+            .collect()
+    }
+
+    /// Render the grid as an aligned terminal table: one row per capacity,
+    /// one column per batch, cells labelled native / `mu=K xN` / OOM (plus
+    /// measured items/sec on timed points).
+    pub fn render_table(&self) -> Table {
+        let batch_headers: Vec<String> =
+            self.batches.iter().map(|b| format!("N_B={b}")).collect();
+        let mut header: Vec<&str> = vec!["capacity (MiB)"];
+        header.extend(batch_headers.iter().map(|s| s.as_str()));
+        let mut table = Table::new(&header);
+        for &c in &self.capacities_bytes {
+            let mut row = vec![format!("{:.1}", c as f64 / MIB as f64)];
+            for &b in &self.batches {
+                let cell = self
+                    .points
+                    .iter()
+                    .find(|p| p.capacity_bytes == c && p.batch == b)
+                    .map(|p| match &p.timing {
+                        Some(t) => {
+                            format!("{} ({:.0}/s)", p.feasibility.label(), t.items_per_sec)
+                        }
+                        None => p.feasibility.label(),
+                    })
+                    .unwrap_or_else(|| "-".to_string());
+                row.push(cell);
+            }
+            table.row(&row);
+        }
+        table
+    }
+
+    /// Build the `BENCH_frontier.json` document (shared bench envelope;
+    /// schema documented in `rust/docs/ARCHITECTURE.md`).
+    pub fn to_report(&self, dry_run: bool) -> BenchReport {
+        let mut rep = BenchReport::new("frontier", if dry_run { "dry-run" } else { "timed" });
+        rep.str_field("model", &self.model)
+            .uint("size", self.size as u64)
+            .uint("eval_len", self.eval_len as u64)
+            .field(
+                "capacities_mib",
+                JsonValue::Arr(
+                    self.capacities_bytes
+                        .iter()
+                        .map(|&c| JsonValue::fixed(c as f64 / MIB as f64, 3))
+                        .collect(),
+                ),
+            )
+            .field(
+                "batches",
+                JsonValue::Arr(
+                    self.batches.iter().map(|&b| JsonValue::UInt(b as u64)).collect(),
+                ),
+            );
+        let grid: Vec<JsonValue> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut v = JsonValue::obj();
+                v.push("capacity_mib", JsonValue::fixed(p.capacity_bytes as f64 / MIB as f64, 3));
+                v.push("batch", JsonValue::UInt(p.batch as u64));
+                v.push("class", JsonValue::Str(p.feasibility.class_name().to_string()));
+                match p.feasibility {
+                    Feasibility::Native { mu } => {
+                        v.push("mu", JsonValue::UInt(mu as u64));
+                        v.push("n_smu", JsonValue::UInt(1));
+                    }
+                    Feasibility::Mbs { mu, n_smu } => {
+                        v.push("mu", JsonValue::UInt(mu as u64));
+                        v.push("n_smu", JsonValue::UInt(n_smu as u64));
+                    }
+                    Feasibility::Oom { needed_bytes } => {
+                        v.push("needed_bytes", JsonValue::UInt(needed_bytes));
+                    }
+                }
+                if let Some(t) = &p.timing {
+                    let mut timing = JsonValue::obj();
+                    timing.push("items_per_sec", JsonValue::fixed(t.items_per_sec, 3));
+                    timing.push("epoch_wall_mean_s", JsonValue::fixed(t.epoch_wall_mean_s, 6));
+                    timing.push("micro_steps", JsonValue::UInt(t.micro_steps));
+                    timing.push("updates", JsonValue::UInt(t.updates));
+                    timing.push(
+                        "stage_means_ms",
+                        bench_report::stage_means_value(&t.stages, t.micro_steps, t.updates),
+                    );
+                    timing.push("pool", bench_report::pool_value(&t.pool));
+                    v.push("timing", timing);
+                }
+                v
+            })
+            .collect();
+        rep.field("grid", JsonValue::Arr(grid));
+        rep
+    }
+}
+
+/// A task-shaped stand-in [`ModelEntry`] for artifact-free (`--dry-run`)
+/// sweeps: one exported variant per power-of-two `mu` up to 64, with
+/// footprints sized so single-digit-MiB capacities produce all three
+/// feasibility classes.
+///
+/// The arithmetic (sgdm keeps one optimizer slot, so resident state is
+/// `3 * param_bytes + fixed_bytes`):
+///
+/// | task           | params  | fixed   | act/sample | resident |
+/// |----------------|---------|---------|------------|----------|
+/// | classification | 256 KiB | 256 KiB | 64 KiB     | 1 MiB    |
+/// | segmentation   | 256 KiB | 256 KiB | 128 KiB    | 1 MiB    |
+/// | lm             | 512 KiB | 256 KiB | 32 KiB     | 1.75 MiB |
+///
+/// e.g. classification at 2 MiB capacity leaves ~1 MiB of data space →
+/// the planner settles on `mu = 8`; at 8 MiB batches ≤ 64 are native.
+pub fn synthetic_entry(task: &str) -> Result<ModelEntry> {
+    const KIB: u64 = 1024;
+    let size = 16usize;
+    // (param_bytes, act/sample, x_elems, x_dtype, y_elems, y_dtype)
+    let (param_bytes, act_per_sample, x_elems, x_dtype, y_elems, y_dtype) = match task {
+        "classification" => (256 * KIB, 64 * KIB, size * size * 3, Dtype::F32, 1, Dtype::I32),
+        "segmentation" => {
+            (256 * KIB, 128 * KIB, size * size * 3, Dtype::F32, size * size, Dtype::I32)
+        }
+        "lm" => (512 * KIB, 32 * KIB, size, Dtype::I32, size, Dtype::I32),
+        other => {
+            return Err(MbsError::Config(format!(
+                "unknown frontier task '{other}' (classification | segmentation | lm)"
+            )))
+        }
+    };
+    let variants = [1usize, 2, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|&mu| Variant {
+            mu,
+            size,
+            x_shape: vec![mu, x_elems],
+            x_dtype: x_dtype.clone(),
+            y_shape: vec![mu, y_elems],
+            y_dtype: y_dtype.clone(),
+            accum_hlo: String::new(),
+            eval_hlo: String::new(),
+            activation_bytes_per_sample: act_per_sample,
+            fixed_bytes: 256 * KIB,
+        })
+        .collect();
+    Ok(ModelEntry {
+        name: format!("synthetic-{task}"),
+        task: task.to_string(),
+        optimizer: OptimizerInfo {
+            kind: "sgdm".into(),
+            slots: 1,
+            hyper_names: vec!["lr".into()],
+            hyper_defaults: vec![0.01],
+        },
+        params_bin: String::new(),
+        param_leaves: Vec::new(),
+        param_bytes,
+        apply_hlo: String::new(),
+        metric_semantics: task.to_string(),
+        default_size: size,
+        variants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    /// Synthetic manifest entry exporting one variant per `mu`, with simple
+    /// linear footprints so capacities are easy to reason about (mirrors
+    /// the planner's test fixture).
+    fn entry_with_mus(
+        mus: &[usize],
+        act_per_sample: u64,
+        fixed: u64,
+        param_bytes: u64,
+    ) -> ModelEntry {
+        ModelEntry {
+            name: "synthetic".into(),
+            task: "classification".into(),
+            optimizer: OptimizerInfo {
+                kind: "sgdm".into(),
+                slots: 1,
+                hyper_names: vec!["lr".into()],
+                hyper_defaults: vec![0.01],
+            },
+            params_bin: "params.bin".into(),
+            param_leaves: Vec::new(),
+            param_bytes,
+            apply_hlo: "apply.hlo".into(),
+            metric_semantics: "classification".into(),
+            default_size: 16,
+            variants: mus
+                .iter()
+                .map(|&mu| Variant {
+                    mu,
+                    size: 16,
+                    x_shape: vec![mu, 4],
+                    x_dtype: Dtype::F32,
+                    y_shape: vec![mu],
+                    y_dtype: Dtype::I32,
+                    accum_hlo: String::new(),
+                    eval_hlo: String::new(),
+                    activation_bytes_per_sample: act_per_sample,
+                    fixed_bytes: fixed,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn oom_boundary_matches_hand_computed_ledger() {
+        // per-sample input: x = 4 elems, y = 1 elem, +1 mask slot, 4 B each
+        // => 24 B; act 1000 B/sample; resident = 3*100 params + 0 fixed = 300
+        let entry = entry_with_mus(&[2, 4], 1000, 0, 100);
+        let step_mu2 = 300 + 2 * (1000 + 24); // 2348: smallest variant's step
+        // exactly at the frontier: the smallest variant streams any batch
+        let at = Ledger::new(step_mu2);
+        match classify(&entry, 16, 64, 0, &at).unwrap() {
+            Feasibility::Mbs { mu, n_smu } => {
+                assert_eq!(mu, 2);
+                assert_eq!(n_smu, 32);
+            }
+            other => panic!("want Mbs at the boundary, got {other:?}"),
+        }
+        // one byte below: structured OOM carrying the hand-computed need
+        let below = Ledger::new(step_mu2 - 1);
+        match classify(&entry, 16, 64, 0, &below).unwrap() {
+            Feasibility::Oom { needed_bytes } => assert_eq!(needed_bytes, step_mu2),
+            other => panic!("want Oom below the boundary, got {other:?}"),
+        }
+        // a batch the small variant covers natively at the same capacity
+        let native = Ledger::new(step_mu2);
+        assert_eq!(
+            classify(&entry, 16, 2, 0, &native).unwrap(),
+            Feasibility::Native { mu: 2 }
+        );
+        // charging the ledger moves the frontier: pinned bytes shrink
+        // remaining() below the mu=2 step
+        let mut charged = Ledger::new(step_mu2);
+        charged.alloc("pinned", 1).unwrap();
+        assert!(matches!(
+            classify(&entry, 16, 64, 0, &charged).unwrap(),
+            Feasibility::Oom { .. }
+        ));
+    }
+
+    #[test]
+    fn native_requires_covering_variant() {
+        // plenty of capacity, but no exported executable covers batch 64:
+        // the point is MBS, not native (matches `resolve`'s coverage rule)
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let roomy = Ledger::new(1 << 30);
+        match classify(&entry, 16, 64, 0, &roomy).unwrap() {
+            Feasibility::Mbs { mu, n_smu } => {
+                assert_eq!(mu, 8);
+                assert_eq!(n_smu, 8);
+            }
+            other => panic!("want Mbs without coverage, got {other:?}"),
+        }
+        // batch 8 is covered and fits: native
+        assert_eq!(
+            classify(&entry, 16, 8, 0, &roomy).unwrap(),
+            Feasibility::Native { mu: 8 }
+        );
+    }
+
+    #[test]
+    fn cheaper_covering_variant_classifies_native_not_single_step_mbs() {
+        // non-uniform footprints: the smallest covering variant (mu=8) is
+        // expensive, but a larger covering variant (mu=16) fits — the point
+        // executes as ONE covering step, so it must be labelled Native,
+        // never "Mbs x1"
+        let mut entry = entry_with_mus(&[8, 16], 1000, 0, 100);
+        entry.variants[0].activation_bytes_per_sample = 10_000;
+        let fp16 = Footprint::from_manifest(&entry, &entry.variants[1]);
+        let budget = fp16.step_bytes(8); // fits mu=16's 8-sample step only
+        let class = classify(&entry, 16, 8, 0, &Ledger::new(budget)).unwrap();
+        assert_eq!(class, Feasibility::Native { mu: 16 });
+        // and a genuine streaming point always carries at least two steps
+        let budget = fp16.step_bytes(16); // fits the full mu=16 step
+        match classify(&entry, 16, 64, 0, &Ledger::new(budget)).unwrap() {
+            Feasibility::Mbs { mu, n_smu } => {
+                assert_eq!(mu, 16);
+                assert_eq!(n_smu, 4);
+            }
+            other => panic!("want streaming Mbs, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eval_occupancy_shifts_the_native_frontier() {
+        // input-dominated model: a large eval set makes the forward sweep
+        // the binding constraint, exactly as in planner admission
+        let entry = entry_with_mus(&[16], 1, 0, 100);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        let eval_need = fp.resident_bytes() + fp.eval_bytes(16);
+        let train_need = fp.step_bytes(4);
+        assert!(eval_need > train_need, "fixture must be eval-bound");
+        let tight = Ledger::new(eval_need - 1);
+        // without eval occupancy the batch-4 step is native...
+        assert!(matches!(
+            classify(&entry, 16, 4, 0, &tight).unwrap(),
+            Feasibility::Native { .. }
+        ));
+        // ...but admitting a 64-item eval sweep tips it over
+        assert!(matches!(
+            classify(&entry, 16, 4, 64, &tight).unwrap(),
+            Feasibility::Oom { .. }
+        ));
+    }
+
+    #[test]
+    fn sweep_grid_shape_boundary_and_report() {
+        let entry = synthetic_entry("classification").unwrap();
+        let caps: Vec<u64> = [1u64, 2, 8].iter().map(|&m| m * MIB).collect();
+        let batches = [8usize, 64, 256];
+        let grid = FrontierGrid::sweep(&entry, 16, 0, &caps, &batches).unwrap();
+        assert_eq!(grid.points.len(), 9);
+        // 1 MiB == resident state: every batch OOMs, so no boundary entry
+        for p in grid.points.iter().filter(|p| p.capacity_bytes == MIB) {
+            assert!(!p.feasibility.is_feasible(), "1 MiB must OOM, got {p:?}");
+        }
+        // 8 MiB: batch 8 and 64 native (covered by mu=64), 256 streams
+        let at = |c: u64, b: usize| {
+            grid.points
+                .iter()
+                .find(|p| p.capacity_bytes == c && p.batch == b)
+                .unwrap()
+                .feasibility
+        };
+        assert!(matches!(at(8 * MIB, 8), Feasibility::Native { .. }));
+        assert!(matches!(at(8 * MIB, 64), Feasibility::Native { mu: 64 }));
+        assert!(matches!(at(8 * MIB, 256), Feasibility::Mbs { .. }));
+        // 2 MiB streams everything it fits
+        assert!(matches!(at(2 * MIB, 256), Feasibility::Mbs { .. }));
+        // boundary: largest feasible batch per capacity that has one
+        let boundary = grid.boundary();
+        assert_eq!(boundary, vec![(2 * MIB, 256), (8 * MIB, 256)]);
+        // table renders one row per capacity
+        let rendered = grid.render_table().render();
+        assert_eq!(rendered.lines().count(), 2 + caps.len());
+        assert!(rendered.contains("OOM"));
+        assert!(rendered.contains("native"));
+        // report round-trips through the JSON parser with the shared envelope
+        let json = grid.to_report(true).to_json();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(
+            parsed.get("bench").and_then(crate::util::json::Json::as_str),
+            Some("frontier")
+        );
+        assert_eq!(
+            parsed.get("mode").and_then(crate::util::json::Json::as_str),
+            Some("dry-run")
+        );
+        assert_eq!(
+            parsed.get("grid").and_then(crate::util::json::Json::as_arr).map(|a| a.len()),
+            Some(9)
+        );
+    }
+
+    #[test]
+    fn empty_axes_rejected() {
+        let entry = synthetic_entry("classification").unwrap();
+        assert!(FrontierGrid::sweep(&entry, 16, 0, &[], &[8]).is_err());
+        assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[]).is_err());
+        assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[0]).is_err());
+    }
+
+    #[test]
+    fn synthetic_entries_cover_all_tasks() {
+        for task in ["classification", "segmentation", "lm"] {
+            let e = synthetic_entry(task).unwrap();
+            assert_eq!(e.task, task);
+            assert!(!e.variants.is_empty());
+            assert_eq!(e.max_mu(16), Some(64));
+        }
+        assert!(synthetic_entry("bogus").is_err());
+    }
+
+    mod properties {
+        use super::*;
+
+        fn rand_entry(r: &mut Rng) -> ModelEntry {
+            let k = (r.below(5) + 1) as usize;
+            let mus: Vec<usize> = (0..k).map(|i| 1usize << i).collect();
+            entry_with_mus(
+                &mus,
+                r.below(1 << 12) + 1,
+                r.below(1 << 10),
+                r.below(1 << 14) + 1,
+            )
+        }
+
+        fn feasible(entry: &ModelEntry, batch: usize, capacity: u64, eval_len: usize) -> bool {
+            classify(entry, 16, batch, eval_len, &Ledger::new(capacity))
+                .unwrap()
+                .is_feasible()
+        }
+
+        #[test]
+        fn feasibility_is_monotone_in_capacity_and_batch() {
+            // if batch B fits at capacity C, then B fits at every C' > C,
+            // and every B' < B fits at C — the property that makes the
+            // frontier a *boundary* rather than a scatter
+            forall(
+                "frontier monotone",
+                200,
+                0xF05,
+                |r| {
+                    let entry = rand_entry(r);
+                    let capacity = r.below(1 << 22);
+                    let extra = r.below(1 << 20) + 1;
+                    let batch = (r.below(512) + 1) as usize;
+                    let smaller = (r.below(batch as u64) + 1) as usize;
+                    let eval_len = r.below(64) as usize;
+                    (entry, capacity, extra, batch, smaller, eval_len)
+                },
+                |(entry, capacity, extra, batch, smaller, eval_len)| {
+                    if !feasible(entry, *batch, *capacity, *eval_len) {
+                        return Ok(()); // nothing to propagate
+                    }
+                    ensure(
+                        feasible(entry, *batch, *capacity + *extra, *eval_len),
+                        format!("batch {batch} fits at {capacity} but not at more capacity"),
+                    )?;
+                    ensure(
+                        feasible(entry, *smaller, *capacity, *eval_len),
+                        format!("batch {batch} fits but smaller batch {smaller} does not"),
+                    )
+                },
+            );
+        }
+
+        #[test]
+        fn classification_agrees_with_planner_feasibility() {
+            // a point is feasible exactly when auto_mu resolves (or a
+            // covering native step fits — which implies auto_mu resolves
+            // too, since the same variant admits a clamped step)
+            forall(
+                "classify == planner",
+                200,
+                0xF06,
+                |r| {
+                    let entry = rand_entry(r);
+                    let capacity = r.below(1 << 22);
+                    let batch = (r.below(512) + 1) as usize;
+                    (entry, capacity, batch)
+                },
+                |(entry, capacity, batch)| {
+                    let class =
+                        classify(entry, 16, *batch, 0, &Ledger::new(*capacity)).unwrap();
+                    let planner_fits = planner::auto_mu(entry, 16, *batch, 0, *capacity).is_ok();
+                    ensure(
+                        class.is_feasible() == planner_fits,
+                        format!("classify {class:?} disagrees with planner (fits={planner_fits})"),
+                    )
+                },
+            );
+        }
+    }
+}

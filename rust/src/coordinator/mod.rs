@@ -10,8 +10,12 @@
 //! * [`scheduler`] — update points + LR schedules (section 3.3 step 5)
 //! * [`trainer`] — the single plan-driven epoch executor (MBS, the native
 //!   "w/o MBS" baseline and eval are all parameterizations of it)
+//! * [`frontier`] — capacity × batch feasibility sweeps: the planner made
+//!   grid-callable, classifying every point as Native / MBS(mu) / OOM
+//!   (the paper's headline figure as an instrument)
 
 pub mod accumulator;
+pub mod frontier;
 pub mod planner;
 pub mod scheduler;
 pub mod splitter;
@@ -19,6 +23,7 @@ pub mod streamer;
 pub mod trainer;
 
 pub use accumulator::{Accumulation, NormalizationMode};
+pub use frontier::{classify, Feasibility, FrontierGrid, GridPoint};
 pub use planner::{auto_mu, default_capacity, ExecutionPlan, Planner, Resolution};
 pub use scheduler::UpdateScheduler;
 pub use splitter::{MicroRange, SplitPlan};

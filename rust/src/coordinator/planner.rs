@@ -35,11 +35,22 @@ use super::splitter::SplitPlan;
 /// (`mu` is its static batch dimension), how the mini-batch splits into
 /// micro-batches, the loss-normalization scale per micro-batch, and whether
 /// this is the degenerate native plan.
+///
+/// ```
+/// use mbs::coordinator::{NormalizationMode, Planner};
+///
+/// let planner = Planner::new(8, false, NormalizationMode::Paper);
+/// let plan = planner.plan_minibatch(20); // 20 samples at mu = 8
+/// assert_eq!(plan.n_smu(), 3);           // 8 + 8 + 4
+/// assert!(plan.is_last(2));              // optimizer updates after j = 2
+/// assert_eq!(plan.device_samples(), 8);  // what the ledger charges per step
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
     /// Static (exported) micro-batch size of the executable — the padding
     /// target for every assembled micro-batch.
     pub mu: usize,
+    /// How the mini-batch splits into micro-batch ranges (Alg. 1 lines 1-6).
     pub split: SplitPlan,
     /// Loss-normalization scale for micro-batch `j` (ignored by eval).
     pub scales: Vec<f32>,
@@ -82,6 +93,8 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// A planner stamping plans for executable size `mu`; `native` makes
+    /// every plan the degenerate one-step "w/o MBS" arm.
     pub fn new(mu: usize, native: bool, norm: NormalizationMode) -> Planner {
         assert!(mu > 0, "zero micro-batch size");
         Planner { mu, native, norm }
@@ -92,6 +105,7 @@ impl Planner {
         self.mu
     }
 
+    /// Does this planner stamp degenerate native plans?
     pub fn is_native(&self) -> bool {
         self.native
     }
@@ -115,8 +129,11 @@ impl Planner {
 /// A resolved run: the chosen variant plus its memory footprint.
 #[derive(Debug, Clone)]
 pub struct Resolution {
+    /// The resolved micro-batch size (the variant's static batch dim).
     pub mu: usize,
+    /// The exported variant that will execute.
     pub variant: Variant,
+    /// Its memory footprint, reused for per-step ledger charges.
     pub footprint: Footprint,
 }
 
@@ -173,6 +190,19 @@ fn peak_bytes(fp: &Footprint, mu: usize, batch: usize, eval_len: usize) -> u64 {
 /// computes the same single padded micro-batch). Returns a structured
 /// [`MbsError::Oom`] naming the smallest exported variant when even that
 /// one does not fit.
+///
+/// Pure capacity arithmetic over manifest metadata — no artifacts needed:
+///
+/// ```
+/// use mbs::coordinator::{auto_mu, frontier::synthetic_entry};
+/// use mbs::memory::MIB;
+///
+/// let entry = synthetic_entry("classification").unwrap();
+/// // 4 MiB device: 1 MiB resident state + ~45 samples of data space,
+/// // so the largest exported power-of-two step that fits is mu = 32
+/// let res = auto_mu(&entry, 16, 1024, 0, 4 * MIB).unwrap();
+/// assert_eq!(res.mu, 32);
+/// ```
 pub fn auto_mu(
     entry: &ModelEntry,
     size: usize,

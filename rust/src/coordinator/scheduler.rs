@@ -18,6 +18,7 @@ pub struct UpdateScheduler {
 }
 
 impl UpdateScheduler {
+    /// Build from the manifest's optimizer ABI + the config's LR settings.
     pub fn new(opt: &OptimizerInfo, cfg: &TrainConfig, total_updates: u64) -> UpdateScheduler {
         let mut base_hyper = opt.hyper_defaults.clone();
         if let Some(lr) = cfg.lr {
@@ -41,6 +42,7 @@ impl UpdateScheduler {
         h
     }
 
+    /// The base learning rate (hyper[0] by ABI convention).
     pub fn base_lr(&self) -> f32 {
         self.base_hyper.first().copied().unwrap_or(0.0)
     }

@@ -9,16 +9,21 @@
 /// One micro-batch: samples `[lo, hi)` of the mini-batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MicroRange {
+    /// Micro-batch index within the mini-batch.
     pub j: usize,
+    /// First sample index (inclusive).
     pub lo: usize,
+    /// Last sample index (exclusive).
     pub hi: usize,
 }
 
 impl MicroRange {
+    /// Samples in this micro-batch.
     pub fn len(&self) -> usize {
         self.hi - self.lo
     }
 
+    /// Is the range empty? (Never true for ranges a [`SplitPlan`] builds.)
     pub fn is_empty(&self) -> bool {
         self.lo == self.hi
     }
@@ -27,9 +32,11 @@ impl MicroRange {
 /// Split plan for one mini-batch.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SplitPlan {
+    /// Mini-batch size `N_B`.
     pub n_b: usize,
     /// Effective micro-batch size after the Alg. 1 clamp.
     pub n_mu: usize,
+    /// The contiguous ranges partitioning the mini-batch.
     pub ranges: Vec<MicroRange>,
 }
 

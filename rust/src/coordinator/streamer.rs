@@ -37,13 +37,17 @@ use crate::data::{loader, BufPool, Dataset, EpochPlan, MicroBatchHost};
 
 use super::planner::{ExecutionPlan, Planner};
 
+/// Where micro-batch assembly happens relative to execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StreamingPolicy {
+    /// Assemble on a worker thread, overlapped with execution (default).
     DoubleBuffered,
+    /// Assemble inline on the runtime thread (the A2 ablation baseline).
     Synchronous,
 }
 
 impl StreamingPolicy {
+    /// Parse a CLI `--streaming` value (`double-buffered` / `sync` / …).
     pub fn parse(s: &str) -> Option<StreamingPolicy> {
         match s {
             "double-buffered" | "double_buffered" | "async" => {
@@ -54,6 +58,7 @@ impl StreamingPolicy {
         }
     }
 
+    /// CLI/report name of the policy.
     pub fn name(&self) -> &'static str {
         match self {
             StreamingPolicy::DoubleBuffered => "double-buffered",
@@ -70,6 +75,7 @@ pub struct StreamItem {
     /// The plan governing this micro-batch's mini-batch (shared across all
     /// of its micro-batches).
     pub plan: Arc<ExecutionPlan>,
+    /// The assembled (padded, masked) host tensors, leased from the pool.
     pub mb: MicroBatchHost,
     /// Host-side assembly time for this micro-batch (stage instrumentation;
     /// measured on whichever thread assembled it).
@@ -78,19 +84,30 @@ pub struct StreamItem {
 
 /// Iterator over every micro-batch of an epoch under a streaming policy.
 pub enum EpochStream {
+    /// Double-buffered: a producer thread assembles ahead over a bounded
+    /// channel.
     Buffered {
         /// `Some` until dropped; taken (disconnecting the producer) before
         /// the join in `Drop`.
         rx: Option<mpsc::Receiver<StreamItem>>,
+        /// The producer thread, joined on drop.
         handle: Option<thread::JoinHandle<()>>,
     },
+    /// Synchronous: assemble lazily in [`Iterator::next`].
     Sync {
+        /// Dataset items are assembled from.
         ds: Arc<dyn Dataset>,
+        /// Mini-batch index ranges for the epoch.
         plan: EpochPlan,
+        /// Stamps each mini-batch's [`ExecutionPlan`].
         planner: Planner,
+        /// Staging-buffer pool leases come from.
         pool: Arc<BufPool>,
+        /// Plan of the mini-batch currently being split.
         current: Option<Arc<ExecutionPlan>>,
+        /// Current mini-batch index.
         batch: usize,
+        /// Current micro-batch index within the mini-batch.
         j: usize,
     },
 }

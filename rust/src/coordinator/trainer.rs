@@ -36,21 +36,32 @@ use super::streamer::{stream_epoch, StreamItem, StreamingPolicy};
 /// Everything a finished run reports (feeds the tables and figures).
 #[derive(Debug, Clone)]
 pub struct TrainReport {
+    /// Model key the run trained.
     pub model: String,
+    /// Whether the MBS arm (true) or the native baseline (false) ran.
     pub use_mbs: bool,
+    /// Mini-batch size `N_B`.
     pub batch: usize,
     /// The micro-batch size the run executed with — planner-derived under
     /// `MicroBatchSpec::Auto`, the pinned value under `Fixed`.
     pub mu: usize,
+    /// Per-epoch training stats, in order.
     pub train_epochs: Vec<EpochStats>,
+    /// Per-epoch eval stats (empty when `skip_eval` is set).
     pub eval_epochs: Vec<EpochStats>,
+    /// The last (or only) eval pass.
     pub final_eval: EpochStats,
+    /// Wall-clock for the whole run.
     pub total_wall: Duration,
     /// Mean wall-clock per training epoch (the paper's "training time" column).
     pub epoch_wall_mean: Duration,
+    /// Largest batch the native path could have trained at this capacity.
     pub native_max_batch: usize,
+    /// Simulated device capacity the run was admitted against.
     pub capacity_bytes: u64,
+    /// PJRT output convention detected at runtime (diagnostic).
     pub output_mode: String,
+    /// Optimizer updates applied.
     pub updates: u64,
     /// Per-stage time summed over the training epochs (each epoch's own
     /// breakdown lives in its [`EpochStats::stages`]).

@@ -13,8 +13,11 @@ use super::{Buf, Dataset};
 /// plus the 0/1 sample mask that zeroes padding in loss and metrics.
 #[derive(Debug, Clone)]
 pub struct MicroBatchHost {
+    /// Inputs, padded to `mu` samples.
     pub x: Buf,
+    /// Labels, padded to `mu` samples.
     pub y: Buf,
+    /// Per-sample 0/1 mask zeroing the padding in loss and metrics.
     pub mask: Vec<f32>,
     /// Samples actually present (<= mu).
     pub actual: usize,
@@ -91,6 +94,8 @@ pub struct EpochPlan {
 }
 
 impl EpochPlan {
+    /// Shuffled plan: item order is seeded by `(seed, epoch)`, so every
+    /// epoch reshuffles reproducibly.
     pub fn new(ds_len: usize, batch: usize, seed: u64, epoch: u64) -> EpochPlan {
         assert!(batch > 0, "batch size 0");
         let mut indices: Vec<usize> = (0..ds_len).collect();
@@ -105,11 +110,13 @@ impl EpochPlan {
         EpochPlan { indices: (0..ds_len).collect(), batch, drop_last: false }
     }
 
+    /// Drop (true) or keep (false, default) the ragged final mini-batch.
     pub fn drop_last(mut self, yes: bool) -> EpochPlan {
         self.drop_last = yes;
         self
     }
 
+    /// Mini-batches this plan yields.
     pub fn num_batches(&self) -> usize {
         if self.drop_last {
             self.indices.len() / self.batch

@@ -61,6 +61,16 @@ impl PoolStats {
 /// The producing streamer thread calls [`lease`](BufPool::lease); the
 /// consuming executor thread calls [`give`](BufPool::give) once the upload
 /// is done. Shared via `Arc` so the same allocations survive across epochs.
+///
+/// ```
+/// use mbs::data::BufPool;
+///
+/// let pool = BufPool::bounded(2);
+/// let buf = pool.lease();     // cold miss: an empty buffer to assemble into
+/// pool.give(buf);             // hand it back once the upload is done
+/// let _again = pool.lease();  // steady state: a recycled allocation
+/// assert_eq!(pool.stats().hits, 1);
+/// ```
 #[derive(Debug)]
 pub struct BufPool {
     free: Mutex<Vec<MicroBatchHost>>,

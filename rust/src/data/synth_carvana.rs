@@ -12,6 +12,7 @@ use crate::util::rng::Rng;
 
 use super::{Dataset, SliceMut};
 
+/// Procedural foreground-object segmentation dataset (Carvana stand-in).
 #[derive(Debug, Clone)]
 pub struct SynthCarvana {
     size: usize,
@@ -20,6 +21,7 @@ pub struct SynthCarvana {
 }
 
 impl SynthCarvana {
+    /// `len` items of `size`×`size`×3 images with binary object masks.
     pub fn new(size: usize, len: usize, seed: u64) -> SynthCarvana {
         SynthCarvana { size, len, seed }
     }

@@ -13,6 +13,7 @@ use crate::util::rng::Rng;
 
 use super::{Dataset, SliceMut};
 
+/// Class-conditioned procedural texture dataset (Flower-102 stand-in).
 #[derive(Debug, Clone)]
 pub struct SynthFlowers {
     size: usize,
@@ -23,15 +24,18 @@ pub struct SynthFlowers {
 }
 
 impl SynthFlowers {
+    /// `len` items of `size`×`size`×3 images over `num_classes` classes.
     pub fn new(size: usize, num_classes: usize, len: usize, seed: u64) -> SynthFlowers {
         SynthFlowers { size, num_classes, len, seed, noise: 0.15 }
     }
 
+    /// Override the additive-noise amplitude (default 0.15).
     pub fn with_noise(mut self, noise: f32) -> SynthFlowers {
         self.noise = noise;
         self
     }
 
+    /// Distinct classes the labels actually use.
     pub fn num_classes(&self) -> usize {
         self.num_classes
     }

@@ -11,6 +11,7 @@ use crate::util::rng::Rng;
 
 use super::{Dataset, SliceMut};
 
+/// Deterministic affine-recurrence token sequences (LM stand-in).
 #[derive(Debug, Clone)]
 pub struct SynthText {
     vocab: usize,
@@ -23,6 +24,7 @@ pub struct SynthText {
 }
 
 impl SynthText {
+    /// `len` sequences of `seq` tokens over a `vocab`-sized vocabulary.
     pub fn new(vocab: usize, seq: usize, len: usize, seed: u64) -> SynthText {
         SynthText { vocab, seq, len, seed, families: 16, noise_prob: 0.05 }
     }

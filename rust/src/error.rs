@@ -2,6 +2,7 @@
 
 use thiserror::Error;
 
+/// Everything that can go wrong across the MBS stack.
 #[derive(Error, Debug)]
 pub enum MbsError {
     /// The simulated device cannot fit the requested step — this is the
@@ -9,24 +10,33 @@ pub enum MbsError {
     /// show *why* it failed.
     #[error("device OOM: need {needed_bytes} B but only {available_bytes} B of {capacity_bytes} B available ({context})")]
     Oom {
+        /// Bytes the rejected request would have needed in total.
         needed_bytes: u64,
+        /// Bytes still available beyond the resident state.
         available_bytes: u64,
+        /// Total simulated device capacity.
         capacity_bytes: u64,
+        /// What was being admitted ("native step N_B=64", "eval step …").
         context: String,
     },
 
+    /// Malformed or inconsistent artifact manifest.
     #[error("manifest error: {0}")]
     Manifest(String),
 
+    /// Invalid run configuration (CLI flags, config file, builder).
     #[error("config error: {0}")]
     Config(String),
 
+    /// Dataset construction or assembly failure.
     #[error("data error: {0}")]
     Data(String),
 
+    /// PJRT/XLA execution failure or protocol mismatch.
     #[error("runtime error: {0}")]
     Runtime(String),
 
+    /// Filesystem error (artifacts, checkpoints, reports).
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
 }
@@ -43,9 +53,11 @@ impl From<crate::util::json::JsonError> for MbsError {
     }
 }
 
+/// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, MbsError>;
 
 impl MbsError {
+    /// Is this the structured device-OOM error (a paper "Failed" cell)?
     pub fn is_oom(&self) -> bool {
         matches!(self, MbsError::Oom { .. })
     }

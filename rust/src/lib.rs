@@ -15,6 +15,11 @@
 //!  * **L1** — Pallas kernels (tiled MXU matmul, fused CE) embedded in the
 //!    L2 HLO.
 //!
+//! A walk through the data path (synth loaders → [`data::BufPool`] lease →
+//! streamer → plan-driven epoch executor → ledger/runtime → metrics) lives
+//! in `rust/docs/ARCHITECTURE.md`; the artifact-gated test story in
+//! `rust/docs/TESTING.md`.
+//!
 //! Quickstart (after `make artifacts`): the micro-batch size defaults to
 //! [`MicroBatchSpec::Auto`], so the planner derives the largest exported
 //! `mu` that fits the memory remaining after the model is resident — the
@@ -40,6 +45,33 @@
 //!
 //! Pin a specific exported variant with `.mu(16)` (ablations, benches), or
 //! ask for the old behaviour on the CLI with `--mu 16` vs `--mu auto`.
+//!
+//! The planner is also grid-callable without training: the
+//! [`coordinator::frontier`] module sweeps a capacity × batch grid and
+//! classifies every point as Native / MBS(mu) / OOM — the paper's headline
+//! figure as an instrument. This needs no compiled artifacts:
+//!
+//! ```
+//! use mbs::coordinator::frontier::{synthetic_entry, FrontierGrid};
+//! use mbs::memory::MIB;
+//!
+//! let entry = synthetic_entry("classification").unwrap();
+//! let grid = FrontierGrid::sweep(
+//!     &entry,
+//!     16,                      // image size
+//!     0,                       // no eval occupancy
+//!     &[2 * MIB, 8 * MIB],     // simulated device capacities
+//!     &[8, 64, 256],           // global batch sizes
+//! )
+//! .unwrap();
+//! assert_eq!(grid.points.len(), 6);
+//! println!("{}", grid.render_table().render());
+//! ```
+//!
+//! (`mbs frontier --capacities 2,8 --batches 8,64,256 --dry-run` is the CLI
+//! spelling; it also emits a `BENCH_frontier.json` artifact.)
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;
@@ -52,7 +84,9 @@ pub mod runtime;
 pub mod util;
 
 pub use config::{MicroBatchSpec, TrainConfig};
-pub use coordinator::{train, ExecutionPlan, NormalizationMode, Planner, TrainReport};
+pub use coordinator::{
+    train, ExecutionPlan, Feasibility, FrontierGrid, NormalizationMode, Planner, TrainReport,
+};
 pub use error::{MbsError, Result};
 pub use manifest::Manifest;
 pub use runtime::Engine;
@@ -61,7 +95,8 @@ pub use runtime::Engine;
 pub mod prelude {
     pub use crate::config::{MicroBatchSpec, TrainConfig};
     pub use crate::coordinator::{
-        train, ExecutionPlan, NormalizationMode, Planner, TrainReport,
+        train, ExecutionPlan, Feasibility, FrontierGrid, NormalizationMode, Planner,
+        TrainReport,
     };
     pub use crate::data::{BufPool, Dataset, PoolStats, SynthCarvana, SynthFlowers, SynthText};
     pub use crate::error::{MbsError, Result};

@@ -1,25 +1,26 @@
 //! `mbs` — Micro-Batch Streaming CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   train    train one configuration (MBS or native baseline), print report
-//!   sweep    batch-size sweep at fixed capacity (one table-4/5 row block)
-//!   bench    streaming hot-path benchmark -> machine-readable JSON
-//!   inspect  show manifest variants, footprints and native-max batches
-//!   info     platform / artifact summary
+//!   train     train one configuration (MBS or native baseline), print report
+//!   sweep     batch-size sweep at fixed capacity (one table-4/5 row block)
+//!   frontier  capacity×batch feasibility grid -> table + BENCH_frontier.json
+//!   bench     streaming hot-path benchmark -> machine-readable JSON
+//!   inspect   show manifest variants, footprints and native-max batches
+//!   info      platform / artifact summary
 
-use std::fmt::Write as _;
 use std::process::ExitCode;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mbs::coordinator::{
-    datasets_for, stream_epoch, train, NormalizationMode, Planner, StreamingPolicy,
+    datasets_for, frontier, stream_epoch, train, NormalizationMode, Planner, StreamingPolicy,
 };
-use mbs::data::{loader, BufPool, Dataset, EpochPlan, PoolStats};
+use mbs::data::{loader, BufPool, Dataset, EpochPlan};
 use mbs::memory::{Footprint, MIB};
-use mbs::metrics::{StageTimers, Table};
+use mbs::metrics::bench_report::{self, BenchReport};
+use mbs::metrics::Table;
 use mbs::util::cli::Args;
-use mbs::{Engine, Manifest, MbsError, TrainConfig, TrainReport};
+use mbs::{Engine, Manifest, MbsError, MicroBatchSpec, TrainConfig, TrainReport};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -33,6 +34,7 @@ fn main() -> ExitCode {
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("frontier") => cmd_frontier(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
@@ -62,7 +64,15 @@ USAGE: mbs <subcommand> [flags]
            [--dataset-len N] [--eval-len N] [--lr F] [--lr-decay F]
            [--config file.cfg] [--artifacts dir] [--csv out.csv]
   sweep    --model <key> --batches 16,32,64 [same flags as train]
+  frontier --capacities 1,2,4,8 --batches 8,32,64,128,256 [--dry-run=true]
+           [--model <key> | --task classification|segmentation|lm]
+           [--size N] [--eval-len N] [--epochs N] [--dataset-len N]
+           [--out BENCH_frontier.json] [--artifacts dir]
+           classify every (capacity MiB x batch) point as native / MBS(mu) /
+           OOM via the planner; without --dry-run, short timed epochs run
+           along the feasibility boundary (needs --model + artifacts)
   bench    --model <key> [same flags as train] [--out BENCH_streaming.json]
+           [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            full streaming hot-path benchmark (items/sec, per-stage means,
            pool hit rate) -> machine-readable JSON; with --assemble-only
            it needs no compiled artifacts: --task classification|segmentation|lm
@@ -88,6 +98,17 @@ fn build_config(args: &Args) -> Result<TrainConfig, MbsError> {
     }
     cfg.apply_args(args)?;
     Ok(cfg)
+}
+
+/// Parse a `--key a,b,c` integer list.
+fn parse_list<T: std::str::FromStr>(raw: &str, key: &str) -> Result<Vec<T>, MbsError> {
+    raw.split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| MbsError::Config(format!("bad {key} entry '{s}'")))
+        })
+        .collect()
 }
 
 fn cmd_train(args: &Args) -> Result<(), MbsError> {
@@ -145,11 +166,7 @@ fn cmd_train(args: &Args) -> Result<(), MbsError> {
 
 fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
     let cfg0 = build_config(args)?;
-    let batches: Vec<usize> = args
-        .get_or("batches", "16,32,64,128")
-        .split(',')
-        .map(|s| s.trim().parse().map_err(|_| MbsError::Config(format!("bad batch '{s}'"))))
-        .collect::<Result<_, _>>()?;
+    let batches: Vec<usize> = parse_list(args.get_or("batches", "16,32,64,128"), "--batches")?;
     let manifest = Manifest::load(artifacts_dir(args))?;
     let mut engine = Engine::new(manifest)?;
     let mut table = Table::new(&["batch", "mu", "w/o MBS", "w/ MBS", "time w/o", "time w/"]);
@@ -197,6 +214,123 @@ fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
     Ok(())
 }
 
+/// `frontier` — classify a (capacity MiB × batch) grid via the planner and
+/// emit an aligned table plus `BENCH_frontier.json` (shared bench schema).
+///
+/// Dry-run mode is planner-only: with `--model` it classifies against the
+/// real manifest metadata (artifacts' manifest.json, no compiled
+/// executables needed); without it, a synthetic `--task` model entry is
+/// used, so the subcommand runs on a clean checkout — CI's smoke job.
+/// Without `--dry-run`, short timed epochs run along the feasibility
+/// boundary (the largest feasible batch per capacity) and attach measured
+/// items/sec + per-stage means to those grid points; that path trains for
+/// real and therefore needs `--model` and compiled artifacts.
+fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
+    let dry_run = args.get_bool("dry-run");
+    let out = args.get_or("out", "BENCH_frontier.json").to_string();
+    let capacities_mib: Vec<u64> =
+        parse_list(args.get_or("capacities", "1,2,4,8"), "--capacities")?;
+    let batches: Vec<usize> =
+        parse_list(args.get_or("batches", "8,32,64,128,256"), "--batches")?;
+    let eval_len: usize = args.get_parse_or("eval-len", 0).map_err(MbsError::Config)?;
+    if capacities_mib.contains(&0) {
+        return Err(MbsError::Config("--capacities must be positive MiB values".into()));
+    }
+    let capacities_bytes: Vec<u64> = capacities_mib.iter().map(|&m| m * MIB).collect();
+
+    // model resolution: --model classifies the real manifest entry;
+    // otherwise a synthetic task-shaped entry (no artifacts at all)
+    let (entry, manifest) = match args.get("model") {
+        Some(model) => {
+            let manifest = Manifest::load(artifacts_dir(args))?;
+            let entry = manifest.model(model)?.clone();
+            (entry, Some(manifest))
+        }
+        None => {
+            if !dry_run {
+                return Err(MbsError::Config(
+                    "frontier timed runs need --model (and compiled artifacts); \
+                     add --dry-run=true for the planner-only sweep"
+                        .into(),
+                ));
+            }
+            (frontier::synthetic_entry(args.get_or("task", "classification"))?, None)
+        }
+    };
+    let size = match args.get_parse("size").map_err(MbsError::Config)? {
+        Some(s) => s,
+        None => entry.default_size,
+    };
+    println!(
+        "[mbs] frontier: model={} size={size} capacities(MiB)={capacities_mib:?} \
+         batches={batches:?} dry_run={dry_run}",
+        entry.name
+    );
+    let mut grid =
+        frontier::FrontierGrid::sweep(&entry, size, eval_len, &capacities_bytes, &batches)?;
+
+    if !dry_run {
+        let manifest = manifest.expect("--model checked above");
+        let mut engine = Engine::new(manifest)?;
+        let epochs: usize = args.get_parse_or("epochs", 1).map_err(MbsError::Config)?;
+        let dataset_len: usize =
+            args.get_parse_or("dataset-len", 256).map_err(MbsError::Config)?;
+        for (capacity_bytes, batch) in grid.boundary() {
+            let mut cfg = TrainConfig::default_for(&entry.name);
+            cfg.size = Some(size);
+            cfg.batch = batch;
+            cfg.epochs = epochs;
+            cfg.dataset_len = dataset_len;
+            cfg.eval_len = eval_len;
+            cfg.skip_eval = true;
+            cfg.mu = MicroBatchSpec::Auto;
+            cfg.capacity_mib = Some(capacity_bytes / MIB);
+            println!(
+                "[mbs] frontier: timing boundary point capacity={} MiB batch={batch}",
+                capacity_bytes / MIB
+            );
+            match train(&mut engine, &cfg) {
+                Ok(report) => {
+                    if let Some(p) = grid.point_mut(capacity_bytes, batch) {
+                        p.timing = Some(boundary_timing(&report));
+                    }
+                }
+                // classification said feasible; a runtime refusal (e.g. a
+                // missing exported variant) downgrades to an untimed point
+                // rather than aborting the sweep
+                Err(e) => eprintln!(
+                    "[mbs] frontier: timed run failed at capacity={} MiB batch={batch}: {e}",
+                    capacity_bytes / MIB
+                ),
+            }
+        }
+    }
+
+    println!("{}", grid.render_table().render());
+    println!(
+        "(native = whole batch in one step; mu=K xN = MBS with N accumulation steps; \
+         OOM = paper's Failed cell)"
+    );
+    grid.to_report(dry_run).write(&out)?;
+    println!("[mbs] wrote {out}");
+    Ok(())
+}
+
+/// Summarize a timed boundary run for the frontier report.
+fn boundary_timing(report: &TrainReport) -> frontier::BoundaryTiming {
+    let micro_steps: u64 = report.train_epochs.iter().map(|e| e.micro_steps as u64).sum();
+    let samples: u64 = report.train_epochs.iter().map(|e| e.samples as u64).sum();
+    let train_wall: f64 = report.train_epochs.iter().map(|e| e.wall.as_secs_f64()).sum();
+    frontier::BoundaryTiming {
+        items_per_sec: if train_wall > 0.0 { samples as f64 / train_wall } else { 0.0 },
+        epoch_wall_mean_s: report.epoch_wall_mean.as_secs_f64(),
+        micro_steps,
+        updates: report.updates,
+        stages: report.stages,
+        pool: report.pool,
+    }
+}
+
 /// `bench` — measure the streaming hot path and emit machine-readable JSON
 /// (`BENCH_streaming.json`): items/sec, per-stage means, pool hit rate.
 ///
@@ -206,54 +340,76 @@ fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
 ///  * `--assemble-only`: the host-side streamer/pool path against the
 ///    synthetic datasets, with a fresh-allocation baseline arm — runs on a
 ///    clean checkout, which is what the CI smoke job uses.
+///
+/// `--compare prev.json` then trend-checks the fresh report against a
+/// previous run's artifact: throughput keys (`*items_per_sec`,
+/// `pooled_speedup`) that drop more than `--compare-threshold` (default
+/// 0.2 = 20%) are flagged; with `--compare-strict=true` a regression also
+/// fails the command. Threshold semantics: rust/docs/ARCHITECTURE.md.
 fn cmd_bench(args: &Args) -> Result<(), MbsError> {
     let out = args.get_or("out", "BENCH_streaming.json").to_string();
-    let json = if args.get_bool("assemble-only") {
+    let report = if args.get_bool("assemble-only") {
         bench_assemble_only(args)?
     } else {
         bench_full(args)?
     };
-    std::fs::write(&out, &json)?;
+    report.write(&out)?;
     println!("[mbs] wrote {out}");
+
+    if let Some(prev) = args.get("compare") {
+        let threshold: f64 =
+            args.get_parse_or("compare-threshold", 0.2).map_err(MbsError::Config)?;
+        match bench_report::compare_files(prev, &out, threshold)? {
+            None => {
+                println!(
+                    "[mbs] trend: no comparable previous report at {prev} (first run or \
+                     different bench/mode); skipping"
+                );
+                // a gate that silently skips is no gate: strict mode fails
+                // when the requested comparison could not be performed
+                if args.get_bool("compare-strict") {
+                    return Err(MbsError::Config(format!(
+                        "--compare-strict: no comparable previous report at {prev} \
+                         (missing file or bench/mode mismatch)"
+                    )));
+                }
+            }
+            Some(outcome) => {
+                let mut table =
+                    Table::new(&["metric", "previous", "current", "delta", "status"]);
+                for row in &outcome.rows {
+                    table.row(&[
+                        row.path.clone(),
+                        format!("{:.3}", row.previous),
+                        format!("{:.3}", row.current),
+                        format!("{:+.1}%", 100.0 * row.delta),
+                        if row.regressed { "REGRESSED".into() } else { "ok".into() },
+                    ]);
+                }
+                println!("[mbs] trend vs {prev} (threshold {:.0}%):", threshold * 100.0);
+                println!("{}", table.render());
+                for path in &outcome.missing_in_previous {
+                    println!("[mbs] trend: {path} is new (absent from previous report)");
+                }
+                let regressions = outcome.regressions();
+                if regressions > 0 {
+                    println!("[mbs] trend: {regressions} metric(s) regressed beyond the threshold");
+                    if args.get_bool("compare-strict") {
+                        return Err(MbsError::Config(format!(
+                            "{regressions} bench metric(s) regressed more than {:.0}% vs {prev}",
+                            threshold * 100.0
+                        )));
+                    }
+                } else {
+                    println!("[mbs] trend: no regressions beyond the threshold");
+                }
+            }
+        }
+    }
     Ok(())
 }
 
-fn json_pool(p: &PoolStats) -> String {
-    format!(
-        "{{\"leases\": {}, \"hits\": {}, \"allocs\": {}, \"returns\": {}, \
-         \"dropped\": {}, \"warmed\": {}, \"hit_rate\": {:.6}}}",
-        p.leases,
-        p.hits,
-        p.allocs,
-        p.returns,
-        p.dropped,
-        p.warmed,
-        p.hit_rate()
-    )
-}
-
-/// Mean milliseconds per event for each stage (apply is per optimizer
-/// update, the rest per micro-step).
-fn json_stage_means(stages: &StageTimers, micro_steps: u64, updates: u64) -> String {
-    let per = |d: Duration, n: u64| {
-        if n == 0 {
-            0.0
-        } else {
-            d.as_secs_f64() * 1e3 / n as f64
-        }
-    };
-    format!(
-        "{{\"assemble\": {:.6}, \"upload\": {:.6}, \"execute\": {:.6}, \
-         \"download\": {:.6}, \"apply\": {:.6}}}",
-        per(stages.assemble, micro_steps),
-        per(stages.upload, micro_steps),
-        per(stages.execute, micro_steps),
-        per(stages.download, micro_steps),
-        per(stages.apply, updates),
-    )
-}
-
-fn bench_full(args: &Args) -> Result<String, MbsError> {
+fn bench_full(args: &Args) -> Result<BenchReport, MbsError> {
     let cfg = build_config(args)?;
     let manifest = Manifest::load(artifacts_dir(args))?;
     let mut engine = Engine::new(manifest)?;
@@ -269,38 +425,30 @@ fn bench_full(args: &Args) -> Result<String, MbsError> {
     let samples: u64 = report.train_epochs.iter().map(|e| e.samples as u64).sum();
     let train_wall: f64 = report.train_epochs.iter().map(|e| e.wall.as_secs_f64()).sum();
     let items_per_sec = if train_wall > 0.0 { samples as f64 / train_wall } else { 0.0 };
-    let mut j = String::from("{\n");
-    let _ = writeln!(j, "  \"bench\": \"streaming\",");
-    let _ = writeln!(j, "  \"mode\": \"train\",");
-    let _ = writeln!(j, "  \"model\": \"{}\",", report.model);
-    let _ = writeln!(j, "  \"batch\": {},", report.batch);
-    let _ = writeln!(j, "  \"mu\": {},", report.mu);
-    let _ = writeln!(j, "  \"epochs\": {},", report.train_epochs.len());
-    let _ = writeln!(j, "  \"streaming\": \"{}\",", cfg.streaming.name());
-    let _ = writeln!(j, "  \"prefetch\": {},", cfg.prefetch);
-    let _ = writeln!(j, "  \"updates\": {},", report.updates);
-    let _ = writeln!(j, "  \"micro_steps\": {micro_steps},");
-    let _ = writeln!(j, "  \"items_per_sec\": {items_per_sec:.3},");
-    let _ = writeln!(
-        j,
-        "  \"epoch_wall_mean_s\": {:.6},",
-        report.epoch_wall_mean.as_secs_f64()
-    );
-    let _ = writeln!(
-        j,
-        "  \"stage_means_ms\": {},",
-        json_stage_means(&report.stages, micro_steps, report.updates)
-    );
-    let _ = writeln!(j, "  \"pool\": {}", json_pool(&report.pool));
-    j.push_str("}\n");
-    Ok(j)
+    let mut rep = BenchReport::new("streaming", "train");
+    rep.str_field("model", &report.model)
+        .uint("batch", report.batch as u64)
+        .uint("mu", report.mu as u64)
+        .uint("epochs", report.train_epochs.len() as u64)
+        .str_field("streaming", cfg.streaming.name())
+        .uint("prefetch", cfg.prefetch as u64)
+        .uint("updates", report.updates)
+        .uint("micro_steps", micro_steps)
+        .num("items_per_sec", items_per_sec, 3)
+        .num("epoch_wall_mean_s", report.epoch_wall_mean.as_secs_f64(), 6)
+        .field(
+            "stage_means_ms",
+            bench_report::stage_means_value(&report.stages, micro_steps, report.updates),
+        )
+        .field("pool", bench_report::pool_value(&report.pool));
+    Ok(rep)
 }
 
 fn bench_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T, MbsError> {
     args.get_parse_or(key, default).map_err(MbsError::Config)
 }
 
-fn bench_assemble_only(args: &Args) -> Result<String, MbsError> {
+fn bench_assemble_only(args: &Args) -> Result<BenchReport, MbsError> {
     let task = args.get_or("task", "classification").to_string();
     let size: usize = bench_flag(args, "size", 8)?;
     let batch: usize = bench_flag(args, "batch", 32)?;
@@ -375,37 +523,34 @@ fn bench_assemble_only(args: &Args) -> Result<String, MbsError> {
     let overlap_rate = rate(overlap_secs);
     let stats = pool.stats();
 
-    let mut j = String::from("{\n");
-    let _ = writeln!(j, "  \"bench\": \"streaming\",");
-    let _ = writeln!(j, "  \"mode\": \"assemble-only\",");
-    let _ = writeln!(j, "  \"task\": \"{task}\",");
-    let _ = writeln!(j, "  \"size\": {size},");
-    let _ = writeln!(j, "  \"batch\": {batch},");
-    let _ = writeln!(j, "  \"mu\": {mu},");
-    let _ = writeln!(j, "  \"prefetch\": {prefetch},");
-    let _ = writeln!(j, "  \"dataset_len\": {dataset_len},");
-    let _ = writeln!(j, "  \"epochs\": {epochs},");
-    let _ = writeln!(j, "  \"micro_steps\": {micro_steps},");
-    let _ = writeln!(j, "  \"fresh_items_per_sec\": {fresh_rate:.3},");
-    let _ = writeln!(j, "  \"pooled_items_per_sec\": {pooled_rate:.3},");
-    let _ = writeln!(j, "  \"overlapped_items_per_sec\": {overlap_rate:.3},");
-    let _ = writeln!(
-        j,
-        "  \"pooled_speedup\": {:.4},",
-        if fresh_rate > 0.0 { pooled_rate / fresh_rate } else { 0.0 }
-    );
-    let _ = writeln!(
-        j,
-        "  \"assemble_mean_ms\": {:.6},",
-        if micro_steps == 0 {
-            0.0
-        } else {
-            pooled_assemble.as_secs_f64() * 1e3 / micro_steps as f64
-        }
-    );
-    let _ = writeln!(j, "  \"pool\": {}", json_pool(&stats));
-    j.push_str("}\n");
-    Ok(j)
+    let mut rep = BenchReport::new("streaming", "assemble-only");
+    rep.str_field("task", &task)
+        .uint("size", size as u64)
+        .uint("batch", batch as u64)
+        .uint("mu", mu as u64)
+        .uint("prefetch", prefetch as u64)
+        .uint("dataset_len", dataset_len as u64)
+        .uint("epochs", epochs as u64)
+        .uint("micro_steps", micro_steps)
+        .num("fresh_items_per_sec", fresh_rate, 3)
+        .num("pooled_items_per_sec", pooled_rate, 3)
+        .num("overlapped_items_per_sec", overlap_rate, 3)
+        .num(
+            "pooled_speedup",
+            if fresh_rate > 0.0 { pooled_rate / fresh_rate } else { 0.0 },
+            4,
+        )
+        .num(
+            "assemble_mean_ms",
+            if micro_steps == 0 {
+                0.0
+            } else {
+                pooled_assemble.as_secs_f64() * 1e3 / micro_steps as f64
+            },
+            6,
+        )
+        .field("pool", bench_report::pool_value(&stats));
+    Ok(rep)
 }
 
 fn cmd_inspect(args: &Args) -> Result<(), MbsError> {

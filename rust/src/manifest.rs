@@ -12,9 +12,12 @@ use std::path::{Path, PathBuf};
 use crate::error::{MbsError, Result};
 use crate::util::json::Json;
 
+/// Element type of an artifact tensor (everything here is 4-byte).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -27,61 +30,96 @@ impl Dtype {
         }
     }
 
+    /// Bytes per element (4 for both supported dtypes).
     pub fn bytes(&self) -> usize {
         4
     }
 }
 
+/// One parameter tensor's place in the flat params binary.
 #[derive(Debug, Clone)]
 pub struct ParamLeaf {
+    /// Dotted pytree path of the leaf.
     pub name: String,
+    /// Tensor shape ([] for scalars).
     pub shape: Vec<usize>,
     /// Byte offset into the params .bin file.
     pub offset: usize,
+    /// Element count (product of `shape`, min 1).
     pub elems: usize,
 }
 
+/// Optimizer metadata: slot count and the hyper-parameter ABI.
 #[derive(Debug, Clone)]
 pub struct OptimizerInfo {
+    /// Optimizer family ("sgdm", "adam").
     pub kind: String,
+    /// Param-sized device slots the optimizer keeps (momentum, m/v, …).
     pub slots: usize,
+    /// Hyper vector element names, in ABI order (index 0 is the LR).
     pub hyper_names: Vec<String>,
+    /// Default hyper vector from the export recipe.
     pub hyper_defaults: Vec<f32>,
 }
 
+/// One exported (size, mu) executable pair of a model.
 #[derive(Debug, Clone)]
 pub struct Variant {
+    /// Static micro-batch size of the exported executables.
     pub mu: usize,
     /// Image size (px) or sequence length.
     pub size: usize,
+    /// Input tensor shape (leading dim is `mu`).
     pub x_shape: Vec<usize>,
+    /// Input element type.
     pub x_dtype: Dtype,
+    /// Label tensor shape.
     pub y_shape: Vec<usize>,
+    /// Label element type.
     pub y_dtype: Dtype,
+    /// HLO text artifact of the gradient-accumulation step.
     pub accum_hlo: String,
+    /// HLO text artifact of the forward-only eval step.
     pub eval_hlo: String,
+    /// Estimated per-sample activation residency (memory model input).
     pub activation_bytes_per_sample: u64,
+    /// Batch-independent workspace estimate (XLA temporaries etc.).
     pub fixed_bytes: u64,
 }
 
+/// One model's full artifact contract.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Manifest key (also the CLI `--model` value).
     pub name: String,
+    /// Task family ("classification" / "segmentation" / "lm").
     pub task: String,
+    /// Optimizer metadata.
     pub optimizer: OptimizerInfo,
+    /// Params binary file name (relative to the artifact dir).
     pub params_bin: String,
+    /// Parameter leaves in binary order.
     pub param_leaves: Vec<ParamLeaf>,
+    /// Total bytes of the params binary.
     pub param_bytes: u64,
+    /// HLO text artifact of the optimizer-update executable.
     pub apply_hlo: String,
+    /// Metric vector semantics (parsed by `MetricKind`).
     pub metric_semantics: String,
+    /// Size used when the config does not pin one.
     pub default_size: usize,
+    /// Exported (size, mu) variants.
     pub variants: Vec<Variant>,
 }
 
+/// Typed, validated view of `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Export-time seed recorded by the python AOT step.
     pub seed: u64,
+    /// Model entries keyed by manifest name.
     pub models: BTreeMap<String, ModelEntry>,
 }
 
@@ -195,6 +233,7 @@ impl Manifest {
         Ok(Manifest { dir, seed, models })
     }
 
+    /// Look up a model entry, with the available keys in the error.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models.get(name).ok_or_else(|| {
             MbsError::Manifest(format!(
@@ -204,6 +243,7 @@ impl Manifest {
         })
     }
 
+    /// Absolute path of an artifact file named by the manifest.
     pub fn path(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }

@@ -8,12 +8,14 @@
 
 use std::collections::BTreeMap;
 
+use super::MIB;
 use crate::error::{MbsError, Result};
 
 /// Handle to a live allocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct AllocId(u64);
 
+/// Bump-style allocation tracker for one simulated device.
 #[derive(Debug)]
 pub struct Ledger {
     capacity: u64,
@@ -24,8 +26,16 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// A fresh ledger for a device with `capacity` bytes.
     pub fn new(capacity: u64) -> Ledger {
         Ledger { capacity, live: BTreeMap::new(), used: 0, next_id: 0, peak: 0 }
+    }
+
+    /// A fresh ledger for a synthetic capacity given in MiB — a
+    /// convenience for tests and callers that think in the CLI's
+    /// `--capacity-mib` unit rather than bytes.
+    pub fn with_mib(capacity_mib: u64) -> Ledger {
+        Ledger::new(capacity_mib * MIB)
     }
 
     /// Allocate `bytes` under `tag`; fails with a structured OOM when the
@@ -47,6 +57,7 @@ impl Ledger {
         Ok(id)
     }
 
+    /// Release a live allocation; freeing twice is a runtime error.
     pub fn free(&mut self, id: AllocId) -> Result<()> {
         match self.live.remove(&id) {
             Some((_, bytes)) => {
@@ -57,6 +68,7 @@ impl Ledger {
         }
     }
 
+    /// Bytes currently allocated.
     pub fn used(&self) -> u64 {
         self.used
     }
@@ -73,14 +85,17 @@ impl Ledger {
         bytes <= self.remaining()
     }
 
+    /// High-water mark of [`used`](Ledger::used) over the ledger's life.
     pub fn peak(&self) -> u64 {
         self.peak
     }
 
+    /// Total device capacity, bytes.
     pub fn capacity(&self) -> u64 {
         self.capacity
     }
 
+    /// Number of live allocations.
     pub fn live_count(&self) -> usize {
         self.live.len()
     }
@@ -112,6 +127,13 @@ mod tests {
         l.free(b).unwrap();
         assert_eq!(l.used(), 0);
         assert_eq!(l.peak(), 100);
+    }
+
+    #[test]
+    fn with_mib_scales_capacity() {
+        let l = Ledger::with_mib(3);
+        assert_eq!(l.capacity(), 3 * MIB);
+        assert_eq!(l.remaining(), 3 * MIB);
     }
 
     #[test]

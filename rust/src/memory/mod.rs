@@ -27,11 +27,13 @@ pub use ledger::Ledger;
 use crate::error::{MbsError, Result};
 use crate::manifest::{ModelEntry, Variant};
 
+/// One mebibyte — the unit `--capacity-mib` and the frontier grids speak.
 pub const MIB: u64 = 1 << 20;
 
 /// Static footprint description for one (model, variant) pair.
 #[derive(Debug, Clone)]
 pub struct Footprint {
+    /// Model parameters (f32 leaves).
     pub param_bytes: u64,
     /// Gradient accumulator (same layout as params).
     pub grad_bytes: u64,
@@ -100,11 +102,14 @@ impl Footprint {
 /// The simulated device: capacity plus the footprint arithmetic.
 #[derive(Debug, Clone)]
 pub struct MemoryModel {
+    /// Total device capacity, bytes.
     pub capacity_bytes: u64,
+    /// Footprint of the (model, variant) the device would run.
     pub footprint: Footprint,
 }
 
 impl MemoryModel {
+    /// A simulated device of `capacity_bytes` running `footprint`.
     pub fn new(capacity_bytes: u64, footprint: Footprint) -> MemoryModel {
         MemoryModel { capacity_bytes, footprint }
     }

@@ -1,0 +1,452 @@
+//! Shared machine-readable bench schema + trend comparison.
+//!
+//! Every `BENCH_*.json` artifact the CLI emits (`BENCH_streaming.json` from
+//! `mbs bench`, `BENCH_frontier.json` from `mbs frontier`) is built through
+//! [`BenchReport`], so they share one envelope:
+//!
+//! ```json
+//! {
+//!   "bench": "<suite name>",      // "streaming" | "frontier"
+//!   "mode":  "<suite mode>",      // e.g. "assemble-only" | "dry-run"
+//!   ...suite-specific fields...
+//! }
+//! ```
+//!
+//! and one vocabulary for the measurement sub-objects: throughput keys end
+//! in `items_per_sec`, per-stage means live under `stage_means_ms`
+//! ([`stage_means_value`]) and pool traffic under `pool` ([`pool_value`]).
+//! The schemas are documented field-by-field in `rust/docs/ARCHITECTURE.md`.
+//!
+//! [`compare`] implements the `--compare <prev.json>` trend check: numeric
+//! leaves whose key ends in `items_per_sec` (or is `pooled_speedup`) are
+//! treated as higher-is-better and flagged as regressions when the current
+//! value drops more than the threshold fraction below the previous one.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::data::PoolStats;
+use crate::error::Result;
+use crate::metrics::StageTimers;
+use crate::util::json::Json;
+
+/// A JSON value with *ordered* object fields, so emitted reports keep a
+/// stable, human-diffable key order (the parser side — [`Json`] — is
+/// order-insensitive, as JSON requires).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// A number rendered with a fixed decimal precision.
+    Fixed(String),
+    /// An unsigned integer.
+    UInt(u64),
+    /// A string (rendered with minimal escaping).
+    Str(String),
+    /// An array of values.
+    Arr(Vec<JsonValue>),
+    /// An object whose fields render in insertion order.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// A float with `decimals` digits after the point. Non-finite values
+    /// (which JSON cannot represent) are clamped to 0.
+    pub fn fixed(v: f64, decimals: usize) -> JsonValue {
+        let v = if v.is_finite() { v } else { 0.0 };
+        JsonValue::Fixed(format!("{v:.decimals$}"))
+    }
+
+    /// An empty ordered object to fill with [`JsonValue::push`].
+    pub fn obj() -> JsonValue {
+        JsonValue::Obj(Vec::new())
+    }
+
+    /// Append a field to an object value; panics on non-objects.
+    pub fn push(&mut self, key: &str, value: JsonValue) {
+        match self {
+            JsonValue::Obj(fields) => fields.push((key.to_string(), value)),
+            other => panic!("push on non-object JsonValue {other:?}"),
+        }
+    }
+
+    fn render_into(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent);
+        let pad_in = "  ".repeat(indent + 1);
+        match self {
+            JsonValue::Fixed(s) => out.push_str(s),
+            JsonValue::UInt(n) => {
+                let _ = write!(out, "{n}");
+            }
+            JsonValue::Str(s) => {
+                out.push('"');
+                for ch in s.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            JsonValue::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    out.push_str(&pad_in);
+                    item.render_into(out, indent + 1);
+                    out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+                }
+                out.push_str(&pad);
+                out.push(']');
+            }
+            JsonValue::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    let _ = write!(out, "{pad_in}\"{k}\": ");
+                    v.render_into(out, indent + 1);
+                    out.push_str(if i + 1 < fields.len() { ",\n" } else { "\n" });
+                }
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Render as pretty-printed JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+}
+
+/// Builder for one `BENCH_*.json` document: the shared envelope
+/// (`bench` + `mode`) followed by suite-specific fields in insertion order.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    root: JsonValue,
+}
+
+impl BenchReport {
+    /// Start a report for suite `bench` running in `mode`.
+    pub fn new(bench: &str, mode: &str) -> BenchReport {
+        let mut root = JsonValue::obj();
+        root.push("bench", JsonValue::Str(bench.to_string()));
+        root.push("mode", JsonValue::Str(mode.to_string()));
+        BenchReport { root }
+    }
+
+    /// Append a string field.
+    pub fn str_field(&mut self, key: &str, v: &str) -> &mut Self {
+        self.root.push(key, JsonValue::Str(v.to_string()));
+        self
+    }
+
+    /// Append an unsigned integer field.
+    pub fn uint(&mut self, key: &str, v: u64) -> &mut Self {
+        self.root.push(key, JsonValue::UInt(v));
+        self
+    }
+
+    /// Append a fixed-precision float field.
+    pub fn num(&mut self, key: &str, v: f64, decimals: usize) -> &mut Self {
+        self.root.push(key, JsonValue::fixed(v, decimals));
+        self
+    }
+
+    /// Append an arbitrary pre-built value (arrays, nested objects).
+    pub fn field(&mut self, key: &str, v: JsonValue) -> &mut Self {
+        self.root.push(key, v);
+        self
+    }
+
+    /// Render the document as pretty-printed JSON (trailing newline
+    /// included, so artifacts diff cleanly).
+    pub fn to_json(&self) -> String {
+        let mut s = self.root.render();
+        s.push('\n');
+        s
+    }
+
+    /// Write the rendered document to `path`.
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+/// The shared `pool` measurement object (schema: ARCHITECTURE.md).
+pub fn pool_value(p: &PoolStats) -> JsonValue {
+    let mut v = JsonValue::obj();
+    v.push("leases", JsonValue::UInt(p.leases));
+    v.push("hits", JsonValue::UInt(p.hits));
+    v.push("allocs", JsonValue::UInt(p.allocs));
+    v.push("returns", JsonValue::UInt(p.returns));
+    v.push("dropped", JsonValue::UInt(p.dropped));
+    v.push("warmed", JsonValue::UInt(p.warmed));
+    v.push("hit_rate", JsonValue::fixed(p.hit_rate(), 6));
+    v
+}
+
+/// The shared `stage_means_ms` measurement object: mean milliseconds per
+/// event for each pipeline stage (`apply` is per optimizer update, the
+/// rest per micro-step).
+pub fn stage_means_value(stages: &StageTimers, micro_steps: u64, updates: u64) -> JsonValue {
+    let per = |d: std::time::Duration, n: u64| {
+        if n == 0 {
+            0.0
+        } else {
+            d.as_secs_f64() * 1e3 / n as f64
+        }
+    };
+    let mut v = JsonValue::obj();
+    v.push("assemble", JsonValue::fixed(per(stages.assemble, micro_steps), 6));
+    v.push("upload", JsonValue::fixed(per(stages.upload, micro_steps), 6));
+    v.push("execute", JsonValue::fixed(per(stages.execute, micro_steps), 6));
+    v.push("download", JsonValue::fixed(per(stages.download, micro_steps), 6));
+    v.push("apply", JsonValue::fixed(per(stages.apply, updates), 6));
+    v
+}
+
+/// One compared metric in a trend check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompareRow {
+    /// Dot-joined path of the numeric leaf (e.g. `pooled_items_per_sec`).
+    pub path: String,
+    /// Value in the previous report.
+    pub previous: f64,
+    /// Value in the current report.
+    pub current: f64,
+    /// Relative change, `(current - previous) / previous`.
+    pub delta: f64,
+    /// Did the metric drop more than the threshold fraction?
+    pub regressed: bool,
+}
+
+/// Result of comparing two bench reports ([`compare`]).
+#[derive(Debug, Clone, Default)]
+pub struct CompareOutcome {
+    /// Every trend-tracked metric present in both reports.
+    pub rows: Vec<CompareRow>,
+    /// Paths tracked in the current report but absent from the previous
+    /// one (schema drift, not regressions).
+    pub missing_in_previous: Vec<String>,
+}
+
+impl CompareOutcome {
+    /// Number of regressed metrics.
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regressed).count()
+    }
+}
+
+/// Is this leaf key a trend-tracked, higher-is-better metric?
+///
+/// Only throughput-shaped keys are compared: wall-time and per-stage
+/// latency keys are too machine-noise-sensitive for a hard threshold (see
+/// ARCHITECTURE.md "Trend checks").
+pub fn is_trend_key(key: &str) -> bool {
+    key.ends_with("items_per_sec") || key == "pooled_speedup"
+}
+
+fn collect_numeric(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Num(n) => out.push((prefix.to_string(), *n)),
+        Json::Obj(map) => {
+            for (k, child) in map {
+                let path =
+                    if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                collect_numeric(&path, child, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, child) in items.iter().enumerate() {
+                collect_numeric(&format!("{prefix}[{i}]"), child, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Compare `current` against `previous`: every numeric leaf whose final key
+/// segment is trend-tracked ([`is_trend_key`]) and that exists in both
+/// documents becomes a [`CompareRow`]; a row regresses when
+/// `current < previous * (1 - threshold)`.
+pub fn compare(previous: &Json, current: &Json, threshold: f64) -> CompareOutcome {
+    let mut prev_leaves = Vec::new();
+    let mut cur_leaves = Vec::new();
+    collect_numeric("", previous, &mut prev_leaves);
+    collect_numeric("", current, &mut cur_leaves);
+    let leaf_key = |path: &str| -> String {
+        path.rsplit('.').next().unwrap_or(path).to_string()
+    };
+    let mut outcome = CompareOutcome::default();
+    for (path, cur) in &cur_leaves {
+        if !is_trend_key(&leaf_key(path)) {
+            continue;
+        }
+        match prev_leaves.iter().find(|(p, _)| p == path) {
+            Some((_, prev)) => {
+                let delta = if *prev != 0.0 { (cur - prev) / prev } else { 0.0 };
+                let regressed = *prev > 0.0 && *cur < prev * (1.0 - threshold);
+                outcome.rows.push(CompareRow {
+                    path: path.clone(),
+                    previous: *prev,
+                    current: *cur,
+                    delta,
+                    regressed,
+                });
+            }
+            None => outcome.missing_in_previous.push(path.clone()),
+        }
+    }
+    outcome
+}
+
+/// [`compare`] over two report files. Returns `Ok(None)` when the previous
+/// report does not exist (first run: nothing to compare), or when the two
+/// reports are from different suites/modes (comparing them would be
+/// meaningless, e.g. `assemble-only` vs a full `train` run).
+pub fn compare_files(
+    previous_path: &str,
+    current_path: &str,
+    threshold: f64,
+) -> Result<Option<CompareOutcome>> {
+    if !Path::new(previous_path).exists() {
+        return Ok(None);
+    }
+    let prev = Json::parse(&std::fs::read_to_string(previous_path)?)?;
+    let cur = Json::parse(&std::fs::read_to_string(current_path)?)?;
+    let tag = |j: &Json, k: &str| -> String {
+        j.get(k).and_then(Json::as_str).unwrap_or_default().to_string()
+    };
+    if tag(&prev, "bench") != tag(&cur, "bench") || tag(&prev, "mode") != tag(&cur, "mode") {
+        return Ok(None);
+    }
+    Ok(Some(compare(&prev, &cur, threshold)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_parseable_ordered_json() {
+        let mut rep = BenchReport::new("streaming", "assemble-only");
+        rep.uint("batch", 32)
+            .num("pooled_items_per_sec", 1234.5678, 3)
+            .str_field("task", "classification");
+        let mut nested = JsonValue::obj();
+        nested.push("hit_rate", JsonValue::fixed(0.5, 6));
+        rep.field("pool", nested);
+        let text = rep.to_json();
+        // envelope keys come first and the text round-trips through the parser
+        assert!(text.starts_with("{\n  \"bench\": \"streaming\",\n  \"mode\": \"assemble-only\","));
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("batch").and_then(Json::as_u64), Some(32));
+        assert_eq!(
+            parsed.get("pool").and_then(|p| p.get("hit_rate")).and_then(Json::as_f64),
+            Some(0.5)
+        );
+    }
+
+    #[test]
+    fn fixed_clamps_non_finite() {
+        assert_eq!(JsonValue::fixed(f64::NAN, 3), JsonValue::Fixed("0.000".into()));
+        assert_eq!(JsonValue::fixed(f64::INFINITY, 1), JsonValue::Fixed("0.0".into()));
+    }
+
+    #[test]
+    fn pool_and_stage_values_carry_schema_keys() {
+        let pool = pool_value(&PoolStats { leases: 4, hits: 3, ..Default::default() });
+        let parsed = Json::parse(&pool.render()).unwrap();
+        assert_eq!(parsed.get("leases").and_then(Json::as_u64), Some(4));
+        assert!((parsed.get("hit_rate").and_then(Json::as_f64).unwrap() - 0.75).abs() < 1e-9);
+        let stages = stage_means_value(
+            &StageTimers {
+                execute: std::time::Duration::from_millis(10),
+                ..Default::default()
+            },
+            5,
+            0,
+        );
+        let parsed = Json::parse(&stages.render()).unwrap();
+        assert!((parsed.get("execute").and_then(Json::as_f64).unwrap() - 2.0).abs() < 1e-6);
+        assert_eq!(parsed.get("apply").and_then(Json::as_f64), Some(0.0)); // zero updates: no div
+    }
+
+    #[test]
+    fn compare_flags_only_threshold_breaches() {
+        let prev = Json::parse(
+            r#"{"bench":"streaming","pooled_items_per_sec": 1000.0,
+                "nested": {"items_per_sec": 100.0}, "assemble_mean_ms": 5.0}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(
+            r#"{"bench":"streaming","pooled_items_per_sec": 950.0,
+                "nested": {"items_per_sec": 10.0}, "assemble_mean_ms": 50.0}"#,
+        )
+        .unwrap();
+        let out = compare(&prev, &cur, 0.2);
+        // latency keys are not trend-tracked
+        assert_eq!(out.rows.len(), 2);
+        let top = out.rows.iter().find(|r| r.path == "pooled_items_per_sec").unwrap();
+        assert!(!top.regressed, "5% drop is within a 20% threshold");
+        assert!((top.delta + 0.05).abs() < 1e-9);
+        let nested = out.rows.iter().find(|r| r.path == "nested.items_per_sec").unwrap();
+        assert!(nested.regressed, "90% drop must regress");
+        assert_eq!(out.regressions(), 1);
+    }
+
+    #[test]
+    fn compare_reports_schema_drift() {
+        let prev = Json::parse(r#"{"a": 1.0}"#).unwrap();
+        let cur = Json::parse(r#"{"fresh_items_per_sec": 10.0}"#).unwrap();
+        let out = compare(&prev, &cur, 0.1);
+        assert!(out.rows.is_empty());
+        assert_eq!(out.missing_in_previous, vec!["fresh_items_per_sec".to_string()]);
+    }
+
+    #[test]
+    fn compare_files_handles_missing_and_mismatched() {
+        let dir = std::env::temp_dir();
+        let cur_path = dir.join(format!("mbs-bench-cur-{}.json", std::process::id()));
+        let prev_path = dir.join(format!("mbs-bench-prev-{}.json", std::process::id()));
+        std::fs::write(&cur_path, r#"{"bench": "streaming", "mode": "assemble-only"}"#)
+            .unwrap();
+        // missing previous: first run, nothing to compare
+        let out = compare_files("/nonexistent/prev.json", cur_path.to_str().unwrap(), 0.1)
+            .unwrap();
+        assert!(out.is_none());
+        // suite mismatch: skip rather than compare apples to oranges
+        std::fs::write(&prev_path, r#"{"bench": "frontier", "mode": "dry-run"}"#).unwrap();
+        let out = compare_files(
+            prev_path.to_str().unwrap(),
+            cur_path.to_str().unwrap(),
+            0.1,
+        )
+        .unwrap();
+        assert!(out.is_none());
+        std::fs::remove_file(&cur_path).ok();
+        std::fs::remove_file(&prev_path).ok();
+    }
+
+    #[test]
+    fn trend_keys() {
+        assert!(is_trend_key("pooled_items_per_sec"));
+        assert!(is_trend_key("items_per_sec"));
+        assert!(is_trend_key("pooled_speedup"));
+        assert!(!is_trend_key("assemble_mean_ms"));
+        assert!(!is_trend_key("epoch_wall_mean_s"));
+    }
+}

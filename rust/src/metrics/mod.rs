@@ -6,20 +6,31 @@
 //!   segmentation:   [inter, union, 2|A.B|, |A|+|B|] -> IoU + Dice
 //!   lm:             [correct_tokens, tokens, 0, 0]  -> token accuracy
 
+pub mod bench_report;
+
 use std::fmt::Write as _;
 use std::time::Duration;
 
 use crate::coordinator::accumulator::Accumulation;
 use crate::error::{MbsError, Result};
 
+// Historical home of the table renderer; it now lives in `util` so every
+// CLI table (sweep, frontier, inspect, --compare) shares one helper.
+pub use crate::util::table::Table;
+
+/// Which task family a model's `f32[4]` metric vector belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MetricKind {
+    /// `[correct, valid, 0, 0]` — accuracy.
     Classification,
+    /// `[inter, union, 2|A∩B|, |A|+|B|]` — IoU + Dice.
     Segmentation,
+    /// `[correct_tokens, tokens, 0, 0]` — token accuracy.
     Lm,
 }
 
 impl MetricKind {
+    /// Parse a manifest `metric_semantics` string.
     pub fn parse(s: &str) -> Result<MetricKind> {
         match s {
             "classification" => Ok(MetricKind::Classification),
@@ -45,6 +56,7 @@ impl MetricKind {
         }
     }
 
+    /// CSV/report column name of the primary metric.
     pub fn primary_name(&self) -> &'static str {
         match self {
             MetricKind::Classification => "accuracy",
@@ -67,16 +79,33 @@ fn safe_div(a: f64, b: f64) -> f64 {
 /// device→host download of step scalars (plus any tupled-state round
 /// trip), and the optimizer-update executable. Accumulated monotonically
 /// by the runtime and the streamer; epoch deltas land in [`EpochStats`].
+///
+/// ```
+/// use mbs::metrics::StageTimers;
+/// use std::time::Duration;
+///
+/// let mut run = StageTimers::default();
+/// let step = StageTimers { execute: Duration::from_millis(5), ..Default::default() };
+/// run.merge(&step);
+/// assert_eq!(run.total(), Duration::from_millis(5));
+/// assert_eq!(run.minus(&step).execute, Duration::ZERO);
+/// ```
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StageTimers {
+    /// Host-side micro-batch assembly (streamer thread).
     pub assemble: Duration,
+    /// Host→device input upload (x/y, ragged-tail masks, scales).
     pub upload: Duration,
+    /// Device execution of the accum/eval executables.
     pub execute: Duration,
+    /// Device→host download of step scalars (and any tupled-state round trip).
     pub download: Duration,
+    /// The optimizer-update executable (per update, not per micro-step).
     pub apply: Duration,
 }
 
 impl StageTimers {
+    /// Add another timer set stage-by-stage (epoch totals into run totals).
     pub fn merge(&mut self, other: &StageTimers) {
         self.assemble += other.assemble;
         self.upload += other.upload;
@@ -108,20 +137,28 @@ impl StageTimers {
 /// Aggregated result of one epoch (train or eval pass).
 #[derive(Debug, Clone)]
 pub struct EpochStats {
+    /// 0-based epoch index.
     pub epoch: usize,
+    /// Mean per-sample loss over the epoch.
     pub mean_loss: f64,
     /// Headline metric in [0,1] (accuracy / IoU / token accuracy).
     pub primary_metric: f64,
+    /// Dice for segmentation, `None` for the other tasks.
     pub secondary_metric: Option<f64>,
+    /// Samples processed.
     pub samples: usize,
+    /// Micro-batch steps executed.
     pub micro_steps: usize,
+    /// Cumulative optimizer updates at the end of the epoch.
     pub updates: u64,
+    /// Wall-clock time of the epoch.
     pub wall: Duration,
     /// Where this epoch's wall time went, stage by stage.
     pub stages: StageTimers,
 }
 
 impl EpochStats {
+    /// Assemble epoch stats from the executor's [`Accumulation`].
     pub fn from_accumulation(
         epoch: usize,
         kind: MetricKind,
@@ -151,10 +188,12 @@ pub struct CurveWriter {
 }
 
 impl CurveWriter {
+    /// Append one epoch of a named series ("train", "eval", …).
     pub fn push(&mut self, series: &str, stats: EpochStats) {
         self.rows.push((series.to_string(), stats));
     }
 
+    /// Render all pushed rows as CSV (header included).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "series,epoch,mean_loss,primary_metric,secondary_metric,samples,micro_steps,updates,wall_secs\n",
@@ -176,56 +215,10 @@ impl CurveWriter {
         out
     }
 
+    /// Write [`CurveWriter::to_csv`] to `path`.
     pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
         std::fs::write(path, self.to_csv())?;
         Ok(())
-    }
-}
-
-/// Fixed-width table printer for bench outputs (mirrors the paper tables).
-pub struct Table {
-    header: Vec<String>,
-    rows: Vec<Vec<String>>,
-}
-
-impl Table {
-    pub fn new(header: &[&str]) -> Table {
-        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
-    }
-
-    pub fn row(&mut self, cells: &[String]) {
-        assert_eq!(cells.len(), self.header.len(), "row arity");
-        self.rows.push(cells.to_vec());
-    }
-
-    pub fn render(&self) -> String {
-        let ncol = self.header.len();
-        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
-        for row in &self.rows {
-            for c in 0..ncol {
-                widths[c] = widths[c].max(row[c].len());
-            }
-        }
-        let mut out = String::new();
-        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
-            let mut line = String::from("|");
-            for (c, cell) in cells.iter().enumerate() {
-                let _ = write!(line, " {:width$} |", cell, width = widths[c]);
-            }
-            line.push('\n');
-            line
-        };
-        out.push_str(&fmt_row(&self.header, &widths));
-        let mut sep = String::from("|");
-        for w in &widths {
-            let _ = write!(sep, "{}|", "-".repeat(w + 2));
-        }
-        sep.push('\n');
-        out.push_str(&sep);
-        for row in &self.rows {
-            out.push_str(&fmt_row(row, &widths));
-        }
-        out
     }
 }
 
@@ -300,17 +293,5 @@ mod tests {
         assert_eq!(a.total(), Duration::from_millis(155));
         // saturating: a stale (larger) snapshot clamps to zero, no panic
         assert_eq!(snapshot.minus(&a).execute, Duration::ZERO);
-    }
-
-    #[test]
-    fn table_renders_aligned() {
-        let mut t = Table::new(&["model", "acc"]);
-        t.row(&["microresnet18".into(), "88.9".into()]);
-        t.row(&["x".into(), "7".into()]);
-        let s = t.render();
-        let lines: Vec<&str> = s.lines().collect();
-        assert_eq!(lines.len(), 4);
-        assert_eq!(lines[0].len(), lines[2].len());
-        assert_eq!(lines[1].len(), lines[3].len());
     }
 }

@@ -36,14 +36,17 @@ impl Engine {
         Ok(Engine { client, manifest, exe_cache: HashMap::new() })
     }
 
+    /// The manifest this engine serves artifacts from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// The underlying PJRT client.
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

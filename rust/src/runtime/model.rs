@@ -31,7 +31,9 @@ use super::buffers;
 /// Scalar results of one accumulation / eval step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StepOutput {
+    /// Masked sum of per-sample losses over the micro-batch.
     pub loss_sum: f32,
+    /// Task-dependent metric sums (see `metrics::MetricKind`).
     pub metric: [f32; 4],
 }
 
@@ -55,9 +57,13 @@ struct UploadedInputs {
     elapsed: Duration,
 }
 
+/// Device-resident training state + compiled executables for one
+/// (model, size, mu) variant. Built by `Engine::load_model`.
 pub struct ModelRuntime {
     client: xla::PjRtClient,
+    /// The manifest entry this runtime executes.
     pub entry: ModelEntry,
+    /// The exported variant (static shapes) this runtime executes.
     pub variant: Variant,
     accum_exe: Rc<xla::PjRtLoadedExecutable>,
     eval_exe: Rc<xla::PjRtLoadedExecutable>,
@@ -156,10 +162,12 @@ impl ModelRuntime {
         })
     }
 
+    /// Parameter leaf count.
     pub fn n_leaves(&self) -> usize {
         self.n_leaves
     }
 
+    /// Accumulation steps since the last optimizer update (diagnostic).
     pub fn pending_micro_steps(&self) -> usize {
         self.pending_micro_steps
     }

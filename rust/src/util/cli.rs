@@ -6,9 +6,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positional args, `--key value` flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-flag token.
     pub subcommand: Option<String>,
+    /// Remaining non-flag tokens, in order.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     known: Vec<String>,
@@ -54,14 +57,17 @@ impl Args {
         Ok(())
     }
 
+    /// Raw flag value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Raw flag value or a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse a flag value; `Ok(None)` when absent, `Err` on a bad value.
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
         match self.get(key) {
             None => Ok(None),
@@ -72,10 +78,12 @@ impl Args {
         }
     }
 
+    /// Parse a flag value, falling back to `default` when absent.
     pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
         Ok(self.get_parse(key)?.unwrap_or(default))
     }
 
+    /// Was the flag given at all?
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

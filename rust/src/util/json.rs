@@ -12,18 +12,26 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (key order not preserved).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset context.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 
@@ -48,6 +56,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The object map, or `None` for non-objects.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -55,6 +64,7 @@ impl Json {
         }
     }
 
+    /// The array elements, or `None` for non-arrays.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -62,6 +72,7 @@ impl Json {
         }
     }
 
+    /// The string contents, or `None` for non-strings.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -69,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The number, or `None` for non-numbers.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -76,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer (rejects fractions/negatives).
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }

@@ -1,9 +1,10 @@
 //! In-tree substrates for crates the offline build cannot fetch:
 //! JSON (serde_json), CLI (clap), PRNG (rand), property testing (proptest),
-//! plus small stats helpers.
+//! plus small stats helpers and the shared terminal-table renderer.
 
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod table;

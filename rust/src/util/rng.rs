@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         // SplitMix64 to expand the seed into the full state
         let mut sm = seed;
@@ -30,6 +31,7 @@ impl Rng {
         Rng::new(self.s[0] ^ stream.wrapping_mul(0xA24BAED4963EE407).wrapping_add(1))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
             .wrapping_add(self.s[3])
@@ -61,6 +63,7 @@ impl Rng {
         ((self.next_u64() as u128 * n as u128) >> 64) as u64
     }
 
+    /// [`below`](Rng::below) for usize bounds.
     pub fn usize_below(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize
     }

@@ -1,0 +1,100 @@
+//! Fixed-width terminal table renderer.
+//!
+//! One table helper shared by every CLI surface that prints aligned rows —
+//! `mbs sweep`, `mbs frontier`, `mbs inspect` and the `--compare` trend
+//! report all render through [`Table`] instead of hand-formatting columns.
+
+use std::fmt::Write as _;
+
+/// Fixed-width table printer (mirrors the paper tables).
+///
+/// ```
+/// use mbs::util::table::Table;
+///
+/// let mut t = Table::new(&["batch", "w/ MBS"]);
+/// t.row(&["128".to_string(), "88.9%".to_string()]);
+/// let rendered = t.render();
+/// assert!(rendered.starts_with("| batch |"));
+/// ```
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with the given column headers.
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    /// Append one row; panics if the cell count does not match the header.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with every column padded to its widest cell.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(line, " {:width$} |", cell, width = widths[c]);
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "acc"]);
+        t.row(&["microresnet18".into(), "88.9".into()]);
+        t.row(&["x".into(), "7".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn rejects_mismatched_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn wide_cells_grow_columns() {
+        let mut t = Table::new(&["k"]);
+        t.row(&["a-much-wider-cell".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0].len(), lines[1].len());
+        assert!(lines[0].len() >= "a-much-wider-cell".len());
+    }
+}

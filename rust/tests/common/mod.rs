@@ -6,7 +6,9 @@
 //! `rust/artifacts` directory, or named explicitly via the
 //! `MBS_ARTIFACTS` environment variable (`1` for the default location, or
 //! a path). On a clean checkout (`cargo test -q` without `make artifacts`)
-//! they skip with a message instead of failing.
+//! they skip with a message instead of failing. The full gating story —
+//! which tests skip, how to export variants, every `MBS_ARTIFACTS` value —
+//! is documented in `rust/docs/TESTING.md`.
 
 #![allow(dead_code)] // each integration test binary uses a subset of these
 
@@ -22,7 +24,10 @@ pub fn artifacts_dir() -> Option<PathBuf> {
         Ok(v) if v.is_empty() || v == "1" || v == "true" => default_dir(),
         // explicit opt-out, not a directory literally named "0"
         Ok(v) if v == "0" || v == "false" => {
-            eprintln!("skipping artifact-dependent test: MBS_ARTIFACTS={v} (opt-out)");
+            eprintln!(
+                "skipping artifact-dependent test: MBS_ARTIFACTS={v} (opt-out) — \
+                 see rust/docs/TESTING.md"
+            );
             return None;
         }
         Ok(path) => PathBuf::from(path),
@@ -32,7 +37,8 @@ pub fn artifacts_dir() -> Option<PathBuf> {
     } else {
         eprintln!(
             "skipping artifact-dependent test: no manifest.json under {} \
-             (run `make artifacts` first, or point MBS_ARTIFACTS at an artifact dir)",
+             (run `make artifacts` first, or point MBS_ARTIFACTS at an artifact dir \
+             — see rust/docs/TESTING.md)",
             dir.display()
         );
         None

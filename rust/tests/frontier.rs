@@ -1,0 +1,134 @@
+//! Integration tests for the frontier sweep + shared bench schema, through
+//! the public API only. These are planner-level (pure capacity arithmetic)
+//! and run on a clean checkout — no compiled artifacts needed, never
+//! skipped (see rust/docs/TESTING.md).
+
+use mbs::coordinator::frontier::{synthetic_entry, Feasibility, FrontierGrid};
+use mbs::memory::MIB;
+use mbs::metrics::bench_report;
+use mbs::util::json::Json;
+
+/// The documented dry-run default grid produces all three classes and a
+/// frontier (boundary) that grows with capacity.
+#[test]
+fn dry_run_grid_reproduces_headline_shape() {
+    let entry = synthetic_entry("classification").unwrap();
+    let capacities: Vec<u64> = [1u64, 2, 4, 8].iter().map(|&m| m * MIB).collect();
+    let batches = [8usize, 32, 64, 128, 256];
+    let grid = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches).unwrap();
+    assert_eq!(grid.points.len(), 20);
+
+    let class = |c_mib: u64, b: usize| {
+        grid.points
+            .iter()
+            .find(|p| p.capacity_bytes == c_mib * MIB && p.batch == b)
+            .map(|p| p.feasibility)
+            .unwrap()
+    };
+    // 1 MiB: the resident state alone fills the device — everything OOMs
+    for &b in &batches {
+        assert!(!class(1, b).is_feasible(), "1 MiB batch {b} must OOM");
+    }
+    // the paper's headline cell: a batch 32x beyond mu streams at 2 MiB
+    assert!(matches!(class(2, 256), Feasibility::Mbs { .. }));
+    // 8 MiB: small batches are native, huge ones still stream
+    assert!(matches!(class(8, 8), Feasibility::Native { .. }));
+    assert!(matches!(class(8, 256), Feasibility::Mbs { .. }));
+
+    // monotone frontier: the largest feasible batch never shrinks as
+    // capacity grows, and feasibility is downward-closed in batch
+    let mut prev_best = 0usize;
+    for &c in &capacities {
+        let best = grid
+            .points
+            .iter()
+            .filter(|p| p.capacity_bytes == c && p.feasibility.is_feasible())
+            .map(|p| p.batch)
+            .max()
+            .unwrap_or(0);
+        assert!(best >= prev_best, "frontier shrank at capacity {c}");
+        prev_best = best;
+        for &b in &batches {
+            if b < best {
+                assert!(
+                    class(c / MIB, b).is_feasible(),
+                    "batch {b} < feasible {best} but infeasible at {c}"
+                );
+            }
+        }
+    }
+}
+
+/// BENCH_frontier.json validates against the documented shared schema:
+/// envelope keys, axes, and one grid entry per point with class-specific
+/// fields.
+#[test]
+fn frontier_report_matches_documented_schema() {
+    let entry = synthetic_entry("segmentation").unwrap();
+    let capacities: Vec<u64> = [2u64, 8].iter().map(|&m| m * MIB).collect();
+    let batches = [8usize, 128];
+    let grid = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches).unwrap();
+    let parsed = Json::parse(&grid.to_report(true).to_json()).unwrap();
+
+    assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("frontier"));
+    assert_eq!(parsed.get("mode").and_then(Json::as_str), Some("dry-run"));
+    assert_eq!(parsed.get("model").and_then(Json::as_str), Some("synthetic-segmentation"));
+    assert_eq!(
+        parsed.get("capacities_mib").and_then(Json::as_arr).map(|a| a.len()),
+        Some(2)
+    );
+    let points = parsed.get("grid").and_then(Json::as_arr).unwrap();
+    assert_eq!(points.len(), 4);
+    for p in points {
+        let class = p.get("class").and_then(Json::as_str).unwrap();
+        assert!(p.get("capacity_mib").and_then(Json::as_f64).is_some());
+        assert!(p.get("batch").and_then(Json::as_u64).is_some());
+        match class {
+            "native" | "mbs" => {
+                assert!(p.get("mu").and_then(Json::as_u64).unwrap() > 0);
+                assert!(p.get("n_smu").and_then(Json::as_u64).unwrap() > 0);
+            }
+            "oom" => {
+                assert!(p.get("needed_bytes").and_then(Json::as_u64).unwrap() > 0);
+            }
+            other => panic!("unknown class {other}"),
+        }
+    }
+}
+
+/// The --compare trend check over real report files: a throughput drop
+/// beyond the threshold is flagged, a small wobble is not.
+#[test]
+fn compare_files_flags_real_regressions() {
+    let dir = std::env::temp_dir().join(format!("mbs-frontier-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let prev = dir.join("prev.json");
+    let cur = dir.join("cur.json");
+    let report = |items_per_sec: f64| {
+        format!(
+            "{{\"bench\": \"streaming\", \"mode\": \"assemble-only\", \
+              \"pooled_items_per_sec\": {items_per_sec}, \"assemble_mean_ms\": 1.0}}"
+        )
+    };
+    std::fs::write(&prev, report(1000.0)).unwrap();
+    std::fs::write(&cur, report(700.0)).unwrap();
+    let outcome = bench_report::compare_files(
+        prev.to_str().unwrap(),
+        cur.to_str().unwrap(),
+        0.2,
+    )
+    .unwrap()
+    .expect("matching envelopes must compare");
+    assert_eq!(outcome.regressions(), 1, "a 30% drop beyond a 20% threshold regresses");
+
+    std::fs::write(&cur, report(950.0)).unwrap();
+    let outcome = bench_report::compare_files(
+        prev.to_str().unwrap(),
+        cur.to_str().unwrap(),
+        0.2,
+    )
+    .unwrap()
+    .unwrap();
+    assert_eq!(outcome.regressions(), 0, "a 5% wobble is within threshold");
+    std::fs::remove_dir_all(&dir).ok();
+}
