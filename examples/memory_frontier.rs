@@ -34,9 +34,10 @@ fn main() -> Result<()> {
                     .max()
                     .expect("sizes() only lists exported sizes");
                 // the planner's own selection: largest exported mu whose
-                // step fits this capacity (batch unbounded -> no clamping)
+                // step fits this capacity (batch unbounded -> no clamping;
+                // serial pricing — this table maps the classic frontier)
                 let (mu_cell, mbs_cell) =
-                    match planner::auto_mu(entry, size, usize::MAX, 0, cap_mib * MIB) {
+                    match planner::auto_mu(entry, size, usize::MAX, 0, cap_mib * MIB, false) {
                         Ok(res) => (res.mu.to_string(), "unbounded".to_string()),
                         Err(_) => ("-".into(), "Failed".into()),
                     };

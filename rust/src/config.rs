@@ -69,6 +69,25 @@ impl fmt::Display for MicroBatchSpec {
     }
 }
 
+/// Parse an on/off switch the way the CLI spells it (`--overlap on|off`,
+/// with `true|false|1|0` accepted as aliases; case-insensitive, matching
+/// `--prefetch auto`).
+///
+/// ```
+/// use mbs::config::parse_on_off;
+/// assert_eq!(parse_on_off("on"), Some(true));
+/// assert_eq!(parse_on_off("OFF"), Some(false));
+/// assert_eq!(parse_on_off("false"), Some(false));
+/// assert_eq!(parse_on_off("maybe"), None);
+/// ```
+pub fn parse_on_off(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Some(true),
+        "off" | "false" | "0" => Some(false),
+        _ => None,
+    }
+}
+
 /// Learning-rate schedule (the AmoebaNet recipe uses linear decay).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LrSchedule {
@@ -135,6 +154,16 @@ pub struct TrainConfig {
     pub streaming: StreamingPolicy,
     /// Micro-batches staged ahead of the one executing.
     pub prefetch: usize,
+    /// Tune `prefetch` per epoch from `StageTimers` (`--prefetch auto`):
+    /// grow while host assembly bounds the pipeline, capped at a small
+    /// multiple of `N_Smu`; the chosen value lands in `TrainReport`.
+    pub prefetch_auto: bool,
+    /// Overlapped upload/execute pipeline (`--overlap on`, the default):
+    /// double-buffer device input slots and stage micro-batch `j+1` while
+    /// step `j` is in flight. The ledger prices the extra staged slot, so
+    /// the planner may derive a smaller `mu` than with `--overlap off` —
+    /// which stays available as the serial byte-identity oracle.
+    pub overlap: bool,
     /// Seed for dataset generation and epoch shuffles.
     pub seed: u64,
     /// Learning-rate schedule applied across optimizer updates.
@@ -168,6 +197,8 @@ impl TrainConfig {
             norm_mode: NormalizationMode::Paper,
             streaming: StreamingPolicy::DoubleBuffered,
             prefetch: 2,
+            prefetch_auto: false,
+            overlap: true,
             seed: 0,
             lr_schedule: LrSchedule::Constant,
             lr: None,
@@ -211,7 +242,17 @@ impl TrainConfig {
             "streaming" => {
                 self.streaming = StreamingPolicy::parse(value).ok_or_else(|| bad(key, value))?
             }
-            "prefetch" => self.prefetch = value.parse().map_err(|_| bad(key, value))?,
+            "prefetch" => {
+                if value.eq_ignore_ascii_case("auto") {
+                    self.prefetch_auto = true;
+                } else {
+                    self.prefetch = value.parse().map_err(|_| bad(key, value))?;
+                    self.prefetch_auto = false;
+                }
+            }
+            "overlap" => {
+                self.overlap = parse_on_off(value).ok_or_else(|| bad(key, value))?
+            }
             "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
             "lr" => self.lr = Some(value.parse().map_err(|_| bad(key, value))?),
             "lr-decay" | "lr_decay" => {
@@ -248,7 +289,7 @@ impl TrainConfig {
         for key in [
             "model", "size", "mu", "batch", "epochs", "dataset-len", "eval-len",
             "capacity-mib", "num-classes", "mbs", "norm", "streaming", "prefetch",
-            "seed", "lr", "lr-decay", "skip-eval",
+            "overlap", "seed", "lr", "lr-decay", "skip-eval",
         ] {
             if let Some(v) = args.get(key) {
                 self.set(key, v)?;
@@ -261,7 +302,7 @@ impl TrainConfig {
     pub const ARG_KEYS: &'static [&'static str] = &[
         "model", "size", "mu", "batch", "epochs", "dataset-len", "eval-len",
         "capacity-mib", "num-classes", "mbs", "norm", "streaming", "prefetch",
-        "seed", "lr", "lr-decay", "skip-eval", "config",
+        "overlap", "seed", "lr", "lr-decay", "skip-eval", "config",
     ];
 
     /// Reject configurations no run mode can execute.
@@ -344,6 +385,23 @@ impl TrainConfigBuilder {
         self.cfg.streaming = p;
         self
     }
+    /// Overlapped upload/execute pipeline on/off (`false` = the serial
+    /// byte-identity oracle).
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.cfg.overlap = on;
+        self
+    }
+    /// Initial prefetch depth (micro-batches staged ahead).
+    pub fn prefetch(mut self, n: usize) -> Self {
+        self.cfg.prefetch = n;
+        self
+    }
+    /// Tune the prefetch depth per epoch from `StageTimers`
+    /// (`--prefetch auto`).
+    pub fn prefetch_auto(mut self) -> Self {
+        self.cfg.prefetch_auto = true;
+        self
+    }
     /// Run seed (datasets + shuffles).
     pub fn seed(mut self, s: u64) -> Self {
         self.cfg.seed = s;
@@ -422,6 +480,41 @@ mod tests {
         assert!(matches!(c.lr_schedule, LrSchedule::LinearDecay { .. }));
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("batch", "abc").is_err());
+    }
+
+    #[test]
+    fn overlap_key_parses_on_off() {
+        let mut c = TrainConfig::default_for("m");
+        assert!(c.overlap, "overlap must default on");
+        c.set("overlap", "off").unwrap();
+        assert!(!c.overlap);
+        c.set("overlap", "on").unwrap();
+        assert!(c.overlap);
+        c.set("overlap", "OFF").unwrap(); // case-insensitive like --prefetch auto
+        assert!(!c.overlap);
+        c.set("overlap", "false").unwrap();
+        assert!(!c.overlap);
+        assert!(c.set("overlap", "sideways").is_err());
+        // builder spelling
+        let b = TrainConfig::builder("m").overlap(false).build();
+        assert!(!b.overlap);
+    }
+
+    #[test]
+    fn prefetch_key_accepts_auto_and_numbers() {
+        let mut c = TrainConfig::default_for("m");
+        assert!(!c.prefetch_auto);
+        c.set("prefetch", "auto").unwrap();
+        assert!(c.prefetch_auto);
+        assert_eq!(c.prefetch, 2, "auto keeps the default as the starting depth");
+        // an explicit number pins the depth and turns tuning back off
+        c.set("prefetch", "5").unwrap();
+        assert!(!c.prefetch_auto);
+        assert_eq!(c.prefetch, 5);
+        assert!(c.set("prefetch", "many").is_err());
+        let b = TrainConfig::builder("m").prefetch(3).prefetch_auto().build();
+        assert!(b.prefetch_auto);
+        assert_eq!(b.prefetch, 3);
     }
 
     #[test]

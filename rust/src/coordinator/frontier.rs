@@ -134,6 +134,10 @@ pub struct FrontierGrid {
     pub size: usize,
     /// Eval-set occupancy the admission check covered (0 = train-only).
     pub eval_len: usize,
+    /// Was the overlapped pipeline's second in-flight input slot priced
+    /// into every classification? (A point can legitimately flip
+    /// `MBS(mu)` → `MBS(mu/2)` — or to OOM — when it is.)
+    pub overlap: bool,
     /// Capacity axis, bytes, as given.
     pub capacities_bytes: Vec<u64>,
     /// Batch axis, as given.
@@ -151,13 +155,17 @@ pub struct FrontierGrid {
 /// eval sweep, if `eval_len > 0`) fits; otherwise the planner's
 /// [`auto_mu`](crate::coordinator::planner::auto_mu) either derives a
 /// streaming micro-batch ([`Feasibility::Mbs`]) or reports the structured
-/// OOM ([`Feasibility::Oom`]).
+/// OOM ([`Feasibility::Oom`]). With `overlap` every check additionally
+/// prices the pipeline's second staged input slot
+/// ([`Footprint::overlap_bytes`]) — keeping classification in lock-step
+/// with what `auto_mu` admits (the classify == auto_mu property).
 pub fn classify(
     entry: &ModelEntry,
     size: usize,
     batch: usize,
     eval_len: usize,
     ledger: &Ledger,
+    overlap: bool,
 ) -> Result<Feasibility> {
     let budget = ledger.remaining();
     // native arm: the smallest exported executable covering the whole batch
@@ -169,14 +177,14 @@ pub fn classify(
         .min_by_key(|v| v.mu);
     if let Some(v) = covering {
         let fp = Footprint::from_manifest(entry, v);
-        let need = fp
-            .step_bytes(batch)
-            .max(fp.resident_bytes() + fp.eval_bytes(v.mu.min(eval_len)));
-        if need <= budget {
+        // the planner's own peak formula (v.mu >= batch, so the training
+        // term is the whole N_B-sample step) — shared so classification
+        // can never drift from admission
+        if planner::peak_bytes(&fp, v.mu, batch, eval_len, overlap) <= budget {
             return Ok(Feasibility::Native { mu: v.mu });
         }
     }
-    match planner::auto_mu(entry, size, batch, eval_len, budget) {
+    match planner::auto_mu(entry, size, batch, eval_len, budget, overlap) {
         // a manifest with non-uniform per-variant footprints can admit a
         // *different* covering variant than the one checked above; a single
         // step covering the whole batch is native execution, not streaming
@@ -191,13 +199,16 @@ impl FrontierGrid {
     /// Classify every point of `capacities_bytes` × `batches` for
     /// `entry` at `size`. Each capacity is materialized as a fresh
     /// [`Ledger`] so the classification exercises the same remaining-budget
-    /// query the training path uses.
+    /// query the training path uses. `overlap` prices the pipeline's
+    /// second in-flight input slot at every point (`--overlap on`, the
+    /// CLI default).
     pub fn sweep(
         entry: &ModelEntry,
         size: usize,
         eval_len: usize,
         capacities_bytes: &[u64],
         batches: &[usize],
+        overlap: bool,
     ) -> Result<FrontierGrid> {
         if capacities_bytes.is_empty() || batches.is_empty() {
             return Err(MbsError::Config("frontier needs ≥1 capacity and ≥1 batch".into()));
@@ -209,7 +220,7 @@ impl FrontierGrid {
         for &capacity in capacities_bytes {
             let ledger = Ledger::new(capacity);
             for &batch in batches {
-                let feasibility = classify(entry, size, batch, eval_len, &ledger)?;
+                let feasibility = classify(entry, size, batch, eval_len, &ledger, overlap)?;
                 points.push(GridPoint {
                     capacity_bytes: capacity,
                     batch,
@@ -222,6 +233,7 @@ impl FrontierGrid {
             model: entry.name.clone(),
             size,
             eval_len,
+            overlap,
             capacities_bytes: capacities_bytes.to_vec(),
             batches: batches.to_vec(),
             points,
@@ -233,6 +245,18 @@ impl FrontierGrid {
         self.points
             .iter_mut()
             .find(|p| p.capacity_bytes == capacity_bytes && p.batch == batch)
+    }
+
+    /// Every feasible `(capacity, batch)` point in grid order — what
+    /// `mbs frontier --time-all` pays timed runs for, filling the paper's
+    /// fig.-3-style throughput surface over the whole feasible region
+    /// instead of just its [`boundary`](FrontierGrid::boundary).
+    pub fn feasible_points(&self) -> Vec<(u64, usize)> {
+        self.points
+            .iter()
+            .filter(|p| p.feasibility.is_feasible())
+            .map(|p| (p.capacity_bytes, p.batch))
+            .collect()
     }
 
     /// The feasibility boundary: for each capacity (in grid order), the
@@ -288,6 +312,7 @@ impl FrontierGrid {
         rep.str_field("model", &self.model)
             .uint("size", self.size as u64)
             .uint("eval_len", self.eval_len as u64)
+            .str_field("overlap", if self.overlap { "on" } else { "off" })
             .field(
                 "capacities_mib",
                 JsonValue::Arr(
@@ -330,6 +355,10 @@ impl FrontierGrid {
                     timing.push("epoch_wall_mean_s", JsonValue::fixed(t.epoch_wall_mean_s, 6));
                     timing.push("micro_steps", JsonValue::UInt(t.micro_steps));
                     timing.push("updates", JsonValue::UInt(t.updates));
+                    timing.push(
+                        "overlap_efficiency",
+                        JsonValue::fixed(t.stages.overlap_efficiency(), 4),
+                    );
                     timing.push(
                         "stage_means_ms",
                         bench_report::stage_means_value(&t.stages, t.micro_steps, t.updates),
@@ -467,7 +496,7 @@ mod tests {
         let step_mu2 = 300 + 2 * (1000 + 24); // 2348: smallest variant's step
         // exactly at the frontier: the smallest variant streams any batch
         let at = Ledger::new(step_mu2);
-        match classify(&entry, 16, 64, 0, &at).unwrap() {
+        match classify(&entry, 16, 64, 0, &at, false).unwrap() {
             Feasibility::Mbs { mu, n_smu } => {
                 assert_eq!(mu, 2);
                 assert_eq!(n_smu, 32);
@@ -476,14 +505,14 @@ mod tests {
         }
         // one byte below: structured OOM carrying the hand-computed need
         let below = Ledger::new(step_mu2 - 1);
-        match classify(&entry, 16, 64, 0, &below).unwrap() {
+        match classify(&entry, 16, 64, 0, &below, false).unwrap() {
             Feasibility::Oom { needed_bytes } => assert_eq!(needed_bytes, step_mu2),
             other => panic!("want Oom below the boundary, got {other:?}"),
         }
         // a batch the small variant covers natively at the same capacity
         let native = Ledger::new(step_mu2);
         assert_eq!(
-            classify(&entry, 16, 2, 0, &native).unwrap(),
+            classify(&entry, 16, 2, 0, &native, false).unwrap(),
             Feasibility::Native { mu: 2 }
         );
         // charging the ledger moves the frontier: pinned bytes shrink
@@ -491,7 +520,7 @@ mod tests {
         let mut charged = Ledger::new(step_mu2);
         charged.alloc("pinned", 1).unwrap();
         assert!(matches!(
-            classify(&entry, 16, 64, 0, &charged).unwrap(),
+            classify(&entry, 16, 64, 0, &charged, false).unwrap(),
             Feasibility::Oom { .. }
         ));
     }
@@ -502,7 +531,7 @@ mod tests {
         // the point is MBS, not native (matches `resolve`'s coverage rule)
         let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
         let roomy = Ledger::new(1 << 30);
-        match classify(&entry, 16, 64, 0, &roomy).unwrap() {
+        match classify(&entry, 16, 64, 0, &roomy, false).unwrap() {
             Feasibility::Mbs { mu, n_smu } => {
                 assert_eq!(mu, 8);
                 assert_eq!(n_smu, 8);
@@ -511,7 +540,7 @@ mod tests {
         }
         // batch 8 is covered and fits: native
         assert_eq!(
-            classify(&entry, 16, 8, 0, &roomy).unwrap(),
+            classify(&entry, 16, 8, 0, &roomy, false).unwrap(),
             Feasibility::Native { mu: 8 }
         );
     }
@@ -526,11 +555,11 @@ mod tests {
         entry.variants[0].activation_bytes_per_sample = 10_000;
         let fp16 = Footprint::from_manifest(&entry, &entry.variants[1]);
         let budget = fp16.step_bytes(8); // fits mu=16's 8-sample step only
-        let class = classify(&entry, 16, 8, 0, &Ledger::new(budget)).unwrap();
+        let class = classify(&entry, 16, 8, 0, &Ledger::new(budget), false).unwrap();
         assert_eq!(class, Feasibility::Native { mu: 16 });
         // and a genuine streaming point always carries at least two steps
         let budget = fp16.step_bytes(16); // fits the full mu=16 step
-        match classify(&entry, 16, 64, 0, &Ledger::new(budget)).unwrap() {
+        match classify(&entry, 16, 64, 0, &Ledger::new(budget), false).unwrap() {
             Feasibility::Mbs { mu, n_smu } => {
                 assert_eq!(mu, 16);
                 assert_eq!(n_smu, 4);
@@ -551,12 +580,12 @@ mod tests {
         let tight = Ledger::new(eval_need - 1);
         // without eval occupancy the batch-4 step is native...
         assert!(matches!(
-            classify(&entry, 16, 4, 0, &tight).unwrap(),
+            classify(&entry, 16, 4, 0, &tight, false).unwrap(),
             Feasibility::Native { .. }
         ));
         // ...but admitting a 64-item eval sweep tips it over
         assert!(matches!(
-            classify(&entry, 16, 4, 64, &tight).unwrap(),
+            classify(&entry, 16, 4, 64, &tight, false).unwrap(),
             Feasibility::Oom { .. }
         ));
     }
@@ -566,7 +595,7 @@ mod tests {
         let entry = synthetic_entry("classification").unwrap();
         let caps: Vec<u64> = [1u64, 2, 8].iter().map(|&m| m * MIB).collect();
         let batches = [8usize, 64, 256];
-        let grid = FrontierGrid::sweep(&entry, 16, 0, &caps, &batches).unwrap();
+        let grid = FrontierGrid::sweep(&entry, 16, 0, &caps, &batches, false).unwrap();
         assert_eq!(grid.points.len(), 9);
         // 1 MiB == resident state: every batch OOMs, so no boundary entry
         for p in grid.points.iter().filter(|p| p.capacity_bytes == MIB) {
@@ -611,11 +640,54 @@ mod tests {
     }
 
     #[test]
+    fn overlap_residency_flips_points_and_is_reported() {
+        // ISSUE 4: a budget sized exactly for the serial mu=4 step has no
+        // room for the staged second input slot, so pricing overlap flips
+        // the point MBS(4) -> MBS(2) without touching serial results
+        let entry = entry_with_mus(&[2, 4], 1000, 0, 100);
+        let fp4 = Footprint::from_manifest(&entry, entry.variant(16, 4).unwrap());
+        let budget = fp4.step_bytes(4);
+        let serial = classify(&entry, 16, 64, 0, &Ledger::new(budget), false).unwrap();
+        assert_eq!(serial, Feasibility::Mbs { mu: 4, n_smu: 16 });
+        let overlapped = classify(&entry, 16, 64, 0, &Ledger::new(budget), true).unwrap();
+        assert_eq!(overlapped, Feasibility::Mbs { mu: 2, n_smu: 32 });
+        // and the grid records which pricing produced it
+        let grid =
+            FrontierGrid::sweep(&entry, 16, 0, &[budget], &[64], true).unwrap();
+        assert!(grid.overlap);
+        let json = grid.to_report(true).to_json();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(
+            parsed.get("overlap").and_then(crate::util::json::Json::as_str),
+            Some("on")
+        );
+    }
+
+    #[test]
+    fn feasible_points_cover_the_whole_region() {
+        let entry = synthetic_entry("classification").unwrap();
+        let caps: Vec<u64> = [1u64, 2, 8].iter().map(|&m| m * MIB).collect();
+        let batches = [8usize, 64, 256];
+        let grid = FrontierGrid::sweep(&entry, 16, 0, &caps, &batches, false).unwrap();
+        let all = grid.feasible_points();
+        // every feasible grid point is listed, in grid order…
+        assert_eq!(
+            all.len(),
+            grid.points.iter().filter(|p| p.feasibility.is_feasible()).count()
+        );
+        // …and the boundary (largest batch per capacity) is a subset
+        for b in grid.boundary() {
+            assert!(all.contains(&b), "boundary point {b:?} missing from feasible set");
+        }
+        assert!(all.len() > grid.boundary().len(), "fixture should have interior points");
+    }
+
+    #[test]
     fn empty_axes_rejected() {
         let entry = synthetic_entry("classification").unwrap();
-        assert!(FrontierGrid::sweep(&entry, 16, 0, &[], &[8]).is_err());
-        assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[]).is_err());
-        assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[0]).is_err());
+        assert!(FrontierGrid::sweep(&entry, 16, 0, &[], &[8], false).is_err());
+        assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[], false).is_err());
+        assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[0], false).is_err());
     }
 
     #[test]
@@ -643,8 +715,14 @@ mod tests {
             )
         }
 
-        fn feasible(entry: &ModelEntry, batch: usize, capacity: u64, eval_len: usize) -> bool {
-            classify(entry, 16, batch, eval_len, &Ledger::new(capacity))
+        fn feasible_in(
+            entry: &ModelEntry,
+            batch: usize,
+            capacity: u64,
+            eval_len: usize,
+            overlap: bool,
+        ) -> bool {
+            classify(entry, 16, batch, eval_len, &Ledger::new(capacity), overlap)
                 .unwrap()
                 .is_feasible()
         }
@@ -665,20 +743,29 @@ mod tests {
                     let batch = (r.below(512) + 1) as usize;
                     let smaller = (r.below(batch as u64) + 1) as usize;
                     let eval_len = r.below(64) as usize;
-                    (entry, capacity, extra, batch, smaller, eval_len)
+                    let overlap = r.below(2) == 1;
+                    (entry, capacity, extra, batch, smaller, eval_len, overlap)
                 },
-                |(entry, capacity, extra, batch, smaller, eval_len)| {
-                    if !feasible(entry, *batch, *capacity, *eval_len) {
+                |(entry, capacity, extra, batch, smaller, eval_len, overlap)| {
+                    if !feasible_in(entry, *batch, *capacity, *eval_len, *overlap) {
                         return Ok(()); // nothing to propagate
                     }
                     ensure(
-                        feasible(entry, *batch, *capacity + *extra, *eval_len),
+                        feasible_in(entry, *batch, *capacity + *extra, *eval_len, *overlap),
                         format!("batch {batch} fits at {capacity} but not at more capacity"),
                     )?;
                     ensure(
-                        feasible(entry, *smaller, *capacity, *eval_len),
+                        feasible_in(entry, *smaller, *capacity, *eval_len, *overlap),
                         format!("batch {batch} fits but smaller batch {smaller} does not"),
-                    )
+                    )?;
+                    // overlap residency can only shrink the feasible region
+                    if *overlap {
+                        ensure(
+                            feasible_in(entry, *batch, *capacity, *eval_len, false),
+                            format!("batch {batch} fits WITH overlap but not without"),
+                        )?;
+                    }
+                    Ok(())
                 },
             );
         }
@@ -687,7 +774,9 @@ mod tests {
         fn classification_agrees_with_planner_feasibility() {
             // a point is feasible exactly when auto_mu resolves (or a
             // covering native step fits — which implies auto_mu resolves
-            // too, since the same variant admits a clamped step)
+            // too, since the same variant admits a clamped step) — and the
+            // property must survive overlap residency being priced into
+            // BOTH sides (ISSUE 4: classify == auto_mu stays intact)
             forall(
                 "classify == planner",
                 200,
@@ -696,16 +785,33 @@ mod tests {
                     let entry = rand_entry(r);
                     let capacity = r.below(1 << 22);
                     let batch = (r.below(512) + 1) as usize;
-                    (entry, capacity, batch)
+                    let overlap = r.below(2) == 1;
+                    (entry, capacity, batch, overlap)
                 },
-                |(entry, capacity, batch)| {
+                |(entry, capacity, batch, overlap)| {
                     let class =
-                        classify(entry, 16, *batch, 0, &Ledger::new(*capacity)).unwrap();
-                    let planner_fits = planner::auto_mu(entry, 16, *batch, 0, *capacity).is_ok();
+                        classify(entry, 16, *batch, 0, &Ledger::new(*capacity), *overlap)
+                            .unwrap();
+                    let planner_fits =
+                        planner::auto_mu(entry, 16, *batch, 0, *capacity, *overlap).is_ok();
                     ensure(
                         class.is_feasible() == planner_fits,
-                        format!("classify {class:?} disagrees with planner (fits={planner_fits})"),
-                    )
+                        format!(
+                            "classify {class:?} disagrees with planner \
+                             (fits={planner_fits}, overlap={overlap})"
+                        ),
+                    )?;
+                    // and whenever both classify, the chosen mu agrees
+                    if let (Some(mu), Ok(res)) = (
+                        class.mu(),
+                        planner::auto_mu(entry, 16, *batch, 0, *capacity, *overlap),
+                    ) {
+                        ensure(
+                            mu == res.mu || matches!(class, Feasibility::Native { .. }),
+                            format!("classify mu={mu} != planner mu={}", res.mu),
+                        )?;
+                    }
+                    Ok(())
                 },
             );
         }

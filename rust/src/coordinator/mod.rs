@@ -28,4 +28,4 @@ pub use planner::{auto_mu, default_capacity, ExecutionPlan, Planner, Resolution}
 pub use scheduler::UpdateScheduler;
 pub use splitter::{MicroRange, SplitPlan};
 pub use streamer::{stream_epoch, EpochStream, StreamingPolicy};
-pub use trainer::{datasets_for, evaluate, evaluate_with, train, TrainReport};
+pub use trainer::{datasets_for, evaluate, evaluate_pooled, evaluate_with, train, TrainReport};

@@ -162,10 +162,21 @@ fn coverage_error(batch: usize, max_mu: usize) -> MbsError {
 
 /// Evaluation holds `min(mu, eval_len)` forward-only samples on the
 /// device; admission covers it up front so a run that trains never OOMs
-/// at its first eval sweep.
-fn check_eval(fp: &Footprint, mu: usize, eval_len: usize, budget: u64) -> Result<()> {
+/// at its first eval sweep. With `overlap` the pipeline keeps a second
+/// staged input slot resident while the step executes, so that residency
+/// is priced in too.
+fn check_eval(
+    fp: &Footprint,
+    mu: usize,
+    eval_len: usize,
+    budget: u64,
+    overlap: bool,
+) -> Result<()> {
     let n = mu.min(eval_len);
-    let need = fp.resident_bytes() + fp.eval_bytes(n);
+    let mut need = fp.resident_bytes() + fp.eval_bytes(n);
+    if overlap {
+        need += fp.overlap_bytes(n);
+    }
     if need > budget {
         return Err(MbsError::Oom {
             needed_bytes: need,
@@ -177,19 +188,54 @@ fn check_eval(fp: &Footprint, mu: usize, eval_len: usize, budget: u64) -> Result
     Ok(())
 }
 
+/// Extra admission for the overlapped pipeline: the executing step plus
+/// the *second* staged in-flight input slot must fit together — the
+/// residency `trainer::run_epoch` actually charges the ledger mid-pipeline.
+fn check_overlap(fp: &Footprint, n: usize, budget: u64, context: &str) -> Result<()> {
+    let need = fp.step_bytes(n) + fp.overlap_bytes(n);
+    if need > budget {
+        return Err(MbsError::Oom {
+            needed_bytes: need,
+            available_bytes: budget.saturating_sub(fp.resident_bytes()),
+            capacity_bytes: budget,
+            context: format!("{context} + overlap in-flight inputs"),
+        });
+    }
+    Ok(())
+}
+
 /// Peak bytes this variant's run needs: the training step with
 /// `min(mu, batch)` samples, or the forward-only eval sweep with
-/// `min(mu, eval_len)` samples — whichever is larger.
-fn peak_bytes(fp: &Footprint, mu: usize, batch: usize, eval_len: usize) -> u64 {
-    fp.step_bytes(mu.min(batch)).max(fp.resident_bytes() + fp.eval_bytes(mu.min(eval_len)))
+/// `min(mu, eval_len)` samples — whichever is larger. With `overlap` both
+/// peaks additionally carry one staged in-flight input slot
+/// ([`Footprint::overlap_bytes`]), which is what can flip a point from
+/// `mu` to `mu/2` when the pipeline is on. `pub(crate)` so
+/// `frontier::classify` admits its native arm with the exact same
+/// formula — classification and admission must never drift.
+pub(crate) fn peak_bytes(
+    fp: &Footprint,
+    mu: usize,
+    batch: usize,
+    eval_len: usize,
+    overlap: bool,
+) -> u64 {
+    let n_train = mu.min(batch);
+    let n_eval = mu.min(eval_len);
+    let extra = |n: usize| if overlap { fp.overlap_bytes(n) } else { 0 };
+    let train = fp.step_bytes(n_train) + extra(n_train);
+    let eval = fp.resident_bytes() + fp.eval_bytes(n_eval) + extra(n_eval);
+    train.max(eval)
 }
 
 /// The Alg. 1 selection: the exported variant whose step keeps the most
 /// samples on the device within `budget` (counting the eval sweep's
 /// occupancy too), preferring less padding on ties (every `mu >= batch`
-/// computes the same single padded micro-batch). Returns a structured
-/// [`MbsError::Oom`] naming the smallest exported variant when even that
-/// one does not fit.
+/// computes the same single padded micro-batch). With `overlap` the peak
+/// additionally prices the second in-flight input slot the overlapped
+/// pipeline keeps staged while a step executes — a stricter budget, so
+/// (for uniform per-variant footprints) the chosen `mu` can only shrink.
+/// Returns a structured [`MbsError::Oom`] naming the smallest exported
+/// variant when even that one does not fit.
 ///
 /// Pure capacity arithmetic over manifest metadata — no artifacts needed:
 ///
@@ -200,8 +246,11 @@ fn peak_bytes(fp: &Footprint, mu: usize, batch: usize, eval_len: usize) -> u64 {
 /// let entry = synthetic_entry("classification").unwrap();
 /// // 4 MiB device: 1 MiB resident state + ~45 samples of data space,
 /// // so the largest exported power-of-two step that fits is mu = 32
-/// let res = auto_mu(&entry, 16, 1024, 0, 4 * MIB).unwrap();
-/// assert_eq!(res.mu, 32);
+/// let serial = auto_mu(&entry, 16, 1024, 0, 4 * MIB, false).unwrap();
+/// assert_eq!(serial.mu, 32);
+/// // overlap charges one extra staged input slot; never a larger mu
+/// let overlapped = auto_mu(&entry, 16, 1024, 0, 4 * MIB, true).unwrap();
+/// assert!(overlapped.mu <= serial.mu);
 /// ```
 pub fn auto_mu(
     entry: &ModelEntry,
@@ -209,6 +258,7 @@ pub fn auto_mu(
     batch: usize,
     eval_len: usize,
     budget: u64,
+    overlap: bool,
 ) -> Result<Resolution> {
     let cands = candidates(entry, size)?;
     let chosen = cands
@@ -216,7 +266,7 @@ pub fn auto_mu(
         .copied()
         .filter(|v| {
             let fp = Footprint::from_manifest(entry, v);
-            peak_bytes(&fp, v.mu, batch, eval_len) <= budget
+            peak_bytes(&fp, v.mu, batch, eval_len, overlap) <= budget
         })
         .max_by_key(|v| (v.mu.min(batch), Reverse(v.mu)));
     match chosen {
@@ -228,7 +278,7 @@ pub fn auto_mu(
         None => {
             let smallest = cands[0];
             let fp = Footprint::from_manifest(entry, smallest);
-            let needed = peak_bytes(&fp, smallest.mu, batch, eval_len);
+            let needed = peak_bytes(&fp, smallest.mu, batch, eval_len, overlap);
             Err(MbsError::Oom {
                 needed_bytes: needed,
                 available_bytes: budget.saturating_sub(fp.resident_bytes()),
@@ -244,7 +294,8 @@ pub fn auto_mu(
 
 /// Resolve `cfg.mu` against the manifest and the memory ledger's remaining
 /// budget, running the same admission checks (resident state, then one
-/// step) the trainer always performed.
+/// step — plus, under `cfg.overlap`, the second staged in-flight input
+/// slot) the trainer always performed.
 pub fn resolve(
     entry: &ModelEntry,
     size: usize,
@@ -261,19 +312,30 @@ pub fn resolve(
             if cfg.use_mbs {
                 let n = mu.min(cfg.batch);
                 mem.check_step(n, &format!("MBS step mu={n}"))?;
+                if cfg.overlap {
+                    check_overlap(&footprint, n, budget, &format!("MBS step mu={n}"))?;
+                }
             } else {
                 mem.check_step(cfg.batch, &format!("native step N_B={}", cfg.batch))?;
+                if cfg.overlap {
+                    check_overlap(
+                        &footprint,
+                        cfg.batch,
+                        budget,
+                        &format!("native step N_B={}", cfg.batch),
+                    )?;
+                }
                 if cfg.batch > variant.mu {
                     // capacity admits it but no executable was exported
                     // that large
                     return Err(coverage_error(cfg.batch, variant.mu));
                 }
             }
-            check_eval(&footprint, mu, cfg.eval_len, budget)?;
+            check_eval(&footprint, mu, cfg.eval_len, budget, cfg.overlap)?;
             Ok(Resolution { mu, variant, footprint })
         }
         MicroBatchSpec::Auto if cfg.use_mbs => {
-            auto_mu(entry, size, cfg.batch, cfg.eval_len, budget)
+            auto_mu(entry, size, cfg.batch, cfg.eval_len, budget, cfg.overlap)
         }
         MicroBatchSpec::Auto => {
             // native arm: the whole mini-batch sits on the device at once.
@@ -288,7 +350,10 @@ pub fn resolve(
                     let mem = MemoryModel::new(budget, footprint.clone());
                     mem.check_resident()?;
                     mem.check_step(cfg.batch, &label)?;
-                    check_eval(&footprint, v.mu, cfg.eval_len, budget)?;
+                    if cfg.overlap {
+                        check_overlap(&footprint, cfg.batch, budget, &label)?;
+                    }
+                    check_eval(&footprint, v.mu, cfg.eval_len, budget, cfg.overlap)?;
                     Ok(Resolution { mu: v.mu, variant: v.clone(), footprint })
                 }
                 None => {
@@ -297,10 +362,13 @@ pub fn resolve(
                     // the tables' "Failed" cells — before coverage decides
                     // Config
                     let largest = *cands.last().expect("candidates are non-empty");
-                    let mem =
-                        MemoryModel::new(budget, Footprint::from_manifest(entry, largest));
+                    let footprint = Footprint::from_manifest(entry, largest);
+                    let mem = MemoryModel::new(budget, footprint.clone());
                     mem.check_resident()?;
                     mem.check_step(cfg.batch, &label)?;
+                    if cfg.overlap {
+                        check_overlap(&footprint, cfg.batch, budget, &label)?;
+                    }
                     Err(coverage_error(cfg.batch, largest.mu))
                 }
             }
@@ -365,10 +433,13 @@ mod tests {
         }
     }
 
+    /// Serial-semantics config (overlap off): the legacy admission tests
+    /// assert exact serial boundaries; overlap pricing has its own tests.
     fn mbs_cfg(batch: usize) -> TrainConfig {
         let mut c = TrainConfig::default_for("synthetic");
         c.batch = batch;
         c.mu = MicroBatchSpec::Auto;
+        c.overlap = false;
         c
     }
 
@@ -378,7 +449,7 @@ mod tests {
         let fp8 = Footprint::from_manifest(&entry, entry.variant(16, 8).unwrap());
         // budget fits the mu=8 step but not the mu=16 step
         let budget = fp8.step_bytes(8);
-        let r = auto_mu(&entry, 16, 1024, 0, budget).unwrap();
+        let r = auto_mu(&entry, 16, 1024, 0, budget, false).unwrap();
         assert_eq!(r.mu, 8);
         assert!(r.footprint.step_bytes(8) <= budget);
     }
@@ -389,7 +460,7 @@ mod tests {
         // samples, so the planner picks the smallest such executable
         let entry = entry_with_mus(&[2, 4, 8, 16], 1000, 0, 100);
         let fp16 = Footprint::from_manifest(&entry, entry.variant(16, 16).unwrap());
-        let r = auto_mu(&entry, 16, 4, 0, fp16.step_bytes(16)).unwrap();
+        let r = auto_mu(&entry, 16, 4, 0, fp16.step_bytes(16), false).unwrap();
         assert_eq!(r.mu, 4);
     }
 
@@ -397,10 +468,50 @@ mod tests {
     fn auto_falls_back_to_structured_oom() {
         let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
         let fp2 = Footprint::from_manifest(&entry, entry.variant(16, 2).unwrap());
-        let err = auto_mu(&entry, 16, 64, 0, fp2.step_bytes(2) - 1).unwrap_err();
+        let err = auto_mu(&entry, 16, 64, 0, fp2.step_bytes(2) - 1, false).unwrap_err();
         assert!(err.is_oom(), "want Oom, got {err:?}");
         let msg = err.to_string();
         assert!(msg.contains("mu=2"), "should name the smallest variant: {msg}");
+    }
+
+    #[test]
+    fn overlap_pricing_shrinks_auto_mu() {
+        // a budget that exactly fits the serial mu=8 step has no headroom
+        // for the second in-flight input slot: overlap must downsize to 4
+        let entry = entry_with_mus(&[2, 4, 8, 16], 1000, 0, 100);
+        let fp8 = Footprint::from_manifest(&entry, entry.variant(16, 8).unwrap());
+        let budget = fp8.step_bytes(8);
+        assert_eq!(auto_mu(&entry, 16, 1024, 0, budget, false).unwrap().mu, 8);
+        let r = auto_mu(&entry, 16, 1024, 0, budget, true).unwrap();
+        assert_eq!(r.mu, 4);
+        assert!(r.footprint.step_bytes(4) + r.footprint.overlap_bytes(4) <= budget);
+        // with the slot priced in explicitly, mu=8 is admitted again
+        let roomy = budget + fp8.overlap_bytes(8);
+        assert_eq!(auto_mu(&entry, 16, 1024, 0, roomy, true).unwrap().mu, 8);
+    }
+
+    #[test]
+    fn resolve_overlap_boundary_is_exact() {
+        // Fixed(mu) admission under overlap: the step plus one staged
+        // input slot fits at the boundary, one byte less is a structured
+        // OOM naming the overlap residency
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp4 = Footprint::from_manifest(&entry, entry.variant(16, 4).unwrap());
+        let mut cfg = mbs_cfg(64);
+        cfg.mu = MicroBatchSpec::Fixed(4);
+        cfg.eval_len = 0;
+        cfg.overlap = true;
+        let need = fp4.step_bytes(4) + fp4.overlap_bytes(4);
+        resolve(&entry, 16, &cfg, &Ledger::new(need)).unwrap();
+        let err = resolve(&entry, 16, &cfg, &Ledger::new(need - 1)).unwrap_err();
+        assert!(err.is_oom(), "want Oom, got {err:?}");
+        assert!(
+            err.to_string().contains("overlap in-flight inputs"),
+            "OOM should name the overlap residency: {err}"
+        );
+        // the identical budget admits the same mu with overlap off
+        cfg.overlap = false;
+        resolve(&entry, 16, &cfg, &Ledger::new(need - 1)).unwrap();
     }
 
     #[test]
@@ -506,15 +617,18 @@ mod tests {
                     let entry = rand_entry(r);
                     let budget = r.below(1 << 20);
                     let batch = (r.below(256) + 1) as usize;
-                    (entry, budget, batch)
+                    let overlap = r.below(2) == 1;
+                    (entry, budget, batch, overlap)
                 },
-                |(entry, budget, batch)| {
-                    match auto_mu(entry, 16, *batch, 0, *budget) {
+                |(entry, budget, batch, overlap)| {
+                    match auto_mu(entry, 16, *batch, 0, *budget, *overlap) {
                         Ok(res) => {
                             let n = res.mu.min(*batch);
+                            let extra =
+                                if *overlap { res.footprint.overlap_bytes(n) } else { 0 };
                             ensure(
-                                res.footprint.step_bytes(n) <= *budget,
-                                format!("step({n}) exceeds budget"),
+                                res.footprint.step_bytes(n) + extra <= *budget,
+                                format!("step({n}) (overlap={overlap}) exceeds budget"),
                             )
                         }
                         Err(e) => ensure(e.is_oom(), format!("non-Oom fallback: {e}")),
@@ -537,7 +651,7 @@ mod tests {
                 },
                 |(entry, budget)| {
                     let batch = 1 << 20; // batch >> every mu: no clamping
-                    let Ok(res) = auto_mu(entry, 16, batch, 0, *budget) else {
+                    let Ok(res) = auto_mu(entry, 16, batch, 0, *budget, false) else {
                         return Ok(()); // fallback covered by auto_mu_always_fits_budget
                     };
                     for v in &entry.variants {
@@ -550,6 +664,41 @@ mod tests {
                         }
                     }
                     Ok(())
+                },
+            );
+        }
+
+        #[test]
+        fn auto_mu_overlap_never_larger() {
+            // ISSUE 4 satellite property: pricing the second in-flight
+            // input slot can only shrink (or keep) the planned mu — the
+            // test fixtures share one footprint across variants, which is
+            // what makes the overlap budget strictly stricter
+            forall(
+                "overlap mu <= serial mu",
+                300,
+                0xA14,
+                |r| {
+                    let entry = rand_entry(r);
+                    let budget = r.below(1 << 20);
+                    let batch = (r.below(1024) + 1) as usize;
+                    let eval_len = r.below(256) as usize;
+                    (entry, budget, batch, eval_len)
+                },
+                |(entry, budget, batch, eval_len)| {
+                    let on = auto_mu(entry, 16, *batch, *eval_len, *budget, true);
+                    let off = auto_mu(entry, 16, *batch, *eval_len, *budget, false);
+                    match (on, off) {
+                        (Ok(a), Ok(b)) => ensure(
+                            a.mu <= b.mu,
+                            format!("overlap chose mu={} > serial mu={}", a.mu, b.mu),
+                        ),
+                        (Ok(a), Err(e)) => Err(format!(
+                            "overlap admits mu={} where serial OOMs ({e})",
+                            a.mu
+                        )),
+                        (Err(e), _) => ensure(e.is_oom(), format!("non-Oom fallback: {e}")),
+                    }
                 },
             );
         }

@@ -17,6 +17,18 @@
 //! test checks end-to-end. The memory [`Ledger`] is charged for every step
 //! the executor runs, so a plan that would exceed capacity fails loudly at
 //! the exact step — not just at admission time.
+//!
+//! With `overlap` on (the default) the loop runs as a two-stage pipeline:
+//! each arriving micro-batch is *staged* (uploaded into the runtime's idle
+//! ping-pong slot, its staging buffer returned to the pool at
+//! upload-completion) before the previously staged one executes, so the
+//! upload of step `j+1` rides in the in-flight window of step `j` and is
+//! attributed to `StageTimers::upload_hidden`. The ledger carries the
+//! second staged input slot as its own allocation
+//! ([`Footprint::overlap_bytes`]), so mid-pipeline residency is asserted
+//! exactly. `--overlap off` keeps the serial loop as the byte-identity
+//! oracle — both orders run the identical device-op sequence, so losses
+//! and metrics match bit for bit.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -24,12 +36,13 @@ use std::time::{Duration, Instant};
 use crate::config::TrainConfig;
 use crate::data::{BufPool, Dataset, EpochPlan, PoolStats, SynthCarvana, SynthFlowers, SynthText};
 use crate::error::{MbsError, Result};
+use crate::memory::ledger::AllocId;
 use crate::memory::{Footprint, Ledger, MemoryModel};
 use crate::metrics::{EpochStats, MetricKind, StageTimers};
 use crate::runtime::{Engine, ModelRuntime};
 
 use super::accumulator::{Accumulation, NormalizationMode};
-use super::planner::{self, Planner};
+use super::planner::{self, ExecutionPlan, Planner};
 use super::scheduler::UpdateScheduler;
 use super::streamer::{stream_epoch, StreamItem, StreamingPolicy};
 
@@ -64,11 +77,21 @@ pub struct TrainReport {
     /// Optimizer updates applied.
     pub updates: u64,
     /// Per-stage time summed over the training epochs (each epoch's own
-    /// breakdown lives in its [`EpochStats::stages`]).
+    /// breakdown lives in its [`EpochStats::stages`]); under overlap,
+    /// `stages.overlap_efficiency()` is the fraction of upload time the
+    /// pipeline hid behind execution.
     pub stages: StageTimers,
     /// Host staging-buffer pool traffic for the whole run — `allocs` stays
     /// at the warm-up count when the hot path is allocation-free.
     pub pool: PoolStats,
+    /// Did the run use the overlapped upload/execute pipeline?
+    pub overlap: bool,
+    /// The prefetch depth the run ended on: the configured value, or —
+    /// under `--prefetch auto` — the `StageTimers`-tuned choice.
+    pub prefetch: usize,
+    /// High-water mark of simulated device residency over the whole run
+    /// (resident state + in-flight inputs + executing step), bytes.
+    pub ledger_peak_bytes: u64,
 }
 
 impl TrainReport {
@@ -117,21 +140,84 @@ enum Pass<'a> {
     Eval,
 }
 
+/// How the epoch executor moves data: streaming policy + prefetch depth on
+/// the host side, upload/execute overlap on the device side.
+#[derive(Clone, Copy)]
+struct PipelineCfg {
+    /// Assemble inline or on the streamer worker thread.
+    policy: StreamingPolicy,
+    /// Micro-batches staged ahead in the streamer channel.
+    prefetch: usize,
+    /// Two-stage upload/execute pipeline (device double-buffer) on/off.
+    overlap: bool,
+}
+
+/// A staged-but-not-executed micro-batch in the overlapped pipeline: its
+/// plan position plus the ledger allocation covering its device input slot.
+struct InFlight {
+    plan: Arc<ExecutionPlan>,
+    j: usize,
+    actual: usize,
+    inputs: AllocId,
+}
+
+/// Execute the oldest staged micro-batch: charge the ledger for what the
+/// step holds *beyond* its already-live input slot (backward-pass
+/// activations; eval holds inputs only), run it, release both residencies,
+/// fold the result into `acc`, and fire the optimizer update when this was
+/// its mini-batch's last micro-batch.
+fn step_in_flight(
+    rt: &mut ModelRuntime,
+    ledger: &mut Ledger,
+    fp: &Footprint,
+    pass: Pass<'_>,
+    acc: &mut Accumulation,
+    current: InFlight,
+) -> Result<()> {
+    let out = match pass {
+        Pass::Train { .. } => {
+            let act = ledger.alloc(
+                "train step activations",
+                fp.activation_bytes(current.plan.device_samples()),
+            )?;
+            let out = rt.accum_staged()?;
+            ledger.free(act)?;
+            out
+        }
+        Pass::Eval => rt.eval_staged()?,
+    };
+    ledger.free(current.inputs)?;
+    acc.add(&out, current.actual);
+    if let Pass::Train { sched } = pass {
+        if current.plan.is_last(current.j) {
+            rt.apply(&sched.hyper_for(rt.updates))?;
+        }
+    }
+    Ok(())
+}
+
 /// THE epoch loop. Streams plan-tagged micro-batches and executes them,
 /// charging the ledger for every step so planned residency is asserted
 /// against capacity at the moment it would be live on the device. Staging
 /// buffers are leased from `pool` by the streamer and handed back through
-/// its return channel right after each step — the steady-state hot path
+/// its return channel right after each upload — the steady-state hot path
 /// allocates nothing. Returns the epoch's accumulation plus its per-stage
 /// time breakdown (assemble from the stream items, the device stages as
 /// deltas of the runtime's monotonic timers).
+///
+/// Serial (`overlap: false`): stage + execute fused per item, one input
+/// slot live at a time — the byte-identity oracle. Overlapped: each item
+/// is staged into the idle device slot (ledger: "in-flight inputs")
+/// *before* the previously staged item executes, so the pipeline holds two
+/// input slots across every execute — the residency the planner admitted.
+/// The device-op order (and therefore every loss/metric bit) is identical
+/// in both modes; only the upload issue points move.
 #[allow(clippy::too_many_arguments)]
 fn run_epoch(
     rt: &mut ModelRuntime,
     ledger: &mut Ledger,
     fp: &Footprint,
-    policy: StreamingPolicy,
-    prefetch: usize,
+    pipe: &PipelineCfg,
     pool: &Arc<BufPool>,
     ds: &Arc<dyn Dataset>,
     epoch_plan: EpochPlan,
@@ -141,31 +227,66 @@ fn run_epoch(
     let mut acc = Accumulation::default();
     let mut assemble = Duration::ZERO;
     let rt_before = rt.timers();
-    let stream =
-        stream_epoch(policy, ds.clone(), epoch_plan, planner.clone(), prefetch, pool.clone());
-    for item in stream {
-        assemble += item.assemble;
-        let StreamItem { plan, mb, .. } = item;
-        // training holds activations for the backward pass; eval is
-        // forward-only and holds just the input buffers
-        let (tag, bytes) = match pass {
-            Pass::Train { .. } => ("train step", fp.batch_bytes(plan.device_samples())),
-            Pass::Eval => ("eval step", fp.eval_bytes(plan.device_samples())),
-        };
-        let step = ledger.alloc(tag, bytes)?;
-        let out = match pass {
-            Pass::Train { .. } => rt.accum_step(&mb, plan.scales[mb.j])?,
-            Pass::Eval => rt.eval_step(&mb)?,
-        };
-        ledger.free(step)?;
-        acc.add(&out, mb.actual);
-        let update_due = matches!(pass, Pass::Train { .. }) && plan.is_last(mb.j);
-        // upload done: recycle the staging buffer before the (potentially
-        // long) optimizer update
-        pool.give(mb);
-        if update_due {
-            if let Pass::Train { sched } = pass {
-                rt.apply(&sched.hyper_for(rt.updates))?;
+    let stream = stream_epoch(
+        pipe.policy,
+        ds.clone(),
+        epoch_plan,
+        planner.clone(),
+        pipe.prefetch,
+        pool.clone(),
+    );
+    if pipe.overlap {
+        let mut pending: Option<InFlight> = None;
+        for item in stream {
+            assemble += item.assemble;
+            let StreamItem { plan, mb, .. } = item;
+            // stage j+1 into the idle slot while step j is in flight: its
+            // input-slot residency is live from this upload until its own
+            // step frees it
+            let inputs =
+                ledger.alloc("in-flight inputs", fp.overlap_bytes(plan.device_samples()))?;
+            match pass {
+                Pass::Train { .. } => rt.stage_inputs(&mb, Some(plan.scales[mb.j]))?,
+                Pass::Eval => rt.stage_inputs(&mb, None)?,
+            }
+            let staged = InFlight { plan, j: mb.j, actual: mb.actual, inputs };
+            // upload-completion: the host staging buffer recycles now — the
+            // pipeline holds device slots, not host buffers
+            pool.give(mb);
+            if let Some(current) = pending.take() {
+                step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
+            }
+            pending = Some(staged);
+        }
+        // drain the last staged micro-batch
+        if let Some(current) = pending.take() {
+            step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
+        }
+    } else {
+        for item in stream {
+            assemble += item.assemble;
+            let StreamItem { plan, mb, .. } = item;
+            // training holds activations for the backward pass; eval is
+            // forward-only and holds just the input buffers
+            let (tag, bytes) = match pass {
+                Pass::Train { .. } => ("train step", fp.batch_bytes(plan.device_samples())),
+                Pass::Eval => ("eval step", fp.eval_bytes(plan.device_samples())),
+            };
+            let step = ledger.alloc(tag, bytes)?;
+            let out = match pass {
+                Pass::Train { .. } => rt.accum_step(&mb, plan.scales[mb.j])?,
+                Pass::Eval => rt.eval_step(&mb)?,
+            };
+            ledger.free(step)?;
+            acc.add(&out, mb.actual);
+            let update_due = matches!(pass, Pass::Train { .. }) && plan.is_last(mb.j);
+            // upload done: recycle the staging buffer before the (potentially
+            // long) optimizer update
+            pool.give(mb);
+            if update_due {
+                if let Pass::Train { sched } = pass {
+                    rt.apply(&sched.hyper_for(rt.updates))?;
+                }
             }
         }
     }
@@ -182,8 +303,7 @@ fn eval_epoch(
     rt: &mut ModelRuntime,
     ledger: &mut Ledger,
     fp: &Footprint,
-    policy: StreamingPolicy,
-    prefetch: usize,
+    pipe: &PipelineCfg,
     pool: &Arc<BufPool>,
     kind: MetricKind,
     ds: &Arc<dyn Dataset>,
@@ -200,8 +320,7 @@ fn eval_epoch(
             rt,
             ledger,
             fp,
-            policy,
-            prefetch,
+            pipe,
             pool,
             ds,
             EpochPlan::sequential(len, len),
@@ -212,9 +331,34 @@ fn eval_epoch(
     Ok(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, t0.elapsed(), stages))
 }
 
+/// Masked, padded eval pass reusing a caller-owned staging pool — the
+/// repeat-eval entry point (eval loops, benches): the pool is warmed once
+/// by the caller and every subsequent eval circulates the same host
+/// buffers instead of re-warming per call. Admission (a fresh ledger sized
+/// to one serial eval step) is still checked per call; the sweep itself
+/// runs serially (`overlap` staging is a training-run concern — `train`
+/// drives its evals through its own pipeline config).
+pub fn evaluate_pooled(
+    rt: &mut ModelRuntime,
+    kind: MetricKind,
+    ds: &Arc<dyn Dataset>,
+    epoch: usize,
+    policy: StreamingPolicy,
+    prefetch: usize,
+    pool: &Arc<BufPool>,
+) -> Result<EpochStats> {
+    let fp = Footprint::from_manifest(&rt.entry, &rt.variant);
+    let mut ledger = Ledger::new(fp.step_bytes(rt.variant.mu));
+    ledger.alloc("resident state", fp.resident_bytes())?;
+    let pipe = PipelineCfg { policy, prefetch, overlap: false };
+    eval_epoch(rt, &mut ledger, &fp, &pipe, pool, kind, ds, epoch)
+}
+
 /// Masked, padded eval pass over a dataset under an explicit streaming
 /// policy (the standalone entry point for benches and tests; `train` runs
-/// the same executor with its own ledger and pool).
+/// the same executor with its own ledger and pool). Builds and warms a
+/// one-shot pool — callers that evaluate repeatedly should hold a pool and
+/// use [`evaluate_pooled`] instead.
 pub fn evaluate_with(
     rt: &mut ModelRuntime,
     kind: MetricKind,
@@ -223,12 +367,9 @@ pub fn evaluate_with(
     policy: StreamingPolicy,
     prefetch: usize,
 ) -> Result<EpochStats> {
-    let fp = Footprint::from_manifest(&rt.entry, &rt.variant);
-    let mut ledger = Ledger::new(fp.step_bytes(rt.variant.mu));
-    ledger.alloc("resident state", fp.resident_bytes())?;
     let pool = Arc::new(BufPool::for_prefetch(prefetch));
     pool.warm(BufPool::buffers_for(prefetch), ds.as_ref(), rt.variant.mu);
-    eval_epoch(rt, &mut ledger, &fp, policy, prefetch, &pool, kind, ds, epoch)
+    evaluate_pooled(rt, kind, ds, epoch, policy, prefetch, &pool)
 }
 
 /// [`evaluate_with`] under the synchronous policy — the historical
@@ -251,6 +392,45 @@ fn mean_epoch_wall(walls: &[f64]) -> Duration {
         Duration::from_secs_f64(m)
     } else {
         Duration::ZERO
+    }
+}
+
+/// Cap for `--prefetch auto`: a small multiple of the accumulation-step
+/// count — staging further ahead than ~2 mini-batches of micro-batches
+/// cannot help (the device consumes them in order), it only holds more
+/// host memory.
+fn prefetch_cap(n_smu: usize) -> usize {
+    (2 * n_smu.max(1)).clamp(2, 16)
+}
+
+/// `StageTimers`-driven prefetch tuning (`--prefetch auto`): after an
+/// epoch, grow the prefetch window while host assembly bounds the pipeline
+/// (its per-micro-step mean exceeds the *visible* device time — upload
+/// minus its hidden part, plus execute and download), shrink it when the
+/// device dominates by 4x or more, and otherwise hold. Pure arithmetic so
+/// the policy is unit-testable without artifacts.
+///
+/// Known limitation: the per-step means barely move with the channel
+/// depth (one assembly worker either keeps up or doesn't), so on a
+/// steadily host-bound run this ratchets to the cap and on a
+/// device-bound one it settles at 1 — it finds the right *regime*, and
+/// the `prefetch_cap` bound is what keeps the host-memory cost of the
+/// ratchet small.
+fn tune_prefetch(prefetch: usize, stages: &StageTimers, micro_steps: u64, cap: usize) -> usize {
+    if micro_steps == 0 {
+        return prefetch;
+    }
+    let per = |d: Duration| d.as_secs_f64() / micro_steps as f64;
+    let assemble = per(stages.assemble);
+    let device = per(stages.upload) - per(stages.upload_hidden)
+        + per(stages.execute)
+        + per(stages.download);
+    if assemble > device {
+        (prefetch.max(1) * 2).min(cap)
+    } else if prefetch > 1 && assemble * 4.0 < device {
+        (prefetch / 2).max(1)
+    } else {
+        prefetch.min(cap)
     }
 }
 
@@ -282,16 +462,28 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     // runtime + data
     // ------------------------------------------------------------------
     let mut rt: ModelRuntime = engine.load_model(&cfg.model, size, resolution.mu)?;
+    rt.set_overlap(cfg.overlap);
     let (train_ds, eval_ds) = datasets_for(&entry.task, size, cfg)?;
 
     let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
     let total_updates = (batches_per_epoch * cfg.epochs) as u64;
     let sched = UpdateScheduler::new(&entry.optimizer, cfg, total_updates);
 
+    // `--prefetch auto` may grow the window after the first epoch; size
+    // (and warm) the pool for the tuning cap up front so the hot path
+    // stays allocation-free even at the largest depth the tuner can pick
+    let n_smu_full = if cfg.use_mbs { cfg.batch.div_ceil(resolution.mu) } else { 1 };
+    let max_prefetch = if cfg.prefetch_auto {
+        cfg.prefetch.max(prefetch_cap(n_smu_full))
+    } else {
+        cfg.prefetch
+    };
+    let mut prefetch = cfg.prefetch;
+
     // one staging-buffer pool for the whole run: warmed once, every epoch
     // (train and eval alike) circulates the same host allocations
-    let pool = Arc::new(BufPool::for_prefetch(cfg.prefetch));
-    pool.warm(BufPool::buffers_for(cfg.prefetch), train_ds.as_ref(), resolution.mu);
+    let pool = Arc::new(BufPool::for_prefetch(max_prefetch));
+    pool.warm(BufPool::buffers_for(max_prefetch), train_ds.as_ref(), resolution.mu);
 
     let mut train_epochs = Vec::with_capacity(cfg.epochs);
     let mut eval_epochs = Vec::with_capacity(cfg.epochs);
@@ -306,12 +498,13 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
             cfg.seed,
             epoch as u64,
         );
+        let pipe =
+            PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
         let (acc, stages) = run_epoch(
             &mut rt,
             &mut ledger,
             &resolution.footprint,
-            cfg.streaming,
-            cfg.prefetch,
+            &pipe,
             &pool,
             &train_ds,
             epoch_plan,
@@ -320,16 +513,21 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
         )?;
         let wall = t0.elapsed();
         stage_totals.merge(&stages);
+        if cfg.prefetch_auto {
+            let micro_steps = acc.micro_steps as u64;
+            prefetch = tune_prefetch(prefetch, &stages, micro_steps, prefetch_cap(n_smu_full));
+        }
         train_epochs
             .push(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, wall, stages));
 
         if !cfg.skip_eval {
+            let pipe =
+                PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
             eval_epochs.push(eval_epoch(
                 &mut rt,
                 &mut ledger,
                 &resolution.footprint,
-                cfg.streaming,
-                cfg.prefetch,
+                &pipe,
                 &pool,
                 kind,
                 &eval_ds,
@@ -339,12 +537,12 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     }
     let total_wall = run_start.elapsed();
     let final_eval = if cfg.skip_eval {
+        let pipe = PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
         eval_epoch(
             &mut rt,
             &mut ledger,
             &resolution.footprint,
-            cfg.streaming,
-            cfg.prefetch,
+            &pipe,
             &pool,
             kind,
             &eval_ds,
@@ -373,12 +571,72 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
         updates: rt.updates,
         stages: stage_totals,
         pool: pool.stats(),
+        overlap: cfg.overlap,
+        prefetch,
+        ledger_peak_bytes: ledger.peak(),
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn stages_ms(assemble: u64, upload: u64, hidden: u64, execute: u64) -> StageTimers {
+        StageTimers {
+            assemble: Duration::from_millis(assemble),
+            upload: Duration::from_millis(upload),
+            upload_hidden: Duration::from_millis(hidden),
+            execute: Duration::from_millis(execute),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prefetch_cap_is_a_small_multiple_of_n_smu() {
+        assert_eq!(prefetch_cap(1), 2);
+        assert_eq!(prefetch_cap(4), 8);
+        assert_eq!(prefetch_cap(100), 16); // clamped
+        assert_eq!(prefetch_cap(0), 2); // degenerate: native / tiny runs
+    }
+
+    #[test]
+    fn tune_prefetch_grows_while_assembly_bounds_the_pipeline() {
+        // assembly 10ms/step vs 3ms visible device time: double, up to cap
+        let s = stages_ms(100, 20, 0, 10);
+        assert_eq!(tune_prefetch(2, &s, 10, 8), 4);
+        assert_eq!(tune_prefetch(4, &s, 10, 8), 8);
+        assert_eq!(tune_prefetch(8, &s, 10, 8), 8); // capped
+        // prefetch 0 still means a 1-deep channel; growing starts from 1
+        assert_eq!(tune_prefetch(0, &s, 10, 8), 2);
+    }
+
+    #[test]
+    fn tune_prefetch_shrinks_when_the_device_dominates() {
+        // assembly 1ms/step vs 10ms visible device time: halve, floor 1
+        let s = stages_ms(10, 20, 0, 80);
+        assert_eq!(tune_prefetch(8, &s, 10, 8), 4);
+        assert_eq!(tune_prefetch(1, &s, 10, 8), 1);
+        // in between (device ahead but < 4x): hold steady
+        let balanced = stages_ms(50, 20, 0, 60);
+        assert_eq!(tune_prefetch(4, &balanced, 10, 8), 4);
+    }
+
+    #[test]
+    fn tune_prefetch_counts_hidden_upload_as_free() {
+        // upload 30ms/step but 26ms hidden behind execute: visible device
+        // time is 4 + 4 = 8ms < 10ms assembly -> assembly still bounds
+        let s = stages_ms(100, 300, 260, 40);
+        assert_eq!(tune_prefetch(2, &s, 10, 8), 4);
+        // the same run without the overlap credit holds instead of growing
+        // (visible device time 30 + 4 = 34ms dominates assembly)
+        let serial = stages_ms(100, 300, 0, 40);
+        assert_eq!(tune_prefetch(2, &serial, 10, 8), 2);
+    }
+
+    #[test]
+    fn tune_prefetch_ignores_empty_epochs() {
+        assert_eq!(tune_prefetch(3, &StageTimers::default(), 0, 8), 3);
+    }
 
     #[test]
     fn mean_epoch_wall_guards_degenerate_inputs() {

@@ -62,6 +62,7 @@
 //!     0,                       // no eval occupancy
 //!     &[2 * MIB, 8 * MIB],     // simulated device capacities
 //!     &[8, 64, 256],           // global batch sizes
+//!     true,                    // price the overlapped pipeline's residency
 //! )
 //! .unwrap();
 //! assert_eq!(grid.points.len(), 6);

@@ -60,24 +60,34 @@ USAGE: mbs <subcommand> [flags]
 
   train    --model <key> [--batch N] [--mu N|auto] [--epochs N] [--capacity-mib N]
            [--mbs true|false] [--norm paper|exact|none]
-           [--streaming double-buffered|sync] [--size N] [--seed N]
+           [--streaming double-buffered|sync] [--overlap on|off]
+           [--prefetch N|auto] [--size N] [--seed N]
            [--dataset-len N] [--eval-len N] [--lr F] [--lr-decay F]
            [--config file.cfg] [--artifacts dir] [--csv out.csv]
+           --overlap on (default) double-buffers device input uploads so
+           micro-batch j+1 stages while j executes; off is the serial
+           byte-identity oracle. --prefetch auto tunes the window per
+           epoch from the stage timers.
   sweep    --model <key> --batches 16,32,64 [same flags as train]
   frontier --capacities 1,2,4,8 --batches 8,32,64,128,256 [--dry-run=true]
            [--model <key> | --task classification|segmentation|lm]
-           [--size N] [--eval-len N] [--epochs N] [--dataset-len N]
+           [--size N] [--eval-len N] [--overlap on|off] [--epochs N]
+           [--dataset-len N] [--time-all=true]
            [--out BENCH_frontier.json] [--artifacts dir]
            classify every (capacity MiB x batch) point as native / MBS(mu) /
-           OOM via the planner; without --dry-run, short timed epochs run
-           along the feasibility boundary (needs --model + artifacts)
+           OOM via the planner (pricing overlap residency unless
+           --overlap off); without --dry-run, short timed epochs run along
+           the feasibility boundary — or, with --time-all, over every
+           feasible point (the full throughput surface) — needs --model +
+           artifacts
   bench    --model <key> [same flags as train] [--out BENCH_streaming.json]
            [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            full streaming hot-path benchmark (items/sec, per-stage means,
-           pool hit rate) -> machine-readable JSON; with --assemble-only
-           it needs no compiled artifacts: --task classification|segmentation|lm
+           pool hit rate, overlap efficiency) -> machine-readable JSON;
+           with --assemble-only it needs no compiled artifacts:
+           --task classification|segmentation|lm
            [--size N] [--batch N] [--mu N] [--prefetch N] [--dataset-len N]
-           [--epochs N] [--seed N]
+           [--epochs N] [--seed N] [--overlap on|off]
   inspect  [--artifacts dir]           variants, footprints, native max batch
   info     [--artifacts dir]           platform + artifact summary
 "
@@ -145,10 +155,20 @@ fn cmd_train(args: &Args) -> Result<(), MbsError> {
             if cfg.mu.is_auto() {
                 println!("[mbs] planner chose mu={} (paper Alg. 1)", report.mu);
             }
+            if report.overlap {
+                println!(
+                    "[mbs] overlap: {:.0}% of upload time hidden behind execution",
+                    100.0 * report.stages.overlap_efficiency()
+                );
+            }
+            if cfg.prefetch_auto {
+                println!("[mbs] prefetch auto settled on {}", report.prefetch);
+            }
             println!(
-                "[mbs] device: capacity {:.1} MiB, native max batch {}",
+                "[mbs] device: capacity {:.1} MiB, native max batch {}, peak residency {:.1} MiB",
                 report.capacity_bytes as f64 / MIB as f64,
-                report.native_max_batch
+                report.native_max_batch,
+                report.ledger_peak_bytes as f64 / MIB as f64
             );
             if let Some(path) = args.get("csv") {
                 curves.write_file(std::path::Path::new(path))?;
@@ -221,18 +241,28 @@ fn cmd_sweep(args: &Args) -> Result<(), MbsError> {
 /// real manifest metadata (artifacts' manifest.json, no compiled
 /// executables needed); without it, a synthetic `--task` model entry is
 /// used, so the subcommand runs on a clean checkout — CI's smoke job.
-/// Without `--dry-run`, short timed epochs run along the feasibility
-/// boundary (the largest feasible batch per capacity) and attach measured
-/// items/sec + per-stage means to those grid points; that path trains for
-/// real and therefore needs `--model` and compiled artifacts.
+/// Classification prices the overlapped pipeline's in-flight input slot
+/// unless `--overlap off`. Without `--dry-run`, short timed epochs run
+/// along the feasibility boundary (the largest feasible batch per
+/// capacity) — or over every feasible point with `--time-all`, producing
+/// the full throughput surface — and attach measured items/sec +
+/// per-stage means to those grid points; that path trains for real and
+/// therefore needs `--model` and compiled artifacts.
 fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
     let dry_run = args.get_bool("dry-run");
+    let time_all = args.get_bool("time-all");
+    if dry_run && time_all {
+        return Err(MbsError::Config(
+            "--time-all runs timed epochs, which --dry-run skips; drop one of the flags".into(),
+        ));
+    }
     let out = args.get_or("out", "BENCH_frontier.json").to_string();
     let capacities_mib: Vec<u64> =
         parse_list(args.get_or("capacities", "1,2,4,8"), "--capacities")?;
     let batches: Vec<usize> =
         parse_list(args.get_or("batches", "8,32,64,128,256"), "--batches")?;
     let eval_len: usize = args.get_parse_or("eval-len", 0).map_err(MbsError::Config)?;
+    let overlap = parse_overlap_flag(args)?;
     if capacities_mib.contains(&0) {
         return Err(MbsError::Config("--capacities must be positive MiB values".into()));
     }
@@ -263,11 +293,18 @@ fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
     };
     println!(
         "[mbs] frontier: model={} size={size} capacities(MiB)={capacities_mib:?} \
-         batches={batches:?} dry_run={dry_run}",
-        entry.name
+         batches={batches:?} dry_run={dry_run} overlap={}",
+        entry.name,
+        if overlap { "on" } else { "off" }
     );
-    let mut grid =
-        frontier::FrontierGrid::sweep(&entry, size, eval_len, &capacities_bytes, &batches)?;
+    let mut grid = frontier::FrontierGrid::sweep(
+        &entry,
+        size,
+        eval_len,
+        &capacities_bytes,
+        &batches,
+        overlap,
+    )?;
 
     if !dry_run {
         let manifest = manifest.expect("--model checked above");
@@ -275,7 +312,11 @@ fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
         let epochs: usize = args.get_parse_or("epochs", 1).map_err(MbsError::Config)?;
         let dataset_len: usize =
             args.get_parse_or("dataset-len", 256).map_err(MbsError::Config)?;
-        for (capacity_bytes, batch) in grid.boundary() {
+        // --time-all fills the whole feasible region (the fig.-3-style
+        // throughput surface); the default pays only for the boundary
+        let targets = if time_all { grid.feasible_points() } else { grid.boundary() };
+        let scope = if time_all { "feasible point" } else { "boundary point" };
+        for (capacity_bytes, batch) in targets {
             let mut cfg = TrainConfig::default_for(&entry.name);
             cfg.size = Some(size);
             cfg.batch = batch;
@@ -284,9 +325,10 @@ fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
             cfg.eval_len = eval_len;
             cfg.skip_eval = true;
             cfg.mu = MicroBatchSpec::Auto;
+            cfg.overlap = overlap;
             cfg.capacity_mib = Some(capacity_bytes / MIB);
             println!(
-                "[mbs] frontier: timing boundary point capacity={} MiB batch={batch}",
+                "[mbs] frontier: timing {scope} capacity={} MiB batch={batch}",
                 capacity_bytes / MIB
             );
             match train(&mut engine, &cfg) {
@@ -311,9 +353,20 @@ fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
         "(native = whole batch in one step; mu=K xN = MBS with N accumulation steps; \
          OOM = paper's Failed cell)"
     );
-    grid.to_report(dry_run).write(&out)?;
+    let mut rep = grid.to_report(dry_run);
+    if !dry_run {
+        rep.str_field("timed_scope", if time_all { "all" } else { "boundary" });
+    }
+    rep.write(&out)?;
     println!("[mbs] wrote {out}");
     Ok(())
+}
+
+/// Parse the shared `--overlap on|off` flag (default on).
+fn parse_overlap_flag(args: &Args) -> Result<bool, MbsError> {
+    let raw = args.get_or("overlap", "on");
+    mbs::config::parse_on_off(raw)
+        .ok_or_else(|| MbsError::Config(format!("--overlap: expected on|off, got {raw:?}")))
 }
 
 /// Summarize a timed boundary run for the frontier report.
@@ -343,9 +396,10 @@ fn boundary_timing(report: &TrainReport) -> frontier::BoundaryTiming {
 ///
 /// `--compare prev.json` then trend-checks the fresh report against a
 /// previous run's artifact: throughput keys (`*items_per_sec`,
-/// `pooled_speedup`) that drop more than `--compare-threshold` (default
-/// 0.2 = 20%) are flagged; with `--compare-strict=true` a regression also
-/// fails the command. Threshold semantics: rust/docs/ARCHITECTURE.md.
+/// `pooled_speedup`, `overlap_efficiency`) that drop more than
+/// `--compare-threshold` (default 0.2 = 20%) are flagged; with
+/// `--compare-strict=true` a regression also fails the command.
+/// Threshold semantics: rust/docs/ARCHITECTURE.md.
 fn cmd_bench(args: &Args) -> Result<(), MbsError> {
     let out = args.get_or("out", "BENCH_streaming.json").to_string();
     let report = if args.get_bool("assemble-only") {
@@ -414,11 +468,12 @@ fn bench_full(args: &Args) -> Result<BenchReport, MbsError> {
     let manifest = Manifest::load(artifacts_dir(args))?;
     let mut engine = Engine::new(manifest)?;
     println!(
-        "[mbs] bench: full pipeline, {} batch={} streaming={} prefetch={}",
+        "[mbs] bench: full pipeline, {} batch={} streaming={} prefetch={} overlap={}",
         cfg.model,
         cfg.batch,
         cfg.streaming.name(),
-        cfg.prefetch
+        cfg.prefetch,
+        if cfg.overlap { "on" } else { "off" }
     );
     let report: TrainReport = train(&mut engine, &cfg)?;
     let micro_steps: u64 = report.train_epochs.iter().map(|e| e.micro_steps as u64).sum();
@@ -431,11 +486,15 @@ fn bench_full(args: &Args) -> Result<BenchReport, MbsError> {
         .uint("mu", report.mu as u64)
         .uint("epochs", report.train_epochs.len() as u64)
         .str_field("streaming", cfg.streaming.name())
-        .uint("prefetch", cfg.prefetch as u64)
+        .str_field("overlap", if report.overlap { "on" } else { "off" })
+        .uint("prefetch", report.prefetch as u64)
         .uint("updates", report.updates)
         .uint("micro_steps", micro_steps)
         .num("items_per_sec", items_per_sec, 3)
         .num("epoch_wall_mean_s", report.epoch_wall_mean.as_secs_f64(), 6)
+        // the overlap-efficiency key: fraction of upload wall time the
+        // pipeline hid behind execution (trend-tracked by --compare)
+        .num("overlap_efficiency", report.stages.overlap_efficiency(), 4)
         .field(
             "stage_means_ms",
             bench_report::stage_means_value(&report.stages, micro_steps, report.updates),
@@ -450,6 +509,9 @@ fn bench_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Resul
 
 fn bench_assemble_only(args: &Args) -> Result<BenchReport, MbsError> {
     let task = args.get_or("task", "classification").to_string();
+    // validated up front with the other flags — a bad value must fail
+    // before the measurement arms run, not after
+    let overlap = parse_overlap_flag(args)?;
     let size: usize = bench_flag(args, "size", 8)?;
     let batch: usize = bench_flag(args, "batch", 32)?;
     let mu: usize = bench_flag(args, "mu", 8)?;
@@ -523,8 +585,12 @@ fn bench_assemble_only(args: &Args) -> Result<BenchReport, MbsError> {
     let overlap_rate = rate(overlap_secs);
     let stats = pool.stats();
 
+    // no device in this mode, so --overlap cannot change the measurement;
+    // it is recorded so the CI matrix (serial + overlap smokes) produces
+    // self-describing artifacts either way
     let mut rep = BenchReport::new("streaming", "assemble-only");
     rep.str_field("task", &task)
+        .str_field("overlap", if overlap { "on" } else { "off" })
         .uint("size", size as u64)
         .uint("batch", batch as u64)
         .uint("mu", mu as u64)

@@ -83,6 +83,25 @@ impl Footprint {
         self.input_bytes_per_sample * n as u64
     }
 
+    /// Bytes of one *staged* micro-batch's input buffers (x + y + mask) —
+    /// the second device input slot the overlapped pipeline keeps resident
+    /// while the current step executes. The overlapped peak is therefore
+    /// `step_bytes(n) + overlap_bytes(n)` for training and
+    /// `resident_bytes() + eval_bytes(n) + overlap_bytes(n)` for eval,
+    /// which is what the planner admits under `--overlap on`.
+    pub fn overlap_bytes(&self, n: usize) -> u64 {
+        self.input_bytes_per_sample * n as u64
+    }
+
+    /// Bytes of backward-pass activation residency alone for `n` samples —
+    /// what an executing training step holds *beyond* its already-staged
+    /// input slot ([`Footprint::batch_bytes`]` = activation_bytes +
+    /// overlap_bytes`, asserted by tests). The overlapped executor charges
+    /// the ledger in these two pieces so mid-pipeline residency is exact.
+    pub fn activation_bytes(&self, n: usize) -> u64 {
+        self.activation_bytes_per_sample * n as u64
+    }
+
     /// Total for a step computing `n` samples at once.
     pub fn step_bytes(&self, n: usize) -> u64 {
         self.resident_bytes() + self.batch_bytes(n)
@@ -181,6 +200,11 @@ mod tests {
         // forward-only eval keeps no bwd activations: inputs only
         assert_eq!(f.eval_bytes(4), 400);
         assert!(f.eval_bytes(4) < f.batch_bytes(4));
+        // the staged second input slot is input-only, and a step's batch
+        // residency decomposes exactly into activations + inputs
+        assert_eq!(f.overlap_bytes(4), 400);
+        assert_eq!(f.activation_bytes(4), 2000);
+        assert_eq!(f.activation_bytes(4) + f.overlap_bytes(4), f.batch_bytes(4));
     }
 
     #[test]

@@ -200,7 +200,9 @@ pub fn pool_value(p: &PoolStats) -> JsonValue {
 
 /// The shared `stage_means_ms` measurement object: mean milliseconds per
 /// event for each pipeline stage (`apply` is per optimizer update, the
-/// rest per micro-step).
+/// rest per micro-step). `upload_hidden` is the mean *hidden* portion of
+/// `upload` — what the overlapped pipeline buries behind execution — so
+/// the visible upload cost per micro-step is `upload - upload_hidden`.
 pub fn stage_means_value(stages: &StageTimers, micro_steps: u64, updates: u64) -> JsonValue {
     let per = |d: std::time::Duration, n: u64| {
         if n == 0 {
@@ -212,6 +214,7 @@ pub fn stage_means_value(stages: &StageTimers, micro_steps: u64, updates: u64) -
     let mut v = JsonValue::obj();
     v.push("assemble", JsonValue::fixed(per(stages.assemble, micro_steps), 6));
     v.push("upload", JsonValue::fixed(per(stages.upload, micro_steps), 6));
+    v.push("upload_hidden", JsonValue::fixed(per(stages.upload_hidden, micro_steps), 6));
     v.push("execute", JsonValue::fixed(per(stages.execute, micro_steps), 6));
     v.push("download", JsonValue::fixed(per(stages.download, micro_steps), 6));
     v.push("apply", JsonValue::fixed(per(stages.apply, updates), 6));
@@ -254,9 +257,11 @@ impl CompareOutcome {
 ///
 /// Only throughput-shaped keys are compared: wall-time and per-stage
 /// latency keys are too machine-noise-sensitive for a hard threshold (see
-/// ARCHITECTURE.md "Trend checks").
+/// ARCHITECTURE.md "Trend checks"). `overlap_efficiency` — the fraction of
+/// upload time the overlapped pipeline hides — is a ratio of co-measured
+/// times on the same machine, so it *is* stable enough to gate.
 pub fn is_trend_key(key: &str) -> bool {
-    key.ends_with("items_per_sec") || key == "pooled_speedup"
+    key.ends_with("items_per_sec") || key == "pooled_speedup" || key == "overlap_efficiency"
 }
 
 fn collect_numeric(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
@@ -375,6 +380,8 @@ mod tests {
         let stages = stage_means_value(
             &StageTimers {
                 execute: std::time::Duration::from_millis(10),
+                upload: std::time::Duration::from_millis(10),
+                upload_hidden: std::time::Duration::from_millis(5),
                 ..Default::default()
             },
             5,
@@ -382,6 +389,9 @@ mod tests {
         );
         let parsed = Json::parse(&stages.render()).unwrap();
         assert!((parsed.get("execute").and_then(Json::as_f64).unwrap() - 2.0).abs() < 1e-6);
+        assert!(
+            (parsed.get("upload_hidden").and_then(Json::as_f64).unwrap() - 1.0).abs() < 1e-6
+        );
         assert_eq!(parsed.get("apply").and_then(Json::as_f64), Some(0.0)); // zero updates: no div
     }
 
@@ -446,7 +456,9 @@ mod tests {
         assert!(is_trend_key("pooled_items_per_sec"));
         assert!(is_trend_key("items_per_sec"));
         assert!(is_trend_key("pooled_speedup"));
+        assert!(is_trend_key("overlap_efficiency"));
         assert!(!is_trend_key("assemble_mean_ms"));
         assert!(!is_trend_key("epoch_wall_mean_s"));
+        assert!(!is_trend_key("upload_hidden"));
     }
 }

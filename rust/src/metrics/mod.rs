@@ -80,6 +80,14 @@ fn safe_div(a: f64, b: f64) -> f64 {
 /// trip), and the optimizer-update executable. Accumulated monotonically
 /// by the runtime and the streamer; epoch deltas land in [`EpochStats`].
 ///
+/// `upload_hidden` is a *subset* of `upload`, not a sixth stage: the part
+/// of the upload time spent staging a micro-batch into the idle device
+/// input slot while another micro-batch was already in flight — the time
+/// an asynchronous device would hide behind execution (the synchronous
+/// PJRT CPU client serializes the calls, so here it measures pipeline
+/// structure rather than a wall-clock saving). Serial (`--overlap off`)
+/// runs keep it at zero.
+///
 /// ```
 /// use mbs::metrics::StageTimers;
 /// use std::time::Duration;
@@ -96,6 +104,9 @@ pub struct StageTimers {
     pub assemble: Duration,
     /// Host→device input upload (x/y, ragged-tail masks, scales).
     pub upload: Duration,
+    /// Portion of `upload` issued while another micro-batch was in flight
+    /// (hidden behind execution by the overlapped pipeline).
+    pub upload_hidden: Duration,
     /// Device execution of the accum/eval executables.
     pub execute: Duration,
     /// Device→host download of step scalars (and any tupled-state round trip).
@@ -109,6 +120,7 @@ impl StageTimers {
     pub fn merge(&mut self, other: &StageTimers) {
         self.assemble += other.assemble;
         self.upload += other.upload;
+        self.upload_hidden += other.upload_hidden;
         self.execute += other.execute;
         self.download += other.download;
         self.apply += other.apply;
@@ -120,6 +132,7 @@ impl StageTimers {
         StageTimers {
             assemble: self.assemble.saturating_sub(earlier.assemble),
             upload: self.upload.saturating_sub(earlier.upload),
+            upload_hidden: self.upload_hidden.saturating_sub(earlier.upload_hidden),
             execute: self.execute.saturating_sub(earlier.execute),
             download: self.download.saturating_sub(earlier.download),
             apply: self.apply.saturating_sub(earlier.apply),
@@ -129,8 +142,25 @@ impl StageTimers {
     /// Total instrumented time across all stages. Under double-buffered
     /// streaming this exceeds wall time (assembly overlaps execution) —
     /// that surplus is exactly the overlap the pipeline buys.
+    /// `upload_hidden` is excluded: it is a subset of `upload`, not an
+    /// additional stage.
     pub fn total(&self) -> Duration {
         self.assemble + self.upload + self.execute + self.download + self.apply
+    }
+
+    /// Fraction of upload wall time issued inside another step's in-flight
+    /// window, in [0, 1] — the overlap-efficiency key `mbs bench` reports
+    /// and `--compare` trend-tracks. Zero when nothing was uploaded (or
+    /// overlap is off). On the synchronous PJRT CPU client this measures
+    /// pipeline *structure* (steady state sits at `(n-1)/n`): it is the
+    /// fraction an asynchronous backend would genuinely hide, not a
+    /// wall-clock saving on this device.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.upload.is_zero() {
+            0.0
+        } else {
+            (self.upload_hidden.as_secs_f64() / self.upload.as_secs_f64()).clamp(0.0, 1.0)
+        }
     }
 }
 
@@ -280,6 +310,7 @@ mod tests {
         let mut a = StageTimers {
             assemble: Duration::from_millis(10),
             upload: Duration::from_millis(20),
+            upload_hidden: Duration::from_millis(15),
             execute: Duration::from_millis(30),
             download: Duration::from_millis(40),
             apply: Duration::from_millis(50),
@@ -290,8 +321,28 @@ mod tests {
         let delta = a.minus(&snapshot);
         assert_eq!(delta.execute, Duration::from_millis(5));
         assert_eq!(delta.assemble, Duration::ZERO);
+        // upload_hidden is a subset of upload, never a sixth stage
         assert_eq!(a.total(), Duration::from_millis(155));
         // saturating: a stale (larger) snapshot clamps to zero, no panic
         assert_eq!(snapshot.minus(&a).execute, Duration::ZERO);
+    }
+
+    #[test]
+    fn overlap_efficiency_is_hidden_fraction() {
+        let t = StageTimers {
+            upload: Duration::from_millis(20),
+            upload_hidden: Duration::from_millis(15),
+            ..Default::default()
+        };
+        assert!((t.overlap_efficiency() - 0.75).abs() < 1e-12);
+        // nothing uploaded: defined as zero, not NaN
+        assert_eq!(StageTimers::default().overlap_efficiency(), 0.0);
+        // clamped even if counters drift past the whole (defensive)
+        let odd = StageTimers {
+            upload: Duration::from_millis(1),
+            upload_hidden: Duration::from_millis(2),
+            ..Default::default()
+        };
+        assert_eq!(odd.overlap_efficiency(), 1.0);
     }
 }

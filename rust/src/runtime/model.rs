@@ -4,6 +4,16 @@
 //!   for each micro-batch j:   accum_step(mb_j, scale_j)   (steps 2-4)
 //!   then:                     apply(hyper)                (step 5)
 //!
+//! Inputs flow through two persistent ping-ponged device slots
+//! ([`ModelRuntime::stage_inputs`] → `accum_staged`/`eval_staged`). In the
+//! serial mode the two calls are fused back into `accum_step`/`eval_step`
+//! (one slot live at a time — the byte-identity oracle); with
+//! [`ModelRuntime::set_overlap`] the runtime accepts a second staged
+//! micro-batch while one is in flight, which is how the coordinator's
+//! overlapped pipeline hides the upload stage behind execution. Upload
+//! time spent staging while another step was in flight is attributed to
+//! `StageTimers::upload_hidden` (a subset of `upload`).
+//!
 //! ABI (fixed by python/compile/model.py):
 //!   accum:  inputs  [params.., acc.., x, y, mask, scale[1]]
 //!           outputs (loss_sum, metric[4], acc'..)
@@ -46,15 +56,34 @@ enum OutputMode {
     Tupled,
 }
 
-/// Freshly uploaded per-step inputs (`ModelRuntime::upload_inputs`).
-struct UploadedInputs {
-    x: xla::PjRtBuffer,
-    y: xla::PjRtBuffer,
+/// One of the two persistent ping-ponged device input slots the pipeline
+/// stages uploads into ([`ModelRuntime::stage_inputs`]). A slot is *live*
+/// from staging until its step executes; the overlapped pipeline keeps up
+/// to two live at once (the ledger prices that second residency as
+/// `Footprint::overlap_bytes`).
+#[derive(Default)]
+struct InputSlot {
+    x: Option<xla::PjRtBuffer>,
+    y: Option<xla::PjRtBuffer>,
     /// `Some` only for ragged tails; `None` means the cached all-ones
     /// device mask applies.
     tail_mask: Option<xla::PjRtBuffer>,
-    /// Host→device upload wall time for these buffers.
-    elapsed: Duration,
+    /// Bit pattern of the staged loss-normalization scale; `None` when the
+    /// slot was staged for eval (no scale).
+    scale_bits: Option<u32>,
+    /// Cumulative upload wall time into this slot (per-slot timer).
+    upload: Duration,
+}
+
+impl InputSlot {
+    /// Drop the staged device buffers (the step consumed them); the slot
+    /// struct itself persists and is re-staged on the next ping-pong turn.
+    fn release(&mut self) {
+        self.x = None;
+        self.y = None;
+        self.tail_mask = None;
+        self.scale_bits = None;
+    }
 }
 
 /// Device-resident training state + compiled executables for one
@@ -90,6 +119,15 @@ pub struct ModelRuntime {
     /// Cumulative per-stage wall time (upload / execute / download /
     /// apply); the epoch executor snapshots deltas per epoch.
     timers: StageTimers,
+    /// The two ping-ponged device input slots.
+    input_slots: [InputSlot; 2],
+    /// Index of the next slot to execute (FIFO head of the staged queue).
+    slot_head: usize,
+    /// Staged-but-not-executed micro-batches (0..=2; >1 only with overlap).
+    slot_staged: usize,
+    /// Overlapped pipeline mode: accept a second staged micro-batch while
+    /// one is in flight. Off = the serial byte-identity oracle.
+    overlap: bool,
 }
 
 impl ModelRuntime {
@@ -159,6 +197,10 @@ impl ModelRuntime {
             ones_mask: None,
             scale_cache: BTreeMap::new(),
             timers: StageTimers::default(),
+            input_slots: [InputSlot::default(), InputSlot::default()],
+            slot_head: 0,
+            slot_staged: 0,
+            overlap: false,
         })
     }
 
@@ -203,12 +245,39 @@ impl ModelRuntime {
         self.scale_cache.len()
     }
 
-    /// Upload one micro-batch's inputs: x and y always, the mask only for
-    /// ragged tails (`tail_mask: None` means the batch is full and the
-    /// cached all-ones device mask — guaranteed populated on return —
-    /// applies). The caller resolves the mask reference once this `&mut`
-    /// borrow has ended.
-    fn upload_inputs(&mut self, mb: &MicroBatchHost) -> Result<UploadedInputs> {
+    /// Enable/disable the overlapped pipeline: with overlap on the runtime
+    /// accepts a second staged micro-batch while one is in flight (and
+    /// attributes that staging time to `StageTimers::upload_hidden`).
+    /// Off (the default) enforces at most one live slot — the serial
+    /// byte-identity oracle `--overlap off` runs against.
+    pub fn set_overlap(&mut self, on: bool) {
+        self.overlap = on;
+    }
+
+    /// Is the overlapped pipeline mode enabled?
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    /// Staged-but-not-executed micro-batches (0, 1, or — overlap only — 2).
+    pub fn staged_len(&self) -> usize {
+        self.slot_staged
+    }
+
+    /// Cumulative upload wall time per ping-pong slot (per-slot timers; in
+    /// steady-state overlap both slots carry roughly half the uploads).
+    pub fn slot_upload_times(&self) -> [Duration; 2] {
+        [self.input_slots[0].upload, self.input_slots[1].upload]
+    }
+
+    /// Upload one micro-batch's inputs into the idle ping-pong slot: x and
+    /// y always, the mask only for ragged tails (the cached all-ones device
+    /// mask covers full micro-batches), and — for accumulation steps — the
+    /// memoized `[1]` scale for `scale`. With another micro-batch already
+    /// staged (overlap mode), the upload time is also attributed to
+    /// `StageTimers::upload_hidden`: it is the work the pipeline hides
+    /// behind the in-flight step's execution.
+    pub fn stage_inputs(&mut self, mb: &MicroBatchHost, scale: Option<f32>) -> Result<()> {
         if mb.mask.len() != self.variant.mu {
             return Err(MbsError::Runtime(format!(
                 "micro-batch mask len {} != mu {}",
@@ -216,7 +285,17 @@ impl ModelRuntime {
                 self.variant.mu
             )));
         }
+        let cap = if self.overlap { 2 } else { 1 };
+        if self.slot_staged >= cap {
+            return Err(MbsError::Runtime(format!(
+                "input slots full: {} micro-batch(es) already staged (overlap={})",
+                self.slot_staged, self.overlap
+            )));
+        }
         let t0 = Instant::now();
+        if let Some(s) = scale {
+            self.ensure_scale(s)?;
+        }
         let full = self.mask_is_all_ones(mb);
         if full {
             self.ensure_ones_mask()?;
@@ -228,30 +307,47 @@ impl ModelRuntime {
         } else {
             Some(buffers::upload_f32(&self.client, &mb.mask, &[self.variant.mu])?)
         };
-        Ok(UploadedInputs { x, y, tail_mask, elapsed: t0.elapsed() })
+        let elapsed = t0.elapsed();
+        let hidden = self.slot_staged > 0;
+        let idx = (self.slot_head + self.slot_staged) % 2;
+        let slot = &mut self.input_slots[idx];
+        slot.x = Some(x);
+        slot.y = Some(y);
+        slot.tail_mask = tail_mask;
+        slot.scale_bits = scale.map(f32::to_bits);
+        slot.upload += elapsed;
+        self.slot_staged += 1;
+        self.timers.upload += elapsed;
+        if hidden {
+            self.timers.upload_hidden += elapsed;
+        }
+        Ok(())
     }
 
-    /// Run one micro-batch accumulation step (fwd + bwd + grad accumulate).
-    /// `scale` is the loss-normalization factor chosen by the coordinator.
-    pub fn accum_step(&mut self, mb: &MicroBatchHost, scale: f32) -> Result<StepOutput> {
-        let t_scale = Instant::now();
-        self.ensure_scale(scale)?;
-        let scale_elapsed = t_scale.elapsed();
-        let up = self.upload_inputs(mb)?;
-        let mask: &xla::PjRtBuffer = match &up.tail_mask {
-            Some(m) => m,
-            None => self.ones_mask.as_ref().expect("ensured by upload_inputs"),
-        };
-        let scale_buf = self.scale_cache.get(&scale.to_bits()).expect("ensured above");
-        let upload_elapsed = up.elapsed + scale_elapsed;
+    /// Run the accumulation step (fwd + bwd + grad accumulate) of the
+    /// oldest staged micro-batch, releasing its slot. The slot must have
+    /// been staged with a scale ([`ModelRuntime::stage_inputs`]).
+    pub fn accum_staged(&mut self) -> Result<StepOutput> {
+        if self.slot_staged == 0 {
+            return Err(MbsError::Runtime("no staged micro-batch to execute".into()));
+        }
+        let idx = self.slot_head;
+        let scale_bits = self.input_slots[idx].scale_bits.ok_or_else(|| {
+            MbsError::Runtime("staged micro-batch carries no scale (staged for eval?)".into())
+        })?;
+        let missing = || MbsError::Runtime("staged slot lost its input buffers".into());
         let mut args: Vec<&xla::PjRtBuffer> =
             Vec::with_capacity(2 * self.n_leaves + 4);
         args.extend(self.params.iter());
         args.extend(self.acc.iter());
-        args.push(&up.x);
-        args.push(&up.y);
-        args.push(mask);
-        args.push(scale_buf);
+        let slot = &self.input_slots[idx];
+        args.push(slot.x.as_ref().ok_or_else(missing)?);
+        args.push(slot.y.as_ref().ok_or_else(missing)?);
+        args.push(match &slot.tail_mask {
+            Some(m) => m,
+            None => self.ones_mask.as_ref().expect("ensured by stage_inputs"),
+        });
+        args.push(self.scale_cache.get(&scale_bits).expect("ensured by stage_inputs"));
         let t_execute = Instant::now();
         let mut outs = self.accum_exe.execute_b(&args)?;
         let execute_elapsed = t_execute.elapsed();
@@ -297,26 +393,30 @@ impl ModelRuntime {
             }
             OutputMode::Unknown => unreachable!(),
         };
-        self.timers.upload += upload_elapsed;
         self.timers.execute += execute_elapsed;
         self.timers.download += t_download.elapsed();
         self.pending_micro_steps += 1;
+        self.release_head_slot();
         Ok(out)
     }
 
-    /// Evaluate one (padded, masked) micro-batch without touching gradients.
-    pub fn eval_step(&mut self, mb: &MicroBatchHost) -> Result<StepOutput> {
-        let up = self.upload_inputs(mb)?;
-        let mask: &xla::PjRtBuffer = match &up.tail_mask {
-            Some(m) => m,
-            None => self.ones_mask.as_ref().expect("ensured by upload_inputs"),
-        };
-        let upload_elapsed = up.elapsed;
+    /// Evaluate the oldest staged micro-batch (forward only, no gradients),
+    /// releasing its slot.
+    pub fn eval_staged(&mut self) -> Result<StepOutput> {
+        if self.slot_staged == 0 {
+            return Err(MbsError::Runtime("no staged micro-batch to execute".into()));
+        }
+        let idx = self.slot_head;
+        let missing = || MbsError::Runtime("staged slot lost its input buffers".into());
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.n_leaves + 3);
         args.extend(self.params.iter());
-        args.push(&up.x);
-        args.push(&up.y);
-        args.push(mask);
+        let slot = &self.input_slots[idx];
+        args.push(slot.x.as_ref().ok_or_else(missing)?);
+        args.push(slot.y.as_ref().ok_or_else(missing)?);
+        args.push(match &slot.tail_mask {
+            Some(m) => m,
+            None => self.ones_mask.as_ref().expect("ensured by stage_inputs"),
+        });
         let t_execute = Instant::now();
         let mut outs = self.eval_exe.execute_b(&args)?;
         let execute_elapsed = t_execute.elapsed();
@@ -337,10 +437,50 @@ impl ModelRuntime {
             let mv = parts[1].to_vec::<f32>()?;
             StepOutput { loss_sum, metric: [mv[0], mv[1], mv[2], mv[3]] }
         };
-        self.timers.upload += upload_elapsed;
         self.timers.execute += execute_elapsed;
         self.timers.download += t_download.elapsed();
+        self.release_head_slot();
         Ok(out)
+    }
+
+    /// Release the head slot after its step executed: the device input
+    /// buffers drop (matching the ledger's free) and the ping-pong advances.
+    fn release_head_slot(&mut self) {
+        let idx = self.slot_head;
+        self.input_slots[idx].release();
+        self.slot_head = (idx + 1) % 2;
+        self.slot_staged -= 1;
+    }
+
+    /// Run one micro-batch accumulation step (fwd + bwd + grad accumulate):
+    /// the serial stage-then-execute fusion, one slot live at a time.
+    /// `scale` is the loss-normalization factor chosen by the coordinator.
+    pub fn accum_step(&mut self, mb: &MicroBatchHost, scale: f32) -> Result<StepOutput> {
+        self.check_no_staged("accum_step")?;
+        self.stage_inputs(mb, Some(scale))?;
+        self.accum_staged()
+    }
+
+    /// Evaluate one (padded, masked) micro-batch without touching gradients
+    /// (the serial stage-then-execute fusion).
+    pub fn eval_step(&mut self, mb: &MicroBatchHost) -> Result<StepOutput> {
+        self.check_no_staged("eval_step")?;
+        self.stage_inputs(mb, None)?;
+        self.eval_staged()
+    }
+
+    /// The serial fused steps would execute the *oldest* staged slot, so
+    /// mixing them with an in-flight pipeline would mispair inputs; refuse
+    /// loudly instead.
+    fn check_no_staged(&self, what: &str) -> Result<()> {
+        if self.slot_staged > 0 {
+            return Err(MbsError::Runtime(format!(
+                "{what} called with {} staged micro-batch(es) in flight — drain the \
+                 pipeline (accum_staged/eval_staged) first",
+                self.slot_staged
+            )));
+        }
+        Ok(())
     }
 
     /// Apply the optimizer update from the accumulated gradient, then reset

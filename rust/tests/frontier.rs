@@ -15,7 +15,7 @@ fn dry_run_grid_reproduces_headline_shape() {
     let entry = synthetic_entry("classification").unwrap();
     let capacities: Vec<u64> = [1u64, 2, 4, 8].iter().map(|&m| m * MIB).collect();
     let batches = [8usize, 32, 64, 128, 256];
-    let grid = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches).unwrap();
+    let grid = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches, false).unwrap();
     assert_eq!(grid.points.len(), 20);
 
     let class = |c_mib: u64, b: usize| {
@@ -67,11 +67,12 @@ fn frontier_report_matches_documented_schema() {
     let entry = synthetic_entry("segmentation").unwrap();
     let capacities: Vec<u64> = [2u64, 8].iter().map(|&m| m * MIB).collect();
     let batches = [8usize, 128];
-    let grid = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches).unwrap();
+    let grid = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches, false).unwrap();
     let parsed = Json::parse(&grid.to_report(true).to_json()).unwrap();
 
     assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("frontier"));
     assert_eq!(parsed.get("mode").and_then(Json::as_str), Some("dry-run"));
+    assert_eq!(parsed.get("overlap").and_then(Json::as_str), Some("off"));
     assert_eq!(parsed.get("model").and_then(Json::as_str), Some("synthetic-segmentation"));
     assert_eq!(
         parsed.get("capacities_mib").and_then(Json::as_arr).map(|a| a.len()),
@@ -94,6 +95,46 @@ fn frontier_report_matches_documented_schema() {
             other => panic!("unknown class {other}"),
         }
     }
+}
+
+/// Overlap pricing shifts the frontier inward but never outward: every
+/// point feasible with the pipeline's second input slot charged is also
+/// feasible without it, and the planned mu never grows — while the grid
+/// still produces MBS cells (the headline region survives the stricter
+/// budget).
+#[test]
+fn overlap_priced_grid_is_a_subset_of_the_serial_one() {
+    let entry = synthetic_entry("classification").unwrap();
+    let capacities: Vec<u64> = [1u64, 2, 4, 8].iter().map(|&m| m * MIB).collect();
+    let batches = [8usize, 32, 64, 128, 256];
+    let serial = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches, false).unwrap();
+    let overlapped = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches, true).unwrap();
+    assert!(overlapped.overlap && !serial.overlap);
+    assert_eq!(serial.points.len(), overlapped.points.len());
+    for (s, o) in serial.points.iter().zip(&overlapped.points) {
+        assert_eq!((s.capacity_bytes, s.batch), (o.capacity_bytes, o.batch));
+        if o.feasibility.is_feasible() {
+            assert!(
+                s.feasibility.is_feasible(),
+                "({}, {}) feasible WITH overlap but not without",
+                o.capacity_bytes,
+                o.batch
+            );
+            let (smu, omu) = (s.feasibility.mu().unwrap(), o.feasibility.mu().unwrap());
+            assert!(
+                omu <= smu,
+                "overlap grew mu {smu} -> {omu} at ({}, {})",
+                o.capacity_bytes,
+                o.batch
+            );
+        }
+    }
+    assert!(
+        overlapped.points.iter().any(|p| matches!(p.feasibility, Feasibility::Mbs { .. })),
+        "the MBS region must survive overlap pricing"
+    );
+    // the overlap grid's feasible region is what --time-all would sweep
+    assert!(overlapped.feasible_points().len() <= serial.feasible_points().len());
 }
 
 /// The --compare trend check over real report files: a throughput drop

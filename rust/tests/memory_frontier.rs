@@ -28,6 +28,10 @@ fn native_fails_beyond_frontier_mbs_succeeds() {
             .dataset_len(max_of(batch, 32))
             .eval_len(16)
             .skip_eval()
+            // this test pins capacity exactly at the SERIAL frontier; the
+            // overlapped pipeline's extra input slot has its own admission
+            // tests (tests/overlap.rs, planner unit tests)
+            .overlap(false)
             .build();
         c.capacity_mib = None; // set bytes directly below
         c.use_mbs = use_mbs;
@@ -147,6 +151,8 @@ fn mbs_depends_only_on_mu_not_batch() {
             .epochs(1)
             .dataset_len(batch.max(16))
             .skip_eval()
+            // capacity sits exactly at the serial mu=8 frontier
+            .overlap(false)
             .build();
         cfg.capacity_mib = Some(cap.div_ceil(1 << 20));
         let r = mbs::train(&mut engine, &cfg);

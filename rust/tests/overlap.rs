@@ -1,0 +1,164 @@
+//! Overlapped-pipeline integration tests (artifact-gated, see
+//! rust/docs/TESTING.md): the overlap identity oracle — `--overlap on`
+//! must reproduce `--overlap off` bit for bit, because both modes run the
+//! identical device-op sequence and only move the upload issue points —
+//! plus dirty-slot reuse identity and ledger residency accounting.
+
+mod common;
+
+use std::sync::Arc;
+
+use mbs::data::{loader, Dataset, SynthFlowers};
+use mbs::memory::Footprint;
+use mbs::TrainConfig;
+
+fn base_cfg(overlap: bool) -> TrainConfig {
+    TrainConfig::builder("microresnet18")
+        .mu(8)
+        .batch(24) // 3 accumulation steps per mini-batch
+        .epochs(2)
+        .dataset_len(50) // ragged epoch: 24 + 24 + 2
+        .eval_len(16)
+        .seed(7)
+        .overlap(overlap)
+        .build()
+}
+
+#[test]
+fn train_report_identical_between_overlap_modes() {
+    // the overlap identity oracle: same seeds, same plans, same device-op
+    // order => every loss and metric matches exactly, epoch by epoch
+    let Some(mut engine) = common::engine() else { return };
+    let serial = mbs::train(&mut engine, &base_cfg(false)).expect("serial arm");
+    let overlapped = mbs::train(&mut engine, &base_cfg(true)).expect("overlap arm");
+    assert_eq!(serial.mu, overlapped.mu);
+    assert_eq!(serial.updates, overlapped.updates);
+    assert_eq!(serial.train_epochs.len(), overlapped.train_epochs.len());
+    for (s, o) in serial.train_epochs.iter().zip(&overlapped.train_epochs) {
+        assert_eq!(
+            s.mean_loss.to_bits(),
+            o.mean_loss.to_bits(),
+            "epoch {} train loss diverged: {} vs {}",
+            s.epoch,
+            s.mean_loss,
+            o.mean_loss
+        );
+        assert_eq!(s.primary_metric.to_bits(), o.primary_metric.to_bits());
+        assert_eq!(s.samples, o.samples);
+        assert_eq!(s.micro_steps, o.micro_steps);
+    }
+    for (s, o) in serial.eval_epochs.iter().zip(&overlapped.eval_epochs) {
+        assert_eq!(s.mean_loss.to_bits(), o.mean_loss.to_bits(), "eval loss diverged");
+        assert_eq!(s.primary_metric.to_bits(), o.primary_metric.to_bits());
+    }
+    assert_eq!(
+        serial.final_eval.mean_loss.to_bits(),
+        overlapped.final_eval.mean_loss.to_bits()
+    );
+    // and the instrumentation tells the two modes apart: only the overlap
+    // run hides upload time behind execution
+    assert_eq!(serial.stages.upload_hidden, std::time::Duration::ZERO);
+    assert!(!serial.overlap && overlapped.overlap);
+    assert!(
+        overlapped.stages.upload_hidden > std::time::Duration::ZERO,
+        "overlap run hid no upload time: {:?}",
+        overlapped.stages
+    );
+    assert!(overlapped.stages.upload_hidden <= overlapped.stages.upload);
+    assert!(overlapped.stages.overlap_efficiency() > 0.0);
+}
+
+#[test]
+fn ledger_peak_carries_exactly_one_extra_input_slot() {
+    // mid-pipeline residency accounting: the overlapped run's high-water
+    // mark is the serial one plus precisely the second staged input slot
+    // (Footprint::overlap_bytes of the clamped micro-batch), and both stay
+    // within the admitted capacity
+    let Some(mut engine) = common::engine() else { return };
+    let entry = engine.manifest().model("microresnet18").unwrap().clone();
+    let variant = entry.variant(16, 8).unwrap().clone();
+    let fp = Footprint::from_manifest(&entry, &variant);
+    let serial = mbs::train(&mut engine, &base_cfg(false)).expect("serial arm");
+    let overlapped = mbs::train(&mut engine, &base_cfg(true)).expect("overlap arm");
+    assert!(serial.ledger_peak_bytes <= serial.capacity_bytes);
+    assert!(overlapped.ledger_peak_bytes <= overlapped.capacity_bytes);
+    assert_eq!(serial.ledger_peak_bytes, fp.step_bytes(8));
+    assert_eq!(
+        overlapped.ledger_peak_bytes,
+        serial.ledger_peak_bytes + fp.overlap_bytes(8),
+        "overlap peak must be serial peak + one staged input slot"
+    );
+}
+
+#[test]
+fn dirty_slot_reuse_reproduces_serial_outputs() {
+    // the ping-pong reuses each device slot every other step; a slot dirty
+    // with an older micro-batch's buffers must reproduce the serial path
+    // exactly once restaged (>= 3 steps so slot 0 is reused, ragged tail
+    // included)
+    let Some(mut engine) = common::engine() else { return };
+    let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 32, 1));
+    let indices: Vec<usize> = (0..20).collect(); // 8 + 8 + 4 (ragged)
+    let mbs_list: Vec<_> =
+        (0..3).map(|j| loader::assemble(ds.as_ref(), &indices, 8, j)).collect();
+    // serial oracle (eval is side-effect free, so same runtime is fine)
+    let serial: Vec<_> =
+        mbs_list.iter().map(|mb| rt.eval_step(mb).expect("serial eval")).collect();
+    // overlapped pipeline over the same micro-batches
+    rt.set_overlap(true);
+    let before = rt.timers();
+    let mut pipelined = Vec::new();
+    rt.stage_inputs(&mbs_list[0], None).expect("stage 0");
+    for mb in &mbs_list[1..] {
+        rt.stage_inputs(mb, None).expect("stage ahead");
+        pipelined.push(rt.eval_staged().expect("staged eval"));
+    }
+    pipelined.push(rt.eval_staged().expect("drain"));
+    assert_eq!(rt.staged_len(), 0, "pipeline must drain");
+    assert_eq!(serial, pipelined, "dirty slot reuse changed step outputs");
+    // both slots carried uploads, and the lookahead stages were hidden
+    let [s0, s1] = rt.slot_upload_times();
+    assert!(s0 > std::time::Duration::ZERO && s1 > std::time::Duration::ZERO);
+    let delta = rt.timers().minus(&before);
+    assert!(delta.upload_hidden > std::time::Duration::ZERO);
+    rt.set_overlap(false);
+}
+
+#[test]
+fn serial_mode_rejects_a_second_staged_micro_batch() {
+    // with overlap off the runtime enforces the one-live-slot invariant
+    // the byte-identity oracle depends on
+    let Some(mut engine) = common::engine() else { return };
+    let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 16, 1));
+    let indices: Vec<usize> = (0..16).collect();
+    let mb = loader::assemble(ds.as_ref(), &indices, 8, 0);
+    rt.stage_inputs(&mb, None).expect("first stage");
+    let err = rt.stage_inputs(&mb, None).expect_err("second stage must fail");
+    assert!(err.to_string().contains("input slots full"), "{err}");
+    // the serial fused step also refuses while something is staged
+    let err = rt.eval_step(&mb).expect_err("fused step with staged slot must fail");
+    assert!(err.to_string().contains("eval_step"), "{err}");
+    rt.eval_staged().expect("draining the staged slot still works");
+    assert_eq!(rt.staged_len(), 0);
+}
+
+#[test]
+fn prefetch_auto_reports_a_tuned_value() {
+    // --prefetch auto must settle on a positive depth within the N_Smu cap
+    // and leave the identity intact (tuning moves host staging only)
+    let Some(mut engine) = common::engine() else { return };
+    let mut cfg = base_cfg(true);
+    cfg.prefetch_auto = true;
+    let report = mbs::train(&mut engine, &cfg).expect("auto-prefetch run");
+    assert!(report.prefetch >= 1, "tuned prefetch must stay positive");
+    // cap: 2 * ceil(batch/mu) = 6 for batch 24, mu 8
+    assert!(report.prefetch <= 6, "tuned prefetch {} beyond cap", report.prefetch);
+    let fixed = mbs::train(&mut engine, &base_cfg(true)).expect("fixed-prefetch run");
+    for (a, b) in report.train_epochs.iter().zip(&fixed.train_epochs) {
+        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "tuning changed arithmetic");
+    }
+    // the pool was sized for the tuning cap: still allocation-free
+    assert_eq!(report.pool.allocs, 0, "auto-prefetch run allocated: {:?}", report.pool);
+}
