@@ -67,12 +67,26 @@ def _abstract(tree):
     return jax.tree_util.tree_map(lambda l: _sds(l.shape, l.dtype), tree)
 
 
-def export_model(model_key: str, out_dir: str, seed: int, quiet: bool) -> dict:
+def export_model(
+    model_key: str, out_dir: str, seed: int, quiet: bool, metadata_only: bool = False
+) -> dict:
+    """Export one model's artifacts + manifest entry.
+
+    With metadata_only=True nothing is lowered or written except the
+    manifest entry itself: the param index and the activation-memory
+    estimates are still computed (both are pure tracing/array arithmetic),
+    which is exactly what `mbs frontier --dry-run --model ...` needs to
+    classify the REAL models' memory frontier — the manifest-drift CI job
+    runs this per push without paying for XLA lowering.
+    """
     spec = MODELS[model_key]
     params = init_params(spec, seed)
     names, leaves = shapes.flatten_params(params)
     pbin = f"{model_key}.params.bin"
-    index = shapes.dump_params(params, os.path.join(out_dir, pbin))
+    if metadata_only:
+        index = shapes.param_index(params)
+    else:
+        index = shapes.dump_params(params, os.path.join(out_dir, pbin))
     pbytes = shapes.param_bytes(params)
 
     info = optim.OPTIMIZERS[spec.optimizer]
@@ -80,12 +94,13 @@ def export_model(model_key: str, out_dir: str, seed: int, quiet: bool) -> dict:
     aparams = _abstract(params)
     hyper = _sds((len(info["hyper"]),), jnp.float32)
     slot_args = [aparams] * info["slots"]
-    lowered = jax.jit(apply_fn).lower(aparams, aparams, *slot_args, hyper)
     apply_name = f"{model_key}.apply.hlo.txt"
-    with open(os.path.join(out_dir, apply_name), "w") as f:
-        f.write(to_hlo_text(lowered))
-    if not quiet:
-        print(f"  apply   -> {apply_name}")
+    if not metadata_only:
+        lowered = jax.jit(apply_fn).lower(aparams, aparams, *slot_args, hyper)
+        with open(os.path.join(out_dir, apply_name), "w") as f:
+            f.write(to_hlo_text(lowered))
+        if not quiet:
+            print(f"  apply   -> {apply_name}")
 
     entry = {
         "task": spec.task,
@@ -116,14 +131,15 @@ def export_model(model_key: str, out_dir: str, seed: int, quiet: bool) -> dict:
         scale = _sds((1,), jnp.float32)
 
         tag = f"{model_key}_s{size}_mu{mu}"
-        acc_lowered = jax.jit(accum).lower(aparams, aparams, x, y, mask, scale)
         accum_name = f"{tag}.accum.hlo.txt"
-        with open(os.path.join(out_dir, accum_name), "w") as f:
-            f.write(to_hlo_text(acc_lowered))
-        ev_lowered = jax.jit(eval_step).lower(aparams, x, y, mask)
         eval_name = f"{tag}.eval.hlo.txt"
-        with open(os.path.join(out_dir, eval_name), "w") as f:
-            f.write(to_hlo_text(ev_lowered))
+        if not metadata_only:
+            acc_lowered = jax.jit(accum).lower(aparams, aparams, x, y, mask, scale)
+            with open(os.path.join(out_dir, accum_name), "w") as f:
+                f.write(to_hlo_text(acc_lowered))
+            ev_lowered = jax.jit(eval_step).lower(aparams, x, y, mask)
+            with open(os.path.join(out_dir, eval_name), "w") as f:
+                f.write(to_hlo_text(ev_lowered))
 
         # activation residency estimate for the rust memory model, from the
         # jaxpr of the fwd+bwd step (see shapes.py docstring)
@@ -165,6 +181,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--models", nargs="*", default=None, help="subset of model keys")
     ap.add_argument("--quiet", action="store_true")
+    ap.add_argument(
+        "--metadata-only",
+        action="store_true",
+        help="write manifest.json only (param index + memory estimates; no HLO "
+        "lowering, no params.bin) — feeds `mbs frontier --dry-run --model` so "
+        "CI catches manifest-footprint drift without a full export",
+    )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -172,8 +195,10 @@ def main() -> None:
     manifest = {"version": 1, "seed": args.seed, "models": {}}
     for mk in model_keys:
         if not args.quiet:
-            print(f"[aot] {mk}")
-        manifest["models"][mk] = export_model(mk, args.out_dir, args.seed, args.quiet)
+            print(f"[aot] {mk}" + (" (metadata only)" if args.metadata_only else ""))
+        manifest["models"][mk] = export_model(
+            mk, args.out_dir, args.seed, args.quiet, metadata_only=args.metadata_only
+        )
 
     with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)

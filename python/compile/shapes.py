@@ -43,25 +43,31 @@ def param_bytes(params) -> int:
     return sum(int(np.prod(l.shape)) * 4 for l in jax.tree_util.tree_leaves(params))
 
 
-def dump_params(params, path: str) -> List[dict]:
-    """Concatenate all leaves (f32 little-endian) into one .bin; return index."""
+def param_index(params) -> List[dict]:
+    """The params-bin index (name/shape/offset/elems) WITHOUT writing the
+    .bin — the metadata-only export path (manifest-drift CI) uses this so
+    the rust memory model can be fed real footprints with no artifacts on
+    disk. dump_params builds its index through this same function, so the
+    two can never drift."""
     names, leaves = flatten_params(params)
     index = []
     offset = 0
-    with open(path, "wb") as f:
-        for name, leaf in zip(names, leaves):
-            arr = np.asarray(leaf, dtype="<f4")
-            f.write(arr.tobytes())
-            index.append(
-                {
-                    "name": name,
-                    "shape": list(arr.shape),
-                    "offset": offset,
-                    "elems": int(arr.size),
-                }
-            )
-            offset += arr.size * 4
+    for name, leaf in zip(names, leaves):
+        shape = list(np.shape(leaf))
+        elems = int(np.prod(shape)) if shape else 1
+        index.append({"name": name, "shape": shape, "offset": offset, "elems": elems})
+        offset += elems * 4
     return index
+
+
+def dump_params(params, path: str) -> List[dict]:
+    """Concatenate all leaves (f32 little-endian) into one .bin; return the
+    param_index (same leaf order, so offsets match what was written)."""
+    _, leaves = flatten_params(params)
+    with open(path, "wb") as f:
+        for leaf in leaves:
+            f.write(np.asarray(leaf, dtype="<f4").tobytes())
+    return param_index(params)
 
 
 def activation_bytes(fn, *example_args, batch: int) -> Tuple[int, int]:
@@ -75,13 +81,21 @@ def activation_bytes(fn, *example_args, batch: int) -> Tuple[int, int]:
     per_batch_elems = 0
     fixed_elems = 0
 
+    # jax >= 0.5 exposes the jaxpr classes under jax.extend.core; older
+    # versions (this image ships 0.4.x) keep them in jax.core — resolve
+    # once so the export runs on both
+    try:
+        _core = jax.extend.core
+    except AttributeError:
+        _core = jax.core
+
     def visit(jp):
         nonlocal per_batch_elems, fixed_elems
         for eqn in jp.eqns:
             for sub in eqn.params.values():
-                if isinstance(sub, jax.extend.core.ClosedJaxpr):
+                if isinstance(sub, _core.ClosedJaxpr):
                     visit(sub.jaxpr)
-                elif isinstance(sub, jax.extend.core.Jaxpr):
+                elif isinstance(sub, _core.Jaxpr):
                     visit(sub)
             for var in eqn.outvars:
                 aval = var.aval

@@ -7,6 +7,9 @@
 //!   accum:         upload x/y/mask/scale + execute fwd/bwd + state swap
 //!   apply:         optimizer update executable
 //!   eval:          forward-only executable
+//!   eval sweep:    a full repeat-eval pass through `evaluate_pooled` —
+//!                  the caller-owned-pool entry point, so the loop pays
+//!                  zero per-call pool warm-up (ROADMAP PR 4 follow-up)
 //! plus the L3-only overhead (splitter + scale arithmetic), which must be
 //! noise-level compared to the XLA work.
 
@@ -15,10 +18,10 @@ mod common;
 use std::sync::Arc;
 use std::time::Instant;
 
-use mbs::coordinator::{NormalizationMode, SplitPlan};
-use mbs::data::{loader, Dataset};
 use mbs::coordinator::datasets_for;
-use mbs::metrics::Table;
+use mbs::coordinator::{evaluate_pooled, NormalizationMode, SplitPlan, StreamingPolicy};
+use mbs::data::{loader, BufPool, Dataset};
+use mbs::metrics::{MetricKind, Table};
 use mbs::{Result, TrainConfig};
 
 fn bench<F: FnMut() -> Result<()>>(iters: usize, mut f: F) -> Result<f64> {
@@ -37,7 +40,7 @@ fn main() -> Result<()> {
 
     let mut table = Table::new(&[
         "model", "mu", "assemble (ms)", "assemble_into (ms)", "accum (ms)", "apply (ms)",
-        "eval (ms)",
+        "eval (ms)", "eval sweep (ms)",
     ]);
     let setups = [
         ("microresnet18", 16usize, 8usize),
@@ -50,8 +53,10 @@ fn main() -> Result<()> {
     ];
     for (model, size, mu) in setups {
         let entry = engine.manifest().model(model)?.clone();
-        let cfg = TrainConfig::builder(model).build();
-        let (ds, _): (Arc<dyn Dataset>, _) = datasets_for(&entry.task, size, &cfg)?;
+        let mut cfg = TrainConfig::builder(model).build();
+        cfg.eval_len = 32; // a small but multi-micro-step repeat-eval set
+        let (ds, eval_ds): (Arc<dyn Dataset>, Arc<dyn Dataset>) =
+            datasets_for(&entry.task, size, &cfg)?;
         let indices: Vec<usize> = (0..mu).collect();
 
         let t_assemble = bench(iters, || {
@@ -78,6 +83,24 @@ fn main() -> Result<()> {
         let t_apply = bench(iters, || rt.apply(&rt.default_hyper()))?;
         let t_eval = bench(iters, || rt.eval_step(&mb).map(|_| ()))?;
 
+        // repeat-eval through the caller-owned pool: one warm-up outside
+        // the loop, every iteration reuses the same staging buffers
+        let kind = MetricKind::parse(&entry.metric_semantics)?;
+        let pool = Arc::new(BufPool::for_prefetch(2));
+        pool.warm(BufPool::buffers_for(2), eval_ds.as_ref(), mu);
+        let t_eval_sweep = bench(iters, || {
+            evaluate_pooled(
+                &mut rt,
+                kind,
+                &eval_ds,
+                0,
+                StreamingPolicy::Synchronous,
+                0,
+                &pool,
+            )
+            .map(|_| ())
+        })?;
+
         table.row(&[
             model.to_string(),
             mu.to_string(),
@@ -86,6 +109,7 @@ fn main() -> Result<()> {
             format!("{t_accum:.2}"),
             format!("{t_apply:.2}"),
             format!("{t_eval:.2}"),
+            format!("{t_eval_sweep:.2}"),
         ]);
     }
     println!("MICROBENCH — per-stage hot-path latency ({iters} iters, state: see below):\n");

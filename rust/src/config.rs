@@ -12,6 +12,7 @@ use crate::coordinator::streamer::StreamingPolicy;
 use crate::error::{MbsError, Result};
 use crate::memory::MIB;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 
 /// How the micro-batch size is chosen (paper Alg. 1).
 ///
@@ -268,6 +269,25 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Apply a JSON value to a config key — how `jobs.json` job entries
+    /// (`mbs jobs --spec`) reuse the exact flag/file parser: numbers
+    /// render as integers when whole, booleans as `true`/`false`, strings
+    /// pass through, anything structured is rejected.
+    pub fn set_json(&mut self, key: &str, value: &Json) -> Result<()> {
+        let rendered = match value {
+            Json::Str(s) => s.clone(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => format!("{}", *n as i64),
+            Json::Num(n) => format!("{n}"),
+            other => {
+                return Err(MbsError::Config(format!(
+                    "config key '{key}': expected a scalar JSON value, got {other:?}"
+                )))
+            }
+        };
+        self.set(key, &rendered)
+    }
+
     /// Flat `key = value` config file ('#' comments, blank lines ok).
     pub fn load_file(&mut self, path: &str) -> Result<()> {
         let text = std::fs::read_to_string(path)?;
@@ -515,6 +535,24 @@ mod tests {
         let b = TrainConfig::builder("m").prefetch(3).prefetch_auto().build();
         assert!(b.prefetch_auto);
         assert_eq!(b.prefetch, 3);
+    }
+
+    #[test]
+    fn set_json_renders_scalars_through_the_flag_parser() {
+        let mut c = TrainConfig::default_for("m");
+        c.set_json("batch", &Json::Num(64.0)).unwrap();
+        assert_eq!(c.batch, 64);
+        c.set_json("mu", &Json::Str("auto".into())).unwrap();
+        assert!(c.mu.is_auto());
+        c.set_json("mu", &Json::Num(8.0)).unwrap();
+        assert_eq!(c.mu, MicroBatchSpec::Fixed(8));
+        c.set_json("skip-eval", &Json::Bool(true)).unwrap();
+        assert!(c.skip_eval);
+        c.set_json("lr", &Json::Num(0.25)).unwrap();
+        assert_eq!(c.lr, Some(0.25));
+        // structured values and unknown keys are rejected
+        assert!(c.set_json("batch", &Json::Arr(vec![])).is_err());
+        assert!(c.set_json("bogus", &Json::Num(1.0)).is_err());
     }
 
     #[test]

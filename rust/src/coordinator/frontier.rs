@@ -39,6 +39,7 @@ use crate::metrics::StageTimers;
 use crate::util::table::Table;
 
 use super::planner;
+use super::tenancy::{self, AdmissionOutcome, AdmissionRequest};
 
 /// How one `(capacity, batch)` grid point trains, per the planner.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -193,6 +194,77 @@ pub fn classify(
         Err(MbsError::Oom { needed_bytes, .. }) => Ok(Feasibility::Oom { needed_bytes }),
         Err(e) => Err(e),
     }
+}
+
+/// Co-residency verdict for a job *set* sharing one device — the
+/// multi-tenant analogue of the per-point [`Feasibility`] classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetFeasibility {
+    /// Every job is admitted at the micro-batch it would get alone on the
+    /// whole device — co-residency costs the set nothing.
+    CoResident,
+    /// Every job is admitted, but at least one shrank its `mu` below its
+    /// solo plan to fit the shared arena (the set-level `Mbs` region:
+    /// only streaming smaller micro-batches makes the set fit).
+    CoResidentMbs,
+    /// At least one job cannot be admitted (resident reservation does not
+    /// fit, the job is not even solo-feasible, or no exported variant's
+    /// transient fits the shared leftover).
+    Reject,
+}
+
+impl SetFeasibility {
+    /// Fold per-job admission verdicts into the set-level class — the ONE
+    /// place the admit/shrink/reject → set-class mapping lives (shared by
+    /// [`classify_set`] and the `mbs jobs` report writers).
+    pub fn from_outcomes<'a, I>(outcomes: I) -> SetFeasibility
+    where
+        I: IntoIterator<Item = &'a AdmissionOutcome>,
+    {
+        let mut shrunk_any = false;
+        for outcome in outcomes {
+            match outcome {
+                AdmissionOutcome::Rejected { .. } => return SetFeasibility::Reject,
+                AdmissionOutcome::Admitted { shrunk, .. } => shrunk_any |= *shrunk,
+            }
+        }
+        if shrunk_any {
+            SetFeasibility::CoResidentMbs
+        } else {
+            SetFeasibility::CoResident
+        }
+    }
+
+    /// Does every job of the set train?
+    pub fn is_feasible(&self) -> bool {
+        !matches!(self, SetFeasibility::Reject)
+    }
+
+    /// Machine-readable class name
+    /// (`co-resident` / `co-resident-mbs` / `reject`).
+    pub fn class_name(&self) -> &'static str {
+        match self {
+            SetFeasibility::CoResident => "co-resident",
+            SetFeasibility::CoResidentMbs => "co-resident-mbs",
+            SetFeasibility::Reject => "reject",
+        }
+    }
+}
+
+/// Classify a job set against one shared capacity: run the deterministic
+/// admission planner ([`tenancy::plan_admission`]) and label the *set* —
+/// [`SetFeasibility::CoResident`] when sharing is free,
+/// [`SetFeasibility::CoResidentMbs`] when it forces smaller micro-batches,
+/// [`SetFeasibility::Reject`] when any job cannot be admitted. Pure
+/// capacity arithmetic over manifest metadata, like [`classify`]; the
+/// `mbs jobs --dry-run` table is this function rendered per job.
+pub fn classify_set(
+    requests: &[AdmissionRequest],
+    capacity_bytes: u64,
+    overlap: bool,
+) -> SetFeasibility {
+    let verdicts = tenancy::plan_admission(requests, capacity_bytes, overlap);
+    SetFeasibility::from_outcomes(verdicts.iter().map(|v| &v.outcome))
 }
 
 impl FrontierGrid {
@@ -661,6 +733,39 @@ mod tests {
             parsed.get("overlap").and_then(crate::util::json::Json::as_str),
             Some("on")
         );
+    }
+
+    #[test]
+    fn classify_set_labels_all_three_regions() {
+        use crate::config::MicroBatchSpec;
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        let req = |name: &str| AdmissionRequest {
+            name: name.into(),
+            entry: entry.clone(),
+            size: 16,
+            batch: 64,
+            eval_len: 0,
+            mu: MicroBatchSpec::Auto,
+        };
+        let pair = [req("a"), req("b")];
+        // roomy: two residents + one mu=8 transient -> both keep solo mu
+        let roomy = 2 * fp.resident_bytes() + fp.batch_bytes(8);
+        assert_eq!(classify_set(&pair, roomy, false), SetFeasibility::CoResident);
+        // one byte less: the shared transient budget forces mu=4
+        let verdict = classify_set(&pair, roomy - 1, false);
+        assert_eq!(verdict, SetFeasibility::CoResidentMbs);
+        assert!(verdict.is_feasible());
+        assert_eq!(verdict.class_name(), "co-resident-mbs");
+        // two residents but not even a mu=2 transient: the set is rejected
+        let tiny = 2 * fp.resident_bytes() + fp.batch_bytes(2) - 1;
+        assert_eq!(classify_set(&pair, tiny, false), SetFeasibility::Reject);
+        // a single job at the roomy capacity is trivially co-resident, and
+        // agrees with the per-point classifier's feasibility
+        assert_eq!(classify_set(&pair[..1], roomy, false), SetFeasibility::CoResident);
+        assert!(classify(&entry, 16, 64, 0, &Ledger::new(roomy), false)
+            .unwrap()
+            .is_feasible());
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //! * [`accumulator`] — loss-normalization policy (section 3.4, eq. 14-17)
 //! * [`scheduler`] — update points + LR schedules (section 3.3 step 5)
 //! * [`trainer`] — the single plan-driven epoch executor (MBS, the native
-//!   "w/o MBS" baseline and eval are all parameterizations of it)
+//!   "w/o MBS" baseline and eval are all parameterizations of it), plus
+//!   the round-robin interleaved multi-job executor ([`train_jobs`])
+//! * [`tenancy`] — multi-tenant admission planning: `jobs.json` specs and
+//!   the deterministic admit / shrink-mu / reject planner over the shared
+//!   [`Arena`](crate::memory::Arena)
 //! * [`frontier`] — capacity × batch feasibility sweeps: the planner made
 //!   grid-callable, classifying every point as Native / MBS(mu) / OOM
-//!   (the paper's headline figure as an instrument)
+//!   (the paper's headline figure as an instrument), plus the
+//!   co-residency classifier for job *sets* ([`classify_set`])
 
 pub mod accumulator;
 pub mod frontier;
@@ -20,12 +25,21 @@ pub mod planner;
 pub mod scheduler;
 pub mod splitter;
 pub mod streamer;
+pub mod tenancy;
 pub mod trainer;
 
 pub use accumulator::{Accumulation, NormalizationMode};
-pub use frontier::{classify, Feasibility, FrontierGrid, GridPoint};
-pub use planner::{auto_mu, default_capacity, ExecutionPlan, Planner, Resolution};
+pub use frontier::{classify, classify_set, Feasibility, FrontierGrid, GridPoint, SetFeasibility};
+pub use planner::{
+    auto_mu, auto_mu_transient, default_capacity, ExecutionPlan, Planner, Resolution,
+};
 pub use scheduler::UpdateScheduler;
 pub use splitter::{MicroRange, SplitPlan};
 pub use streamer::{stream_epoch, EpochStream, StreamingPolicy};
-pub use trainer::{datasets_for, evaluate, evaluate_pooled, evaluate_with, train, TrainReport};
+pub use tenancy::{
+    plan_admission, AdmissionOutcome, AdmissionRequest, JobAdmission, JobSet, JobSpec,
+};
+pub use trainer::{
+    datasets_for, evaluate, evaluate_pooled, evaluate_with, train, train_jobs, JobRun,
+    JobsReport, TrainReport,
+};

@@ -260,27 +260,14 @@ pub fn auto_mu(
     budget: u64,
     overlap: bool,
 ) -> Result<Resolution> {
-    let cands = candidates(entry, size)?;
-    let chosen = cands
-        .iter()
-        .copied()
-        .filter(|v| {
-            let fp = Footprint::from_manifest(entry, v);
-            peak_bytes(&fp, v.mu, batch, eval_len, overlap) <= budget
-        })
-        .max_by_key(|v| (v.mu.min(batch), Reverse(v.mu)));
-    match chosen {
-        Some(v) => Ok(Resolution {
-            mu: v.mu,
-            variant: v.clone(),
-            footprint: Footprint::from_manifest(entry, v),
-        }),
+    let need = |fp: &Footprint, mu: usize| peak_bytes(fp, mu, batch, eval_len, overlap);
+    match auto_mu_by(entry, size, batch, budget, need)? {
+        Some(res) => Ok(res),
         None => {
-            let smallest = cands[0];
-            let fp = Footprint::from_manifest(entry, smallest);
-            let needed = peak_bytes(&fp, smallest.mu, batch, eval_len, overlap);
+            let smallest = entry_smallest(entry, size)?;
+            let fp = Footprint::from_manifest(entry, &smallest);
             Err(MbsError::Oom {
-                needed_bytes: needed,
+                needed_bytes: need(&fp, smallest.mu),
                 available_bytes: budget.saturating_sub(fp.resident_bytes()),
                 capacity_bytes: budget,
                 context: format!(
@@ -290,6 +277,78 @@ pub fn auto_mu(
             })
         }
     }
+}
+
+/// The Alg. 1 selection against a *transient* budget: like [`auto_mu`],
+/// but the compared need is the variant's peak residency *beyond* its
+/// already-placed resident state (`peak_bytes - resident_bytes`) — the
+/// data-space a step transiently holds while it executes. This is the
+/// query the multi-tenant admission planner
+/// ([`tenancy`](crate::coordinator::tenancy)) runs per job against
+/// `Arena::remaining()` *after every job's resident reservation is
+/// placed*: residents are charged durably, transients time-share the one
+/// remaining budget because the interleaved executor runs exactly one
+/// job's micro-step at a time.
+pub fn auto_mu_transient(
+    entry: &ModelEntry,
+    size: usize,
+    batch: usize,
+    eval_len: usize,
+    transient_budget: u64,
+    overlap: bool,
+) -> Result<Resolution> {
+    let need = |fp: &Footprint, mu: usize| {
+        peak_bytes(fp, mu, batch, eval_len, overlap).saturating_sub(fp.resident_bytes())
+    };
+    match auto_mu_by(entry, size, batch, transient_budget, need)? {
+        Some(res) => Ok(res),
+        None => {
+            let smallest = entry_smallest(entry, size)?;
+            let fp = Footprint::from_manifest(entry, &smallest);
+            Err(MbsError::Oom {
+                needed_bytes: need(&fp, smallest.mu),
+                available_bytes: transient_budget,
+                capacity_bytes: transient_budget,
+                context: format!(
+                    "shared-arena transient budget: smallest exported variant (mu={}) \
+                     does not fit",
+                    smallest.mu
+                ),
+            })
+        }
+    }
+}
+
+/// The smallest exported variant at `size` (used to phrase OOM fallbacks).
+fn entry_smallest(entry: &ModelEntry, size: usize) -> Result<Variant> {
+    Ok(candidates(entry, size)?[0].clone())
+}
+
+/// Shared core of [`auto_mu`] / [`auto_mu_transient`]: pick the exported
+/// variant keeping the most samples on the device whose `need(fp, mu)`
+/// fits `budget`, preferring less padding on ties (`Ok(None)` when no
+/// variant fits — the wrappers phrase the structured OOM).
+fn auto_mu_by<F: Fn(&Footprint, usize) -> u64>(
+    entry: &ModelEntry,
+    size: usize,
+    batch: usize,
+    budget: u64,
+    need: F,
+) -> Result<Option<Resolution>> {
+    let cands = candidates(entry, size)?;
+    let chosen = cands
+        .iter()
+        .copied()
+        .filter(|v| {
+            let fp = Footprint::from_manifest(entry, v);
+            need(&fp, v.mu) <= budget
+        })
+        .max_by_key(|v| (v.mu.min(batch), Reverse(v.mu)));
+    Ok(chosen.map(|v| Resolution {
+        mu: v.mu,
+        variant: v.clone(),
+        footprint: Footprint::from_manifest(entry, v),
+    }))
 }
 
 /// Resolve `cfg.mu` against the manifest and the memory ledger's remaining
@@ -488,6 +547,26 @@ mod tests {
         // with the slot priced in explicitly, mu=8 is admitted again
         let roomy = budget + fp8.overlap_bytes(8);
         assert_eq!(auto_mu(&entry, 16, 1024, 0, roomy, true).unwrap().mu, 8);
+    }
+
+    #[test]
+    fn auto_mu_transient_excludes_resident_state() {
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp8 = Footprint::from_manifest(&entry, entry.variant(16, 8).unwrap());
+        // a transient budget of exactly the mu=8 data space picks mu=8 even
+        // though the full step (resident included) would not fit it
+        let transient = fp8.batch_bytes(8);
+        assert!(transient < fp8.step_bytes(8));
+        let r = auto_mu_transient(&entry, 16, 1024, 0, transient, false).unwrap();
+        assert_eq!(r.mu, 8);
+        // one byte less downsizes to the next exported variant
+        let r = auto_mu_transient(&entry, 16, 1024, 0, transient - 1, false).unwrap();
+        assert_eq!(r.mu, 4);
+        // below even the smallest variant's data space: structured OOM
+        let err = auto_mu_transient(&entry, 16, 1024, 0, fp8.batch_bytes(2) - 1, false)
+            .unwrap_err();
+        assert!(err.is_oom(), "want Oom, got {err:?}");
+        assert!(err.to_string().contains("mu=2"), "{err}");
     }
 
     #[test]
@@ -698,6 +777,45 @@ mod tests {
                             a.mu
                         )),
                         (Err(e), _) => ensure(e.is_oom(), format!("non-Oom fallback: {e}")),
+                    }
+                },
+            );
+        }
+
+        #[test]
+        fn transient_selection_matches_full_with_resident_added() {
+            // for uniform per-variant footprints (the fixture's shape),
+            // auto_mu_transient(B) must agree with auto_mu(B + resident):
+            // the transient form is the same selection with the resident
+            // state factored out, which is exactly how the tenancy planner
+            // uses it after reservations are placed
+            forall(
+                "transient == full - resident",
+                300,
+                0xA15,
+                |r| {
+                    let entry = rand_entry(r);
+                    let budget = r.below(1 << 20);
+                    let batch = (r.below(1024) + 1) as usize;
+                    let eval_len = r.below(256) as usize;
+                    let overlap = r.below(2) == 1;
+                    (entry, budget, batch, eval_len, overlap)
+                },
+                |(entry, budget, batch, eval_len, overlap)| {
+                    let fp = Footprint::from_manifest(entry, &entry.variants[0]);
+                    let resident = fp.resident_bytes();
+                    let t = auto_mu_transient(entry, 16, *batch, *eval_len, *budget, *overlap);
+                    let f = auto_mu(entry, 16, *batch, *eval_len, *budget + resident, *overlap);
+                    match (t, f) {
+                        (Ok(a), Ok(b)) => ensure(
+                            a.mu == b.mu,
+                            format!("transient mu={} != full mu={}", a.mu, b.mu),
+                        ),
+                        (Err(a), Err(b)) => ensure(
+                            a.is_oom() && b.is_oom(),
+                            "both must fall back to structured OOM",
+                        ),
+                        (a, b) => Err(format!("verdicts diverged: {a:?} vs {b:?}")),
                     }
                 },
             );

@@ -1,0 +1,814 @@
+//! Multi-tenant admission planning: several training jobs, one device.
+//!
+//! MBS shrinks a job's transient working set from `N_B` samples to `mu`
+//! (paper §3.3). The same mechanism lets *heterogeneous* (model, batch)
+//! jobs time-share one device that could not hold any two of them
+//! natively — the serving-scale story (You et al. and McCandlish et al.
+//! both treat batch size as a per-workload knob, so a shared device must
+//! admit workloads against one capacity rather than plan them in
+//! isolation). This module is the admission side:
+//!
+//!  * [`JobSpec`] / [`JobSet`] — a named job (its [`TrainConfig`]) and a
+//!    set of them plus the shared `--capacity-mib`, parsed from a
+//!    `jobs.json` spec file;
+//!  * [`plan_admission`] — the deterministic two-phase planner. Phase 1
+//!    places every job's **resident reservation** (params + gradient
+//!    accumulator + optimizer slots + fixed workspace; the conservative
+//!    claim uses the largest exported variant's `fixed_bytes`) into the
+//!    shared [`Arena`](crate::memory::Arena) budget, in spec order.
+//!    Phase 2 then runs the micro-batch planner per job against what
+//!    remains *after all residents are placed*
+//!    ([`auto_mu_transient`](crate::coordinator::planner::auto_mu_transient)):
+//!    transients time-share that one budget because the interleaved
+//!    executor (`trainer::train_jobs`) runs exactly one job's micro-step
+//!    at a time. Each job is **admitted** (at its solo micro-batch),
+//!    admitted with a **shrunk mu** (co-residency cost it capacity), or
+//!    **rejected** (resident reservation does not fit, the job is not
+//!    even solo-feasible, or no exported variant's transient fits).
+//!    A rejection releases its reservation for *later* jobs in spec
+//!    order — first-fit, so the outcome is a pure function of the input.
+//!
+//! The planner is pure capacity arithmetic over manifest metadata — no
+//! artifacts, no training — which is what lets `mbs jobs --dry-run` and
+//! the co-residency classifier
+//! ([`frontier::classify_set`](crate::coordinator::frontier::classify_set))
+//! run on a clean checkout.
+
+use crate::config::{MicroBatchSpec, TrainConfig};
+use crate::error::{MbsError, Result};
+use crate::manifest::ModelEntry;
+use crate::memory::Footprint;
+use crate::util::json::Json;
+
+use super::planner::{self, Resolution};
+
+/// One tenant's requested workload: a name plus the full training config
+/// it would run solo.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Unique job name (labels arena charges, tables and reports).
+    pub name: String,
+    /// Synthetic task stand-in ("classification" | "segmentation" | "lm")
+    /// for artifact-free dry runs; `None` when `cfg.model` names a real
+    /// manifest entry.
+    pub task: Option<String>,
+    /// The job's training configuration (model, batch, epochs, seed, …).
+    pub cfg: TrainConfig,
+}
+
+impl JobSpec {
+    /// Parse one entry of a `jobs.json` `"jobs"` array: `"name"` plus
+    /// either `"model"` (manifest key) or `"task"` (synthetic stand-in),
+    /// with every other key applied as a [`TrainConfig`] override
+    /// (`"batch": 64`, `"seed": 3`, `"mu": "auto"`, …).
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| MbsError::Config("jobs spec: each job must be an object".into()))?;
+        let name = obj
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| MbsError::Config("jobs spec: job missing 'name'".into()))?
+            .to_string();
+        let model = obj.get("model").and_then(Json::as_str);
+        let task = obj.get("task").and_then(Json::as_str);
+        let model_name = match (model, task) {
+            (Some(m), None) => m.to_string(),
+            (None, Some(t)) => format!("synthetic-{t}"),
+            (Some(_), Some(_)) => {
+                return Err(MbsError::Config(format!(
+                    "jobs spec: job '{name}' names both 'model' and 'task' — pick one"
+                )))
+            }
+            (None, None) => {
+                return Err(MbsError::Config(format!(
+                    "jobs spec: job '{name}' needs 'model' (manifest key) or 'task' \
+                     (synthetic stand-in)"
+                )))
+            }
+        };
+        let mut cfg = TrainConfig::default_for(&model_name);
+        for (key, val) in obj {
+            if matches!(key.as_str(), "name" | "model" | "task") {
+                continue;
+            }
+            cfg.set_json(key, val).map_err(|e| {
+                MbsError::Config(format!("jobs spec: job '{name}': {e}"))
+            })?;
+        }
+        cfg.validate()?;
+        Ok(JobSpec { name, task: task.map(str::to_string), cfg })
+    }
+}
+
+/// A set of jobs sharing one device capacity — what `mbs jobs --spec`
+/// loads.
+#[derive(Debug, Clone)]
+pub struct JobSet {
+    /// Shared device capacity in MiB; `None` when the spec file defers to
+    /// the CLI's `--capacity-mib`.
+    pub capacity_mib: Option<u64>,
+    /// The jobs, in spec order (admission order is spec order).
+    pub jobs: Vec<JobSpec>,
+}
+
+impl JobSet {
+    /// Parse a `jobs.json` document:
+    ///
+    /// ```json
+    /// {
+    ///   "capacity_mib": 4,
+    ///   "jobs": [
+    ///     {"name": "cls", "task": "classification", "batch": 64, "seed": 1},
+    ///     {"name": "seg", "task": "segmentation", "batch": 32, "seed": 2}
+    ///   ]
+    /// }
+    /// ```
+    pub fn from_json_str(text: &str) -> Result<JobSet> {
+        let root = Json::parse(text)
+            .map_err(|e| MbsError::Config(format!("jobs spec: {e}")))?;
+        let capacity_mib = match root.get("capacity_mib") {
+            None => None,
+            Some(j) => Some(j.as_u64().ok_or_else(|| {
+                MbsError::Config("jobs spec: 'capacity_mib' must be a non-negative integer".into())
+            })?),
+        };
+        let jobs_json = root
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| MbsError::Config("jobs spec: missing 'jobs' array".into()))?;
+        let jobs = jobs_json.iter().map(JobSpec::from_json).collect::<Result<Vec<_>>>()?;
+        let set = JobSet { capacity_mib, jobs };
+        set.validate()?;
+        Ok(set)
+    }
+
+    /// Load a `jobs.json` spec file.
+    pub fn load(path: &str) -> Result<JobSet> {
+        JobSet::from_json_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Reject sets no executor can run: empty sets, duplicate names, or
+    /// native-arm jobs (the shared arena admits streamed MBS jobs only —
+    /// a native job is just `mu >= batch`, which `"mu": N` can pin).
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs.is_empty() {
+            return Err(MbsError::Config("jobs spec: at least one job required".into()));
+        }
+        for (i, job) in self.jobs.iter().enumerate() {
+            if !job.cfg.use_mbs {
+                return Err(MbsError::Config(format!(
+                    "jobs spec: job '{}' sets mbs=false — the shared arena runs MBS \
+                     jobs only (pin \"mu\" >= batch for single-step execution)",
+                    job.name
+                )));
+            }
+            if self.jobs[..i].iter().any(|other| other.name == job.name) {
+                return Err(MbsError::Config(format!(
+                    "jobs spec: duplicate job name '{}'",
+                    job.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One job's admission inputs, resolved to manifest metadata (pure data —
+/// no engine, no artifacts).
+#[derive(Debug, Clone)]
+pub struct AdmissionRequest {
+    /// Job name (labels verdicts and arena charges).
+    pub name: String,
+    /// The manifest (or synthetic) model entry the job trains.
+    pub entry: ModelEntry,
+    /// Image size / sequence length of the exported variants to consider.
+    pub size: usize,
+    /// Mini-batch size `N_B`.
+    pub batch: usize,
+    /// Eval-set occupancy admission must cover (0 = train-only).
+    pub eval_len: usize,
+    /// Pinned or planner-derived micro-batch size.
+    pub mu: MicroBatchSpec,
+}
+
+impl AdmissionRequest {
+    /// Build the admission inputs for a job spec against its resolved
+    /// model entry.
+    pub fn from_spec(spec: &JobSpec, entry: ModelEntry) -> AdmissionRequest {
+        let size = spec.cfg.size.unwrap_or(entry.default_size);
+        AdmissionRequest {
+            name: spec.name.clone(),
+            entry,
+            size,
+            batch: spec.cfg.batch,
+            eval_len: spec.cfg.eval_len,
+            mu: spec.cfg.mu,
+        }
+    }
+}
+
+/// The planner's verdict for one job of a set.
+#[derive(Debug, Clone)]
+pub enum AdmissionOutcome {
+    /// The job runs in the shared arena.
+    Admitted {
+        /// The variant it executes (its `mu` may be smaller than solo).
+        resolution: Resolution,
+        /// The micro-batch the job would get alone on the whole device.
+        solo_mu: usize,
+        /// Did co-residency force a smaller `mu` than the solo plan?
+        shrunk: bool,
+        /// Bytes reserved durably for the job's resident state (the
+        /// conservative claim admission placed in phase 1).
+        resident_claim_bytes: u64,
+    },
+    /// The job cannot run in this set (reason is human-readable).
+    Rejected {
+        /// Why admission refused the job.
+        reason: String,
+    },
+}
+
+impl AdmissionOutcome {
+    /// Did the job get in?
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, AdmissionOutcome::Admitted { .. })
+    }
+
+    /// The admitted micro-batch size, if any.
+    pub fn mu(&self) -> Option<usize> {
+        match self {
+            AdmissionOutcome::Admitted { resolution, .. } => Some(resolution.mu),
+            AdmissionOutcome::Rejected { .. } => None,
+        }
+    }
+
+    /// Table cell label: `admit` / `shrink-mu` / `reject`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionOutcome::Admitted { shrunk: false, .. } => "admit",
+            AdmissionOutcome::Admitted { shrunk: true, .. } => "shrink-mu",
+            AdmissionOutcome::Rejected { .. } => "reject",
+        }
+    }
+}
+
+/// One job's admission verdict, by name.
+#[derive(Debug, Clone)]
+pub struct JobAdmission {
+    /// The job this verdict is for.
+    pub name: String,
+    /// Admit / shrink-mu / reject.
+    pub outcome: AdmissionOutcome,
+}
+
+/// Conservative durable reservation for a job's resident state: params +
+/// gradient accumulator + optimizer slots (entry-level) plus the largest
+/// exported variant's fixed workspace at `size`. The variant admission
+/// later picks can only need less, so a reservation that fits guarantees
+/// the actual resident fits.
+pub fn resident_claim(entry: &ModelEntry, size: usize) -> Result<u64> {
+    // the variant with the largest fixed workspace bounds every variant's
+    // resident state; pricing goes through Footprint so the claim can
+    // never drift from the memory model's arithmetic
+    let variant = entry
+        .variants
+        .iter()
+        .filter(|v| v.size == size)
+        .max_by_key(|v| v.fixed_bytes)
+        .ok_or_else(|| {
+            MbsError::Manifest(format!(
+                "{}: no exported variants at size {size} (have sizes: {:?})",
+                entry.name,
+                entry.sizes()
+            ))
+        })?;
+    Ok(Footprint::from_manifest(entry, variant).resident_bytes())
+}
+
+/// Transient peak a resolved job holds *beyond* its resident state while
+/// one of its steps executes (training step or eval sweep, whichever is
+/// larger) — the quantity phase 2 admits against the shared leftover.
+pub fn transient_bytes(
+    fp: &Footprint,
+    mu: usize,
+    batch: usize,
+    eval_len: usize,
+    overlap: bool,
+) -> u64 {
+    planner::peak_bytes(fp, mu, batch, eval_len, overlap).saturating_sub(fp.resident_bytes())
+}
+
+/// The deterministic two-phase admission planner (module docs tell the
+/// full story). Outcomes are in request order; the result is a pure
+/// function of `(reqs, capacity_bytes, overlap)`.
+pub fn plan_admission(
+    reqs: &[AdmissionRequest],
+    capacity_bytes: u64,
+    overlap: bool,
+) -> Vec<JobAdmission> {
+    // phase 1: place every job's resident reservation, in spec order
+    let mut claims: Vec<Option<u64>> = Vec::with_capacity(reqs.len());
+    let mut early: Vec<Option<String>> = Vec::with_capacity(reqs.len());
+    let mut reserved = 0u64;
+    for req in reqs {
+        match resident_claim(&req.entry, req.size) {
+            Err(e) => {
+                claims.push(None);
+                early.push(Some(e.to_string()));
+            }
+            Ok(claim) if reserved.saturating_add(claim) > capacity_bytes => {
+                claims.push(None);
+                early.push(Some(format!(
+                    "resident reservation needs {claim} B but only {} B of {} B remain",
+                    capacity_bytes - reserved,
+                    capacity_bytes
+                )));
+            }
+            Ok(claim) => {
+                reserved += claim;
+                claims.push(Some(claim));
+                early.push(None);
+            }
+        }
+    }
+
+    // phase 2: per-job micro-batch planning against the shared leftover
+    // (a rejection releases its reservation for later jobs only)
+    let mut out = Vec::with_capacity(reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
+        if let Some(reason) = early[i].take() {
+            out.push(JobAdmission { name: req.name.clone(), outcome: AdmissionOutcome::Rejected { reason } });
+            continue;
+        }
+        let claim = claims[i].expect("phase 1 admitted this job");
+        // solo feasibility gate: a job the whole device cannot run alone is
+        // never admitted to a shared one (admitted-set ⊆ solo-feasible set)
+        let solo = match solo_resolution(req, capacity_bytes, overlap) {
+            Ok(s) => s,
+            Err(e) => {
+                reserved -= claim;
+                out.push(JobAdmission {
+                    name: req.name.clone(),
+                    outcome: AdmissionOutcome::Rejected {
+                        reason: format!("not solo-feasible: {e}"),
+                    },
+                });
+                continue;
+            }
+        };
+        let transient_budget = capacity_bytes - reserved;
+        let shared = match req.mu {
+            MicroBatchSpec::Auto => planner::auto_mu_transient(
+                &req.entry,
+                req.size,
+                req.batch,
+                req.eval_len,
+                transient_budget,
+                overlap,
+            ),
+            MicroBatchSpec::Fixed(mu) => fixed_resolution(req, mu).and_then(|res| {
+                let need =
+                    transient_bytes(&res.footprint, mu, req.batch, req.eval_len, overlap);
+                if need <= transient_budget {
+                    Ok(res)
+                } else {
+                    Err(MbsError::Oom {
+                        needed_bytes: need,
+                        available_bytes: transient_budget,
+                        capacity_bytes: transient_budget,
+                        context: format!("pinned mu={mu} transient in shared arena"),
+                    })
+                }
+            }),
+        };
+        match shared {
+            Ok(resolution) => {
+                let shrunk = resolution.mu < solo.mu;
+                out.push(JobAdmission {
+                    name: req.name.clone(),
+                    outcome: AdmissionOutcome::Admitted {
+                        solo_mu: solo.mu,
+                        shrunk,
+                        resident_claim_bytes: claim,
+                        resolution,
+                    },
+                });
+            }
+            Err(e) => {
+                reserved -= claim;
+                out.push(JobAdmission {
+                    name: req.name.clone(),
+                    outcome: AdmissionOutcome::Rejected {
+                        reason: format!("shared transient budget: {e}"),
+                    },
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The job's full-device resolution: the micro-batch it would get alone.
+fn solo_resolution(
+    req: &AdmissionRequest,
+    capacity_bytes: u64,
+    overlap: bool,
+) -> Result<Resolution> {
+    match req.mu {
+        MicroBatchSpec::Auto => planner::auto_mu(
+            &req.entry,
+            req.size,
+            req.batch,
+            req.eval_len,
+            capacity_bytes,
+            overlap,
+        ),
+        MicroBatchSpec::Fixed(mu) => {
+            let res = fixed_resolution(req, mu)?;
+            let need =
+                planner::peak_bytes(&res.footprint, mu, req.batch, req.eval_len, overlap);
+            if need <= capacity_bytes {
+                Ok(res)
+            } else {
+                Err(MbsError::Oom {
+                    needed_bytes: need,
+                    available_bytes: capacity_bytes
+                        .saturating_sub(res.footprint.resident_bytes()),
+                    capacity_bytes,
+                    context: format!("pinned mu={mu} solo step"),
+                })
+            }
+        }
+    }
+}
+
+/// Resolve a pinned `mu` to its exported variant + footprint.
+fn fixed_resolution(req: &AdmissionRequest, mu: usize) -> Result<Resolution> {
+    let variant = req.entry.variant(req.size, mu)?.clone();
+    let footprint = Footprint::from_manifest(&req.entry, &variant);
+    Ok(Resolution { mu, variant, footprint })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Dtype, OptimizerInfo, Variant};
+
+    /// Synthetic manifest entry exporting one variant per `mu` (mirrors
+    /// the planner's fixture: uniform linear footprints).
+    fn entry_with_mus(
+        mus: &[usize],
+        act_per_sample: u64,
+        fixed: u64,
+        param_bytes: u64,
+    ) -> ModelEntry {
+        ModelEntry {
+            name: "synthetic".into(),
+            task: "classification".into(),
+            optimizer: OptimizerInfo {
+                kind: "sgdm".into(),
+                slots: 1,
+                hyper_names: vec!["lr".into()],
+                hyper_defaults: vec![0.01],
+            },
+            params_bin: "params.bin".into(),
+            param_leaves: Vec::new(),
+            param_bytes,
+            apply_hlo: "apply.hlo".into(),
+            metric_semantics: "classification".into(),
+            default_size: 16,
+            variants: mus
+                .iter()
+                .map(|&mu| Variant {
+                    mu,
+                    size: 16,
+                    x_shape: vec![mu, 4],
+                    x_dtype: Dtype::F32,
+                    y_shape: vec![mu],
+                    y_dtype: Dtype::I32,
+                    accum_hlo: String::new(),
+                    eval_hlo: String::new(),
+                    activation_bytes_per_sample: act_per_sample,
+                    fixed_bytes: fixed,
+                })
+                .collect(),
+        }
+    }
+
+    fn req(name: &str, entry: &ModelEntry, batch: usize) -> AdmissionRequest {
+        AdmissionRequest {
+            name: name.into(),
+            entry: entry.clone(),
+            size: 16,
+            batch,
+            eval_len: 0,
+            mu: MicroBatchSpec::Auto,
+        }
+    }
+
+    #[test]
+    fn resident_claim_matches_footprint_arithmetic() {
+        let entry = entry_with_mus(&[2, 4], 1000, 64, 100);
+        // params 100 * (1 + 1 grad + 1 slot) + fixed 64
+        assert_eq!(resident_claim(&entry, 16).unwrap(), 364);
+        assert!(resident_claim(&entry, 99).is_err());
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        assert_eq!(resident_claim(&entry, 16).unwrap(), fp.resident_bytes());
+    }
+
+    #[test]
+    fn co_residency_shrinks_mu() {
+        // capacity sized so one job alone plans mu=8 but two residents +
+        // one mu=8 transient do not fit together -> both shrink to mu=4
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        let resident = fp.resident_bytes();
+        let capacity = 2 * resident + fp.batch_bytes(8) - 1;
+        // sanity: solo planning at this capacity still picks mu=8
+        assert_eq!(
+            planner::auto_mu(&entry, 16, 64, 0, capacity, false).unwrap().mu,
+            8
+        );
+        let verdicts =
+            plan_admission(&[req("a", &entry, 64), req("b", &entry, 64)], capacity, false);
+        for v in &verdicts {
+            match &v.outcome {
+                AdmissionOutcome::Admitted { resolution, solo_mu, shrunk, .. } => {
+                    assert_eq!(resolution.mu, 4, "job {} got mu {}", v.name, resolution.mu);
+                    assert_eq!(*solo_mu, 8);
+                    assert!(*shrunk);
+                    assert_eq!(v.outcome.label(), "shrink-mu");
+                }
+                other => panic!("job {} should be admitted, got {other:?}", v.name),
+            }
+        }
+        // roomier device: both keep their solo mu
+        let roomy = 2 * resident + fp.batch_bytes(8);
+        let verdicts =
+            plan_admission(&[req("a", &entry, 64), req("b", &entry, 64)], roomy, false);
+        for v in &verdicts {
+            assert_eq!(v.outcome.mu(), Some(8));
+            assert_eq!(v.outcome.label(), "admit");
+        }
+    }
+
+    #[test]
+    fn rejection_frees_reservation_for_later_jobs() {
+        // resident-dominated model (params >> data space) so reservations
+        // are what the device runs out of
+        let entry = entry_with_mus(&[2, 4], 10, 0, 10_000);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        assert_eq!(fp.resident_bytes(), 30_000);
+        // phase-1 rejection: two residents + one mu=2 transient fit, the
+        // third resident does not — c is rejected, a and b still train
+        let capacity = 2 * fp.resident_bytes() + fp.batch_bytes(2);
+        let verdicts = plan_admission(
+            &[req("a", &entry, 64), req("b", &entry, 64), req("c", &entry, 64)],
+            capacity,
+            false,
+        );
+        assert!(verdicts[0].outcome.is_admitted());
+        assert!(verdicts[1].outcome.is_admitted());
+        match &verdicts[2].outcome {
+            AdmissionOutcome::Rejected { reason } => {
+                assert!(reason.contains("resident reservation"), "{reason}");
+            }
+            other => panic!("job c should be rejected, got {other:?}"),
+        }
+        // phase-2 rejection also frees room: with THREE residents placed
+        // no transient fits, so the first job (planned against the
+        // tightest budget) is rejected — and its freed reservation lets
+        // b and c through
+        let capacity = 3 * fp.resident_bytes() + fp.batch_bytes(2) - 1;
+        let verdicts = plan_admission(
+            &[req("a", &entry, 64), req("b", &entry, 64), req("c", &entry, 64)],
+            capacity,
+            false,
+        );
+        match &verdicts[0].outcome {
+            AdmissionOutcome::Rejected { reason } => {
+                assert!(reason.contains("shared transient budget"), "{reason}");
+            }
+            other => panic!("tightest-budget job should be rejected, got {other:?}"),
+        }
+        assert!(verdicts[1].outcome.is_admitted());
+        assert!(verdicts[2].outcome.is_admitted());
+    }
+
+    #[test]
+    fn solo_infeasible_jobs_never_admitted() {
+        // a batch the device cannot run even alone (smallest variant's
+        // step exceeds capacity) is rejected with the solo-feasibility
+        // reason — not admitted against the shared budget
+        let entry = entry_with_mus(&[2, 4], 1000, 0, 100);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        let capacity = fp.step_bytes(2) - 1;
+        // resident fits (phase 1 passes) but no step ever fits solo…
+        assert!(planner::auto_mu(&entry, 16, 64, 0, capacity, false).is_err());
+        let verdicts = plan_admission(&[req("solo-oom", &entry, 64)], capacity, false);
+        match &verdicts[0].outcome {
+            AdmissionOutcome::Rejected { reason } => {
+                assert!(reason.contains("not solo-feasible"), "{reason}");
+            }
+            other => panic!("want solo-feasibility rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pinned_mu_is_admitted_exactly_or_rejected() {
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        let mut pinned = req("pin", &entry, 64);
+        pinned.mu = MicroBatchSpec::Fixed(4);
+        // exactly resident + the mu=4 transient: admitted, not shrunk
+        let capacity = fp.resident_bytes() + fp.batch_bytes(4);
+        let verdicts = plan_admission(&[pinned.clone()], capacity, false);
+        match &verdicts[0].outcome {
+            AdmissionOutcome::Admitted { resolution, shrunk, solo_mu, .. } => {
+                assert_eq!(resolution.mu, 4);
+                assert_eq!(*solo_mu, 4);
+                assert!(!shrunk);
+            }
+            other => panic!("want pinned admission, got {other:?}"),
+        }
+        // one byte less: a pinned mu cannot shrink, so the job is rejected
+        let verdicts = plan_admission(&[pinned], capacity - 1, false);
+        match &verdicts[0].outcome {
+            AdmissionOutcome::Rejected { reason } => {
+                assert!(reason.contains("mu=4"), "{reason}");
+            }
+            other => panic!("want pinned rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn job_set_json_round_trip() {
+        let text = r#"{
+            "capacity_mib": 4,
+            "jobs": [
+                {"name": "cls", "task": "classification", "batch": 64, "seed": 1,
+                 "epochs": 2, "dataset_len": 128, "eval_len": 32},
+                {"name": "seg", "task": "segmentation", "batch": 32, "mu": "auto"}
+            ]
+        }"#;
+        let set = JobSet::from_json_str(text).unwrap();
+        assert_eq!(set.capacity_mib, Some(4));
+        assert_eq!(set.jobs.len(), 2);
+        let cls = &set.jobs[0];
+        assert_eq!(cls.name, "cls");
+        assert_eq!(cls.task.as_deref(), Some("classification"));
+        assert_eq!(cls.cfg.model, "synthetic-classification");
+        assert_eq!(cls.cfg.batch, 64);
+        assert_eq!(cls.cfg.seed, 1);
+        assert_eq!(cls.cfg.epochs, 2);
+        assert_eq!(cls.cfg.dataset_len, 128);
+        assert_eq!(cls.cfg.eval_len, 32);
+        assert!(set.jobs[1].cfg.mu.is_auto());
+    }
+
+    #[test]
+    fn job_set_rejects_malformed_specs() {
+        // missing jobs array
+        assert!(JobSet::from_json_str(r#"{"capacity_mib": 4}"#).is_err());
+        // a job needs a name and a model/task
+        assert!(JobSet::from_json_str(r#"{"jobs": [{"task": "lm"}]}"#).is_err());
+        assert!(JobSet::from_json_str(r#"{"jobs": [{"name": "x"}]}"#).is_err());
+        // model and task are mutually exclusive
+        assert!(JobSet::from_json_str(
+            r#"{"jobs": [{"name": "x", "model": "m", "task": "lm"}]}"#
+        )
+        .is_err());
+        // duplicate names
+        assert!(JobSet::from_json_str(
+            r#"{"jobs": [{"name": "x", "task": "lm"}, {"name": "x", "task": "lm"}]}"#
+        )
+        .is_err());
+        // native jobs are refused up front
+        assert!(JobSet::from_json_str(
+            r#"{"jobs": [{"name": "x", "task": "lm", "mbs": false}]}"#
+        )
+        .is_err());
+        // unknown config keys surface the offending job
+        let err = JobSet::from_json_str(r#"{"jobs": [{"name": "x", "task": "lm", "bogus": 1}]}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("'x'"), "{err}");
+    }
+
+    mod properties {
+        use super::*;
+        use crate::util::prop::{ensure, forall};
+        use crate::util::rng::Rng;
+
+        fn rand_entry(r: &mut Rng) -> ModelEntry {
+            let k = (r.below(5) + 1) as usize;
+            let mus: Vec<usize> = (0..k).map(|i| 1usize << i).collect();
+            entry_with_mus(
+                &mus,
+                r.below(1 << 12) + 1,
+                r.below(1 << 10),
+                r.below(1 << 14) + 1,
+            )
+        }
+
+        fn rand_reqs(r: &mut Rng) -> Vec<AdmissionRequest> {
+            let n = (r.below(4) + 1) as usize;
+            (0..n)
+                .map(|i| {
+                    let entry = rand_entry(r);
+                    AdmissionRequest {
+                        name: format!("job-{i}"),
+                        entry,
+                        size: 16,
+                        batch: (r.below(512) + 1) as usize,
+                        eval_len: r.below(64) as usize,
+                        mu: MicroBatchSpec::Auto,
+                    }
+                })
+                .collect()
+        }
+
+        #[test]
+        fn admission_is_order_deterministic() {
+            forall(
+                "admission deterministic",
+                100,
+                0xD37,
+                |r| (rand_reqs(r), r.below(1 << 22)),
+                |(reqs, capacity)| {
+                    let a = plan_admission(reqs, *capacity, false);
+                    let b = plan_admission(reqs, *capacity, false);
+                    ensure(a.len() == b.len(), "length diverged")?;
+                    for (x, y) in a.iter().zip(&b) {
+                        ensure(x.name == y.name, "order diverged")?;
+                        ensure(
+                            x.outcome.mu() == y.outcome.mu()
+                                && x.outcome.label() == y.outcome.label(),
+                            format!("verdict diverged for {}", x.name),
+                        )?;
+                    }
+                    Ok(())
+                },
+            );
+        }
+
+        #[test]
+        fn admitted_set_is_solo_feasible_and_fits_at_every_instant() {
+            // the two set-level guarantees the interleaved executor leans
+            // on: (1) every admitted job could also run alone on the full
+            // device, at a mu no smaller than the shared one; (2) the sum
+            // of admitted reservations plus ANY single admitted job's
+            // transient stays within capacity — which is the worst
+            // instantaneous residency one-micro-step-at-a-time can reach
+            forall(
+                "admitted ⊆ solo-feasible, peak ≤ capacity",
+                150,
+                0xD38,
+                |r| (rand_reqs(r), r.below(1 << 22)),
+                |(reqs, capacity)| {
+                    let verdicts = plan_admission(reqs, *capacity, false);
+                    let claims: u64 = verdicts
+                        .iter()
+                        .filter_map(|v| match &v.outcome {
+                            AdmissionOutcome::Admitted { resident_claim_bytes, .. } => {
+                                Some(*resident_claim_bytes)
+                            }
+                            _ => None,
+                        })
+                        .sum();
+                    ensure(claims <= *capacity, "admitted reservations exceed capacity")?;
+                    for (req, v) in reqs.iter().zip(&verdicts) {
+                        let AdmissionOutcome::Admitted { resolution, solo_mu, .. } = &v.outcome
+                        else {
+                            continue;
+                        };
+                        let solo =
+                            planner::auto_mu(&req.entry, 16, req.batch, req.eval_len, *capacity, false)
+                                .map_err(|e| format!("admitted but not solo-feasible: {e}"))?;
+                        ensure(solo.mu == *solo_mu, "solo mu mismatch")?;
+                        ensure(
+                            resolution.mu <= solo.mu,
+                            format!("shared mu {} > solo mu {}", resolution.mu, solo.mu),
+                        )?;
+                        let transient = transient_bytes(
+                            &resolution.footprint,
+                            resolution.mu,
+                            req.batch,
+                            req.eval_len,
+                            false,
+                        );
+                        ensure(
+                            claims + transient <= *capacity,
+                            format!(
+                                "instantaneous peak {} exceeds capacity {capacity}",
+                                claims + transient
+                            ),
+                        )?;
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}

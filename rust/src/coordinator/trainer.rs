@@ -37,14 +37,15 @@ use crate::config::TrainConfig;
 use crate::data::{BufPool, Dataset, EpochPlan, PoolStats, SynthCarvana, SynthFlowers, SynthText};
 use crate::error::{MbsError, Result};
 use crate::memory::ledger::AllocId;
-use crate::memory::{Footprint, Ledger, MemoryModel};
+use crate::memory::{Arena, Footprint, Ledger, MemoryModel};
 use crate::metrics::{EpochStats, MetricKind, StageTimers};
 use crate::runtime::{Engine, ModelRuntime};
 
 use super::accumulator::{Accumulation, NormalizationMode};
-use super::planner::{self, ExecutionPlan, Planner};
+use super::planner::{self, ExecutionPlan, Planner, Resolution};
 use super::scheduler::UpdateScheduler;
-use super::streamer::{stream_epoch, StreamItem, StreamingPolicy};
+use super::streamer::{stream_epoch, EpochStream, StreamItem, StreamingPolicy};
+use super::tenancy::{self, AdmissionOutcome, AdmissionRequest, JobSet, JobSpec};
 
 /// Everything a finished run reports (feeds the tables and figures).
 #[derive(Debug, Clone)]
@@ -161,6 +162,49 @@ struct InFlight {
     inputs: AllocId,
 }
 
+/// Execute one serially-fused micro-batch (stage + execute in one call,
+/// one input slot live at a time): charge the ledger for the step's
+/// residency, run it, fold the result into `acc`, recycle the staging
+/// buffer, and fire the optimizer update when this was its mini-batch's
+/// last micro-batch. Shared by the serial arm of [`run_epoch`] and the
+/// interleaved multi-job executor ([`train_jobs`]), so the two paths can
+/// never drift — which is what makes per-job reports bit-identical to
+/// solo runs.
+fn exec_serial_item(
+    rt: &mut ModelRuntime,
+    ledger: &mut Ledger,
+    fp: &Footprint,
+    pass: Pass<'_>,
+    acc: &mut Accumulation,
+    pool: &BufPool,
+    item: StreamItem,
+) -> Result<()> {
+    let StreamItem { plan, mb, .. } = item;
+    // training holds activations for the backward pass; eval is
+    // forward-only and holds just the input buffers
+    let (tag, bytes) = match pass {
+        Pass::Train { .. } => ("train step", fp.batch_bytes(plan.device_samples())),
+        Pass::Eval => ("eval step", fp.eval_bytes(plan.device_samples())),
+    };
+    let step = ledger.alloc(tag, bytes)?;
+    let out = match pass {
+        Pass::Train { .. } => rt.accum_step(&mb, plan.scales[mb.j])?,
+        Pass::Eval => rt.eval_step(&mb)?,
+    };
+    ledger.free(step)?;
+    acc.add(&out, mb.actual);
+    let update_due = matches!(pass, Pass::Train { .. }) && plan.is_last(mb.j);
+    // upload done: recycle the staging buffer before the (potentially
+    // long) optimizer update
+    pool.give(mb);
+    if update_due {
+        if let Pass::Train { sched } = pass {
+            rt.apply(&sched.hyper_for(rt.updates))?;
+        }
+    }
+    Ok(())
+}
+
 /// Execute the oldest staged micro-batch: charge the ledger for what the
 /// step holds *beyond* its already-live input slot (backward-pass
 /// activations; eval holds inputs only), run it, release both residencies,
@@ -265,29 +309,7 @@ fn run_epoch(
     } else {
         for item in stream {
             assemble += item.assemble;
-            let StreamItem { plan, mb, .. } = item;
-            // training holds activations for the backward pass; eval is
-            // forward-only and holds just the input buffers
-            let (tag, bytes) = match pass {
-                Pass::Train { .. } => ("train step", fp.batch_bytes(plan.device_samples())),
-                Pass::Eval => ("eval step", fp.eval_bytes(plan.device_samples())),
-            };
-            let step = ledger.alloc(tag, bytes)?;
-            let out = match pass {
-                Pass::Train { .. } => rt.accum_step(&mb, plan.scales[mb.j])?,
-                Pass::Eval => rt.eval_step(&mb)?,
-            };
-            ledger.free(step)?;
-            acc.add(&out, mb.actual);
-            let update_due = matches!(pass, Pass::Train { .. }) && plan.is_last(mb.j);
-            // upload done: recycle the staging buffer before the (potentially
-            // long) optimizer update
-            pool.give(mb);
-            if update_due {
-                if let Pass::Train { sched } = pass {
-                    rt.apply(&sched.hyper_for(rt.updates))?;
-                }
-            }
+            exec_serial_item(rt, ledger, fp, pass, &mut acc, pool, item)?;
         }
     }
     let mut stages = rt.timers().minus(&rt_before);
@@ -574,6 +596,458 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
         overlap: cfg.overlap,
         prefetch,
         ledger_peak_bytes: ledger.peak(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Multi-tenant interleaved execution (the shared-arena serving story)
+// ---------------------------------------------------------------------
+
+/// Where one tenant's run currently is inside the interleaved executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobPhase {
+    /// Training epoch `epoch`.
+    Train {
+        /// 0-based epoch index.
+        epoch: usize,
+    },
+    /// Post-epoch eval sweep of `epoch` (absent under `skip_eval`).
+    Eval {
+        /// The training epoch this sweep follows.
+        epoch: usize,
+    },
+    /// The one final eval sweep a `skip_eval` run still performs.
+    FinalEval,
+    /// All phases complete.
+    Done,
+}
+
+/// One tenant's live execution state: everything the solo [`train`] loop
+/// keeps on its stack, reified so the round-robin can advance jobs one
+/// micro-step at a time. Every job owns its runtime, accumulator, update
+/// scheduler, staging pool, stage timers and arena sub-ledger — nothing
+/// numeric is shared, which is what makes per-job reports bit-identical
+/// to solo runs.
+struct JobExec {
+    name: String,
+    cfg: TrainConfig,
+    kind: MetricKind,
+    rt: ModelRuntime,
+    /// Tenant sub-ledger charging into the shared arena (holds the
+    /// durable resident reservation; steps charge transiently).
+    ledger: Ledger,
+    fp: Footprint,
+    planner: Planner,
+    sched: UpdateScheduler,
+    pool: Arc<BufPool>,
+    train_ds: Arc<dyn Dataset>,
+    eval_ds: Arc<dyn Dataset>,
+    prefetch: usize,
+    n_smu_full: usize,
+    phase: JobPhase,
+    stream: Option<EpochStream>,
+    acc: Accumulation,
+    assemble: Duration,
+    rt_before: StageTimers,
+    phase_t0: Instant,
+    train_epochs: Vec<EpochStats>,
+    eval_epochs: Vec<EpochStats>,
+    final_eval: Option<EpochStats>,
+    stage_totals: StageTimers,
+    run_start: Instant,
+    mu: usize,
+}
+
+impl JobExec {
+    fn new(
+        engine: &mut Engine,
+        spec: &JobSpec,
+        res: &Resolution,
+        claim_bytes: u64,
+        arena: &Arena,
+    ) -> Result<JobExec> {
+        let cfg = spec.cfg.clone();
+        let entry = engine.manifest().model(&cfg.model)?.clone();
+        let size = cfg.size.unwrap_or(entry.default_size);
+        let kind = MetricKind::parse(&entry.metric_semantics)?;
+        // the durable per-job reservation admission placed (conservative:
+        // covers the resident state of any exported variant at this size)
+        let mut ledger = arena.tenant(&spec.name);
+        ledger.alloc("resident reservation", claim_bytes)?;
+        let mut rt = engine.load_model(&cfg.model, size, res.mu)?;
+        // jobs pipeline serially: a staged second input slot would stay
+        // resident across OTHER jobs' turns, and pricing that cross-tenant
+        // overlap is a ROADMAP follow-up (arithmetic is unaffected — PR 4's
+        // overlap identity oracle)
+        rt.set_overlap(false);
+        rt.set_label(&spec.name);
+        let (train_ds, eval_ds) = datasets_for(&entry.task, size, &cfg)?;
+        let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
+        let total_updates = (batches_per_epoch * cfg.epochs) as u64;
+        let sched = UpdateScheduler::new(&entry.optimizer, &cfg, total_updates);
+        let n_smu_full = cfg.batch.div_ceil(res.mu);
+        let max_prefetch = if cfg.prefetch_auto {
+            cfg.prefetch.max(prefetch_cap(n_smu_full))
+        } else {
+            cfg.prefetch
+        };
+        let pool = Arc::new(BufPool::for_prefetch(max_prefetch));
+        pool.warm(BufPool::buffers_for(max_prefetch), train_ds.as_ref(), res.mu);
+        let planner = Planner::new(res.mu, false, cfg.norm_mode);
+        let now = Instant::now();
+        Ok(JobExec {
+            name: spec.name.clone(),
+            kind,
+            rt,
+            ledger,
+            fp: res.footprint.clone(),
+            planner,
+            sched,
+            pool,
+            train_ds,
+            eval_ds,
+            prefetch: cfg.prefetch,
+            n_smu_full,
+            phase: JobPhase::Train { epoch: 0 },
+            stream: None,
+            acc: Accumulation::default(),
+            assemble: Duration::ZERO,
+            rt_before: StageTimers::default(),
+            phase_t0: now,
+            train_epochs: Vec::with_capacity(cfg.epochs),
+            eval_epochs: Vec::with_capacity(cfg.epochs),
+            final_eval: None,
+            stage_totals: StageTimers::default(),
+            run_start: now,
+            mu: res.mu,
+            cfg,
+        })
+    }
+
+    /// Open the stream for the phase the job is parked on. Returns false
+    /// when the phase completed immediately (empty eval set) — the caller
+    /// advances and retries.
+    fn begin_phase(&mut self) -> Result<bool> {
+        self.phase_t0 = Instant::now();
+        self.rt_before = self.rt.timers();
+        self.acc = Accumulation::default();
+        self.assemble = Duration::ZERO;
+        match self.phase {
+            JobPhase::Train { epoch } => {
+                let plan = EpochPlan::new(
+                    self.train_ds.len().min(self.cfg.dataset_len),
+                    self.cfg.batch,
+                    self.cfg.seed,
+                    epoch as u64,
+                );
+                self.stream = Some(stream_epoch(
+                    self.cfg.streaming,
+                    self.train_ds.clone(),
+                    plan,
+                    self.planner.clone(),
+                    self.prefetch,
+                    self.pool.clone(),
+                ));
+                Ok(true)
+            }
+            JobPhase::Eval { .. } | JobPhase::FinalEval => {
+                let len = self.eval_ds.len();
+                if len == 0 {
+                    // empty eval set: zero samples, zero stats (mirrors
+                    // the solo eval_epoch short-circuit)
+                    self.finish_phase();
+                    return Ok(false);
+                }
+                // the same sweep solo eval_epoch runs: the whole set as
+                // one sequential mini-batch, exact normalization
+                let planner = Planner::new(self.rt.variant.mu, false, NormalizationMode::Exact);
+                self.stream = Some(stream_epoch(
+                    self.cfg.streaming,
+                    self.eval_ds.clone(),
+                    EpochPlan::sequential(len, len),
+                    planner,
+                    self.prefetch,
+                    self.pool.clone(),
+                ));
+                Ok(true)
+            }
+            JobPhase::Done => Ok(false),
+        }
+    }
+
+    /// Close out the active phase: fold its stats in and advance the
+    /// state machine, mirroring the solo [`train`] loop's sequencing
+    /// (train epoch → eval sweep → … → final eval) exactly.
+    fn finish_phase(&mut self) {
+        self.stream = None;
+        let wall = self.phase_t0.elapsed();
+        let mut stages = self.rt.timers().minus(&self.rt_before);
+        stages.assemble = self.assemble;
+        let acc = std::mem::take(&mut self.acc);
+        match self.phase {
+            JobPhase::Train { epoch } => {
+                self.stage_totals.merge(&stages);
+                if self.cfg.prefetch_auto {
+                    self.prefetch = tune_prefetch(
+                        self.prefetch,
+                        &stages,
+                        acc.micro_steps as u64,
+                        prefetch_cap(self.n_smu_full),
+                    );
+                }
+                self.train_epochs.push(EpochStats::from_accumulation(
+                    epoch,
+                    self.kind,
+                    &acc,
+                    self.rt.updates,
+                    wall,
+                    stages,
+                ));
+                self.phase = if !self.cfg.skip_eval {
+                    JobPhase::Eval { epoch }
+                } else if epoch + 1 < self.cfg.epochs {
+                    JobPhase::Train { epoch: epoch + 1 }
+                } else {
+                    JobPhase::FinalEval
+                };
+            }
+            JobPhase::Eval { epoch } => {
+                self.eval_epochs.push(EpochStats::from_accumulation(
+                    epoch,
+                    self.kind,
+                    &acc,
+                    self.rt.updates,
+                    wall,
+                    stages,
+                ));
+                self.phase = if epoch + 1 < self.cfg.epochs {
+                    JobPhase::Train { epoch: epoch + 1 }
+                } else {
+                    self.final_eval = self.eval_epochs.last().cloned();
+                    JobPhase::Done
+                };
+            }
+            JobPhase::FinalEval => {
+                self.final_eval = Some(EpochStats::from_accumulation(
+                    self.cfg.epochs.saturating_sub(1),
+                    self.kind,
+                    &acc,
+                    self.rt.updates,
+                    wall,
+                    stages,
+                ));
+                self.phase = JobPhase::Done;
+            }
+            JobPhase::Done => {}
+        }
+    }
+
+    /// Advance the job by exactly one micro-step — the round-robin turn
+    /// unit. Phase boundaries (stream exhausted, next stream opened) are
+    /// crossed within the turn so every turn that returns true executed
+    /// one device step. Returns false once every phase is complete.
+    fn step(&mut self) -> Result<bool> {
+        loop {
+            if self.phase == JobPhase::Done {
+                return Ok(false);
+            }
+            if self.stream.is_none() && !self.begin_phase()? {
+                continue; // phase completed immediately (empty eval set)
+            }
+            match self.stream.as_mut().expect("phase begun").next() {
+                Some(item) => {
+                    self.assemble += item.assemble;
+                    let pass = match self.phase {
+                        JobPhase::Train { .. } => Pass::Train { sched: &self.sched },
+                        _ => Pass::Eval,
+                    };
+                    exec_serial_item(
+                        &mut self.rt,
+                        &mut self.ledger,
+                        &self.fp,
+                        pass,
+                        &mut self.acc,
+                        &self.pool,
+                        item,
+                    )?;
+                    return Ok(true);
+                }
+                None => self.finish_phase(),
+            }
+        }
+    }
+
+    /// Assemble the job's [`TrainReport`] — field-for-field what the solo
+    /// [`train`] path reports, so the identity oracle can compare them.
+    fn into_report(self, capacity_bytes: u64) -> Result<TrainReport> {
+        let final_eval = self.final_eval.ok_or_else(|| {
+            MbsError::Runtime(format!("job '{}' finished without a final eval", self.name))
+        })?;
+        let epoch_walls: Vec<f64> =
+            self.train_epochs.iter().map(|e| e.wall.as_secs_f64()).collect();
+        let mem = MemoryModel::new(capacity_bytes, self.fp.clone());
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            use_mbs: true,
+            batch: self.cfg.batch,
+            mu: self.mu,
+            train_epochs: self.train_epochs,
+            eval_epochs: self.eval_epochs,
+            final_eval,
+            total_wall: self.run_start.elapsed(),
+            epoch_wall_mean: mean_epoch_wall(&epoch_walls),
+            native_max_batch: mem.native_max_batch(),
+            capacity_bytes,
+            output_mode: self.rt.output_mode_name().to_string(),
+            updates: self.rt.updates,
+            stages: self.stage_totals,
+            pool: self.pool.stats(),
+            overlap: false,
+            prefetch: self.prefetch,
+            ledger_peak_bytes: self.ledger.peak(),
+        })
+    }
+}
+
+/// One job's outcome inside a multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct JobRun {
+    /// Job name from the spec.
+    pub name: String,
+    /// Admission verdict (admit / shrink-mu / reject) with its arithmetic.
+    pub admission: AdmissionOutcome,
+    /// The full per-job training report — `None` for rejected jobs.
+    pub report: Option<TrainReport>,
+}
+
+/// Everything a finished multi-tenant run reports (`mbs jobs`).
+#[derive(Debug, Clone)]
+pub struct JobsReport {
+    /// Shared arena capacity, bytes.
+    pub capacity_bytes: u64,
+    /// Cross-job residency high-water mark over the whole run — within
+    /// capacity by construction (every arena charge that would exceed it
+    /// fails at the instant it happens).
+    pub arena_peak_bytes: u64,
+    /// Per-job outcomes, in spec order.
+    pub jobs: Vec<JobRun>,
+    /// Wall-clock of the whole interleaved run.
+    pub total_wall: Duration,
+}
+
+impl JobsReport {
+    /// Aggregate training throughput: samples trained across every
+    /// admitted job per wall second of the interleaved run — the
+    /// trend-tracked `aggregate_items_per_sec` key of `BENCH_jobs.json`.
+    pub fn aggregate_items_per_sec(&self) -> f64 {
+        let samples: u64 = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.report.as_ref())
+            .flat_map(|r| r.train_epochs.iter())
+            .map(|e| e.samples as u64)
+            .sum();
+        let secs = self.total_wall.as_secs_f64();
+        if secs > 0.0 { samples as f64 / secs } else { 0.0 }
+    }
+
+    /// How many jobs were admitted and trained.
+    pub fn admitted(&self) -> usize {
+        self.jobs.iter().filter(|j| j.report.is_some()).count()
+    }
+}
+
+/// Run a [`JobSet`] as co-resident tenants of one shared-capacity device:
+/// admission first ([`tenancy::plan_admission`] — admit / shrink-mu /
+/// reject in spec order), then a round-robin interleaved executor that
+/// advances each admitted job by exactly one micro-step per turn. Every
+/// job keeps its own accumulator, [`UpdateScheduler`], staging pool and
+/// [`StageTimers`], and charges residency into the shared [`Arena`]
+/// through its tenant sub-ledger — so per-job [`TrainReport`]s are
+/// bit-identical to the same configuration's solo [`train`] run (the
+/// correctness oracle, `tests/jobs.rs`, mirroring PR 4's overlap oracle)
+/// while the arena asserts the cross-job peak stays within capacity at
+/// every allocation instant.
+pub fn train_jobs(
+    engine: &mut Engine,
+    set: &JobSet,
+    capacity_bytes: u64,
+) -> Result<JobsReport> {
+    set.validate()?;
+    // resolve each job against the manifest and run admission (pure
+    // capacity arithmetic — nothing is loaded yet)
+    let mut requests = Vec::with_capacity(set.jobs.len());
+    for spec in &set.jobs {
+        if spec.task.is_some() {
+            return Err(MbsError::Config(format!(
+                "job '{}' names a synthetic task — training needs a real manifest model \
+                 (synthetic stand-ins are for `mbs jobs --dry-run`)",
+                spec.name
+            )));
+        }
+        spec.cfg.validate()?;
+        let entry = engine.manifest().model(&spec.cfg.model)?.clone();
+        requests.push(AdmissionRequest::from_spec(spec, entry));
+    }
+    let verdicts = tenancy::plan_admission(&requests, capacity_bytes, false);
+
+    // materialize the admitted jobs as tenants of one arena
+    let arena = Arena::new(capacity_bytes);
+    let mut execs: Vec<Option<JobExec>> = Vec::with_capacity(set.jobs.len());
+    for (spec, verdict) in set.jobs.iter().zip(&verdicts) {
+        match &verdict.outcome {
+            AdmissionOutcome::Admitted { resolution, resident_claim_bytes, .. } => {
+                execs.push(Some(JobExec::new(
+                    engine,
+                    spec,
+                    resolution,
+                    *resident_claim_bytes,
+                    &arena,
+                )?));
+            }
+            AdmissionOutcome::Rejected { .. } => execs.push(None),
+        }
+    }
+
+    // the round-robin: one micro-step per live job per turn until every
+    // job drains; any step that would exceed the shared capacity fails
+    // inside the arena at the exact instant (that failure path IS the
+    // every-step cross-job assertion)
+    let run_start = Instant::now();
+    let mut live: Vec<bool> = execs.iter().map(Option::is_some).collect();
+    loop {
+        let mut progressed = false;
+        for (i, slot) in execs.iter_mut().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let exec = slot.as_mut().expect("live implies exec");
+            if exec.step()? {
+                progressed = true;
+            } else {
+                live[i] = false;
+            }
+        }
+        debug_assert!(arena.peak() <= arena.capacity(), "arena accounting broke");
+        if !progressed {
+            break;
+        }
+    }
+    let total_wall = run_start.elapsed();
+
+    let mut jobs = Vec::with_capacity(set.jobs.len());
+    for (slot, verdict) in execs.into_iter().zip(verdicts) {
+        let report = match slot {
+            Some(exec) => Some(exec.into_report(capacity_bytes)?),
+            None => None,
+        };
+        jobs.push(JobRun { name: verdict.name, admission: verdict.outcome, report });
+    }
+    Ok(JobsReport {
+        capacity_bytes,
+        arena_peak_bytes: arena.peak(),
+        jobs,
+        total_wall,
     })
 }
 

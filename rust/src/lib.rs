@@ -86,7 +86,8 @@ pub mod util;
 
 pub use config::{MicroBatchSpec, TrainConfig};
 pub use coordinator::{
-    train, ExecutionPlan, Feasibility, FrontierGrid, NormalizationMode, Planner, TrainReport,
+    train, train_jobs, ExecutionPlan, Feasibility, FrontierGrid, JobSet, JobSpec, JobsReport,
+    NormalizationMode, Planner, SetFeasibility, TrainReport,
 };
 pub use error::{MbsError, Result};
 pub use manifest::Manifest;
@@ -96,13 +97,13 @@ pub use runtime::Engine;
 pub mod prelude {
     pub use crate::config::{MicroBatchSpec, TrainConfig};
     pub use crate::coordinator::{
-        train, ExecutionPlan, Feasibility, FrontierGrid, NormalizationMode, Planner,
-        TrainReport,
+        train, train_jobs, ExecutionPlan, Feasibility, FrontierGrid, JobSet, JobSpec,
+        JobsReport, NormalizationMode, Planner, SetFeasibility, TrainReport,
     };
     pub use crate::data::{BufPool, Dataset, PoolStats, SynthCarvana, SynthFlowers, SynthText};
     pub use crate::error::{MbsError, Result};
     pub use crate::manifest::Manifest;
-    pub use crate::memory::{Footprint, MemoryModel, MIB};
+    pub use crate::memory::{Arena, Footprint, MemoryModel, MIB};
     pub use crate::metrics::{EpochStats, StageTimers};
     pub use crate::runtime::Engine;
 }

@@ -4,6 +4,7 @@
 //!   train     train one configuration (MBS or native baseline), print report
 //!   sweep     batch-size sweep at fixed capacity (one table-4/5 row block)
 //!   frontier  capacity×batch feasibility grid -> table + BENCH_frontier.json
+//!   jobs      multi-tenant job set sharing one capacity -> table + BENCH_jobs.json
 //!   bench     streaming hot-path benchmark -> machine-readable JSON
 //!   inspect   show manifest variants, footprints and native-max batches
 //!   info      platform / artifact summary
@@ -12,15 +13,17 @@ use std::process::ExitCode;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use mbs::coordinator::tenancy::{self, AdmissionOutcome, AdmissionRequest, JobAdmission};
 use mbs::coordinator::{
-    datasets_for, frontier, stream_epoch, train, NormalizationMode, Planner, StreamingPolicy,
+    datasets_for, frontier, stream_epoch, train, train_jobs, JobsReport, NormalizationMode,
+    Planner, StreamingPolicy,
 };
 use mbs::data::{loader, BufPool, Dataset, EpochPlan};
 use mbs::memory::{Footprint, MIB};
-use mbs::metrics::bench_report::{self, BenchReport};
+use mbs::metrics::bench_report::{self, BenchReport, JsonValue};
 use mbs::metrics::Table;
 use mbs::util::cli::Args;
-use mbs::{Engine, Manifest, MbsError, MicroBatchSpec, TrainConfig, TrainReport};
+use mbs::{Engine, JobSet, Manifest, MbsError, MicroBatchSpec, TrainConfig, TrainReport};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +38,7 @@ fn main() -> ExitCode {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("frontier") => cmd_frontier(&args),
+        Some("jobs") => cmd_jobs(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
@@ -80,6 +84,14 @@ USAGE: mbs <subcommand> [flags]
            the feasibility boundary — or, with --time-all, over every
            feasible point (the full throughput surface) — needs --model +
            artifacts
+  jobs     --spec jobs.json [--capacity-mib N] [--dry-run=true]
+           [--out BENCH_jobs.json] [--artifacts dir]
+           run a multi-tenant job set against ONE shared capacity: the
+           admission planner admits / shrinks-mu / rejects each job in
+           spec order, then a round-robin executor interleaves one
+           micro-step per job per turn (per-job reports bit-identical to
+           solo runs). --dry-run prints the admission table only — jobs
+           naming a \"task\" use synthetic models, no artifacts needed
   bench    --model <key> [same flags as train] [--out BENCH_streaming.json]
            [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            full streaming hot-path benchmark (items/sec, per-stage means,
@@ -382,6 +394,291 @@ fn boundary_timing(report: &TrainReport) -> frontier::BoundaryTiming {
         stages: report.stages,
         pool: report.pool,
     }
+}
+
+/// `jobs` — multi-tenant device sharing: admit a job set against one
+/// shared `--capacity-mib` (admit / shrink-mu / reject per job, in spec
+/// order) and, unless `--dry-run`, run the admitted jobs through the
+/// round-robin interleaved executor. Emits a per-job table plus
+/// `BENCH_jobs.json` (shared bench schema; the aggregate throughput key
+/// `aggregate_items_per_sec` is trend-tracked by `mbs bench --compare`).
+///
+/// Dry-run mode is admission-only arithmetic: jobs naming a `"task"` use
+/// the synthetic stand-in models (clean checkout — CI's smoke), jobs
+/// naming a `"model"` classify against the real manifest metadata.
+/// Training mode needs compiled artifacts for every job's model.
+fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
+    let spec_path = args
+        .get("spec")
+        .ok_or_else(|| MbsError::Config("--spec jobs.json is required".into()))?;
+    let dry_run = args.get_bool("dry-run");
+    let out = args.get_or("out", "BENCH_jobs.json").to_string();
+    let mut set = JobSet::load(spec_path)?;
+    if let Some(mib) = args.get_parse::<u64>("capacity-mib").map_err(MbsError::Config)? {
+        set.capacity_mib = Some(mib);
+    }
+    let capacity_mib = set.capacity_mib.ok_or_else(|| {
+        MbsError::Config(
+            "no shared capacity: set 'capacity_mib' in the spec or pass --capacity-mib".into(),
+        )
+    })?;
+    if capacity_mib == 0 {
+        return Err(MbsError::Config("capacity must be positive MiB".into()));
+    }
+    let capacity_bytes = capacity_mib * MIB;
+    println!(
+        "[mbs] jobs: {} job(s) sharing {capacity_mib} MiB (spec {spec_path}, dry_run={dry_run})",
+        set.jobs.len()
+    );
+
+    if dry_run {
+        return jobs_dry_run(args, &set, capacity_bytes, &out);
+    }
+
+    // train for real: every job must name a manifest model
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut engine = Engine::new(manifest)?;
+    let report = train_jobs(&mut engine, &set, capacity_bytes)?;
+    // the acceptance invariant, restated at the top level: the arena
+    // refuses any charge that would exceed capacity, so the recorded
+    // cross-job peak must sit within it
+    assert!(
+        report.arena_peak_bytes <= report.capacity_bytes,
+        "cross-job ledger peak {} exceeded capacity {}",
+        report.arena_peak_bytes,
+        report.capacity_bytes
+    );
+
+    let mut table = Table::new(&[
+        "job", "model", "batch", "admission", "mu", "n_smu", "items/sec", "best metric",
+        "updates",
+    ]);
+    for job in &report.jobs {
+        match (&job.report, &job.admission) {
+            (Some(r), AdmissionOutcome::Admitted { .. }) => {
+                let t = boundary_timing(r);
+                table.row(&[
+                    job.name.clone(),
+                    r.model.clone(),
+                    r.batch.to_string(),
+                    job.admission.label().to_string(),
+                    r.mu.to_string(),
+                    r.batch.div_ceil(r.mu).to_string(),
+                    format!("{:.1}", t.items_per_sec),
+                    format!("{:.4}", r.best_metric()),
+                    r.updates.to_string(),
+                ]);
+            }
+            _ => {
+                table.row(&[
+                    job.name.clone(),
+                    "-".into(),
+                    "-".into(),
+                    "reject".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                if let AdmissionOutcome::Rejected { reason } = &job.admission {
+                    println!("[mbs] jobs: '{}' rejected: {reason}", job.name);
+                }
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "[mbs] jobs: {} of {} admitted — aggregate {:.1} items/sec, arena peak {:.2} / {:.2} MiB",
+        report.admitted(),
+        report.jobs.len(),
+        report.aggregate_items_per_sec(),
+        report.arena_peak_bytes as f64 / MIB as f64,
+        report.capacity_bytes as f64 / MIB as f64
+    );
+
+    let mut rep = BenchReport::new("jobs", "train");
+    rep.uint("capacity_mib", capacity_mib)
+        .str_field("set_class", jobs_set_class(&report))
+        .uint("admitted", report.admitted() as u64)
+        .num("aggregate_items_per_sec", report.aggregate_items_per_sec(), 3)
+        .num("arena_peak_mib", report.arena_peak_bytes as f64 / MIB as f64, 3)
+        .num("total_wall_s", report.total_wall.as_secs_f64(), 6)
+        .field("jobs", jobs_train_value(&report));
+    rep.write(&out)?;
+    println!("[mbs] wrote {out}");
+    Ok(())
+}
+
+/// The set-level verdict folded from the per-job admissions.
+fn jobs_set_class(report: &JobsReport) -> &'static str {
+    frontier::SetFeasibility::from_outcomes(report.jobs.iter().map(|j| &j.admission))
+        .class_name()
+}
+
+/// Admission-only `mbs jobs --dry-run`: resolve each job's model entry
+/// (synthetic task stand-ins need no artifacts), plan admission, print
+/// the table + set verdict, and emit the dry-run `BENCH_jobs.json`.
+fn jobs_dry_run(
+    args: &Args,
+    set: &JobSet,
+    capacity_bytes: u64,
+    out: &str,
+) -> Result<(), MbsError> {
+    let manifest = if set.jobs.iter().any(|j| j.task.is_none()) {
+        Some(Manifest::load(artifacts_dir(args))?)
+    } else {
+        None
+    };
+    let mut requests = Vec::with_capacity(set.jobs.len());
+    for spec in &set.jobs {
+        let entry = match &spec.task {
+            Some(task) => frontier::synthetic_entry(task)?,
+            None => manifest
+                .as_ref()
+                .expect("loaded above: some job names a model")
+                .model(&spec.cfg.model)?
+                .clone(),
+        };
+        requests.push(AdmissionRequest::from_spec(spec, entry));
+    }
+    let verdicts = tenancy::plan_admission(&requests, capacity_bytes, false);
+    let set_class =
+        frontier::SetFeasibility::from_outcomes(verdicts.iter().map(|v| &v.outcome));
+
+    let mut table = Table::new(&[
+        "job", "model", "batch", "admission", "mu", "solo mu", "n_smu", "reserved (MiB)",
+    ]);
+    for (req, v) in requests.iter().zip(&verdicts) {
+        match &v.outcome {
+            AdmissionOutcome::Admitted {
+                resolution, solo_mu, resident_claim_bytes, ..
+            } => {
+                table.row(&[
+                    v.name.clone(),
+                    req.entry.name.clone(),
+                    req.batch.to_string(),
+                    v.outcome.label().to_string(),
+                    resolution.mu.to_string(),
+                    solo_mu.to_string(),
+                    req.batch.div_ceil(resolution.mu).to_string(),
+                    format!("{:.2}", *resident_claim_bytes as f64 / MIB as f64),
+                ]);
+            }
+            AdmissionOutcome::Rejected { reason } => {
+                table.row(&[
+                    v.name.clone(),
+                    req.entry.name.clone(),
+                    req.batch.to_string(),
+                    "reject".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                println!("[mbs] jobs: '{}' rejected: {reason}", v.name);
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!("[mbs] jobs: set verdict: {}", set_class.class_name());
+    println!(
+        "(admit = solo mu kept; shrink-mu = co-residency forced a smaller micro-batch; \
+         reject = the set cannot host this job)"
+    );
+
+    let mut rep = BenchReport::new("jobs", "dry-run");
+    rep.uint("capacity_mib", capacity_bytes / MIB)
+        .str_field("set_class", set_class.class_name())
+        .field("jobs", jobs_admission_value(&requests, &verdicts));
+    rep.write(out)?;
+    println!("[mbs] wrote {out}");
+    Ok(())
+}
+
+/// The dry-run `jobs` array: one admission entry per job.
+fn jobs_admission_value(requests: &[AdmissionRequest], verdicts: &[JobAdmission]) -> JsonValue {
+    JsonValue::Arr(
+        requests
+            .iter()
+            .zip(verdicts)
+            .map(|(req, v)| {
+                let mut j = JsonValue::obj();
+                j.push("name", JsonValue::Str(v.name.clone()));
+                j.push("model", JsonValue::Str(req.entry.name.clone()));
+                j.push("batch", JsonValue::UInt(req.batch as u64));
+                j.push("admission", JsonValue::Str(v.outcome.label().to_string()));
+                match &v.outcome {
+                    AdmissionOutcome::Admitted {
+                        resolution, solo_mu, resident_claim_bytes, ..
+                    } => {
+                        j.push("mu", JsonValue::UInt(resolution.mu as u64));
+                        j.push("solo_mu", JsonValue::UInt(*solo_mu as u64));
+                        j.push(
+                            "n_smu",
+                            JsonValue::UInt(req.batch.div_ceil(resolution.mu) as u64),
+                        );
+                        j.push(
+                            "resident_claim_mib",
+                            JsonValue::fixed(*resident_claim_bytes as f64 / MIB as f64, 3),
+                        );
+                    }
+                    AdmissionOutcome::Rejected { reason } => {
+                        j.push("reason", JsonValue::Str(reason.clone()));
+                    }
+                }
+                j
+            })
+            .collect(),
+    )
+}
+
+/// The train-mode `jobs` array: admission fields plus measured throughput
+/// (shared measurement vocabulary: `stage_means_ms`, `pool`).
+fn jobs_train_value(report: &JobsReport) -> JsonValue {
+    JsonValue::Arr(
+        report
+            .jobs
+            .iter()
+            .map(|job| {
+                let mut j = JsonValue::obj();
+                j.push("name", JsonValue::Str(job.name.clone()));
+                j.push("admission", JsonValue::Str(job.admission.label().to_string()));
+                match (&job.report, &job.admission) {
+                    (Some(r), AdmissionOutcome::Admitted { solo_mu, .. }) => {
+                        let t = boundary_timing(r);
+                        j.push("model", JsonValue::Str(r.model.clone()));
+                        j.push("batch", JsonValue::UInt(r.batch as u64));
+                        j.push("mu", JsonValue::UInt(r.mu as u64));
+                        j.push("solo_mu", JsonValue::UInt(*solo_mu as u64));
+                        j.push("n_smu", JsonValue::UInt(r.batch.div_ceil(r.mu) as u64));
+                        j.push("items_per_sec", JsonValue::fixed(t.items_per_sec, 3));
+                        j.push(
+                            "epoch_wall_mean_s",
+                            JsonValue::fixed(t.epoch_wall_mean_s, 6),
+                        );
+                        j.push("micro_steps", JsonValue::UInt(t.micro_steps));
+                        j.push("updates", JsonValue::UInt(t.updates));
+                        j.push("best_metric", JsonValue::fixed(r.best_metric(), 6));
+                        j.push(
+                            "ledger_peak_mib",
+                            JsonValue::fixed(r.ledger_peak_bytes as f64 / MIB as f64, 3),
+                        );
+                        j.push(
+                            "stage_means_ms",
+                            bench_report::stage_means_value(&t.stages, t.micro_steps, t.updates),
+                        );
+                        j.push("pool", bench_report::pool_value(&t.pool));
+                    }
+                    (_, AdmissionOutcome::Rejected { reason }) => {
+                        j.push("reason", JsonValue::Str(reason.clone()));
+                    }
+                    _ => {}
+                }
+                j
+            })
+            .collect(),
+    )
 }
 
 /// `bench` — measure the streaming hot path and emit machine-readable JSON

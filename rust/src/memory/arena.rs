@@ -1,0 +1,259 @@
+//! Shared-capacity arena: one simulated device, many tenants.
+//!
+//! MBS shrinks a job's transient working set from `N_B` samples to `mu`
+//! (paper §3.3) — which is also what lets *several* training jobs
+//! time-share one device that could not hold any two of them natively.
+//! [`Arena`] is the shared side of that story: it owns the device
+//! capacity and the cross-job usage/peak accounting, while every
+//! [`Ledger`](super::Ledger) is a per-tenant *view* that charges its
+//! allocations into the shared core. A solo [`Ledger::new`] is simply a
+//! one-tenant arena, so the entire single-job API (and every assertion
+//! built on it) survives unchanged.
+//!
+//! Single-threaded by design (`Rc<RefCell<..>>`): everything that touches
+//! device residency already lives on the engine thread (the PJRT client is
+//! `Rc`-backed), and the interleaved multi-job executor rotates tenants on
+//! that same thread.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::MIB;
+use crate::error::{MbsError, Result};
+
+/// The shared accounting every tenant ledger charges into.
+#[derive(Debug)]
+pub(super) struct ArenaCore {
+    /// Total device capacity, bytes.
+    pub(super) capacity: u64,
+    /// Bytes currently allocated across every tenant.
+    pub(super) used: u64,
+    /// High-water mark of `used` over the arena's life — the cross-job
+    /// peak the admission planner promises stays within capacity.
+    pub(super) peak: u64,
+    /// Tenant ledgers created so far (diagnostic).
+    pub(super) tenants: usize,
+}
+
+impl ArenaCore {
+    /// Charge `bytes` against the shared capacity; fails with a structured
+    /// OOM naming `tag` when the request does not fit *right now* — this
+    /// failure path IS the every-instant cross-job capacity assertion.
+    pub(super) fn charge(&mut self, tag: &str, bytes: u64) -> Result<()> {
+        if self.used.saturating_add(bytes) > self.capacity {
+            return Err(MbsError::Oom {
+                needed_bytes: self.used.saturating_add(bytes),
+                available_bytes: self.capacity - self.used,
+                capacity_bytes: self.capacity,
+                context: format!("arena alloc '{tag}'"),
+            });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release `bytes` previously charged.
+    pub(super) fn release(&mut self, bytes: u64) {
+        debug_assert!(self.used >= bytes, "arena release underflow");
+        self.used = self.used.saturating_sub(bytes);
+    }
+}
+
+/// One simulated device's capacity, shared by any number of tenant
+/// [`Ledger`](super::Ledger)s.
+///
+/// Cloning an `Arena` clones the *handle*, not the device: all clones (and
+/// all tenant ledgers) charge the same core, so `used()`/`peak()` always
+/// report the cross-tenant totals.
+///
+/// ```
+/// use mbs::memory::Arena;
+///
+/// let arena = Arena::new(100);
+/// let mut a = arena.tenant("job-a");
+/// let mut b = arena.tenant("job-b");
+/// let ra = a.alloc("resident", 60).unwrap();
+/// assert!(b.alloc("resident", 50).is_err()); // shared capacity is shared
+/// let rb = b.alloc("resident", 40).unwrap();
+/// assert_eq!(arena.used(), 100);
+/// a.free(ra).unwrap();
+/// b.free(rb).unwrap();
+/// assert_eq!(arena.peak(), 100); // cross-job high-water mark
+/// ```
+#[derive(Debug, Clone)]
+pub struct Arena {
+    core: Rc<RefCell<ArenaCore>>,
+}
+
+impl Arena {
+    /// A fresh arena for a device with `capacity` bytes.
+    pub fn new(capacity: u64) -> Arena {
+        Arena {
+            core: Rc::new(RefCell::new(ArenaCore {
+                capacity,
+                used: 0,
+                peak: 0,
+                tenants: 0,
+            })),
+        }
+    }
+
+    /// A fresh arena for a capacity given in MiB (the CLI's
+    /// `--capacity-mib` unit).
+    pub fn with_mib(capacity_mib: u64) -> Arena {
+        Arena::new(capacity_mib * MIB)
+    }
+
+    /// Create a per-tenant ledger view charging into this arena. The name
+    /// labels the tenant's allocations in OOM contexts.
+    pub fn tenant(&self, name: &str) -> super::Ledger {
+        self.core.borrow_mut().tenants += 1;
+        super::Ledger::tenant_view(self.core.clone(), name)
+    }
+
+    /// Total device capacity, bytes.
+    pub fn capacity(&self) -> u64 {
+        self.core.borrow().capacity
+    }
+
+    /// Bytes currently allocated across every tenant.
+    pub fn used(&self) -> u64 {
+        self.core.borrow().used
+    }
+
+    /// Bytes still unallocated across every tenant — the budget the
+    /// admission planner hands each job's `auto_mu` after all residents
+    /// are placed.
+    pub fn remaining(&self) -> u64 {
+        let c = self.core.borrow();
+        c.capacity - c.used
+    }
+
+    /// Would an allocation of `bytes` fit across all tenants right now?
+    pub fn admits(&self, bytes: u64) -> bool {
+        bytes <= self.remaining()
+    }
+
+    /// Cross-tenant high-water mark of [`used`](Arena::used) — by
+    /// construction never exceeds [`capacity`](Arena::capacity), because
+    /// every charge that would is refused at the instant it happens.
+    pub fn peak(&self) -> u64 {
+        self.core.borrow().peak
+    }
+
+    /// Tenant ledgers created from this arena so far.
+    pub fn tenants(&self) -> usize {
+        self.core.borrow().tenants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenants_share_one_capacity() {
+        let arena = Arena::new(100);
+        let mut a = arena.tenant("a");
+        let mut b = arena.tenant("b");
+        assert_eq!(arena.tenants(), 2);
+        let ra = a.alloc("x", 70).unwrap();
+        // tenant b sees the shared remaining budget
+        assert_eq!(b.remaining(), 30);
+        assert!(b.alloc("x", 31).is_err());
+        let rb = b.alloc("x", 30).unwrap();
+        assert_eq!(arena.used(), 100);
+        assert_eq!(arena.remaining(), 0);
+        // per-tenant usage stays separate; the arena sums it
+        assert_eq!(a.used(), 70);
+        assert_eq!(b.used(), 30);
+        a.free(ra).unwrap();
+        b.free(rb).unwrap();
+        assert_eq!(arena.used(), 0);
+        assert_eq!(arena.peak(), 100);
+        // per-tenant peaks are the tenants' own high-water marks
+        assert_eq!(a.peak(), 70);
+        assert_eq!(b.peak(), 30);
+    }
+
+    #[test]
+    fn oom_names_the_tenant() {
+        let arena = Arena::new(10);
+        let mut a = arena.tenant("job-a");
+        let err = a.alloc("resident", 11).unwrap_err();
+        assert!(err.is_oom());
+        assert!(err.to_string().contains("job-a"), "{err}");
+    }
+
+    #[test]
+    fn with_mib_scales_capacity() {
+        let arena = Arena::with_mib(3);
+        assert_eq!(arena.capacity(), 3 * MIB);
+        assert!(arena.admits(3 * MIB) && !arena.admits(3 * MIB + 1));
+    }
+
+    #[test]
+    fn clone_is_a_handle_not_a_device() {
+        let arena = Arena::new(50);
+        let view = arena.clone();
+        let mut t = arena.tenant("t");
+        let id = t.alloc("x", 20).unwrap();
+        assert_eq!(view.used(), 20);
+        t.free(id).unwrap();
+        assert_eq!(view.used(), 0);
+        assert_eq!(view.peak(), 20);
+    }
+
+    mod properties {
+        use super::*;
+        use crate::util::prop::{ensure, forall};
+
+        #[test]
+        fn cross_tenant_peak_never_exceeds_capacity() {
+            // the tentpole invariant: at EVERY instant, the sum of live
+            // bytes across tenants stays within capacity, and the arena's
+            // bookkeeping (used == sum of tenant useds) never drifts
+            forall(
+                "arena bound",
+                100,
+                0xA7E,
+                |r| {
+                    let ops: Vec<(u64, u64)> =
+                        (0..60).map(|_| (r.below(3), r.below(50))).collect();
+                    ops
+                },
+                |ops| {
+                    let arena = Arena::new(200);
+                    let mut tenants =
+                        vec![arena.tenant("t0"), arena.tenant("t1"), arena.tenant("t2")];
+                    let mut live: Vec<Vec<crate::memory::ledger::AllocId>> =
+                        vec![Vec::new(), Vec::new(), Vec::new()];
+                    for &(t, sz) in ops {
+                        let t = t as usize;
+                        match tenants[t].alloc("x", sz) {
+                            Ok(id) => live[t].push(id),
+                            Err(_) => {
+                                if let Some(id) = live[t].pop() {
+                                    tenants[t].free(id).map_err(|e| e.to_string())?;
+                                }
+                            }
+                        }
+                        ensure(arena.used() <= arena.capacity(), "used > capacity")?;
+                        ensure(arena.peak() <= arena.capacity(), "peak > capacity")?;
+                        let sum: u64 = tenants.iter().map(|l| l.used()).sum();
+                        ensure(
+                            sum == arena.used(),
+                            format!("tenant sum {sum} != arena used {}", arena.used()),
+                        )?;
+                        ensure(
+                            arena.remaining() == arena.capacity() - arena.used(),
+                            "remaining out of sync",
+                        )?;
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}

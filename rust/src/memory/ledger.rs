@@ -5,9 +5,24 @@
 //! can assert the coordinator's sequencing never exceeds capacity at any
 //! instant (e.g. during the double-buffered streaming window, when two
 //! micro-batch input buffers are briefly live at once).
+//!
+//! Since the multi-tenant refactor, a `Ledger` is a per-tenant *view* over
+//! a shared [`Arena`](super::Arena) core: [`Ledger::new`] builds a
+//! one-tenant arena (the historical behaviour, API-identical), while
+//! [`Arena::tenant`](super::Arena::tenant) hands out sibling ledgers that
+//! charge the same capacity — which is how the interleaved multi-job
+//! executor keeps every job's residency accountable against one device.
+//! Per-ledger counters ([`used`](Ledger::used), [`peak`](Ledger::peak))
+//! stay tenant-local; the *budget* queries
+//! ([`remaining`](Ledger::remaining), [`admits`](Ledger::admits),
+//! [`capacity`](Ledger::capacity)) are shared, so for a solo ledger both
+//! views coincide exactly.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
+use super::arena::ArenaCore;
 use super::MIB;
 use crate::error::{MbsError, Result};
 
@@ -15,10 +30,11 @@ use crate::error::{MbsError, Result};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct AllocId(u64);
 
-/// Bump-style allocation tracker for one simulated device.
+/// Bump-style allocation tracker for one tenant of a simulated device.
 #[derive(Debug)]
 pub struct Ledger {
-    capacity: u64,
+    core: Rc<RefCell<ArenaCore>>,
+    tenant: String,
     live: BTreeMap<AllocId, (String, u64)>,
     used: u64,
     next_id: u64,
@@ -26,9 +42,10 @@ pub struct Ledger {
 }
 
 impl Ledger {
-    /// A fresh ledger for a device with `capacity` bytes.
+    /// A fresh ledger for a device with `capacity` bytes — a one-tenant
+    /// [`Arena`](super::Arena).
     pub fn new(capacity: u64) -> Ledger {
-        Ledger { capacity, live: BTreeMap::new(), used: 0, next_id: 0, peak: 0 }
+        super::Arena::new(capacity).tenant("device")
     }
 
     /// A fresh ledger for a synthetic capacity given in MiB — a
@@ -38,17 +55,31 @@ impl Ledger {
         Ledger::new(capacity_mib * MIB)
     }
 
-    /// Allocate `bytes` under `tag`; fails with a structured OOM when the
-    /// request does not fit.
-    pub fn alloc(&mut self, tag: &str, bytes: u64) -> Result<AllocId> {
-        if self.used + bytes > self.capacity {
-            return Err(MbsError::Oom {
-                needed_bytes: self.used + bytes,
-                available_bytes: self.capacity - self.used,
-                capacity_bytes: self.capacity,
-                context: format!("ledger alloc '{tag}'"),
-            });
+    /// A tenant view over a shared arena core (via
+    /// [`Arena::tenant`](super::Arena::tenant)).
+    pub(super) fn tenant_view(core: Rc<RefCell<ArenaCore>>, tenant: &str) -> Ledger {
+        Ledger {
+            core,
+            tenant: tenant.to_string(),
+            live: BTreeMap::new(),
+            used: 0,
+            next_id: 0,
+            peak: 0,
         }
+    }
+
+    /// The tenant name this ledger charges under.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Allocate `bytes` under `tag`; fails with a structured OOM when the
+    /// request does not fit the *shared* capacity right now — with sibling
+    /// tenants, their live bytes count too.
+    pub fn alloc(&mut self, tag: &str, bytes: u64) -> Result<AllocId> {
+        self.core
+            .borrow_mut()
+            .charge(&format!("{}: {tag}", self.tenant), bytes)?;
         let id = AllocId(self.next_id);
         self.next_id += 1;
         self.used += bytes;
@@ -62,22 +93,25 @@ impl Ledger {
         match self.live.remove(&id) {
             Some((_, bytes)) => {
                 self.used -= bytes;
+                self.core.borrow_mut().release(bytes);
                 Ok(())
             }
             None => Err(MbsError::Runtime(format!("double free of {id:?}"))),
         }
     }
 
-    /// Bytes currently allocated.
+    /// Bytes currently allocated *by this tenant*. For a solo ledger this
+    /// equals the device total.
     pub fn used(&self) -> u64 {
         self.used
     }
 
     /// Bytes still available for allocation — the budget the micro-batch
     /// planner queries when deriving `mu` (paper Alg. 1: capacity minus
-    /// whatever is already resident).
+    /// whatever is already resident, across every tenant of the arena).
     pub fn remaining(&self) -> u64 {
-        self.capacity - self.used
+        let c = self.core.borrow();
+        c.capacity - c.used
     }
 
     /// Would an allocation of `bytes` fit right now?
@@ -85,28 +119,39 @@ impl Ledger {
         bytes <= self.remaining()
     }
 
-    /// High-water mark of [`used`](Ledger::used) over the ledger's life.
+    /// High-water mark of [`used`](Ledger::used) over this tenant's life.
+    /// The cross-tenant peak lives on [`Arena::peak`](super::Arena::peak).
     pub fn peak(&self) -> u64 {
         self.peak
     }
 
-    /// Total device capacity, bytes.
+    /// Total device capacity, bytes (shared across tenants).
     pub fn capacity(&self) -> u64 {
-        self.capacity
+        self.core.borrow().capacity
     }
 
-    /// Number of live allocations.
+    /// Number of live allocations held by this tenant.
     pub fn live_count(&self) -> usize {
         self.live.len()
     }
 
-    /// Tag breakdown of live bytes, for diagnostics.
+    /// Tag breakdown of this tenant's live bytes, for diagnostics.
     pub fn by_tag(&self) -> BTreeMap<String, u64> {
         let mut out: BTreeMap<String, u64> = BTreeMap::new();
         for (tag, bytes) in self.live.values() {
             *out.entry(tag.clone()).or_default() += bytes;
         }
         out
+    }
+}
+
+impl Drop for Ledger {
+    /// A dropped tenant releases whatever it still holds, so a job that
+    /// errors out mid-run hands its reservations back to the arena.
+    fn drop(&mut self) {
+        if self.used > 0 {
+            self.core.borrow_mut().release(self.used);
+        }
     }
 }
 
@@ -165,6 +210,19 @@ mod tests {
         let tags = l.by_tag();
         assert_eq!(tags["params"], 300);
         assert_eq!(tags["input"], 200);
+    }
+
+    #[test]
+    fn dropped_tenant_releases_its_live_bytes() {
+        let arena = crate::memory::Arena::new(100);
+        {
+            let mut t = arena.tenant("doomed");
+            t.alloc("resident", 80).unwrap();
+            assert_eq!(arena.used(), 80);
+        }
+        // the tenant died holding 80 bytes: the arena gets them back
+        assert_eq!(arena.used(), 0);
+        assert_eq!(arena.peak(), 80);
     }
 
     mod properties {

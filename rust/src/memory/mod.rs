@@ -18,10 +18,15 @@
 //! bump-style allocation tracker whose `remaining()` budget drives the
 //! micro-batch planner (paper Alg. 1) and which the epoch executor charges
 //! per step, asserting that planned residency never exceeds capacity at
-//! any instant.
+//! any instant. [`Arena`] is the multi-tenant generalization: one shared
+//! capacity with per-job [`Ledger`] views, so several training jobs can
+//! time-share the device with the same every-instant accountability
+//! (`coordinator/tenancy` plans admission against it).
 
+pub mod arena;
 pub mod ledger;
 
+pub use arena::Arena;
 pub use ledger::Ledger;
 
 use crate::error::{MbsError, Result};

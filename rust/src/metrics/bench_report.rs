@@ -259,7 +259,11 @@ impl CompareOutcome {
 /// latency keys are too machine-noise-sensitive for a hard threshold (see
 /// ARCHITECTURE.md "Trend checks"). `overlap_efficiency` — the fraction of
 /// upload time the overlapped pipeline hides — is a ratio of co-measured
-/// times on the same machine, so it *is* stable enough to gate.
+/// times on the same machine, so it *is* stable enough to gate. The
+/// `items_per_sec` suffix rule deliberately covers `BENCH_jobs.json`'s
+/// `aggregate_items_per_sec` (and every per-job `items_per_sec` leaf), so
+/// `mbs bench --compare` gates the multi-tenant aggregate throughput the
+/// same way it gates the solo pipeline's.
 pub fn is_trend_key(key: &str) -> bool {
     key.ends_with("items_per_sec") || key == "pooled_speedup" || key == "overlap_efficiency"
 }
@@ -457,8 +461,38 @@ mod tests {
         assert!(is_trend_key("items_per_sec"));
         assert!(is_trend_key("pooled_speedup"));
         assert!(is_trend_key("overlap_efficiency"));
+        // the multi-tenant aggregate (and per-job throughput leaves) ride
+        // the same suffix rule — BENCH_jobs.json is gated like the rest
+        assert!(is_trend_key("aggregate_items_per_sec"));
         assert!(!is_trend_key("assemble_mean_ms"));
         assert!(!is_trend_key("epoch_wall_mean_s"));
         assert!(!is_trend_key("upload_hidden"));
+        assert!(!is_trend_key("arena_peak_mib"));
+    }
+
+    #[test]
+    fn compare_gates_jobs_aggregate_throughput() {
+        // a BENCH_jobs.json pair: the aggregate and the per-job leaves are
+        // compared, the admission labels and peaks are not
+        let prev = Json::parse(
+            r#"{"bench":"jobs","mode":"train","aggregate_items_per_sec": 100.0,
+                "arena_peak_mib": 3.0,
+                "jobs": [{"name": "a", "items_per_sec": 50.0}]}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(
+            r#"{"bench":"jobs","mode":"train","aggregate_items_per_sec": 10.0,
+                "arena_peak_mib": 9.0,
+                "jobs": [{"name": "a", "items_per_sec": 49.0}]}"#,
+        )
+        .unwrap();
+        let out = compare(&prev, &cur, 0.2);
+        assert_eq!(out.rows.len(), 2);
+        let agg =
+            out.rows.iter().find(|r| r.path == "aggregate_items_per_sec").unwrap();
+        assert!(agg.regressed, "90% aggregate drop must regress");
+        let per_job =
+            out.rows.iter().find(|r| r.path == "jobs[0].items_per_sec").unwrap();
+        assert!(!per_job.regressed, "2% drop is within the threshold");
     }
 }

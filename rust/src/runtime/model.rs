@@ -128,6 +128,10 @@ pub struct ModelRuntime {
     /// Overlapped pipeline mode: accept a second staged micro-batch while
     /// one is in flight. Off = the serial byte-identity oracle.
     overlap: bool,
+    /// Diagnostic owner label — the model key by default; the multi-job
+    /// executor sets the job name, so a multi-tenant pipeline misuse
+    /// error names its tenant.
+    label: String,
 }
 
 impl ModelRuntime {
@@ -180,6 +184,7 @@ impl ModelRuntime {
         let slots = (0..entry.optimizer.slots)
             .map(|_| zeros(&client))
             .collect::<Result<Vec<_>>>()?;
+        let label = entry.name.clone();
         Ok(ModelRuntime {
             client,
             entry,
@@ -201,7 +206,18 @@ impl ModelRuntime {
             slot_head: 0,
             slot_staged: 0,
             overlap: false,
+            label,
         })
+    }
+
+    /// Set the diagnostic owner label (job name in multi-tenant runs).
+    pub fn set_label(&mut self, label: &str) {
+        self.label = label.to_string();
+    }
+
+    /// The diagnostic owner label (defaults to the model key).
+    pub fn label(&self) -> &str {
+        &self.label
     }
 
     /// Parameter leaf count.
@@ -288,8 +304,8 @@ impl ModelRuntime {
         let cap = if self.overlap { 2 } else { 1 };
         if self.slot_staged >= cap {
             return Err(MbsError::Runtime(format!(
-                "input slots full: {} micro-batch(es) already staged (overlap={})",
-                self.slot_staged, self.overlap
+                "{}: input slots full: {} micro-batch(es) already staged (overlap={})",
+                self.label, self.slot_staged, self.overlap
             )));
         }
         let t0 = Instant::now();
@@ -475,9 +491,9 @@ impl ModelRuntime {
     fn check_no_staged(&self, what: &str) -> Result<()> {
         if self.slot_staged > 0 {
             return Err(MbsError::Runtime(format!(
-                "{what} called with {} staged micro-batch(es) in flight — drain the \
+                "{}: {what} called with {} staged micro-batch(es) in flight — drain the \
                  pipeline (accum_staged/eval_staged) first",
-                self.slot_staged
+                self.label, self.slot_staged
             )));
         }
         Ok(())

@@ -118,27 +118,45 @@ fn eval_stats_identical_across_streaming_policies() {
     // policy — the double-buffered sweep must produce exactly the stats the
     // synchronous one does (same items, same order, same accumulation)
     let Some(mut engine) = common::engine() else { return };
-    use mbs::coordinator::{evaluate_with, StreamingPolicy};
-    use mbs::data::{Dataset, SynthFlowers};
+    use mbs::coordinator::{evaluate_pooled, StreamingPolicy};
+    use mbs::data::{BufPool, Dataset, SynthFlowers};
     use mbs::metrics::MetricKind;
     use std::sync::Arc;
     let mut rt = engine.load_model("microresnet18", 16, 8).expect("load");
     let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(16, 102, 40, 7));
-    let sync = evaluate_with(&mut rt, MetricKind::Classification, &ds, 0, StreamingPolicy::Synchronous, 0)
-        .expect("sync eval");
-    let buffered = evaluate_with(
+    // repeat-eval callers hold ONE warmed pool and go through
+    // evaluate_pooled (ROADMAP PR 4 follow-up): both sweeps circulate the
+    // same host buffers instead of re-warming a fresh pool per call
+    let pool = Arc::new(BufPool::for_prefetch(2));
+    pool.warm(BufPool::buffers_for(2), ds.as_ref(), 8);
+    let sync = evaluate_pooled(
+        &mut rt,
+        MetricKind::Classification,
+        &ds,
+        0,
+        StreamingPolicy::Synchronous,
+        0,
+        &pool,
+    )
+    .expect("sync eval");
+    let buffered = evaluate_pooled(
         &mut rt,
         MetricKind::Classification,
         &ds,
         0,
         StreamingPolicy::DoubleBuffered,
         2,
+        &pool,
     )
     .expect("buffered eval");
     assert_eq!(sync.mean_loss, buffered.mean_loss, "eval loss diverged across policies");
     assert_eq!(sync.primary_metric, buffered.primary_metric);
     assert_eq!(sync.samples, buffered.samples);
     assert_eq!(sync.micro_steps, buffered.micro_steps);
+    // the shared pool served every lease of both sweeps without allocating
+    let stats = pool.stats();
+    assert_eq!(stats.allocs, 0, "repeat-eval allocated host buffers: {stats:?}");
+    assert_eq!(stats.hits, stats.leases);
 }
 
 #[test]

@@ -1,0 +1,211 @@
+//! Multi-tenant interleaving tests (the identity oracle is artifact-gated,
+//! see rust/docs/TESTING.md): each job's `TrainReport` under `train_jobs`
+//! must be bit-identical to the same configuration's solo `train` run —
+//! the round-robin only interleaves *whose* micro-step runs next, never
+//! what any job computes — plus shared-arena accounting and the
+//! artifact-free dry-run admission path.
+
+mod common;
+
+use mbs::coordinator::frontier::{classify_set, synthetic_entry, SetFeasibility};
+use mbs::coordinator::tenancy::{
+    plan_admission, resident_claim, transient_bytes, AdmissionOutcome, AdmissionRequest,
+    JobSpec,
+};
+use mbs::memory::{Footprint, MIB};
+use mbs::{JobSet, MicroBatchSpec, TrainConfig};
+
+/// The acceptance scenario: two heterogeneous jobs (classification +
+/// segmentation) on a capacity their combined native footprints exceed.
+fn heterogeneous_set(engine: &mbs::Engine) -> (JobSet, u64) {
+    let rn = engine.manifest().model("microresnet18").unwrap().clone();
+    let un = engine.manifest().model("microunet").unwrap().clone();
+    let fp_rn = Footprint::from_manifest(&rn, rn.variant(16, 8).unwrap());
+    let fp_un = Footprint::from_manifest(&un, un.variant(24, 8).unwrap());
+    // capacity: both resident reservations plus one 8-sample transient of
+    // headroom — enough to admit both as MBS streams, far below what the
+    // two native steps need at once
+    let claim = resident_claim(&rn, 16).unwrap() + resident_claim(&un, 24).unwrap();
+    let transient = transient_bytes(&fp_rn, 8, 24, 16, false)
+        .max(transient_bytes(&fp_un, 8, 16, 8, false));
+    let capacity = claim + transient;
+    assert!(
+        fp_rn.step_bytes(24) + fp_un.step_bytes(16) > capacity,
+        "fixture must make the combined native footprints exceed the shared capacity"
+    );
+    let cls = TrainConfig::builder("microresnet18")
+        .batch(24)
+        .epochs(2)
+        .dataset_len(48)
+        .eval_len(16)
+        .seed(3)
+        .overlap(false)
+        .build();
+    let seg = TrainConfig::builder("microunet")
+        .size(24)
+        .batch(16)
+        .epochs(2)
+        .dataset_len(32)
+        .eval_len(8)
+        .seed(5)
+        .overlap(false)
+        .build();
+    let set = JobSet {
+        capacity_mib: None,
+        jobs: vec![
+            JobSpec { name: "cls".into(), task: None, cfg: cls },
+            JobSpec { name: "seg".into(), task: None, cfg: seg },
+        ],
+    };
+    (set, capacity)
+}
+
+#[test]
+fn per_job_reports_bit_identical_to_solo_runs() {
+    // THE oracle (mirrors PR 4's overlap oracle): run two heterogeneous
+    // jobs interleaved in one arena, then rerun each alone with its
+    // admitted mu pinned — every loss and metric must match bit for bit
+    let Some(mut engine) = common::engine() else { return };
+    let (set, capacity) = heterogeneous_set(&engine);
+    let report = mbs::train_jobs(&mut engine, &set, capacity).expect("interleaved run");
+    assert_eq!(report.admitted(), 2, "both jobs must be admitted: {:?}", report.jobs);
+    assert!(report.arena_peak_bytes <= report.capacity_bytes);
+    assert!(report.aggregate_items_per_sec() > 0.0);
+
+    for (job, spec) in report.jobs.iter().zip(&set.jobs) {
+        let shared = job.report.as_ref().expect("admitted jobs carry a report");
+        // the solo arm: the identical configuration alone on a roomy
+        // device, micro-batch pinned to what the arena admitted
+        let mut solo_cfg = spec.cfg.clone();
+        solo_cfg.mu = MicroBatchSpec::Fixed(shared.mu);
+        solo_cfg.capacity_mib = Some(capacity.div_ceil(MIB) + 16);
+        let solo = mbs::train(&mut engine, &solo_cfg).expect("solo run");
+
+        assert_eq!(shared.mu, solo.mu, "job {}", job.name);
+        assert_eq!(shared.updates, solo.updates, "job {}", job.name);
+        assert_eq!(shared.train_epochs.len(), solo.train_epochs.len());
+        for (a, b) in shared.train_epochs.iter().zip(&solo.train_epochs) {
+            assert_eq!(
+                a.mean_loss.to_bits(),
+                b.mean_loss.to_bits(),
+                "job {} epoch {} train loss diverged: {} vs {}",
+                job.name,
+                a.epoch,
+                a.mean_loss,
+                b.mean_loss
+            );
+            assert_eq!(a.primary_metric.to_bits(), b.primary_metric.to_bits());
+            assert_eq!(a.samples, b.samples);
+            assert_eq!(a.micro_steps, b.micro_steps);
+            assert_eq!(a.updates, b.updates);
+        }
+        assert_eq!(shared.eval_epochs.len(), solo.eval_epochs.len());
+        for (a, b) in shared.eval_epochs.iter().zip(&solo.eval_epochs) {
+            assert_eq!(
+                a.mean_loss.to_bits(),
+                b.mean_loss.to_bits(),
+                "job {} eval loss diverged",
+                job.name
+            );
+            assert_eq!(a.primary_metric.to_bits(), b.primary_metric.to_bits());
+            assert_eq!(a.samples, b.samples);
+        }
+        assert_eq!(
+            shared.final_eval.mean_loss.to_bits(),
+            solo.final_eval.mean_loss.to_bits()
+        );
+    }
+}
+
+#[test]
+fn arena_accounting_holds_reservations_and_transients() {
+    // every job's sub-ledger peak is its durable reservation plus at most
+    // one step's transient, and the cross-job peak never exceeds capacity
+    let Some(mut engine) = common::engine() else { return };
+    let (set, capacity) = heterogeneous_set(&engine);
+    let rn = engine.manifest().model("microresnet18").unwrap().clone();
+    let un = engine.manifest().model("microunet").unwrap().clone();
+    let claims = [resident_claim(&rn, 16).unwrap(), resident_claim(&un, 24).unwrap()];
+    let report = mbs::train_jobs(&mut engine, &set, capacity).expect("interleaved run");
+    assert!(report.arena_peak_bytes <= report.capacity_bytes);
+    for (job, claim) in report.jobs.iter().zip(claims) {
+        let r = job.report.as_ref().expect("admitted");
+        assert!(
+            r.ledger_peak_bytes > claim,
+            "job {} never charged a step beyond its reservation",
+            job.name
+        );
+        assert!(r.ledger_peak_bytes <= capacity);
+        // the admission arithmetic carried through to the run
+        match &job.admission {
+            AdmissionOutcome::Admitted { resident_claim_bytes, resolution, .. } => {
+                assert_eq!(*resident_claim_bytes, claim);
+                assert_eq!(resolution.mu, r.mu);
+            }
+            other => panic!("job {} not admitted: {other:?}", job.name),
+        }
+    }
+    // the two tenants together peaked above what either holds alone
+    // (both reservations were resident simultaneously)
+    assert!(report.arena_peak_bytes >= claims[0] + claims[1]);
+}
+
+#[test]
+fn dry_run_admission_with_synthetic_tasks_is_artifact_free() {
+    // the `mbs jobs --dry-run` path end to end, no artifacts: spec JSON ->
+    // synthetic entries -> deterministic admission -> set classification
+    let set = JobSet::from_json_str(
+        r#"{
+            "capacity_mib": 4,
+            "jobs": [
+                {"name": "cls", "task": "classification", "batch": 64, "seed": 1},
+                {"name": "seg", "task": "segmentation", "batch": 32, "seed": 2}
+            ]
+        }"#,
+    )
+    .unwrap();
+    let requests: Vec<AdmissionRequest> = set
+        .jobs
+        .iter()
+        .map(|s| {
+            AdmissionRequest::from_spec(s, synthetic_entry(s.task.as_deref().unwrap()).unwrap())
+        })
+        .collect();
+    let capacity = set.capacity_mib.unwrap() * MIB;
+    let verdicts = plan_admission(&requests, capacity, false);
+    assert!(
+        verdicts.iter().all(|v| v.outcome.is_admitted()),
+        "both synthetic jobs fit 4 MiB: {verdicts:?}"
+    );
+    // co-residency costs capacity: each job's shared mu never exceeds its
+    // solo mu, and at least one shrank (1 MiB resident each leaves the
+    // transients 2 MiB to share)
+    for v in &verdicts {
+        let AdmissionOutcome::Admitted { resolution, solo_mu, .. } = &v.outcome else {
+            unreachable!("checked admitted above");
+        };
+        assert!(resolution.mu <= *solo_mu);
+    }
+    assert_eq!(classify_set(&requests, capacity, false), SetFeasibility::CoResidentMbs);
+    // a device that only fits the two residents hosts neither stream
+    assert_eq!(classify_set(&requests, 2 * MIB, false), SetFeasibility::Reject);
+    // determinism: replaying the same spec yields the same verdicts
+    let replay = plan_admission(&requests, capacity, false);
+    for (a, b) in verdicts.iter().zip(&replay) {
+        assert_eq!(a.outcome.mu(), b.outcome.mu());
+        assert_eq!(a.outcome.label(), b.outcome.label());
+    }
+}
+
+#[test]
+fn train_jobs_rejects_synthetic_specs() {
+    // training needs real models: a task-shaped job is a config error,
+    // not a crash deep in the engine
+    let Some(mut engine) = common::engine() else { return };
+    let set = JobSet::from_json_str(
+        r#"{"capacity_mib": 4, "jobs": [{"name": "x", "task": "classification"}]}"#,
+    )
+    .unwrap();
+    let err = mbs::train_jobs(&mut engine, &set, 4 * MIB).unwrap_err();
+    assert!(err.to_string().contains("synthetic"), "{err}");
+}
