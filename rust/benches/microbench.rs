@@ -11,7 +11,10 @@
 //!                  the caller-owned-pool entry point, so the loop pays
 //!                  zero per-call pool warm-up (ROADMAP PR 4 follow-up)
 //! plus the L3-only overhead (splitter + scale arithmetic), which must be
-//! noise-level compared to the XLA work.
+//! noise-level compared to the XLA work, and a host-only synchronous-vs-
+//! lane staging arm (per micro-batch size) that quantifies what the
+//! dedicated upload-lane thread buys — the narrative behind
+//! `wall_overlap_efficiency` in `BENCH_streaming.json`.
 
 mod common;
 
@@ -20,8 +23,9 @@ use std::time::Instant;
 
 use mbs::coordinator::datasets_for;
 use mbs::coordinator::{evaluate_pooled, NormalizationMode, SplitPlan, StreamingPolicy};
-use mbs::data::{loader, BufPool, Dataset};
+use mbs::data::{loader, Buf, BufPool, Dataset, MicroBatchHost};
 use mbs::metrics::{MetricKind, Table};
+use mbs::runtime::{LaneJob, StagedBatch, UploadLane};
 use mbs::{Result, TrainConfig};
 
 fn bench<F: FnMut() -> Result<()>>(iters: usize, mut f: F) -> Result<f64> {
@@ -34,7 +38,101 @@ fn bench<F: FnMut() -> Result<()>>(iters: usize, mut f: F) -> Result<f64> {
     Ok(t0.elapsed().as_secs_f64() / iters as f64 * 1e3)
 }
 
+/// A stand-in for the engine's upload+execute window: touches every input
+/// byte, so its cost scales with `mu` the way the device step's does.
+fn fake_execute(mb: &MicroBatchHost) -> f32 {
+    let x: f32 = match &mb.x {
+        Buf::F32(v) => v.iter().sum(),
+        Buf::I32(v) => v.iter().map(|&i| i as f32).sum(),
+    };
+    x + mb.mask.iter().sum::<f32>()
+}
+
+/// Host-only staging comparison (no artifacts needed): the same pinned-
+/// staging copy per micro-batch, first serialized (stage, then consume),
+/// then pipelined through the upload-lane thread (consume step `j-1`
+/// while the lane stages `j`). The per-step delta is the wall-clock time
+/// the async lane hides — what `wall_overlap_efficiency` reports on the
+/// real pipeline.
+fn lane_staging_comparison(iters: usize) -> Result<()> {
+    let cfg = TrainConfig::builder("staging-bench").build();
+    let mut table =
+        Table::new(&["mu", "serial stage+consume (ms)", "lane pipelined (ms)", "speedup"]);
+    for mu in [2usize, 4, 8, 16, 32] {
+        let (ds, _eval): (Arc<dyn Dataset>, Arc<dyn Dataset>) =
+            datasets_for("classification", 16, &cfg)?;
+        let indices: Vec<usize> = (0..mu).collect();
+        let n_steps = 24usize;
+        let pool = Arc::new(BufPool::bounded(UploadLane::extra_buffers(2) + 4));
+        pool.warm(UploadLane::extra_buffers(2) + 4, ds.as_ref(), mu);
+        let mut sink = 0f32;
+
+        // serial arm: every step stages through the lane, then consumes —
+        // identical copy work, zero pipelining
+        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let mut seq = 0u64;
+        let t_serial = bench(iters, || {
+            for j in 0..n_steps {
+                let mut mb = pool.lease();
+                loader::assemble_into(&mut mb, ds.as_ref(), &indices, mu, 0);
+                mb.j = j;
+                lane.submit(LaneJob { seq, mb, scale: None })?;
+                seq += 1;
+                let staged = lane.recv()?;
+                sink += fake_execute(&staged.mb);
+                pool.give(staged.mb);
+            }
+            Ok(())
+        })?;
+        drop(lane);
+
+        // pipelined arm: consume step j-1 while the lane stages step j
+        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let t_lane = bench(iters, || {
+            let mut pending: Option<StagedBatch> = None;
+            for j in 0..n_steps {
+                let mut mb = pool.lease();
+                loader::assemble_into(&mut mb, ds.as_ref(), &indices, mu, 0);
+                mb.j = j;
+                lane.submit(LaneJob { seq, mb, scale: None })?;
+                seq += 1;
+                if let Some(prev) = pending.take() {
+                    sink += fake_execute(&prev.mb);
+                    pool.give(prev.mb);
+                }
+                pending = Some(lane.recv()?);
+            }
+            if let Some(prev) = pending.take() {
+                sink += fake_execute(&prev.mb);
+                pool.give(prev.mb);
+            }
+            Ok(())
+        })?;
+        drop(lane);
+        std::hint::black_box(sink);
+
+        table.row(&[
+            mu.to_string(),
+            format!("{t_serial:.3}"),
+            format!("{t_lane:.3}"),
+            format!("{:.2}x", if t_lane > 0.0 { t_serial / t_lane } else { 0.0 }),
+        ]);
+    }
+    println!(
+        "STAGING — synchronous vs upload-lane pinned staging, {iters} iters of 24 \
+         micro-batches\n(host-only; the pipelined column overlaps the copy with the \
+         consumer, which is what\nwall_overlap_efficiency measures on the real device \
+         pipeline):\n"
+    );
+    println!("{}", table.render());
+    Ok(())
+}
+
 fn main() -> Result<()> {
+    // host-only arm first: runs (and is useful) even without artifacts
+    lane_staging_comparison(common::scale(10))?;
+    println!();
+
     let mut engine = common::engine()?;
     let iters = common::scale(10);
 

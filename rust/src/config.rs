@@ -159,11 +159,13 @@ pub struct TrainConfig {
     /// grow while host assembly bounds the pipeline, capped at a small
     /// multiple of `N_Smu`; the chosen value lands in `TrainReport`.
     pub prefetch_auto: bool,
-    /// Overlapped upload/execute pipeline (`--overlap on`, the default):
-    /// double-buffer device input slots and stage micro-batch `j+1` while
-    /// step `j` is in flight. The ledger prices the extra staged slot, so
-    /// the planner may derive a smaller `mu` than with `--overlap off` —
-    /// which stays available as the serial byte-identity oracle.
+    /// Overlapped upload/execute pipeline (`--overlap on`/`async`, the
+    /// default): a dedicated upload-lane thread stages micro-batch `j+1`
+    /// in real wall-clock parallel with step `j`'s device execution, and
+    /// the runtime double-buffers the device input slots. The ledger
+    /// prices the extra staged slot, so the planner may derive a smaller
+    /// `mu` than with `--overlap off`/`serial` — which stays available as
+    /// the serial byte-identity oracle.
     pub overlap: bool,
     /// Seed for dataset generation and epoch shuffles.
     pub seed: u64,
@@ -251,8 +253,15 @@ impl TrainConfig {
                     self.prefetch_auto = false;
                 }
             }
+            // `async`/`serial` name the upload-lane modes directly: `async`
+            // is the dedicated staging thread (same as `on`), `serial` the
+            // inline byte-identity oracle (same as `off`)
             "overlap" => {
-                self.overlap = parse_on_off(value).ok_or_else(|| bad(key, value))?
+                self.overlap = match value.to_ascii_lowercase().as_str() {
+                    "async" => true,
+                    "serial" => false,
+                    other => parse_on_off(other).ok_or_else(|| bad(key, value))?,
+                }
             }
             "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
             "lr" => self.lr = Some(value.parse().map_err(|_| bad(key, value))?),
@@ -514,6 +523,13 @@ mod tests {
         assert!(!c.overlap);
         c.set("overlap", "false").unwrap();
         assert!(!c.overlap);
+        // lane-mode spellings: async == on (staging thread), serial == off
+        c.set("overlap", "async").unwrap();
+        assert!(c.overlap);
+        c.set("overlap", "serial").unwrap();
+        assert!(!c.overlap);
+        c.set("overlap", "ASYNC").unwrap();
+        assert!(c.overlap);
         assert!(c.set("overlap", "sideways").is_err());
         // builder spelling
         let b = TrainConfig::builder("m").overlap(false).build();

@@ -257,13 +257,12 @@ impl SetFeasibility {
 /// [`SetFeasibility::CoResidentMbs`] when it forces smaller micro-batches,
 /// [`SetFeasibility::Reject`] when any job cannot be admitted. Pure
 /// capacity arithmetic over manifest metadata, like [`classify`]; the
-/// `mbs jobs --dry-run` table is this function rendered per job.
-pub fn classify_set(
-    requests: &[AdmissionRequest],
-    capacity_bytes: u64,
-    overlap: bool,
-) -> SetFeasibility {
-    let verdicts = tenancy::plan_admission(requests, capacity_bytes, overlap);
+/// `mbs jobs --dry-run` table is this function rendered per job. Each
+/// request carries its own lane mode ([`AdmissionRequest::overlap`]), so a
+/// mixed async/serial set prices exactly what it would hold: the durable
+/// staged input slots of the async jobs sum across tenants.
+pub fn classify_set(requests: &[AdmissionRequest], capacity_bytes: u64) -> SetFeasibility {
+    let verdicts = tenancy::plan_admission(requests, capacity_bytes);
     SetFeasibility::from_outcomes(verdicts.iter().map(|v| &v.outcome))
 }
 
@@ -385,6 +384,7 @@ impl FrontierGrid {
             .uint("size", self.size as u64)
             .uint("eval_len", self.eval_len as u64)
             .str_field("overlap", if self.overlap { "on" } else { "off" })
+            .str_field("lane", if self.overlap { "async" } else { "serial" })
             .field(
                 "capacities_mib",
                 JsonValue::Arr(
@@ -733,6 +733,19 @@ mod tests {
             parsed.get("overlap").and_then(crate::util::json::Json::as_str),
             Some("on")
         );
+        // the report names the upload-lane mode the pricing corresponds to
+        assert_eq!(
+            parsed.get("lane").and_then(crate::util::json::Json::as_str),
+            Some("async")
+        );
+        let serial_grid =
+            FrontierGrid::sweep(&entry, 16, 0, &[budget], &[64], false).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&serial_grid.to_report(true).to_json()).unwrap();
+        assert_eq!(
+            parsed.get("lane").and_then(crate::util::json::Json::as_str),
+            Some("serial")
+        );
     }
 
     #[test]
@@ -747,25 +760,36 @@ mod tests {
             batch: 64,
             eval_len: 0,
             mu: MicroBatchSpec::Auto,
+            overlap: false,
         };
         let pair = [req("a"), req("b")];
         // roomy: two residents + one mu=8 transient -> both keep solo mu
         let roomy = 2 * fp.resident_bytes() + fp.batch_bytes(8);
-        assert_eq!(classify_set(&pair, roomy, false), SetFeasibility::CoResident);
+        assert_eq!(classify_set(&pair, roomy), SetFeasibility::CoResident);
         // one byte less: the shared transient budget forces mu=4
-        let verdict = classify_set(&pair, roomy - 1, false);
+        let verdict = classify_set(&pair, roomy - 1);
         assert_eq!(verdict, SetFeasibility::CoResidentMbs);
         assert!(verdict.is_feasible());
         assert_eq!(verdict.class_name(), "co-resident-mbs");
         // two residents but not even a mu=2 transient: the set is rejected
         let tiny = 2 * fp.resident_bytes() + fp.batch_bytes(2) - 1;
-        assert_eq!(classify_set(&pair, tiny, false), SetFeasibility::Reject);
+        assert_eq!(classify_set(&pair, tiny), SetFeasibility::Reject);
         // a single job at the roomy capacity is trivially co-resident, and
         // agrees with the per-point classifier's feasibility
-        assert_eq!(classify_set(&pair[..1], roomy, false), SetFeasibility::CoResident);
+        assert_eq!(classify_set(&pair[..1], roomy), SetFeasibility::CoResident);
         assert!(classify(&entry, 16, 64, 0, &Ledger::new(roomy), false)
             .unwrap()
             .is_feasible());
+        // async-lane tenants price their durable staged slots on top: the
+        // capacity that is exactly CoResident for serial jobs shrinks an
+        // overlapped pair (the sum of staged slots no longer fits for free)
+        let async_pair = [
+            AdmissionRequest { overlap: true, ..req("a") },
+            AdmissionRequest { overlap: true, ..req("b") },
+        ];
+        assert_eq!(classify_set(&async_pair, roomy), SetFeasibility::CoResidentMbs);
+        let roomier = roomy + 2 * fp.overlap_bytes(8) + fp.overlap_bytes(8);
+        assert_eq!(classify_set(&async_pair, roomier), SetFeasibility::CoResident);
     }
 
     #[test]

@@ -28,6 +28,17 @@
 //!    A rejection releases its reservation for *later* jobs in spec
 //!    order — first-fit, so the outcome is a pure function of the input.
 //!
+//! Jobs running the overlapped upload/execute pipeline add a third
+//! durable term: their staged second input slot stays resident *across
+//! other jobs' turns* (the async upload lane keeps each job's ping-pong
+//! slot warm), so admission prices the **sum** of every overlapped
+//! tenant's staged slot ([`staged_slot_bytes`]) alongside the resident
+//! claims — not the time-shared max the transients enjoy. Because the
+//! in-order pass only sees *earlier* jobs' staged slots, a phase-3
+//! reconciliation re-checks every admitted job against the final staged
+//! sum, shrinking `mu` (never growing it) or rejecting until the set is
+//! stable — still a pure, deterministic function of the request list.
+//!
 //! The planner is pure capacity arithmetic over manifest metadata — no
 //! artifacts, no training — which is what lets `mbs jobs --dry-run` and
 //! the co-residency classifier
@@ -190,6 +201,10 @@ pub struct AdmissionRequest {
     pub eval_len: usize,
     /// Pinned or planner-derived micro-batch size.
     pub mu: MicroBatchSpec,
+    /// Does the job run the overlapped (async upload lane) pipeline? If
+    /// so its staged input slot is a durable cross-tenant charge, summed
+    /// over all overlapped tenants.
+    pub overlap: bool,
 }
 
 impl AdmissionRequest {
@@ -204,6 +219,7 @@ impl AdmissionRequest {
             batch: spec.cfg.batch,
             eval_len: spec.cfg.eval_len,
             mu: spec.cfg.mu,
+            overlap: spec.cfg.overlap,
         }
     }
 }
@@ -222,6 +238,10 @@ pub enum AdmissionOutcome {
         /// Bytes reserved durably for the job's resident state (the
         /// conservative claim admission placed in phase 1).
         resident_claim_bytes: u64,
+        /// Durable cross-tenant staged residency (the warm ping-pong
+        /// input slot an overlapped job holds across other jobs' turns);
+        /// 0 for serial jobs.
+        staged_bytes: u64,
     },
     /// The job cannot run in this set (reason is human-readable).
     Rejected {
@@ -300,14 +320,22 @@ pub fn transient_bytes(
     planner::peak_bytes(fp, mu, batch, eval_len, overlap).saturating_sub(fp.resident_bytes())
 }
 
-/// The deterministic two-phase admission planner (module docs tell the
-/// full story). Outcomes are in request order; the result is a pure
-/// function of `(reqs, capacity_bytes, overlap)`.
-pub fn plan_admission(
-    reqs: &[AdmissionRequest],
-    capacity_bytes: u64,
-    overlap: bool,
-) -> Vec<JobAdmission> {
+/// Durable staged residency an admitted *overlapped* job holds while
+/// parked between its turns: one staged input slot at the largest sample
+/// count any of its phases stages (train steps stage `min(mu, batch)`
+/// samples, eval sweeps `min(mu, eval_len)`). Serial jobs hold none —
+/// their ledger is flat between turns.
+pub fn staged_slot_bytes(fp: &Footprint, mu: usize, batch: usize, eval_len: usize) -> u64 {
+    fp.overlap_bytes(mu.min(batch).max(mu.min(eval_len)))
+}
+
+/// The deterministic admission planner (module docs tell the full
+/// story): resident reservations, then per-job transient planning in
+/// spec order, then the cross-tenant staged-residency reconciliation for
+/// overlapped jobs. Outcomes are in request order; the result is a pure
+/// function of `(reqs, capacity_bytes)` — each request carries its own
+/// `overlap` flag.
+pub fn plan_admission(reqs: &[AdmissionRequest], capacity_bytes: u64) -> Vec<JobAdmission> {
     // phase 1: place every job's resident reservation, in spec order
     let mut claims: Vec<Option<u64>> = Vec::with_capacity(reqs.len());
     let mut early: Vec<Option<String>> = Vec::with_capacity(reqs.len());
@@ -335,7 +363,9 @@ pub fn plan_admission(
     }
 
     // phase 2: per-job micro-batch planning against the shared leftover
-    // (a rejection releases its reservation for later jobs only)
+    // (a rejection releases its reservation for later jobs only). For an
+    // overlapped job `reserved` also grows by its durable staged slot —
+    // later jobs plan against the staged sum, not a time-shared max.
     let mut out = Vec::with_capacity(reqs.len());
     for (i, req) in reqs.iter().enumerate() {
         if let Some(reason) = early[i].take() {
@@ -345,7 +375,7 @@ pub fn plan_admission(
         let claim = claims[i].expect("phase 1 admitted this job");
         // solo feasibility gate: a job the whole device cannot run alone is
         // never admitted to a shared one (admitted-set ⊆ solo-feasible set)
-        let solo = match solo_resolution(req, capacity_bytes, overlap) {
+        let solo = match solo_resolution(req, capacity_bytes) {
             Ok(s) => s,
             Err(e) => {
                 reserved -= claim;
@@ -366,11 +396,11 @@ pub fn plan_admission(
                 req.batch,
                 req.eval_len,
                 transient_budget,
-                overlap,
+                req.overlap,
             ),
             MicroBatchSpec::Fixed(mu) => fixed_resolution(req, mu).and_then(|res| {
                 let need =
-                    transient_bytes(&res.footprint, mu, req.batch, req.eval_len, overlap);
+                    transient_bytes(&res.footprint, mu, req.batch, req.eval_len, req.overlap);
                 if need <= transient_budget {
                     Ok(res)
                 } else {
@@ -385,6 +415,12 @@ pub fn plan_admission(
         };
         match shared {
             Ok(resolution) => {
+                let staged = if req.overlap {
+                    staged_slot_bytes(&resolution.footprint, resolution.mu, req.batch, req.eval_len)
+                } else {
+                    0
+                };
+                reserved += staged;
                 let shrunk = resolution.mu < solo.mu;
                 out.push(JobAdmission {
                     name: req.name.clone(),
@@ -392,6 +428,7 @@ pub fn plan_admission(
                         solo_mu: solo.mu,
                         shrunk,
                         resident_claim_bytes: claim,
+                        staged_bytes: staged,
                         resolution,
                     },
                 });
@@ -407,15 +444,105 @@ pub fn plan_admission(
             }
         }
     }
+
+    // phase 3: cross-tenant staged-residency reconciliation. The in-order
+    // pass charged each job only for *earlier* tenants' staged slots; now
+    // every admitted job must fit its beyond-staged transient next to the
+    // FULL durable sum (claims + all staged slots). Violators shrink mu
+    // against what the other tenants leave — never grow — or are
+    // rejected; each round strictly shrinks a mu or rejects a job, so the
+    // loop terminates.
+    loop {
+        let durable: u64 = out
+            .iter()
+            .map(|v| match &v.outcome {
+                AdmissionOutcome::Admitted { resident_claim_bytes, staged_bytes, .. } => {
+                    resident_claim_bytes + staged_bytes
+                }
+                AdmissionOutcome::Rejected { .. } => 0,
+            })
+            .sum();
+        let mut changed = false;
+        for (i, req) in reqs.iter().enumerate() {
+            let (mu, claim, staged, solo_mu, residual) = match &out[i].outcome {
+                AdmissionOutcome::Admitted {
+                    resolution,
+                    resident_claim_bytes,
+                    staged_bytes,
+                    solo_mu,
+                    ..
+                } => {
+                    let transient = transient_bytes(
+                        &resolution.footprint,
+                        resolution.mu,
+                        req.batch,
+                        req.eval_len,
+                        req.overlap,
+                    );
+                    (
+                        resolution.mu,
+                        *resident_claim_bytes,
+                        *staged_bytes,
+                        *solo_mu,
+                        transient.saturating_sub(*staged_bytes),
+                    )
+                }
+                AdmissionOutcome::Rejected { .. } => continue,
+            };
+            if durable.saturating_add(residual) <= capacity_bytes {
+                continue;
+            }
+            // this job no longer fits next to the set's staged slots
+            let others = durable - claim - staged;
+            let budget = capacity_bytes.saturating_sub(others).saturating_sub(claim);
+            let replanned = match req.mu {
+                MicroBatchSpec::Auto => planner::auto_mu_transient(
+                    &req.entry,
+                    req.size,
+                    req.batch,
+                    req.eval_len,
+                    budget,
+                    req.overlap,
+                )
+                .ok(),
+                // a pinned mu cannot shrink
+                MicroBatchSpec::Fixed(_) => None,
+            };
+            out[i].outcome = match replanned {
+                Some(res) if res.mu < mu => {
+                    let new_staged = if req.overlap {
+                        staged_slot_bytes(&res.footprint, res.mu, req.batch, req.eval_len)
+                    } else {
+                        0
+                    };
+                    AdmissionOutcome::Admitted {
+                        solo_mu,
+                        shrunk: res.mu < solo_mu,
+                        resident_claim_bytes: claim,
+                        staged_bytes: new_staged,
+                        resolution: res,
+                    }
+                }
+                _ => AdmissionOutcome::Rejected {
+                    reason: format!(
+                        "cross-tenant staged residency: mu={mu} transient no longer fits \
+                         next to the set's staged input slots ({} B durable of {} B)",
+                        durable, capacity_bytes
+                    ),
+                },
+            };
+            changed = true;
+            break; // durable sum moved: recompute before checking the rest
+        }
+        if !changed {
+            break;
+        }
+    }
     out
 }
 
 /// The job's full-device resolution: the micro-batch it would get alone.
-fn solo_resolution(
-    req: &AdmissionRequest,
-    capacity_bytes: u64,
-    overlap: bool,
-) -> Result<Resolution> {
+fn solo_resolution(req: &AdmissionRequest, capacity_bytes: u64) -> Result<Resolution> {
     match req.mu {
         MicroBatchSpec::Auto => planner::auto_mu(
             &req.entry,
@@ -423,12 +550,12 @@ fn solo_resolution(
             req.batch,
             req.eval_len,
             capacity_bytes,
-            overlap,
+            req.overlap,
         ),
         MicroBatchSpec::Fixed(mu) => {
             let res = fixed_resolution(req, mu)?;
             let need =
-                planner::peak_bytes(&res.footprint, mu, req.batch, req.eval_len, overlap);
+                planner::peak_bytes(&res.footprint, mu, req.batch, req.eval_len, req.overlap);
             if need <= capacity_bytes {
                 Ok(res)
             } else {
@@ -505,7 +632,12 @@ mod tests {
             batch,
             eval_len: 0,
             mu: MicroBatchSpec::Auto,
+            overlap: false,
         }
+    }
+
+    fn req_overlap(name: &str, entry: &ModelEntry, batch: usize) -> AdmissionRequest {
+        AdmissionRequest { overlap: true, ..req(name, entry, batch) }
     }
 
     #[test]
@@ -531,8 +663,7 @@ mod tests {
             planner::auto_mu(&entry, 16, 64, 0, capacity, false).unwrap().mu,
             8
         );
-        let verdicts =
-            plan_admission(&[req("a", &entry, 64), req("b", &entry, 64)], capacity, false);
+        let verdicts = plan_admission(&[req("a", &entry, 64), req("b", &entry, 64)], capacity);
         for v in &verdicts {
             match &v.outcome {
                 AdmissionOutcome::Admitted { resolution, solo_mu, shrunk, .. } => {
@@ -546,8 +677,7 @@ mod tests {
         }
         // roomier device: both keep their solo mu
         let roomy = 2 * resident + fp.batch_bytes(8);
-        let verdicts =
-            plan_admission(&[req("a", &entry, 64), req("b", &entry, 64)], roomy, false);
+        let verdicts = plan_admission(&[req("a", &entry, 64), req("b", &entry, 64)], roomy);
         for v in &verdicts {
             assert_eq!(v.outcome.mu(), Some(8));
             assert_eq!(v.outcome.label(), "admit");
@@ -567,7 +697,6 @@ mod tests {
         let verdicts = plan_admission(
             &[req("a", &entry, 64), req("b", &entry, 64), req("c", &entry, 64)],
             capacity,
-            false,
         );
         assert!(verdicts[0].outcome.is_admitted());
         assert!(verdicts[1].outcome.is_admitted());
@@ -585,7 +714,6 @@ mod tests {
         let verdicts = plan_admission(
             &[req("a", &entry, 64), req("b", &entry, 64), req("c", &entry, 64)],
             capacity,
-            false,
         );
         match &verdicts[0].outcome {
             AdmissionOutcome::Rejected { reason } => {
@@ -607,7 +735,7 @@ mod tests {
         let capacity = fp.step_bytes(2) - 1;
         // resident fits (phase 1 passes) but no step ever fits solo…
         assert!(planner::auto_mu(&entry, 16, 64, 0, capacity, false).is_err());
-        let verdicts = plan_admission(&[req("solo-oom", &entry, 64)], capacity, false);
+        let verdicts = plan_admission(&[req("solo-oom", &entry, 64)], capacity);
         match &verdicts[0].outcome {
             AdmissionOutcome::Rejected { reason } => {
                 assert!(reason.contains("not solo-feasible"), "{reason}");
@@ -624,7 +752,7 @@ mod tests {
         pinned.mu = MicroBatchSpec::Fixed(4);
         // exactly resident + the mu=4 transient: admitted, not shrunk
         let capacity = fp.resident_bytes() + fp.batch_bytes(4);
-        let verdicts = plan_admission(&[pinned.clone()], capacity, false);
+        let verdicts = plan_admission(&[pinned.clone()], capacity);
         match &verdicts[0].outcome {
             AdmissionOutcome::Admitted { resolution, shrunk, solo_mu, .. } => {
                 assert_eq!(resolution.mu, 4);
@@ -634,13 +762,64 @@ mod tests {
             other => panic!("want pinned admission, got {other:?}"),
         }
         // one byte less: a pinned mu cannot shrink, so the job is rejected
-        let verdicts = plan_admission(&[pinned], capacity - 1, false);
+        let verdicts = plan_admission(&[pinned], capacity - 1);
         match &verdicts[0].outcome {
             AdmissionOutcome::Rejected { reason } => {
                 assert!(reason.contains("mu=4"), "{reason}");
             }
             other => panic!("want pinned rejection, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn overlapped_tenants_staged_slots_price_as_a_sum() {
+        // two overlapped jobs: each holds its staged input slot durably
+        // across the other's turns, so capacity must cover BOTH slots plus
+        // one executing transient — a sum, not a time-shared max
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        let res = fp.resident_bytes();
+        let exact = 2 * res + 2 * fp.overlap_bytes(8) + fp.batch_bytes(8);
+        let verdicts =
+            plan_admission(&[req_overlap("a", &entry, 64), req_overlap("b", &entry, 64)], exact);
+        for v in &verdicts {
+            assert_eq!(v.outcome.mu(), Some(8), "{}: {:?}", v.name, v.outcome);
+        }
+        // one byte less: the later tenant's slot no longer fits at mu=8
+        let verdicts = plan_admission(
+            &[req_overlap("a", &entry, 64), req_overlap("b", &entry, 64)],
+            exact - 1,
+        );
+        assert_eq!(verdicts[0].outcome.mu(), Some(8));
+        assert_eq!(verdicts[1].outcome.mu(), Some(4));
+        // …while serial jobs time-share that transient and both keep mu=8
+        let verdicts =
+            plan_admission(&[req("a", &entry, 64), req("b", &entry, 64)], exact - 1);
+        for v in &verdicts {
+            assert_eq!(v.outcome.mu(), Some(8), "serial {}: {:?}", v.name, v.outcome);
+        }
+    }
+
+    #[test]
+    fn reconciliation_shrinks_earlier_tenant_for_later_staged_slot() {
+        // the in-order pass charges each job only for EARLIER tenants'
+        // staged slots; here the later (small) job's slot is what pushes
+        // the first job over — phase 3 must walk the first job down
+        let entry = entry_with_mus(&[2, 4, 8], 1000, 0, 100);
+        let fp = Footprint::from_manifest(&entry, &entry.variants[0]);
+        let res = fp.resident_bytes();
+        let capacity =
+            2 * res + fp.batch_bytes(8) + fp.overlap_bytes(8) + fp.overlap_bytes(2) - 1;
+        let verdicts = plan_admission(
+            &[req_overlap("big", &entry, 64), req_overlap("small", &entry, 2)],
+            capacity,
+        );
+        assert_eq!(verdicts[0].outcome.mu(), Some(4), "{:?}", verdicts[0].outcome);
+        assert_eq!(verdicts[1].outcome.mu(), Some(2));
+        // without the small tenant, the big job keeps mu=8 at the same
+        // capacity — its shrink is purely the cross-tenant staged charge
+        let solo = plan_admission(&[req_overlap("big", &entry, 64)], capacity);
+        assert_eq!(solo[0].outcome.mu(), Some(8));
     }
 
     #[test]
@@ -724,6 +903,7 @@ mod tests {
                         batch: (r.below(512) + 1) as usize,
                         eval_len: r.below(64) as usize,
                         mu: MicroBatchSpec::Auto,
+                        overlap: r.below(2) == 1,
                     }
                 })
                 .collect()
@@ -737,8 +917,8 @@ mod tests {
                 0xD37,
                 |r| (rand_reqs(r), r.below(1 << 22)),
                 |(reqs, capacity)| {
-                    let a = plan_admission(reqs, *capacity, false);
-                    let b = plan_admission(reqs, *capacity, false);
+                    let a = plan_admission(reqs, *capacity);
+                    let b = plan_admission(reqs, *capacity);
                     ensure(a.len() == b.len(), "length diverged")?;
                     for (x, y) in a.iter().zip(&b) {
                         ensure(x.name == y.name, "order diverged")?;
@@ -755,54 +935,81 @@ mod tests {
 
         #[test]
         fn admitted_set_is_solo_feasible_and_fits_at_every_instant() {
-            // the two set-level guarantees the interleaved executor leans
-            // on: (1) every admitted job could also run alone on the full
+            // the set-level guarantees the interleaved executor leans on:
+            // (1) every admitted job could also run alone on the full
             // device, at a mu no smaller than the shared one; (2) the sum
-            // of admitted reservations plus ANY single admitted job's
-            // transient stays within capacity — which is the worst
-            // instantaneous residency one-micro-step-at-a-time can reach
+            // of admitted reservations AND every overlapped tenant's
+            // staged input slot, plus ANY single admitted job's remaining
+            // (beyond-staged) transient, stays within capacity — the
+            // worst instantaneous residency one-micro-step-at-a-time with
+            // warm cross-tenant slots can reach
             forall(
-                "admitted ⊆ solo-feasible, peak ≤ capacity",
+                "admitted ⊆ solo-feasible, durable sum + peak ≤ capacity",
                 150,
                 0xD38,
                 |r| (rand_reqs(r), r.below(1 << 22)),
                 |(reqs, capacity)| {
-                    let verdicts = plan_admission(reqs, *capacity, false);
-                    let claims: u64 = verdicts
+                    let verdicts = plan_admission(reqs, *capacity);
+                    let durable: u64 = verdicts
                         .iter()
                         .filter_map(|v| match &v.outcome {
-                            AdmissionOutcome::Admitted { resident_claim_bytes, .. } => {
-                                Some(*resident_claim_bytes)
-                            }
+                            AdmissionOutcome::Admitted {
+                                resident_claim_bytes,
+                                staged_bytes,
+                                ..
+                            } => Some(resident_claim_bytes + staged_bytes),
                             _ => None,
                         })
                         .sum();
-                    ensure(claims <= *capacity, "admitted reservations exceed capacity")?;
+                    ensure(durable <= *capacity, "durable reservations exceed capacity")?;
                     for (req, v) in reqs.iter().zip(&verdicts) {
-                        let AdmissionOutcome::Admitted { resolution, solo_mu, .. } = &v.outcome
+                        let AdmissionOutcome::Admitted {
+                            resolution, solo_mu, staged_bytes, ..
+                        } = &v.outcome
                         else {
                             continue;
                         };
-                        let solo =
-                            planner::auto_mu(&req.entry, 16, req.batch, req.eval_len, *capacity, false)
-                                .map_err(|e| format!("admitted but not solo-feasible: {e}"))?;
+                        let solo = planner::auto_mu(
+                            &req.entry,
+                            16,
+                            req.batch,
+                            req.eval_len,
+                            *capacity,
+                            req.overlap,
+                        )
+                        .map_err(|e| format!("admitted but not solo-feasible: {e}"))?;
                         ensure(solo.mu == *solo_mu, "solo mu mismatch")?;
                         ensure(
                             resolution.mu <= solo.mu,
                             format!("shared mu {} > solo mu {}", resolution.mu, solo.mu),
                         )?;
-                        let transient = transient_bytes(
+                        let staged_want = if req.overlap {
+                            staged_slot_bytes(
+                                &resolution.footprint,
+                                resolution.mu,
+                                req.batch,
+                                req.eval_len,
+                            )
+                        } else {
+                            0
+                        };
+                        ensure(
+                            *staged_bytes == staged_want,
+                            format!("staged charge {} != {}", staged_bytes, staged_want),
+                        )?;
+                        let residual = transient_bytes(
                             &resolution.footprint,
                             resolution.mu,
                             req.batch,
                             req.eval_len,
-                            false,
-                        );
+                            req.overlap,
+                        )
+                        .saturating_sub(*staged_bytes);
                         ensure(
-                            claims + transient <= *capacity,
+                            durable + residual <= *capacity,
                             format!(
                                 "instantaneous peak {} exceeds capacity {capacity}",
-                                claims + transient
+                                durable + residual
                             ),
                         )?;
                     }

@@ -23,13 +23,25 @@
 //! ping-pong slot, its staging buffer returned to the pool at
 //! upload-completion) before the previously staged one executes, so the
 //! upload of step `j+1` rides in the in-flight window of step `j` and is
-//! attributed to `StageTimers::upload_hidden`. The ledger carries the
-//! second staged input slot as its own allocation
-//! ([`Footprint::overlap_bytes`]), so mid-pipeline residency is asserted
-//! exactly. `--overlap off` keeps the serial loop as the byte-identity
-//! oracle — both orders run the identical device-op sequence, so losses
-//! and metrics match bit for bit.
+//! attributed to `StageTimers::upload_hidden`. The host half of that
+//! staging runs on a dedicated [`UploadLane`] thread: each micro-batch is
+//! submitted to the lane immediately before the previous step's execute,
+//! so the lane's pinned-staging copy rides *inside* the execute window in
+//! real wall-clock time — the lane's `Instant` windows are intersected
+//! with the runtime's execute windows and attributed to
+//! `StageTimers::upload_concurrent` (the numerator of
+//! `wall_overlap_efficiency`). The ledger carries the second staged input
+//! slot as its own allocation ([`Footprint::overlap_bytes`]), so
+//! mid-pipeline residency is asserted exactly. `--overlap off` keeps the
+//! serial loop as the byte-identity oracle — both orders run the
+//! identical device-op sequence, so losses and metrics match bit for bit.
+//!
+//! Solo [`train`] is the one-tenant special case of the interleaved
+//! multi-job executor: it builds a single [`JobExec`] over a one-slot
+//! arena and drives it to completion, so solo/interleaved bit-identity is
+//! structural (one state machine) rather than an oracle-checked accident.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -39,7 +51,7 @@ use crate::error::{MbsError, Result};
 use crate::memory::ledger::AllocId;
 use crate::memory::{Arena, Footprint, Ledger, MemoryModel};
 use crate::metrics::{EpochStats, MetricKind, StageTimers};
-use crate::runtime::{Engine, ModelRuntime};
+use crate::runtime::{Engine, LaneJob, ModelRuntime, UploadLane};
 
 use super::accumulator::{Accumulation, NormalizationMode};
 use super::planner::{self, ExecutionPlan, Planner, Resolution};
@@ -130,6 +142,12 @@ pub fn datasets_for(
         other => return Err(MbsError::Config(format!("unknown task '{other}'"))),
     })
 }
+
+/// How many staging copies the upload lane may hold in flight. The
+/// pipeline keeps at most one micro-batch in the lane between turns (the
+/// one submitted right before each execute), so 2 leaves slack without
+/// letting the lane run ahead of the ledger's two-input-slot budget.
+const LANE_DEPTH: usize = 2;
 
 /// What one pass through the data does with each micro-batch.
 #[derive(Clone, Copy)]
@@ -240,6 +258,56 @@ fn step_in_flight(
     Ok(())
 }
 
+/// Hand one stream item to the upload-lane thread. Called immediately
+/// before the previous step's execute, so the lane's pinned-staging copy
+/// runs while the device works — that concurrency is what
+/// `StageTimers::upload_concurrent` measures. The plan rides a host-side
+/// FIFO (the lane only sees host buffers); [`place_staged`] re-pairs it
+/// with the staged copy by position.
+fn submit_to_lane(
+    lane: &mut UploadLane,
+    queue: &mut VecDeque<Arc<ExecutionPlan>>,
+    seq: &mut u64,
+    pass: Pass<'_>,
+    item: StreamItem,
+) -> Result<()> {
+    let StreamItem { plan, mb, .. } = item;
+    let scale = match pass {
+        Pass::Train { .. } => Some(plan.scales[mb.j]),
+        Pass::Eval => None,
+    };
+    lane.submit(LaneJob { seq: *seq, mb, scale })?;
+    *seq += 1;
+    queue.push_back(plan);
+    Ok(())
+}
+
+/// Receive one completed staging from the lane and place it into the idle
+/// device slot: credit the lane thread's wall-clock window against the
+/// runtime's execute windows (`upload_concurrent`), charge the ledger for
+/// the input-slot residency, upload, and recycle the staging copy. Any
+/// staging error the lane hit surfaces here — at the step that would have
+/// consumed the slot.
+fn place_staged(
+    rt: &mut ModelRuntime,
+    ledger: &mut Ledger,
+    fp: &Footprint,
+    pool: &BufPool,
+    lane: &mut UploadLane,
+    queue: &mut VecDeque<Arc<ExecutionPlan>>,
+) -> Result<InFlight> {
+    let staged = lane.recv()?;
+    let plan = queue.pop_front().expect("one queued plan per lane submission");
+    rt.credit_lane_window(staged.started, staged.finished);
+    let inputs = ledger.alloc("in-flight inputs", fp.overlap_bytes(plan.device_samples()))?;
+    rt.stage_inputs(&staged.mb, staged.scale)?;
+    let current = InFlight { plan, j: staged.mb.j, actual: staged.mb.actual, inputs };
+    // upload-completion: the staging copy recycles now — the pipeline
+    // holds device slots, not host buffers
+    pool.give(staged.mb);
+    Ok(current)
+}
+
 /// THE epoch loop. Streams plan-tagged micro-batches and executes them,
 /// charging the ledger for every step so planned residency is asserted
 /// against capacity at the moment it would be live on the device. Staging
@@ -280,32 +348,44 @@ fn run_epoch(
         pool.clone(),
     );
     if pipe.overlap {
+        // the lane pipeline: stage j (copied by the lane during the
+        // previous execute) into the idle slot, hand j+1 to the lane, then
+        // execute j-1 — the lane copies j+1 *during* that execute. The
+        // device-op order (stage, then execute the older step) is identical
+        // to the pre-lane pipeline, so every loss/metric bit is preserved;
+        // only the host half of staging moved onto the lane thread.
+        let mut lane = UploadLane::spawn(pool.clone(), LANE_DEPTH);
+        let mut queue: VecDeque<Arc<ExecutionPlan>> = VecDeque::new();
+        let mut seq = 0u64;
         let mut pending: Option<InFlight> = None;
         for item in stream {
             assemble += item.assemble;
-            let StreamItem { plan, mb, .. } = item;
-            // stage j+1 into the idle slot while step j is in flight: its
-            // input-slot residency is live from this upload until its own
-            // step frees it
-            let inputs =
-                ledger.alloc("in-flight inputs", fp.overlap_bytes(plan.device_samples()))?;
-            match pass {
-                Pass::Train { .. } => rt.stage_inputs(&mb, Some(plan.scales[mb.j]))?,
-                Pass::Eval => rt.stage_inputs(&mb, None)?,
-            }
-            let staged = InFlight { plan, j: mb.j, actual: mb.actual, inputs };
-            // upload-completion: the host staging buffer recycles now — the
-            // pipeline holds device slots, not host buffers
-            pool.give(mb);
+            let placed = if queue.is_empty() {
+                None
+            } else {
+                Some(place_staged(rt, ledger, fp, pool, &mut lane, &mut queue)?)
+            };
+            submit_to_lane(&mut lane, &mut queue, &mut seq, pass, item)?;
             if let Some(current) = pending.take() {
                 step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
             }
-            pending = Some(staged);
+            if let Some(next) = placed {
+                pending = Some(next);
+            }
         }
-        // drain the last staged micro-batch
+        // drain: the lane still holds the final submission, the device
+        // slot the one before it
+        while !queue.is_empty() {
+            let placed = place_staged(rt, ledger, fp, pool, &mut lane, &mut queue)?;
+            if let Some(current) = pending.take() {
+                step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
+            }
+            pending = Some(placed);
+        }
         if let Some(current) = pending.take() {
             step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
         }
+        // lane drops here: joins its thread, returning any leases first
     } else {
         for item in stream {
             assemble += item.assemble;
@@ -459,11 +539,16 @@ fn tune_prefetch(prefetch: usize, stages: &StageTimers, micro_steps: u64, cap: u
 /// Train according to `cfg`, returning the full report. Returns
 /// [`MbsError::Oom`] when the configuration does not fit the simulated
 /// device — the paper tables' "Failed" cells.
+///
+/// Solo training is the one-tenant special case of the interleaved
+/// multi-job executor: admission + planning here, then a single
+/// [`JobExec`] over a one-slot [`Arena`] driven to completion. Solo and
+/// interleaved runs therefore share every line of execution code, which
+/// is what makes their per-job reports bit-identical by construction.
 pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     cfg.validate()?;
     let entry = engine.manifest().model(&cfg.model)?.clone();
     let size = cfg.size.unwrap_or(entry.default_size);
-    let kind = MetricKind::parse(&entry.metric_semantics)?;
 
     // ------------------------------------------------------------------
     // memory admission + planning (paper section 1 + Alg. 1): the ledger's
@@ -474,129 +559,22 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
         Some(c) => c,
         None => planner::default_capacity(&entry, size, &cfg.mu)?,
     };
-    let mut ledger = Ledger::new(capacity);
-    let resolution = planner::resolve(&entry, size, cfg, &ledger)?;
-    let mem = MemoryModel::new(capacity, resolution.footprint.clone());
-    ledger.alloc("resident state", resolution.footprint.resident_bytes())?;
-    let planner = Planner::new(resolution.mu, !cfg.use_mbs, cfg.norm_mode);
+    let resolution = planner::resolve(&entry, size, cfg, &Ledger::new(capacity))?;
 
-    // ------------------------------------------------------------------
-    // runtime + data
-    // ------------------------------------------------------------------
-    let mut rt: ModelRuntime = engine.load_model(&cfg.model, size, resolution.mu)?;
-    rt.set_overlap(cfg.overlap);
-    let (train_ds, eval_ds) = datasets_for(&entry.task, size, cfg)?;
-
-    let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
-    let total_updates = (batches_per_epoch * cfg.epochs) as u64;
-    let sched = UpdateScheduler::new(&entry.optimizer, cfg, total_updates);
-
-    // `--prefetch auto` may grow the window after the first epoch; size
-    // (and warm) the pool for the tuning cap up front so the hot path
-    // stays allocation-free even at the largest depth the tuner can pick
-    let n_smu_full = if cfg.use_mbs { cfg.batch.div_ceil(resolution.mu) } else { 1 };
-    let max_prefetch = if cfg.prefetch_auto {
-        cfg.prefetch.max(prefetch_cap(n_smu_full))
-    } else {
-        cfg.prefetch
-    };
-    let mut prefetch = cfg.prefetch;
-
-    // one staging-buffer pool for the whole run: warmed once, every epoch
-    // (train and eval alike) circulates the same host allocations
-    let pool = Arc::new(BufPool::for_prefetch(max_prefetch));
-    pool.warm(BufPool::buffers_for(max_prefetch), train_ds.as_ref(), resolution.mu);
-
-    let mut train_epochs = Vec::with_capacity(cfg.epochs);
-    let mut eval_epochs = Vec::with_capacity(cfg.epochs);
-    let mut stage_totals = StageTimers::default();
-    let run_start = Instant::now();
-
-    for epoch in 0..cfg.epochs {
-        let t0 = Instant::now();
-        let epoch_plan = EpochPlan::new(
-            train_ds.len().min(cfg.dataset_len),
-            cfg.batch,
-            cfg.seed,
-            epoch as u64,
-        );
-        let pipe =
-            PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
-        let (acc, stages) = run_epoch(
-            &mut rt,
-            &mut ledger,
-            &resolution.footprint,
-            &pipe,
-            &pool,
-            &train_ds,
-            epoch_plan,
-            &planner,
-            Pass::Train { sched: &sched },
-        )?;
-        let wall = t0.elapsed();
-        stage_totals.merge(&stages);
-        if cfg.prefetch_auto {
-            let micro_steps = acc.micro_steps as u64;
-            prefetch = tune_prefetch(prefetch, &stages, micro_steps, prefetch_cap(n_smu_full));
-        }
-        train_epochs
-            .push(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, wall, stages));
-
-        if !cfg.skip_eval {
-            let pipe =
-                PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
-            eval_epochs.push(eval_epoch(
-                &mut rt,
-                &mut ledger,
-                &resolution.footprint,
-                &pipe,
-                &pool,
-                kind,
-                &eval_ds,
-                epoch,
-            )?);
-        }
-    }
-    let total_wall = run_start.elapsed();
-    let final_eval = if cfg.skip_eval {
-        let pipe = PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
-        eval_epoch(
-            &mut rt,
-            &mut ledger,
-            &resolution.footprint,
-            &pipe,
-            &pool,
-            kind,
-            &eval_ds,
-            cfg.epochs.saturating_sub(1),
-        )?
-    } else {
-        eval_epochs.last().cloned().ok_or_else(|| MbsError::Config("zero epochs".into()))?
-    };
-
-    let epoch_walls: Vec<f64> = train_epochs.iter().map(|e| e.wall.as_secs_f64()).collect();
-    let epoch_wall_mean = mean_epoch_wall(&epoch_walls);
-
-    Ok(TrainReport {
-        model: cfg.model.clone(),
-        use_mbs: cfg.use_mbs,
-        batch: cfg.batch,
-        mu: resolution.mu,
-        train_epochs,
-        eval_epochs,
-        final_eval,
-        total_wall,
-        epoch_wall_mean,
-        native_max_batch: mem.native_max_batch(),
-        capacity_bytes: capacity,
-        output_mode: rt.output_mode_name().to_string(),
-        updates: rt.updates,
-        stages: stage_totals,
-        pool: pool.stats(),
-        overlap: cfg.overlap,
-        prefetch,
-        ledger_peak_bytes: ledger.peak(),
-    })
+    // the solo claim is the exact resident footprint (admission's
+    // cross-variant conservative claim is a multi-tenant concern), so the
+    // solo ledger peak matches the historical "resident state" accounting
+    let arena = Arena::new(capacity);
+    let spec = JobSpec { name: cfg.model.clone(), task: None, cfg: cfg.clone() };
+    let mut exec = JobExec::new(
+        engine,
+        &spec,
+        &resolution,
+        resolution.footprint.resident_bytes(),
+        &arena,
+    )?;
+    while exec.step()? {}
+    exec.into_report(capacity)
 }
 
 // ---------------------------------------------------------------------
@@ -646,6 +624,19 @@ struct JobExec {
     n_smu_full: usize,
     phase: JobPhase,
     stream: Option<EpochStream>,
+    /// Dedicated host-staging thread (overlap mode only). One lane per
+    /// job, alive for the job's whole run — it stays warm across other
+    /// jobs' turns, exactly like the staged device slot below.
+    lane: Option<UploadLane>,
+    /// Plans for micro-batches submitted to the lane, FIFO (re-paired
+    /// with staged copies by position).
+    lane_queue: VecDeque<Arc<ExecutionPlan>>,
+    lane_seq: u64,
+    /// The staged-but-unexecuted micro-batch: the warm ping-pong slot.
+    /// Its "in-flight inputs" ledger charge persists across other jobs'
+    /// turns — the cross-tenant staged residency that admission prices as
+    /// a durable sum, not a transient max.
+    pending: Option<InFlight>,
     acc: Accumulation,
     assemble: Duration,
     rt_before: StageTimers,
@@ -675,25 +666,28 @@ impl JobExec {
         let mut ledger = arena.tenant(&spec.name);
         ledger.alloc("resident reservation", claim_bytes)?;
         let mut rt = engine.load_model(&cfg.model, size, res.mu)?;
-        // jobs pipeline serially: a staged second input slot would stay
-        // resident across OTHER jobs' turns, and pricing that cross-tenant
-        // overlap is a ROADMAP follow-up (arithmetic is unaffected — PR 4's
-        // overlap identity oracle)
-        rt.set_overlap(false);
+        rt.set_overlap(cfg.overlap);
         rt.set_label(&spec.name);
         let (train_ds, eval_ds) = datasets_for(&entry.task, size, &cfg)?;
         let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
         let total_updates = (batches_per_epoch * cfg.epochs) as u64;
         let sched = UpdateScheduler::new(&entry.optimizer, &cfg, total_updates);
-        let n_smu_full = cfg.batch.div_ceil(res.mu);
+        let n_smu_full = if cfg.use_mbs { cfg.batch.div_ceil(res.mu) } else { 1 };
         let max_prefetch = if cfg.prefetch_auto {
             cfg.prefetch.max(prefetch_cap(n_smu_full))
         } else {
             cfg.prefetch
         };
-        let pool = Arc::new(BufPool::for_prefetch(max_prefetch));
-        pool.warm(BufPool::buffers_for(max_prefetch), train_ds.as_ref(), res.mu);
-        let planner = Planner::new(res.mu, false, cfg.norm_mode);
+        // overlap adds the lane's working set on top of the streamer's
+        // (staging copies in flight + originals in transit): size and warm
+        // the pool for both so the hot path stays allocation-free
+        let lane_extra = if cfg.overlap { UploadLane::extra_buffers(LANE_DEPTH) } else { 0 };
+        let retained = BufPool::buffers_for(max_prefetch) + lane_extra;
+        let pool = Arc::new(BufPool::bounded(retained));
+        pool.warm(retained, train_ds.as_ref(), res.mu);
+        let lane =
+            if cfg.overlap { Some(UploadLane::spawn(pool.clone(), LANE_DEPTH)) } else { None };
+        let planner = Planner::new(res.mu, !cfg.use_mbs, cfg.norm_mode);
         let now = Instant::now();
         Ok(JobExec {
             name: spec.name.clone(),
@@ -710,6 +704,10 @@ impl JobExec {
             n_smu_full,
             phase: JobPhase::Train { epoch: 0 },
             stream: None,
+            lane,
+            lane_queue: VecDeque::new(),
+            lane_seq: 0,
+            pending: None,
             acc: Accumulation::default(),
             assemble: Duration::ZERO,
             rt_before: StageTimers::default(),
@@ -844,8 +842,12 @@ impl JobExec {
 
     /// Advance the job by exactly one micro-step — the round-robin turn
     /// unit. Phase boundaries (stream exhausted, next stream opened) are
-    /// crossed within the turn so every turn that returns true executed
-    /// one device step. Returns false once every phase is complete.
+    /// crossed within the turn, and under overlap the pipeline warm-up
+    /// (first items submitted to the lane before anything can execute)
+    /// also completes within the turn — so every turn that returns true
+    /// executed at most one device step, and the job's staged slot + lane
+    /// submission stay warm across other jobs' turns. Returns false once
+    /// every phase is complete.
     fn step(&mut self) -> Result<bool> {
         loop {
             if self.phase == JobPhase::Done {
@@ -854,25 +856,115 @@ impl JobExec {
             if self.stream.is_none() && !self.begin_phase()? {
                 continue; // phase completed immediately (empty eval set)
             }
-            match self.stream.as_mut().expect("phase begun").next() {
+            let item = self.stream.as_mut().expect("phase begun").next();
+            let pass = match self.phase {
+                JobPhase::Train { .. } => Pass::Train { sched: &self.sched },
+                _ => Pass::Eval,
+            };
+            if !self.cfg.overlap {
+                match item {
+                    Some(item) => {
+                        self.assemble += item.assemble;
+                        exec_serial_item(
+                            &mut self.rt,
+                            &mut self.ledger,
+                            &self.fp,
+                            pass,
+                            &mut self.acc,
+                            &self.pool,
+                            item,
+                        )?;
+                        return Ok(true);
+                    }
+                    None => self.finish_phase(),
+                }
+                continue;
+            }
+            // overlap: the same stage-then-execute pipeline as the solo
+            // epoch loop, unrolled to one device step per turn
+            match item {
                 Some(item) => {
                     self.assemble += item.assemble;
-                    let pass = match self.phase {
-                        JobPhase::Train { .. } => Pass::Train { sched: &self.sched },
-                        _ => Pass::Eval,
+                    let placed = if self.lane_queue.is_empty() {
+                        None
+                    } else {
+                        Some(place_staged(
+                            &mut self.rt,
+                            &mut self.ledger,
+                            &self.fp,
+                            &self.pool,
+                            self.lane.as_mut().expect("overlap jobs own a lane"),
+                            &mut self.lane_queue,
+                        )?)
                     };
-                    exec_serial_item(
-                        &mut self.rt,
-                        &mut self.ledger,
-                        &self.fp,
+                    submit_to_lane(
+                        self.lane.as_mut().expect("overlap jobs own a lane"),
+                        &mut self.lane_queue,
+                        &mut self.lane_seq,
                         pass,
-                        &mut self.acc,
-                        &self.pool,
                         item,
                     )?;
-                    return Ok(true);
+                    let executed = if let Some(current) = self.pending.take() {
+                        step_in_flight(
+                            &mut self.rt,
+                            &mut self.ledger,
+                            &self.fp,
+                            pass,
+                            &mut self.acc,
+                            current,
+                        )?;
+                        true
+                    } else {
+                        false
+                    };
+                    if let Some(next) = placed {
+                        self.pending = Some(next);
+                    }
+                    if executed {
+                        return Ok(true);
+                    }
+                    // warm-up: nothing could execute yet — keep feeding
+                    // the pipeline within this turn
                 }
-                None => self.finish_phase(),
+                None => {
+                    // stream dry: drain the lane, then the staged slot
+                    if !self.lane_queue.is_empty() {
+                        let placed = place_staged(
+                            &mut self.rt,
+                            &mut self.ledger,
+                            &self.fp,
+                            &self.pool,
+                            self.lane.as_mut().expect("overlap jobs own a lane"),
+                            &mut self.lane_queue,
+                        )?;
+                        if let Some(current) = self.pending.take() {
+                            step_in_flight(
+                                &mut self.rt,
+                                &mut self.ledger,
+                                &self.fp,
+                                pass,
+                                &mut self.acc,
+                                current,
+                            )?;
+                            self.pending = Some(placed);
+                            return Ok(true);
+                        }
+                        self.pending = Some(placed);
+                        continue;
+                    }
+                    if let Some(current) = self.pending.take() {
+                        step_in_flight(
+                            &mut self.rt,
+                            &mut self.ledger,
+                            &self.fp,
+                            pass,
+                            &mut self.acc,
+                            current,
+                        )?;
+                        return Ok(true);
+                    }
+                    self.finish_phase();
+                }
             }
         }
     }
@@ -888,7 +980,7 @@ impl JobExec {
         let mem = MemoryModel::new(capacity_bytes, self.fp.clone());
         Ok(TrainReport {
             model: self.cfg.model.clone(),
-            use_mbs: true,
+            use_mbs: self.cfg.use_mbs,
             batch: self.cfg.batch,
             mu: self.mu,
             train_epochs: self.train_epochs,
@@ -902,7 +994,7 @@ impl JobExec {
             updates: self.rt.updates,
             stages: self.stage_totals,
             pool: self.pool.stats(),
-            overlap: false,
+            overlap: self.cfg.overlap,
             prefetch: self.prefetch,
             ledger_peak_bytes: self.ledger.peak(),
         })
@@ -989,7 +1081,7 @@ pub fn train_jobs(
         let entry = engine.manifest().model(&spec.cfg.model)?.clone();
         requests.push(AdmissionRequest::from_spec(spec, entry));
     }
-    let verdicts = tenancy::plan_admission(&requests, capacity_bytes, false);
+    let verdicts = tenancy::plan_admission(&requests, capacity_bytes);
 
     // materialize the admitted jobs as tenants of one arena
     let arena = Arena::new(capacity_bytes);

@@ -64,12 +64,13 @@ USAGE: mbs <subcommand> [flags]
 
   train    --model <key> [--batch N] [--mu N|auto] [--epochs N] [--capacity-mib N]
            [--mbs true|false] [--norm paper|exact|none]
-           [--streaming double-buffered|sync] [--overlap on|off]
+           [--streaming double-buffered|sync] [--overlap on|off|async|serial]
            [--prefetch N|auto] [--size N] [--seed N]
            [--dataset-len N] [--eval-len N] [--lr F] [--lr-decay F]
            [--config file.cfg] [--artifacts dir] [--csv out.csv]
-           --overlap on (default) double-buffers device input uploads so
-           micro-batch j+1 stages while j executes; off is the serial
+           --overlap on (default; alias: async) stages micro-batch j+1 on a
+           dedicated upload-lane thread while j executes, so upload time is
+           hidden in real wall clock; off (alias: serial) is the inline
            byte-identity oracle. --prefetch auto tunes the window per
            epoch from the stage timers.
   sweep    --model <key> --batches 16,32,64 [same flags as train]
@@ -86,12 +87,16 @@ USAGE: mbs <subcommand> [flags]
            artifacts
   jobs     --spec jobs.json [--capacity-mib N] [--dry-run=true]
            [--out BENCH_jobs.json] [--artifacts dir]
+           [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            run a multi-tenant job set against ONE shared capacity: the
            admission planner admits / shrinks-mu / rejects each job in
-           spec order, then a round-robin executor interleaves one
-           micro-step per job per turn (per-job reports bit-identical to
-           solo runs). --dry-run prints the admission table only — jobs
-           naming a \"task\" use synthetic models, no artifacts needed
+           spec order (pricing every async-lane job's durable staged input
+           slot — the SUM across tenants), then a round-robin executor
+           interleaves one micro-step per job per turn (per-job reports
+           bit-identical to solo runs). --dry-run prints the admission
+           table only — jobs naming a \"task\" use synthetic models, no
+           artifacts needed. --compare trend-gates aggregate_items_per_sec
+           and wall_overlap_efficiency against a previous BENCH_jobs.json
   bench    --model <key> [same flags as train] [--out BENCH_streaming.json]
            [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            full streaming hot-path benchmark (items/sec, per-stage means,
@@ -171,6 +176,10 @@ fn cmd_train(args: &Args) -> Result<(), MbsError> {
                 println!(
                     "[mbs] overlap: {:.0}% of upload time hidden behind execution",
                     100.0 * report.stages.overlap_efficiency()
+                );
+                println!(
+                    "[mbs] lane: {:.0}% of upload wall time measured inside execute windows",
+                    100.0 * report.stages.wall_overlap_efficiency()
                 );
             }
             if cfg.prefetch_auto {
@@ -374,11 +383,18 @@ fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
     Ok(())
 }
 
-/// Parse the shared `--overlap on|off` flag (default on).
+/// Parse the shared `--overlap on|off` flag (default on). The lane-mode
+/// spellings are accepted everywhere the switch is: `async` (dedicated
+/// upload-lane staging thread) == `on`, `serial` (inline oracle) == `off`.
 fn parse_overlap_flag(args: &Args) -> Result<bool, MbsError> {
     let raw = args.get_or("overlap", "on");
-    mbs::config::parse_on_off(raw)
-        .ok_or_else(|| MbsError::Config(format!("--overlap: expected on|off, got {raw:?}")))
+    match raw.to_ascii_lowercase().as_str() {
+        "async" => Ok(true),
+        "serial" => Ok(false),
+        other => mbs::config::parse_on_off(other).ok_or_else(|| {
+            MbsError::Config(format!("--overlap: expected on|off|async|serial, got {raw:?}"))
+        }),
+    }
 }
 
 /// Summarize a timed boundary run for the frontier report.
@@ -497,17 +513,26 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
         report.capacity_bytes as f64 / MIB as f64
     );
 
+    // set-level wall-clock overlap: fold every admitted job's stage timers
+    // so the trend key reflects the whole interleaved run, not one tenant
+    let mut set_stages = mbs::metrics::StageTimers::default();
+    for job in report.jobs.iter().filter_map(|j| j.report.as_ref()) {
+        set_stages.merge(&job.stages);
+    }
     let mut rep = BenchReport::new("jobs", "train");
     rep.uint("capacity_mib", capacity_mib)
         .str_field("set_class", jobs_set_class(&report))
         .uint("admitted", report.admitted() as u64)
         .num("aggregate_items_per_sec", report.aggregate_items_per_sec(), 3)
+        // trend-tracked: fraction of lane upload wall time measured (by
+        // thread timestamps) inside some job's device-execute window
+        .num("wall_overlap_efficiency", set_stages.wall_overlap_efficiency(), 4)
         .num("arena_peak_mib", report.arena_peak_bytes as f64 / MIB as f64, 3)
         .num("total_wall_s", report.total_wall.as_secs_f64(), 6)
         .field("jobs", jobs_train_value(&report));
     rep.write(&out)?;
     println!("[mbs] wrote {out}");
-    Ok(())
+    trend_compare(args, &out)
 }
 
 /// The set-level verdict folded from the per-job admissions.
@@ -542,7 +567,7 @@ fn jobs_dry_run(
         };
         requests.push(AdmissionRequest::from_spec(spec, entry));
     }
-    let verdicts = tenancy::plan_admission(&requests, capacity_bytes, false);
+    let verdicts = tenancy::plan_admission(&requests, capacity_bytes);
     let set_class =
         frontier::SetFeasibility::from_outcomes(verdicts.iter().map(|v| &v.outcome));
 
@@ -608,9 +633,13 @@ fn jobs_admission_value(requests: &[AdmissionRequest], verdicts: &[JobAdmission]
                 j.push("model", JsonValue::Str(req.entry.name.clone()));
                 j.push("batch", JsonValue::UInt(req.batch as u64));
                 j.push("admission", JsonValue::Str(v.outcome.label().to_string()));
+                j.push(
+                    "lane",
+                    JsonValue::Str(if req.overlap { "async" } else { "serial" }.into()),
+                );
                 match &v.outcome {
                     AdmissionOutcome::Admitted {
-                        resolution, solo_mu, resident_claim_bytes, ..
+                        resolution, solo_mu, resident_claim_bytes, staged_bytes, ..
                     } => {
                         j.push("mu", JsonValue::UInt(resolution.mu as u64));
                         j.push("solo_mu", JsonValue::UInt(*solo_mu as u64));
@@ -621,6 +650,10 @@ fn jobs_admission_value(requests: &[AdmissionRequest], verdicts: &[JobAdmission]
                         j.push(
                             "resident_claim_mib",
                             JsonValue::fixed(*resident_claim_bytes as f64 / MIB as f64, 3),
+                        );
+                        j.push(
+                            "staged_slot_mib",
+                            JsonValue::fixed(*staged_bytes as f64 / MIB as f64, 3),
                         );
                     }
                     AdmissionOutcome::Rejected { reason } => {
@@ -660,6 +693,10 @@ fn jobs_train_value(report: &JobsReport) -> JsonValue {
                         j.push("micro_steps", JsonValue::UInt(t.micro_steps));
                         j.push("updates", JsonValue::UInt(t.updates));
                         j.push("best_metric", JsonValue::fixed(r.best_metric(), 6));
+                        j.push(
+                            "wall_overlap_efficiency",
+                            JsonValue::fixed(r.stages.wall_overlap_efficiency(), 4),
+                        );
                         j.push(
                             "ledger_peak_mib",
                             JsonValue::fixed(r.ledger_peak_bytes as f64 / MIB as f64, 3),
@@ -707,53 +744,61 @@ fn cmd_bench(args: &Args) -> Result<(), MbsError> {
     report.write(&out)?;
     println!("[mbs] wrote {out}");
 
-    if let Some(prev) = args.get("compare") {
-        let threshold: f64 =
-            args.get_parse_or("compare-threshold", 0.2).map_err(MbsError::Config)?;
-        match bench_report::compare_files(prev, &out, threshold)? {
-            None => {
-                println!(
-                    "[mbs] trend: no comparable previous report at {prev} (first run or \
-                     different bench/mode); skipping"
-                );
-                // a gate that silently skips is no gate: strict mode fails
-                // when the requested comparison could not be performed
+    trend_compare(args, &out)
+}
+
+/// The shared `--compare prev.json` trend gate (used by `bench` and
+/// `jobs`): diff the fresh report at `out` against a previous artifact,
+/// flag throughput keys that dropped beyond `--compare-threshold`, and —
+/// with `--compare-strict=true` — fail the command on any regression (or
+/// on a comparison that could not be performed at all).
+fn trend_compare(args: &Args, out: &str) -> Result<(), MbsError> {
+    let Some(prev) = args.get("compare") else { return Ok(()) };
+    let threshold: f64 =
+        args.get_parse_or("compare-threshold", 0.2).map_err(MbsError::Config)?;
+    match bench_report::compare_files(prev, out, threshold)? {
+        None => {
+            println!(
+                "[mbs] trend: no comparable previous report at {prev} (first run or \
+                 different bench/mode); skipping"
+            );
+            // a gate that silently skips is no gate: strict mode fails
+            // when the requested comparison could not be performed
+            if args.get_bool("compare-strict") {
+                return Err(MbsError::Config(format!(
+                    "--compare-strict: no comparable previous report at {prev} \
+                     (missing file or bench/mode mismatch)"
+                )));
+            }
+        }
+        Some(outcome) => {
+            let mut table =
+                Table::new(&["metric", "previous", "current", "delta", "status"]);
+            for row in &outcome.rows {
+                table.row(&[
+                    row.path.clone(),
+                    format!("{:.3}", row.previous),
+                    format!("{:.3}", row.current),
+                    format!("{:+.1}%", 100.0 * row.delta),
+                    if row.regressed { "REGRESSED".into() } else { "ok".into() },
+                ]);
+            }
+            println!("[mbs] trend vs {prev} (threshold {:.0}%):", threshold * 100.0);
+            println!("{}", table.render());
+            for path in &outcome.missing_in_previous {
+                println!("[mbs] trend: {path} is new (absent from previous report)");
+            }
+            let regressions = outcome.regressions();
+            if regressions > 0 {
+                println!("[mbs] trend: {regressions} metric(s) regressed beyond the threshold");
                 if args.get_bool("compare-strict") {
                     return Err(MbsError::Config(format!(
-                        "--compare-strict: no comparable previous report at {prev} \
-                         (missing file or bench/mode mismatch)"
+                        "{regressions} bench metric(s) regressed more than {:.0}% vs {prev}",
+                        threshold * 100.0
                     )));
                 }
-            }
-            Some(outcome) => {
-                let mut table =
-                    Table::new(&["metric", "previous", "current", "delta", "status"]);
-                for row in &outcome.rows {
-                    table.row(&[
-                        row.path.clone(),
-                        format!("{:.3}", row.previous),
-                        format!("{:.3}", row.current),
-                        format!("{:+.1}%", 100.0 * row.delta),
-                        if row.regressed { "REGRESSED".into() } else { "ok".into() },
-                    ]);
-                }
-                println!("[mbs] trend vs {prev} (threshold {:.0}%):", threshold * 100.0);
-                println!("{}", table.render());
-                for path in &outcome.missing_in_previous {
-                    println!("[mbs] trend: {path} is new (absent from previous report)");
-                }
-                let regressions = outcome.regressions();
-                if regressions > 0 {
-                    println!("[mbs] trend: {regressions} metric(s) regressed beyond the threshold");
-                    if args.get_bool("compare-strict") {
-                        return Err(MbsError::Config(format!(
-                            "{regressions} bench metric(s) regressed more than {:.0}% vs {prev}",
-                            threshold * 100.0
-                        )));
-                    }
-                } else {
-                    println!("[mbs] trend: no regressions beyond the threshold");
-                }
+            } else {
+                println!("[mbs] trend: no regressions beyond the threshold");
             }
         }
     }
@@ -784,6 +829,7 @@ fn bench_full(args: &Args) -> Result<BenchReport, MbsError> {
         .uint("epochs", report.train_epochs.len() as u64)
         .str_field("streaming", cfg.streaming.name())
         .str_field("overlap", if report.overlap { "on" } else { "off" })
+        .str_field("lane", if report.overlap { "async" } else { "serial" })
         .uint("prefetch", report.prefetch as u64)
         .uint("updates", report.updates)
         .uint("micro_steps", micro_steps)
@@ -792,6 +838,10 @@ fn bench_full(args: &Args) -> Result<BenchReport, MbsError> {
         // the overlap-efficiency key: fraction of upload wall time the
         // pipeline hid behind execution (trend-tracked by --compare)
         .num("overlap_efficiency", report.stages.overlap_efficiency(), 4)
+        // wall-clock overlap: the share of lane upload time whose thread
+        // timestamps genuinely intersect a device-execute window — the
+        // key `--compare` gates the async lane's real win on
+        .num("wall_overlap_efficiency", report.stages.wall_overlap_efficiency(), 4)
         .field(
             "stage_means_ms",
             bench_report::stage_means_value(&report.stages, micro_steps, report.updates),

@@ -203,6 +203,9 @@ pub fn pool_value(p: &PoolStats) -> JsonValue {
 /// rest per micro-step). `upload_hidden` is the mean *hidden* portion of
 /// `upload` — what the overlapped pipeline buries behind execution — so
 /// the visible upload cost per micro-step is `upload - upload_hidden`.
+/// `upload_concurrent` is the mean *wall-clock* portion of `upload` that
+/// the dedicated upload lane genuinely ran alongside an execute window
+/// (thread timestamps, not pipeline structure).
 pub fn stage_means_value(stages: &StageTimers, micro_steps: u64, updates: u64) -> JsonValue {
     let per = |d: std::time::Duration, n: u64| {
         if n == 0 {
@@ -215,6 +218,10 @@ pub fn stage_means_value(stages: &StageTimers, micro_steps: u64, updates: u64) -
     v.push("assemble", JsonValue::fixed(per(stages.assemble, micro_steps), 6));
     v.push("upload", JsonValue::fixed(per(stages.upload, micro_steps), 6));
     v.push("upload_hidden", JsonValue::fixed(per(stages.upload_hidden, micro_steps), 6));
+    v.push(
+        "upload_concurrent",
+        JsonValue::fixed(per(stages.upload_concurrent, micro_steps), 6),
+    );
     v.push("execute", JsonValue::fixed(per(stages.execute, micro_steps), 6));
     v.push("download", JsonValue::fixed(per(stages.download, micro_steps), 6));
     v.push("apply", JsonValue::fixed(per(stages.apply, updates), 6));
@@ -259,13 +266,19 @@ impl CompareOutcome {
 /// latency keys are too machine-noise-sensitive for a hard threshold (see
 /// ARCHITECTURE.md "Trend checks"). `overlap_efficiency` — the fraction of
 /// upload time the overlapped pipeline hides — is a ratio of co-measured
-/// times on the same machine, so it *is* stable enough to gate. The
-/// `items_per_sec` suffix rule deliberately covers `BENCH_jobs.json`'s
+/// times on the same machine, so it *is* stable enough to gate, and
+/// `wall_overlap_efficiency` — the upload-lane thread's *wall-clock*
+/// overlap with execution — is the key that finally gates a genuine
+/// concurrency win rather than pipeline structure. The `items_per_sec`
+/// suffix rule deliberately covers `BENCH_jobs.json`'s
 /// `aggregate_items_per_sec` (and every per-job `items_per_sec` leaf), so
 /// `mbs bench --compare` gates the multi-tenant aggregate throughput the
 /// same way it gates the solo pipeline's.
 pub fn is_trend_key(key: &str) -> bool {
-    key.ends_with("items_per_sec") || key == "pooled_speedup" || key == "overlap_efficiency"
+    key.ends_with("items_per_sec")
+        || key == "pooled_speedup"
+        || key == "overlap_efficiency"
+        || key == "wall_overlap_efficiency"
 }
 
 fn collect_numeric(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
@@ -386,6 +399,7 @@ mod tests {
                 execute: std::time::Duration::from_millis(10),
                 upload: std::time::Duration::from_millis(10),
                 upload_hidden: std::time::Duration::from_millis(5),
+                upload_concurrent: std::time::Duration::from_millis(2),
                 ..Default::default()
             },
             5,
@@ -395,6 +409,10 @@ mod tests {
         assert!((parsed.get("execute").and_then(Json::as_f64).unwrap() - 2.0).abs() < 1e-6);
         assert!(
             (parsed.get("upload_hidden").and_then(Json::as_f64).unwrap() - 1.0).abs() < 1e-6
+        );
+        assert!(
+            (parsed.get("upload_concurrent").and_then(Json::as_f64).unwrap() - 0.4).abs()
+                < 1e-6
         );
         assert_eq!(parsed.get("apply").and_then(Json::as_f64), Some(0.0)); // zero updates: no div
     }
@@ -461,12 +479,14 @@ mod tests {
         assert!(is_trend_key("items_per_sec"));
         assert!(is_trend_key("pooled_speedup"));
         assert!(is_trend_key("overlap_efficiency"));
+        assert!(is_trend_key("wall_overlap_efficiency"));
         // the multi-tenant aggregate (and per-job throughput leaves) ride
         // the same suffix rule — BENCH_jobs.json is gated like the rest
         assert!(is_trend_key("aggregate_items_per_sec"));
         assert!(!is_trend_key("assemble_mean_ms"));
         assert!(!is_trend_key("epoch_wall_mean_s"));
         assert!(!is_trend_key("upload_hidden"));
+        assert!(!is_trend_key("upload_concurrent"));
         assert!(!is_trend_key("arena_peak_mib"));
     }
 

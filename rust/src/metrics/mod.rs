@@ -88,6 +88,15 @@ fn safe_div(a: f64, b: f64) -> f64 {
 /// structure rather than a wall-clock saving). Serial (`--overlap off`)
 /// runs keep it at zero.
 ///
+/// `upload_concurrent` is the *wall-clock* counterpart: the portion of the
+/// upload-lane thread's staging windows that genuinely overlapped (by
+/// `Instant` interval intersection) an execute window on the engine
+/// thread. Unlike `upload_hidden` it cannot be earned by structure alone —
+/// two threads must actually have been busy at the same time — so it is
+/// the honest numerator of [`StageTimers::wall_overlap_efficiency`].
+/// Serial runs keep it at zero; like `upload_hidden` it is excluded from
+/// [`StageTimers::total`].
+///
 /// ```
 /// use mbs::metrics::StageTimers;
 /// use std::time::Duration;
@@ -107,6 +116,10 @@ pub struct StageTimers {
     /// Portion of `upload` issued while another micro-batch was in flight
     /// (hidden behind execution by the overlapped pipeline).
     pub upload_hidden: Duration,
+    /// Wall-clock portion of the upload-lane thread's staging windows that
+    /// overlapped an execute window on the engine thread (thread-timestamp
+    /// interval intersection, not pipeline structure).
+    pub upload_concurrent: Duration,
     /// Device execution of the accum/eval executables.
     pub execute: Duration,
     /// Device→host download of step scalars (and any tupled-state round trip).
@@ -121,6 +134,7 @@ impl StageTimers {
         self.assemble += other.assemble;
         self.upload += other.upload;
         self.upload_hidden += other.upload_hidden;
+        self.upload_concurrent += other.upload_concurrent;
         self.execute += other.execute;
         self.download += other.download;
         self.apply += other.apply;
@@ -133,6 +147,7 @@ impl StageTimers {
             assemble: self.assemble.saturating_sub(earlier.assemble),
             upload: self.upload.saturating_sub(earlier.upload),
             upload_hidden: self.upload_hidden.saturating_sub(earlier.upload_hidden),
+            upload_concurrent: self.upload_concurrent.saturating_sub(earlier.upload_concurrent),
             execute: self.execute.saturating_sub(earlier.execute),
             download: self.download.saturating_sub(earlier.download),
             apply: self.apply.saturating_sub(earlier.apply),
@@ -142,8 +157,8 @@ impl StageTimers {
     /// Total instrumented time across all stages. Under double-buffered
     /// streaming this exceeds wall time (assembly overlaps execution) —
     /// that surplus is exactly the overlap the pipeline buys.
-    /// `upload_hidden` is excluded: it is a subset of `upload`, not an
-    /// additional stage.
+    /// `upload_hidden` and `upload_concurrent` are excluded: both are
+    /// subsets of `upload`, not additional stages.
     pub fn total(&self) -> Duration {
         self.assemble + self.upload + self.execute + self.download + self.apply
     }
@@ -160,6 +175,21 @@ impl StageTimers {
             0.0
         } else {
             (self.upload_hidden.as_secs_f64() / self.upload.as_secs_f64()).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Wall-clock overlap efficiency in [0, 1]: the fraction of upload time
+    /// the dedicated upload-lane thread spent genuinely concurrent with an
+    /// execute window, from `Instant` interval intersections. Where
+    /// [`StageTimers::overlap_efficiency`] measures pipeline *structure*
+    /// (and saturates even on a synchronous client), this one is zero
+    /// unless two threads were really busy at the same instant — it is the
+    /// key `mbs bench --compare` gates for a genuine wall-clock win.
+    pub fn wall_overlap_efficiency(&self) -> f64 {
+        if self.upload.is_zero() {
+            0.0
+        } else {
+            (self.upload_concurrent.as_secs_f64() / self.upload.as_secs_f64()).clamp(0.0, 1.0)
         }
     }
 }
@@ -311,17 +341,25 @@ mod tests {
             assemble: Duration::from_millis(10),
             upload: Duration::from_millis(20),
             upload_hidden: Duration::from_millis(15),
+            upload_concurrent: Duration::from_millis(12),
             execute: Duration::from_millis(30),
             download: Duration::from_millis(40),
             apply: Duration::from_millis(50),
         };
         let snapshot = a;
-        a.merge(&StageTimers { execute: Duration::from_millis(5), ..Default::default() });
+        a.merge(&StageTimers {
+            execute: Duration::from_millis(5),
+            upload_concurrent: Duration::from_millis(2),
+            ..Default::default()
+        });
         assert_eq!(a.execute, Duration::from_millis(35));
+        assert_eq!(a.upload_concurrent, Duration::from_millis(14));
         let delta = a.minus(&snapshot);
         assert_eq!(delta.execute, Duration::from_millis(5));
+        assert_eq!(delta.upload_concurrent, Duration::from_millis(2));
         assert_eq!(delta.assemble, Duration::ZERO);
-        // upload_hidden is a subset of upload, never a sixth stage
+        // upload_hidden / upload_concurrent are subsets of upload, never
+        // extra stages
         assert_eq!(a.total(), Duration::from_millis(155));
         // saturating: a stale (larger) snapshot clamps to zero, no panic
         assert_eq!(snapshot.minus(&a).execute, Duration::ZERO);
@@ -344,5 +382,27 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(odd.overlap_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn wall_overlap_efficiency_is_concurrent_fraction() {
+        let t = StageTimers {
+            upload: Duration::from_millis(20),
+            upload_hidden: Duration::from_millis(18),
+            upload_concurrent: Duration::from_millis(5),
+            ..Default::default()
+        };
+        // structural vs wall-clock: the two numerators are independent
+        assert!((t.overlap_efficiency() - 0.9).abs() < 1e-12);
+        assert!((t.wall_overlap_efficiency() - 0.25).abs() < 1e-12);
+        // nothing uploaded: defined as zero, not NaN
+        assert_eq!(StageTimers::default().wall_overlap_efficiency(), 0.0);
+        // clamped even if counters drift past the whole (defensive)
+        let odd = StageTimers {
+            upload: Duration::from_millis(1),
+            upload_concurrent: Duration::from_millis(2),
+            ..Default::default()
+        };
+        assert_eq!(odd.wall_overlap_efficiency(), 1.0);
     }
 }

@@ -14,8 +14,10 @@
 pub mod buffers;
 pub mod checkpoint;
 pub mod model;
+pub mod upload_lane;
 
 pub use model::{ModelRuntime, StepOutput};
+pub use upload_lane::{LaneJob, StagedBatch, UploadLane};
 
 use std::collections::HashMap;
 

@@ -119,6 +119,10 @@ pub struct ModelRuntime {
     /// Cumulative per-stage wall time (upload / execute / download /
     /// apply); the epoch executor snapshots deltas per epoch.
     timers: StageTimers,
+    /// Wall-clock window of the most recent device execution (accum /
+    /// eval / apply). The trainer intersects upload-lane staging windows
+    /// with it to attribute `StageTimers::upload_concurrent`.
+    last_exec_window: Option<(Instant, Instant)>,
     /// The two ping-ponged device input slots.
     input_slots: [InputSlot; 2],
     /// Index of the next slot to execute (FIFO head of the staged queue).
@@ -202,6 +206,7 @@ impl ModelRuntime {
             ones_mask: None,
             scale_cache: BTreeMap::new(),
             timers: StageTimers::default(),
+            last_exec_window: None,
             input_slots: [InputSlot::default(), InputSlot::default()],
             slot_head: 0,
             slot_staged: 0,
@@ -411,6 +416,7 @@ impl ModelRuntime {
         };
         self.timers.execute += execute_elapsed;
         self.timers.download += t_download.elapsed();
+        self.last_exec_window = Some((t_execute, t_execute + execute_elapsed));
         self.pending_micro_steps += 1;
         self.release_head_slot();
         Ok(out)
@@ -455,6 +461,7 @@ impl ModelRuntime {
         };
         self.timers.execute += execute_elapsed;
         self.timers.download += t_download.elapsed();
+        self.last_exec_window = Some((t_execute, t_execute + execute_elapsed));
         self.release_head_slot();
         Ok(out)
     }
@@ -578,7 +585,9 @@ impl ModelRuntime {
         }
         self.pending_micro_steps = 0;
         self.updates += 1;
-        self.timers.apply += t_apply.elapsed();
+        let apply_elapsed = t_apply.elapsed();
+        self.timers.apply += apply_elapsed;
+        self.last_exec_window = Some((t_apply, t_apply + apply_elapsed));
         Ok(())
     }
 
@@ -586,6 +595,24 @@ impl ModelRuntime {
     /// across two snapshots to attribute an epoch's time).
     pub fn timers(&self) -> StageTimers {
         self.timers
+    }
+
+    /// Absorb an upload-lane staging window `[started, finished)` measured
+    /// on the lane thread: its full duration joins `StageTimers::upload`
+    /// (pinned staging is part of the upload path), and its intersection
+    /// with the most recent device-execution window — real wall-clock
+    /// concurrency, not pipeline structure — joins
+    /// `StageTimers::upload_concurrent`. Pairing against only the latest
+    /// execute window slightly undercounts a window that spanned several
+    /// executions; the metric stays a strict lower bound on the true
+    /// overlap, which is the honest direction to err in.
+    pub fn credit_lane_window(&mut self, started: Instant, finished: Instant) {
+        self.timers.upload += finished.saturating_duration_since(started);
+        if let Some((exec_start, exec_end)) = self.last_exec_window {
+            let lo = started.max(exec_start);
+            let hi = finished.min(exec_end);
+            self.timers.upload_concurrent += hi.saturating_duration_since(lo);
+        }
     }
 
     /// Download current parameter leaves (for checkpoints / tests).

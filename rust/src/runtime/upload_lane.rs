@@ -1,0 +1,416 @@
+//! Dedicated upload-lane thread: the host-side half of `upload` runs off
+//! the engine thread, genuinely concurrent with device execution.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so the PJRT placement call
+//! itself must stay on the engine thread (runtime/mod.rs design points).
+//! What *can* leave that thread — and is what a CUDA-style async copy
+//! engine spends its time on — is pinned staging: copying the assembled
+//! micro-batch out of the streamer's pageable lease into a dedicated
+//! upload-ready buffer, plus the shape/mask validation the placement would
+//! otherwise do. [`UploadLane`] owns exactly that work on a worker thread
+//! ("mbs-upload-lane"), fed by a bounded channel of leased
+//! [`MicroBatchHost`] buffers and handing back [`StagedBatch`] completion
+//! tokens. Two real effects follow:
+//!
+//!  * the streamer's lease returns to the [`BufPool`] the moment the copy
+//!    finishes, so host assembly is never paced by device execution, and
+//!  * each completion carries the `Instant` window the lane was busy in —
+//!    the trainer intersects it with the engine's execute windows to
+//!    measure `upload_concurrent`, the *wall-clock* (not structural)
+//!    overlap that `wall_overlap_efficiency` reports.
+//!
+//! Safety contract (mirrors coordinator/streamer.rs): dropping the lane
+//! disconnects the job channel first, the worker drains what is queued —
+//! returning every leased buffer to the pool — and is then joined, so an
+//! early epoch abort can neither hang nor leak a lease. A staging error
+//! recycles the offending lease on the worker and reaches the consumer as
+//! the `Err` of the completion that would have carried the slot.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use crate::data::{Buf, BufPool, MicroBatchHost};
+use crate::error::{MbsError, Result};
+
+/// One staging request: an assembled micro-batch leased from the shared
+/// pool, plus the loss-normalization scale that travels with it.
+#[derive(Debug)]
+pub struct LaneJob {
+    /// Submission sequence number, echoed in the completion (the lane is
+    /// FIFO; this is the cross-check and the error-message anchor).
+    pub seq: u64,
+    /// The assembled micro-batch (pool lease; the lane returns it).
+    pub mb: MicroBatchHost,
+    /// Loss-normalization scale for this micro-batch (`None` for eval).
+    pub scale: Option<f32>,
+}
+
+/// A staged micro-batch handed back by the lane, ready for the engine
+/// thread's PJRT placement. The consumer gives `mb` back to the pool once
+/// the upload is done — it is a pool lease like any other.
+#[derive(Debug)]
+pub struct StagedBatch {
+    /// The submission's sequence number.
+    pub seq: u64,
+    /// The lane's upload-ready staging copy (byte-identical to the
+    /// submitted micro-batch).
+    pub mb: MicroBatchHost,
+    /// The scale submitted with the job, passed through untouched.
+    pub scale: Option<f32>,
+    /// When the lane thread began staging this micro-batch.
+    pub started: Instant,
+    /// When the lane thread finished staging this micro-batch.
+    pub finished: Instant,
+}
+
+/// What the worker sends back per job: the staged slot, or the staging
+/// error that consumed it (the lease is already back in the pool).
+#[derive(Debug)]
+struct Completion {
+    seq: u64,
+    result: std::result::Result<StagedBatch, String>,
+}
+
+/// Handle to the upload-lane worker thread. Submissions and completions
+/// are FIFO over bounded channels of `depth`; dropping the handle shuts
+/// the worker down cleanly (see module docs).
+#[derive(Debug)]
+pub struct UploadLane {
+    /// `Some` until dropped; taken (disconnecting the worker) before the
+    /// join in `Drop`.
+    jobs: Option<mpsc::SyncSender<LaneJob>>,
+    /// Completion channel; taken on drop so a worker parked on a full
+    /// `send` errors out instead of deadlocking the join.
+    done: Option<mpsc::Receiver<Completion>>,
+    /// The worker thread, joined on drop.
+    handle: Option<thread::JoinHandle<()>>,
+    /// The shared staging pool (to recycle a job the worker never saw).
+    pool: Arc<BufPool>,
+}
+
+impl UploadLane {
+    /// Extra [`BufPool`] buffers one lane adds to a pipeline's working set
+    /// beyond the streamer's own: up to `depth` originals parked in the
+    /// job channel plus one being copied, and up to `depth` staging copies
+    /// parked in the completion channel plus one held by the consumer.
+    /// Warm (and retain) this many more to keep the hot path allocation-free.
+    pub const fn extra_buffers(depth: usize) -> usize {
+        2 * depth + 2
+    }
+
+    /// Spawn the lane worker over channels bounded at `depth` (clamped to
+    /// at least 1). Staging copies are leased from — and every buffer is
+    /// eventually returned to — `pool`.
+    pub fn spawn(pool: Arc<BufPool>, depth: usize) -> UploadLane {
+        let depth = depth.max(1);
+        let (jobs_tx, jobs_rx) = mpsc::sync_channel::<LaneJob>(depth);
+        let (done_tx, done_rx) = mpsc::sync_channel::<Completion>(depth);
+        let worker_pool = pool.clone();
+        let handle = thread::Builder::new()
+            .name("mbs-upload-lane".into())
+            .spawn(move || {
+                // once the consumer is gone there is no one to stage for:
+                // keep draining, but only to return leases to the pool
+                let mut draining = false;
+                while let Ok(LaneJob { seq, mb, scale }) = jobs_rx.recv() {
+                    if draining {
+                        worker_pool.give(mb);
+                        continue;
+                    }
+                    let started = Instant::now();
+                    let result = match validate(&mb) {
+                        Err(msg) => {
+                            worker_pool.give(mb); // an error never leaks the lease
+                            Err(msg)
+                        }
+                        Ok(()) => {
+                            let mut staged = worker_pool.lease();
+                            stage_copy(&mut staged, &mb);
+                            // the original re-enters circulation immediately:
+                            // assembly is no longer paced by the device
+                            worker_pool.give(mb);
+                            Ok(staged)
+                        }
+                    };
+                    let finished = Instant::now();
+                    let completion = Completion {
+                        seq,
+                        result: result
+                            .map(|mb| StagedBatch { seq, mb, scale, started, finished }),
+                    };
+                    if let Err(mpsc::SendError(c)) = done_tx.send(completion) {
+                        // consumer dropped early: recycle the staged copy
+                        // and fall into drain-only mode
+                        if let Ok(staged) = c.result {
+                            worker_pool.give(staged.mb);
+                        }
+                        draining = true;
+                    }
+                }
+            })
+            .expect("spawn upload-lane thread");
+        UploadLane { jobs: Some(jobs_tx), done: Some(done_rx), handle: Some(handle), pool }
+    }
+
+    /// Queue a micro-batch for staging. Blocks once `depth` jobs are
+    /// already queued (the channel *is* the staging-memory backpressure).
+    /// If the worker has died the lease is returned to the pool and the
+    /// error is reported here rather than at the next `recv`.
+    pub fn submit(&mut self, job: LaneJob) -> Result<()> {
+        let jobs = self.jobs.as_ref().ok_or_else(|| {
+            MbsError::Runtime("upload lane already shut down".to_string())
+        })?;
+        if let Err(mpsc::SendError(job)) = jobs.send(job) {
+            self.pool.give(job.mb);
+            return Err(MbsError::Runtime(
+                "upload lane worker disconnected before accepting a job".to_string(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Receive the next completed staging in submission order, blocking
+    /// until the worker finishes it. A staging failure surfaces here, on
+    /// the step that would have consumed the slot.
+    pub fn recv(&mut self) -> Result<StagedBatch> {
+        let done = self.done.as_ref().ok_or_else(|| {
+            MbsError::Runtime("upload lane already shut down".to_string())
+        })?;
+        match done.recv() {
+            Ok(Completion { result: Ok(staged), .. }) => Ok(staged),
+            Ok(Completion { seq, result: Err(msg) }) => Err(MbsError::Runtime(format!(
+                "upload lane: staging micro-batch {seq} failed: {msg}"
+            ))),
+            Err(_) => Err(MbsError::Runtime(
+                "upload lane worker exited before completing a staged micro-batch"
+                    .to_string(),
+            )),
+        }
+    }
+}
+
+impl Drop for UploadLane {
+    fn drop(&mut self) {
+        // Drop the job sender FIRST: the worker's recv loop drains whatever
+        // is queued (returning every lease) and exits; drop the completion
+        // receiver so a worker parked on a full `send` errors out instead
+        // of deadlocking; only then join.
+        drop(self.jobs.take());
+        drop(self.done.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The consistency checks device placement would otherwise fail on,
+/// surfaced as a staging error instead of a mid-step panic.
+fn validate(mb: &MicroBatchHost) -> std::result::Result<(), String> {
+    if mb.actual > mb.mask.len() {
+        return Err(format!(
+            "micro-batch claims {} live samples but carries a {}-sample mask",
+            mb.actual,
+            mb.mask.len()
+        ));
+    }
+    for (k, &m) in mb.mask.iter().enumerate() {
+        let want = if k < mb.actual { 1.0 } else { 0.0 };
+        if m != want {
+            return Err(format!(
+                "mask[{k}] = {m} disagrees with {} live samples",
+                mb.actual
+            ));
+        }
+    }
+    if !mb.mask.is_empty() {
+        if mb.x.len() % mb.mask.len() != 0 {
+            return Err(format!(
+                "x carries {} elements, not a multiple of the {}-sample mask",
+                mb.x.len(),
+                mb.mask.len()
+            ));
+        }
+        if mb.y.len() % mb.mask.len() != 0 {
+            return Err(format!(
+                "y carries {} elements, not a multiple of the {}-sample mask",
+                mb.y.len(),
+                mb.mask.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Byte-identical pinned-staging copy, reusing the destination lease's
+/// capacity (allocation-free once the pool is warm).
+fn stage_copy(dst: &mut MicroBatchHost, src: &MicroBatchHost) {
+    copy_buf(&mut dst.x, &src.x);
+    copy_buf(&mut dst.y, &src.y);
+    dst.mask.clear();
+    dst.mask.extend_from_slice(&src.mask);
+    dst.actual = src.actual;
+    dst.j = src.j;
+}
+
+fn copy_buf(dst: &mut Buf, src: &Buf) {
+    match (&mut *dst, src) {
+        (Buf::F32(d), Buf::F32(s)) => {
+            d.clear();
+            d.extend_from_slice(s);
+        }
+        (Buf::I32(d), Buf::I32(s)) => {
+            d.clear();
+            d.extend_from_slice(s);
+        }
+        // dtype changed between leases (pool buffers are shape-agnostic)
+        (d, s) => *d = s.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{loader, Dataset, SynthFlowers};
+
+    fn assembled(ds: &dyn Dataset, n: usize, mu: usize) -> Vec<MicroBatchHost> {
+        let indices: Vec<usize> = (0..n).collect();
+        let splits = n.div_ceil(mu);
+        (0..splits).map(|j| loader::assemble(ds, &indices, mu, j)).collect()
+    }
+
+    #[test]
+    fn staged_copies_are_byte_identical_and_fifo() {
+        let ds = SynthFlowers::new(8, 10, 40, 1);
+        let pool = Arc::new(BufPool::bounded(16));
+        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let originals = assembled(&ds, 20, 8); // 8 + 8 + 4 (ragged tail)
+        for (seq, mb) in originals.iter().enumerate() {
+            lane.submit(LaneJob { seq: seq as u64, mb: mb.clone(), scale: Some(0.25) })
+                .unwrap();
+        }
+        for (seq, original) in originals.iter().enumerate() {
+            let staged = lane.recv().expect("staging succeeds");
+            assert_eq!(staged.seq, seq as u64, "lane must be FIFO");
+            assert_eq!(staged.scale, Some(0.25));
+            assert_eq!(staged.mb.x, original.x);
+            assert_eq!(staged.mb.y, original.y);
+            assert_eq!(staged.mb.mask, original.mask);
+            assert_eq!(staged.mb.actual, original.actual);
+            assert_eq!(staged.mb.j, original.j);
+            assert!(staged.finished >= staged.started);
+            pool.give(staged.mb);
+        }
+        drop(lane);
+        // every lease the lane took is back: submitted originals + staged
+        // copies all went through `give`
+        let s = pool.stats();
+        assert_eq!(s.returns, 2 * originals.len() as u64);
+        assert_eq!(s.leases, originals.len() as u64, "one staging lease per job");
+    }
+
+    #[test]
+    fn shutdown_on_drop_drains_queued_jobs_without_leaking() {
+        let ds = SynthFlowers::new(8, 10, 64, 1);
+        let pool = Arc::new(BufPool::bounded(32));
+        let mut lane = UploadLane::spawn(pool.clone(), 1);
+        // submit more than the channel depth so some jobs are still queued
+        // (and the worker may be parked on a full completion send)
+        let originals = assembled(&ds, 64, 8);
+        let n = originals.len() as u64;
+        for (seq, mb) in originals.into_iter().enumerate() {
+            lane.submit(LaneJob { seq: seq as u64, mb, scale: None }).unwrap();
+        }
+        drop(lane); // must join, not hang, with completions never consumed
+        let s = pool.stats();
+        // zero-leak invariant: everything the lane leased or was handed
+        // came back through the return channel
+        assert_eq!(s.returns, n + s.leases, "leaked a lease across shutdown");
+    }
+
+    #[test]
+    fn staging_error_propagates_and_recycles_the_lease() {
+        let pool = Arc::new(BufPool::bounded(4));
+        let mut lane = UploadLane::spawn(pool.clone(), 1);
+        // a corrupt micro-batch: claims more live samples than its mask
+        let corrupt = MicroBatchHost {
+            x: Buf::F32(vec![0.0; 8]),
+            y: Buf::I32(vec![0; 2]),
+            mask: vec![1.0, 1.0],
+            actual: 5,
+            j: 0,
+        };
+        lane.submit(LaneJob { seq: 7, mb: corrupt, scale: None }).unwrap();
+        let err = lane.recv().expect_err("corrupt batch must fail staging");
+        let msg = err.to_string();
+        assert!(msg.contains("micro-batch 7"), "{msg}");
+        assert!(msg.contains("5 live samples"), "{msg}");
+        // the lease went back to the pool despite the error
+        assert_eq!(pool.stats().returns, 1);
+        assert_eq!(pool.retained(), 1);
+        // the lane is still alive and stages good batches afterwards
+        let ds = SynthFlowers::new(8, 10, 8, 1);
+        let good = assembled(&ds, 8, 8).remove(0);
+        lane.submit(LaneJob { seq: 8, mb: good, scale: None }).unwrap();
+        let staged = lane.recv().expect("lane survives an error");
+        assert_eq!(staged.seq, 8);
+        pool.give(staged.mb);
+    }
+
+    #[test]
+    fn mask_padding_mismatch_is_a_staging_error() {
+        let pool = Arc::new(BufPool::bounded(4));
+        let mut lane = UploadLane::spawn(pool, 1);
+        let bad_mask = MicroBatchHost {
+            x: Buf::F32(vec![0.0; 8]),
+            y: Buf::I32(vec![0; 4]),
+            mask: vec![1.0, 0.0, 1.0, 0.0], // hole in the live prefix
+            actual: 2,
+            j: 0,
+        };
+        lane.submit(LaneJob { seq: 0, mb: bad_mask, scale: None }).unwrap();
+        let msg = lane.recv().expect_err("mask hole must fail").to_string();
+        assert!(msg.contains("mask[1]"), "{msg}");
+    }
+
+    #[test]
+    fn threaded_stress_many_short_epochs() {
+        // shake out lane races: many short lane lifetimes over one shared
+        // pool, every epoch asserting the zero-leak invariant
+        let ds = SynthFlowers::new(4, 10, 24, 1);
+        let pool = Arc::new(BufPool::bounded(UploadLane::extra_buffers(2) + 4));
+        pool.warm(UploadLane::extra_buffers(2) + 4, &ds, 4);
+        for epoch in 0..50 {
+            let mut lane = UploadLane::spawn(pool.clone(), 2);
+            let mbs_list = assembled(&ds, 24, 4);
+            let n = mbs_list.len();
+            for (seq, mb) in mbs_list.into_iter().enumerate() {
+                let mut leased = pool.lease();
+                stage_copy(&mut leased, &mb);
+                lane.submit(LaneJob { seq: seq as u64, mb: leased, scale: None }).unwrap();
+                // consume every other completion promptly; leave the rest
+                // queued so some epochs drop the lane with a full channel
+                if seq % 2 == 0 {
+                    let staged = lane.recv().unwrap();
+                    pool.give(staged.mb);
+                }
+            }
+            if epoch % 3 == 0 {
+                // drain fully on some epochs
+                for _ in 0..n / 2 {
+                    let staged = lane.recv().unwrap();
+                    pool.give(staged.mb);
+                }
+            }
+            drop(lane);
+            // per-epoch zero-leak: the lane's shutdown drain returned every
+            // outstanding buffer, so takes and gives balance exactly
+            let s = pool.stats();
+            assert_eq!(s.leases, s.returns, "epoch {epoch} leaked leases: {s:?}");
+        }
+        // global zero-leak: every lease across all epochs was returned
+        let s = pool.stats();
+        assert_eq!(s.leases, s.returns, "stress run leaked leases: {s:?}");
+    }
+}

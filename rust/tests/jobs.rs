@@ -7,10 +7,12 @@
 
 mod common;
 
+use std::time::Duration;
+
 use mbs::coordinator::frontier::{classify_set, synthetic_entry, SetFeasibility};
 use mbs::coordinator::tenancy::{
-    plan_admission, resident_claim, transient_bytes, AdmissionOutcome, AdmissionRequest,
-    JobSpec,
+    plan_admission, resident_claim, staged_slot_bytes, transient_bytes, AdmissionOutcome,
+    AdmissionRequest, JobSpec,
 };
 use mbs::memory::{Footprint, MIB};
 use mbs::{JobSet, MicroBatchSpec, TrainConfig};
@@ -58,6 +60,89 @@ fn heterogeneous_set(engine: &mbs::Engine) -> (JobSet, u64) {
         ],
     };
     (set, capacity)
+}
+
+/// The async-lane variant: both jobs keep the upload lane on, and the
+/// shared capacity additionally funds BOTH durable staged input slots —
+/// the cross-tenant *sum* the admission planner now prices.
+fn heterogeneous_set_async(engine: &mbs::Engine) -> (JobSet, u64) {
+    let (mut set, _) = heterogeneous_set(engine);
+    for job in &mut set.jobs {
+        job.cfg.overlap = true;
+    }
+    let rn = engine.manifest().model("microresnet18").unwrap().clone();
+    let un = engine.manifest().model("microunet").unwrap().clone();
+    let fp_rn = Footprint::from_manifest(&rn, rn.variant(16, 8).unwrap());
+    let fp_un = Footprint::from_manifest(&un, un.variant(24, 8).unwrap());
+    let claim = resident_claim(&rn, 16).unwrap() + resident_claim(&un, 24).unwrap();
+    let transient = transient_bytes(&fp_rn, 8, 24, 16, true)
+        .max(transient_bytes(&fp_un, 8, 16, 8, true));
+    let capacity = claim
+        + transient
+        + staged_slot_bytes(&fp_rn, 8, 24, 16)
+        + staged_slot_bytes(&fp_un, 8, 16, 8);
+    (set, capacity)
+}
+
+#[test]
+fn async_lane_jobs_bit_identical_to_solo_and_wall_overlap_measured() {
+    // the async-lane oracle at set level: two tenants, each with its own
+    // upload lane and a warm ping-pong slot that stays staged across the
+    // other tenant's turns — per-job results still bit-identical to solo
+    // runs, and the lane's thread timestamps still land inside execute
+    // windows despite the interleaving
+    let Some(mut engine) = common::engine() else { return };
+    let (set, capacity) = heterogeneous_set_async(&engine);
+    let report = mbs::train_jobs(&mut engine, &set, capacity).expect("async interleaved run");
+    assert_eq!(report.admitted(), 2, "both async jobs must be admitted: {:?}", report.jobs);
+    assert!(report.arena_peak_bytes <= report.capacity_bytes);
+
+    for (job, spec) in report.jobs.iter().zip(&set.jobs) {
+        let shared = job.report.as_ref().expect("admitted jobs carry a report");
+        // admission priced this tenant's durable staged slot
+        match &job.admission {
+            AdmissionOutcome::Admitted { staged_bytes, .. } => {
+                assert!(*staged_bytes > 0, "job {}: async tenant with free staged slot", job.name);
+            }
+            other => panic!("job {} not admitted: {other:?}", job.name),
+        }
+        // the wall-clock evidence survives multi-tenancy
+        assert!(shared.overlap, "job {} lost its lane mode", job.name);
+        assert!(shared.stages.upload_hidden > Duration::ZERO, "job {}", job.name);
+        assert!(
+            shared.stages.upload_concurrent > Duration::ZERO,
+            "job {}: lane never staged during an execute window: {:?}",
+            job.name,
+            shared.stages
+        );
+
+        // solo arm: identical config (lane on), admitted mu pinned, roomy
+        // device — bit identity is structural now that solo IS a JobExec
+        let mut solo_cfg = spec.cfg.clone();
+        solo_cfg.mu = MicroBatchSpec::Fixed(shared.mu);
+        solo_cfg.capacity_mib = Some(capacity.div_ceil(MIB) + 16);
+        let solo = mbs::train(&mut engine, &solo_cfg).expect("solo async run");
+        assert_eq!(shared.mu, solo.mu, "job {}", job.name);
+        assert_eq!(shared.updates, solo.updates, "job {}", job.name);
+        for (a, b) in shared.train_epochs.iter().zip(&solo.train_epochs) {
+            assert_eq!(
+                a.mean_loss.to_bits(),
+                b.mean_loss.to_bits(),
+                "job {} epoch {} train loss diverged under the async lane",
+                job.name,
+                a.epoch
+            );
+            assert_eq!(a.primary_metric.to_bits(), b.primary_metric.to_bits());
+            assert_eq!(a.micro_steps, b.micro_steps);
+        }
+        for (a, b) in shared.eval_epochs.iter().zip(&solo.eval_epochs) {
+            assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "job {}", job.name);
+        }
+        assert_eq!(
+            shared.final_eval.mean_loss.to_bits(),
+            solo.final_eval.mean_loss.to_bits()
+        );
+    }
 }
 
 #[test]
@@ -172,7 +257,7 @@ fn dry_run_admission_with_synthetic_tasks_is_artifact_free() {
         })
         .collect();
     let capacity = set.capacity_mib.unwrap() * MIB;
-    let verdicts = plan_admission(&requests, capacity, false);
+    let verdicts = plan_admission(&requests, capacity);
     assert!(
         verdicts.iter().all(|v| v.outcome.is_admitted()),
         "both synthetic jobs fit 4 MiB: {verdicts:?}"
@@ -186,11 +271,11 @@ fn dry_run_admission_with_synthetic_tasks_is_artifact_free() {
         };
         assert!(resolution.mu <= *solo_mu);
     }
-    assert_eq!(classify_set(&requests, capacity, false), SetFeasibility::CoResidentMbs);
+    assert_eq!(classify_set(&requests, capacity), SetFeasibility::CoResidentMbs);
     // a device that only fits the two residents hosts neither stream
-    assert_eq!(classify_set(&requests, 2 * MIB, false), SetFeasibility::Reject);
+    assert_eq!(classify_set(&requests, 2 * MIB), SetFeasibility::Reject);
     // determinism: replaying the same spec yields the same verdicts
-    let replay = plan_admission(&requests, capacity, false);
+    let replay = plan_admission(&requests, capacity);
     for (a, b) in verdicts.iter().zip(&replay) {
         assert_eq!(a.outcome.mu(), b.outcome.mu());
         assert_eq!(a.outcome.label(), b.outcome.label());

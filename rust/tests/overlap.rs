@@ -1,15 +1,22 @@
 //! Overlapped-pipeline integration tests (artifact-gated, see
-//! rust/docs/TESTING.md): the overlap identity oracle — `--overlap on`
-//! must reproduce `--overlap off` bit for bit, because both modes run the
-//! identical device-op sequence and only move the upload issue points —
-//! plus dirty-slot reuse identity and ledger residency accounting.
+//! rust/docs/TESTING.md): the overlap identity oracle — the async upload
+//! lane (`--overlap on`) must reproduce the serial path (`--overlap off`)
+//! bit for bit, because both modes run the identical device-op sequence
+//! and only move where the host-side staging work happens — plus the
+//! wall-clock oracle (`upload_concurrent` measured from lane-thread
+//! timestamps must be strictly positive), dirty-slot reuse identity,
+//! ledger residency accounting, and the lane's zero-lease-leak guarantee
+//! under an early epoch abort.
 
 mod common;
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use mbs::data::{loader, Dataset, SynthFlowers};
+use mbs::coordinator::{stream_epoch, NormalizationMode, Planner, StreamingPolicy};
+use mbs::data::{loader, BufPool, Dataset, EpochPlan, SynthFlowers};
 use mbs::memory::Footprint;
+use mbs::runtime::{LaneJob, UploadLane};
 use mbs::TrainConfig;
 
 fn base_cfg(overlap: bool) -> TrainConfig {
@@ -66,6 +73,19 @@ fn train_report_identical_between_overlap_modes() {
     );
     assert!(overlapped.stages.upload_hidden <= overlapped.stages.upload);
     assert!(overlapped.stages.overlap_efficiency() > 0.0);
+    // the WALL-CLOCK oracle: the serial arm has no lane thread, so it can
+    // measure no concurrent upload; the async arm's lane timestamps must
+    // put real time inside the engine's execute windows — structural
+    // hiding (upload_hidden) is not accepted as evidence here
+    assert_eq!(serial.stages.upload_concurrent, Duration::ZERO);
+    assert!(
+        overlapped.stages.upload_concurrent > Duration::ZERO,
+        "async lane staged nothing during an execute window: {:?}",
+        overlapped.stages
+    );
+    assert!(overlapped.stages.upload_concurrent <= overlapped.stages.upload);
+    assert!(overlapped.stages.wall_overlap_efficiency() > 0.0);
+    assert_eq!(serial.stages.wall_overlap_efficiency(), 0.0);
 }
 
 #[test]
@@ -142,6 +162,49 @@ fn serial_mode_rejects_a_second_staged_micro_batch() {
     assert!(err.to_string().contains("eval_step"), "{err}");
     rt.eval_staged().expect("draining the staged slot still works");
     assert_eq!(rt.staged_len(), 0);
+}
+
+#[test]
+fn lane_early_abort_returns_every_pool_lease() {
+    // host-only (no artifacts): abort an epoch halfway with staging work
+    // still queued in the lane — submitted originals the worker has not
+    // copied yet AND staged completions nobody will recv — and require
+    // the shutdown drain to balance the pool's books exactly
+    let ds: Arc<dyn Dataset> = Arc::new(SynthFlowers::new(8, 16, 64, 1));
+    let pool = Arc::new(BufPool::for_prefetch(2));
+    pool.warm(BufPool::buffers_for(2) + UploadLane::extra_buffers(2), ds.as_ref(), 8);
+    let planner = Planner::new(8, false, NormalizationMode::Paper);
+    let plan = EpochPlan::new(64, 16, 0, 0);
+    {
+        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let mut seq = 0u64;
+        for (i, item) in stream_epoch(
+            StreamingPolicy::Synchronous,
+            ds.clone(),
+            plan,
+            planner.clone(),
+            2,
+            pool.clone(),
+        )
+        .enumerate()
+        {
+            lane.submit(LaneJob { seq, mb: item.mb, scale: Some(1.0) }).expect("submit");
+            seq += 1;
+            if i == 2 {
+                // consume one completion so the abort also covers a
+                // mid-flight staged slot already handed back
+                let staged = lane.recv().expect("staged");
+                pool.give(staged.mb);
+            }
+            if i >= 4 {
+                break; // early abort: the rest of the epoch never runs
+            }
+        }
+        assert!(seq >= 5, "fixture must abort with staging work in flight");
+        // lane drops here with queued jobs and unconsumed completions
+    }
+    let s = pool.stats();
+    assert_eq!(s.leases, s.returns, "early abort leaked pool leases: {s:?}");
 }
 
 #[test]
