@@ -69,14 +69,14 @@ fn lane_staging_comparison(iters: usize) -> Result<()> {
 
         // serial arm: every step stages through the lane, then consumes —
         // identical copy work, zero pipelining
-        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let mut lane = UploadLane::spawn(pool.clone(), 2, "bench")?;
         let mut seq = 0u64;
         let t_serial = bench(iters, || {
             for j in 0..n_steps {
                 let mut mb = pool.lease();
                 loader::assemble_into(&mut mb, ds.as_ref(), &indices, mu, 0);
                 mb.j = j;
-                lane.submit(LaneJob { seq, mb, scale: None })?;
+                lane.submit(LaneJob { seq, mb, scale: None, fault: None })?;
                 seq += 1;
                 let staged = lane.recv()?;
                 sink += fake_execute(&staged.mb);
@@ -87,14 +87,14 @@ fn lane_staging_comparison(iters: usize) -> Result<()> {
         drop(lane);
 
         // pipelined arm: consume step j-1 while the lane stages step j
-        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let mut lane = UploadLane::spawn(pool.clone(), 2, "bench")?;
         let t_lane = bench(iters, || {
             let mut pending: Option<StagedBatch> = None;
             for j in 0..n_steps {
                 let mut mb = pool.lease();
                 loader::assemble_into(&mut mb, ds.as_ref(), &indices, mu, 0);
                 mb.j = j;
-                lane.submit(LaneJob { seq, mb, scale: None })?;
+                lane.submit(LaneJob { seq, mb, scale: None, fault: None })?;
                 seq += 1;
                 if let Some(prev) = pending.take() {
                     sink += fake_execute(&prev.mb);

@@ -175,6 +175,17 @@ pub struct TrainConfig {
     pub lr: Option<f32>,
     /// Skip the eval pass after each epoch (benches that only need timing).
     pub skip_eval: bool,
+    /// Save a checkpoint every N optimizer updates (requires `checkpoint`).
+    pub checkpoint_every: Option<u64>,
+    /// Checkpoint path stem: the run writes `<stem>.bin` / `<stem>.json`
+    /// periodically (`checkpoint_every`) and at the end of training.
+    pub checkpoint: Option<String>,
+    /// Resume from a checkpoint stem before training (skips the updates it
+    /// already covers, then replays the rest of the schedule).
+    pub resume: Option<String>,
+    /// Deterministic fault-injection spec (JSON path) — arms the recovery
+    /// state machine in [`crate::coordinator::trainer`].
+    pub faults: Option<String>,
 }
 
 impl TrainConfig {
@@ -206,6 +217,10 @@ impl TrainConfig {
             lr_schedule: LrSchedule::Constant,
             lr: None,
             skip_eval: false,
+            checkpoint_every: None,
+            checkpoint: None,
+            resume: None,
+            faults: None,
         }
     }
 
@@ -273,6 +288,12 @@ impl TrainConfig {
             "skip-eval" | "skip_eval" => {
                 self.skip_eval = value.parse().map_err(|_| bad(key, value))?
             }
+            "checkpoint-every" | "checkpoint_every" => {
+                self.checkpoint_every = Some(value.parse().map_err(|_| bad(key, value))?)
+            }
+            "checkpoint" => self.checkpoint = Some(value.to_string()),
+            "resume" => self.resume = Some(value.to_string()),
+            "faults" => self.faults = Some(value.to_string()),
             other => return Err(MbsError::Config(format!("unknown config key '{other}'"))),
         }
         Ok(())
@@ -318,7 +339,8 @@ impl TrainConfig {
         for key in [
             "model", "size", "mu", "batch", "epochs", "dataset-len", "eval-len",
             "capacity-mib", "num-classes", "mbs", "norm", "streaming", "prefetch",
-            "overlap", "seed", "lr", "lr-decay", "skip-eval",
+            "overlap", "seed", "lr", "lr-decay", "skip-eval", "checkpoint-every",
+            "checkpoint", "resume", "faults",
         ] {
             if let Some(v) = args.get(key) {
                 self.set(key, v)?;
@@ -331,7 +353,8 @@ impl TrainConfig {
     pub const ARG_KEYS: &'static [&'static str] = &[
         "model", "size", "mu", "batch", "epochs", "dataset-len", "eval-len",
         "capacity-mib", "num-classes", "mbs", "norm", "streaming", "prefetch",
-        "overlap", "seed", "lr", "lr-decay", "skip-eval", "config",
+        "overlap", "seed", "lr", "lr-decay", "skip-eval", "checkpoint-every",
+        "checkpoint", "resume", "faults", "config",
     ];
 
     /// Reject configurations no run mode can execute.
@@ -347,6 +370,14 @@ impl TrainConfig {
         }
         if self.dataset_len == 0 {
             return Err(MbsError::Config("dataset-len must be positive".into()));
+        }
+        if self.checkpoint_every == Some(0) {
+            return Err(MbsError::Config("checkpoint-every must be positive".into()));
+        }
+        if self.checkpoint_every.is_some() && self.checkpoint.is_none() {
+            return Err(MbsError::Config(
+                "checkpoint-every needs --checkpoint <path> to write to".into(),
+            ));
         }
         Ok(())
     }
@@ -600,6 +631,30 @@ mod tests {
         c.epochs = 1;
         c.skip_eval = true;
         c.validate().unwrap(); // skip-eval alone stays valid
+    }
+
+    #[test]
+    fn checkpoint_and_fault_keys() {
+        let mut c = TrainConfig::default_for("m");
+        assert!(c.checkpoint.is_none() && c.resume.is_none() && c.faults.is_none());
+        c.set("checkpoint", "/tmp/ck").unwrap();
+        c.set("checkpoint-every", "8").unwrap();
+        c.set("resume", "/tmp/old").unwrap();
+        c.set("faults", "specs/faults.json").unwrap();
+        assert_eq!(c.checkpoint.as_deref(), Some("/tmp/ck"));
+        assert_eq!(c.checkpoint_every, Some(8));
+        assert_eq!(c.resume.as_deref(), Some("/tmp/old"));
+        assert_eq!(c.faults.as_deref(), Some("specs/faults.json"));
+        c.validate().unwrap();
+        assert!(c.set("checkpoint-every", "eight").is_err());
+        // checkpoint-every without a path, or zero, is rejected up front
+        let mut bad = TrainConfig::default_for("m");
+        bad.checkpoint_every = Some(4);
+        assert!(bad.validate().is_err());
+        bad.checkpoint = Some("ck".into());
+        bad.validate().unwrap();
+        bad.checkpoint_every = Some(0);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -40,6 +40,6 @@ pub use tenancy::{
     plan_admission, AdmissionOutcome, AdmissionRequest, JobAdmission, JobSet, JobSpec,
 };
 pub use trainer::{
-    datasets_for, evaluate, evaluate_pooled, evaluate_with, train, train_jobs, JobRun,
-    JobsReport, TrainReport,
+    datasets_for, evaluate, evaluate_pooled, evaluate_with, train, train_jobs,
+    train_jobs_faulted, JobOutcome, JobRun, JobsReport, TrainReport,
 };

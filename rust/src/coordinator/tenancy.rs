@@ -372,7 +372,18 @@ pub fn plan_admission(reqs: &[AdmissionRequest], capacity_bytes: u64) -> Vec<Job
             out.push(JobAdmission { name: req.name.clone(), outcome: AdmissionOutcome::Rejected { reason } });
             continue;
         }
-        let claim = claims[i].expect("phase 1 admitted this job");
+        let Some(claim) = claims[i] else {
+            // phase 1 and phase 2 disagreeing is an internal bug; reject
+            // this job with a structured reason rather than panicking the
+            // whole admission pass (the survivors still get verdicts)
+            out.push(JobAdmission {
+                name: req.name.clone(),
+                outcome: AdmissionOutcome::Rejected {
+                    reason: "internal: admission phase-1 claim missing".into(),
+                },
+            });
+            continue;
+        };
         // solo feasibility gate: a job the whole device cannot run alone is
         // never admitted to a shared one (admitted-set ⊆ solo-feasible set)
         let solo = match solo_resolution(req, capacity_bytes) {

@@ -42,16 +42,18 @@
 //! structural (one state machine) rather than an oracle-checked accident.
 
 use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::TrainConfig;
 use crate::data::{BufPool, Dataset, EpochPlan, PoolStats, SynthCarvana, SynthFlowers, SynthText};
 use crate::error::{MbsError, Result};
+use crate::manifest::ModelEntry;
 use crate::memory::ledger::AllocId;
 use crate::memory::{Arena, Footprint, Ledger, MemoryModel};
 use crate::metrics::{EpochStats, MetricKind, StageTimers};
-use crate::runtime::{Engine, LaneJob, ModelRuntime, UploadLane};
+use crate::runtime::{Engine, FaultHooks, FaultKind, FaultPlan, LaneJob, ModelRuntime, UploadLane};
 
 use super::accumulator::{Accumulation, NormalizationMode};
 use super::planner::{self, ExecutionPlan, Planner, Resolution};
@@ -270,16 +272,24 @@ fn submit_to_lane(
     seq: &mut u64,
     pass: Pass<'_>,
     item: StreamItem,
+    fault: Option<String>,
 ) -> Result<()> {
     let StreamItem { plan, mb, .. } = item;
     let scale = match pass {
         Pass::Train { .. } => Some(plan.scales[mb.j]),
         Pass::Eval => None,
     };
-    lane.submit(LaneJob { seq: *seq, mb, scale })?;
+    lane.submit(LaneJob { seq: *seq, mb, scale, fault })?;
     *seq += 1;
     queue.push_back(plan);
     Ok(())
+}
+
+/// The overlap invariant, stated as an error instead of a panic: outside
+/// the recovery quiesce window, an overlap-mode job always owns a lane. A
+/// violation means pipeline state desynced — fail the job, not the process.
+fn lane_desync() -> MbsError {
+    MbsError::Runtime("overlap pipeline lost its upload lane (recovery desync)".into())
 }
 
 /// Receive one completed staging from the lane and place it into the idle
@@ -297,7 +307,9 @@ fn place_staged(
     queue: &mut VecDeque<Arc<ExecutionPlan>>,
 ) -> Result<InFlight> {
     let staged = lane.recv()?;
-    let plan = queue.pop_front().expect("one queued plan per lane submission");
+    let plan = queue.pop_front().ok_or_else(|| {
+        MbsError::Runtime("upload lane completed a staging with no queued plan".into())
+    })?;
     rt.credit_lane_window(staged.started, staged.finished);
     let inputs = ledger.alloc("in-flight inputs", fp.overlap_bytes(plan.device_samples()))?;
     rt.stage_inputs(&staged.mb, staged.scale)?;
@@ -354,7 +366,11 @@ fn run_epoch(
         // device-op order (stage, then execute the older step) is identical
         // to the pre-lane pipeline, so every loss/metric bit is preserved;
         // only the host half of staging moved onto the lane thread.
-        let mut lane = UploadLane::spawn(pool.clone(), LANE_DEPTH);
+        let label = {
+            let l = rt.label();
+            if l.is_empty() { "solo".to_string() } else { l.to_string() }
+        };
+        let mut lane = UploadLane::spawn(pool.clone(), LANE_DEPTH, &label)?;
         let mut queue: VecDeque<Arc<ExecutionPlan>> = VecDeque::new();
         let mut seq = 0u64;
         let mut pending: Option<InFlight> = None;
@@ -365,7 +381,7 @@ fn run_epoch(
             } else {
                 Some(place_staged(rt, ledger, fp, pool, &mut lane, &mut queue)?)
             };
-            submit_to_lane(&mut lane, &mut queue, &mut seq, pass, item)?;
+            submit_to_lane(&mut lane, &mut queue, &mut seq, pass, item, None)?;
             if let Some(current) = pending.take() {
                 step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
             }
@@ -550,6 +566,13 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     let entry = engine.manifest().model(&cfg.model)?.clone();
     let size = cfg.size.unwrap_or(entry.default_size);
 
+    // deterministic fault injection + recovery (`--faults spec.json`):
+    // solo runs are the one-tenant special case of the same state machine
+    let plan = match &cfg.faults {
+        Some(path) => Some(FaultPlan::load(path)?),
+        None => None,
+    };
+
     // ------------------------------------------------------------------
     // memory admission + planning (paper section 1 + Alg. 1): the ledger's
     // remaining budget drives the micro-batch choice; the resident state is
@@ -566,14 +589,32 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
     // solo ledger peak matches the historical "resident state" accounting
     let arena = Arena::new(capacity);
     let spec = JobSpec { name: cfg.model.clone(), task: None, cfg: cfg.clone() };
+    let recovery = plan.as_ref().map(|p| RecoveryCfg::from_plan(p, &spec.name));
     let mut exec = JobExec::new(
         engine,
         &spec,
         &resolution,
         resolution.footprint.resident_bytes(),
         &arena,
+        recovery,
     )?;
-    while exec.step()? {}
+    loop {
+        match exec.step() {
+            Ok(true) => {}
+            Ok(false) => break,
+            // recoverable fault with retries left: checkpoint-based replay
+            // (quiesce → release → re-plan → restore); anything else — or
+            // an exhausted budget — propagates as the run's error
+            Err(e) if exec.can_recover(&e) => {
+                exec.note_retry(&e);
+                exec.recover(engine)?;
+            }
+            Err(e) => {
+                exec.cleanup_snapshot();
+                return Err(e);
+            }
+        }
+    }
     exec.into_report(capacity)
 }
 
@@ -598,6 +639,25 @@ enum JobPhase {
     FinalEval,
     /// All phases complete.
     Done,
+}
+
+/// Per-job recovery policy: deterministic fault hooks plus the retry
+/// budget and backoff, derived from a [`FaultPlan`]. Absent (no plan),
+/// the executor behaves exactly as before — no snapshots, no retries.
+struct RecoveryCfg {
+    hooks: FaultHooks,
+    max_retries: u32,
+    backoff_ms: u64,
+}
+
+impl RecoveryCfg {
+    fn from_plan(plan: &FaultPlan, job: &str) -> RecoveryCfg {
+        RecoveryCfg {
+            hooks: plan.hooks_for(job),
+            max_retries: plan.max_retries,
+            backoff_ms: plan.backoff_ms,
+        }
+    }
 }
 
 /// One tenant's live execution state: everything the solo [`train`] loop
@@ -647,6 +707,38 @@ struct JobExec {
     stage_totals: StageTimers,
     run_start: Instant,
     mu: usize,
+    /// The manifest entry + size the job resolved against — kept so
+    /// recovery can re-run the micro-batch planner (paper Alg. 1) against
+    /// the transient budget that is actually free at replay time.
+    entry: ModelEntry,
+    size: usize,
+    /// The durable resident reservation admission placed. Released during
+    /// recovery quiesce and re-claimed before replay; `None` only inside
+    /// that window.
+    reservation: Option<AllocId>,
+    claim_bytes: u64,
+    /// Deterministic fault hooks for this job (never fire without a plan).
+    hooks: FaultHooks,
+    /// Monotonic micro-step attempt counter. Deliberately NOT reset by
+    /// recovery, so `at-step` faults fire exactly once and the replayed
+    /// steps run fault-free — the recovery identity oracle depends on it.
+    step_attempts: u64,
+    retries_left: u32,
+    retries_used: u32,
+    /// Completed recoveries (quiesce → release → re-plan → replay).
+    recovered: u64,
+    backoff_ms: u64,
+    /// Phase-start snapshot base path; the recovery state machine is
+    /// enabled iff this is set.
+    snapshot: Option<PathBuf>,
+    /// Update counter at the last `--checkpoint-every` save.
+    last_ckpt: u64,
+    /// Guard so the final `--checkpoint` save happens exactly once.
+    ckpt_done: bool,
+    /// Optimizer updates a `--resume` checkpoint already applied within
+    /// the first replayed epoch — consumed (skipped) when that epoch's
+    /// stream opens.
+    resume_skip: u64,
 }
 
 impl JobExec {
@@ -656,6 +748,7 @@ impl JobExec {
         res: &Resolution,
         claim_bytes: u64,
         arena: &Arena,
+        recovery: Option<RecoveryCfg>,
     ) -> Result<JobExec> {
         let cfg = spec.cfg.clone();
         let entry = engine.manifest().model(&cfg.model)?.clone();
@@ -664,12 +757,30 @@ impl JobExec {
         // the durable per-job reservation admission placed (conservative:
         // covers the resident state of any exported variant at this size)
         let mut ledger = arena.tenant(&spec.name);
-        ledger.alloc("resident reservation", claim_bytes)?;
+        let reservation = ledger.alloc("resident reservation", claim_bytes)?;
         let mut rt = engine.load_model(&cfg.model, size, res.mu)?;
         rt.set_overlap(cfg.overlap);
         rt.set_label(&spec.name);
-        let (train_ds, eval_ds) = datasets_for(&entry.task, size, &cfg)?;
+        // `--resume`: restore params/slots/updates before the first phase
+        // opens, then fast-forward the state machine to the phase the
+        // checkpoint's update counter sits in (any partial epoch's already
+        // -applied updates are skipped when its stream opens)
+        if let Some(path) = &cfg.resume {
+            rt.load_checkpoint(Path::new(path))?;
+        }
         let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
+        let (phase0, resume_skip) = if rt.updates == 0 {
+            (JobPhase::Train { epoch: 0 }, 0)
+        } else {
+            let bpe = batches_per_epoch as u64;
+            let full = (rt.updates / bpe) as usize;
+            if full >= cfg.epochs {
+                (JobPhase::FinalEval, 0)
+            } else {
+                (JobPhase::Train { epoch: full }, rt.updates % bpe)
+            }
+        };
+        let (train_ds, eval_ds) = datasets_for(&entry.task, size, &cfg)?;
         let total_updates = (batches_per_epoch * cfg.epochs) as u64;
         let sched = UpdateScheduler::new(&entry.optimizer, &cfg, total_updates);
         let n_smu_full = if cfg.use_mbs { cfg.batch.div_ceil(res.mu) } else { 1 };
@@ -685,9 +796,27 @@ impl JobExec {
         let retained = BufPool::buffers_for(max_prefetch) + lane_extra;
         let pool = Arc::new(BufPool::bounded(retained));
         pool.warm(retained, train_ds.as_ref(), res.mu);
-        let lane =
-            if cfg.overlap { Some(UploadLane::spawn(pool.clone(), LANE_DEPTH)) } else { None };
+        let lane = if cfg.overlap {
+            Some(UploadLane::spawn(pool.clone(), LANE_DEPTH, &spec.name)?)
+        } else {
+            None
+        };
         let planner = Planner::new(res.mu, !cfg.use_mbs, cfg.norm_mode);
+        let recovery_on = recovery.is_some();
+        let (hooks, max_retries, backoff_ms) = match recovery {
+            Some(r) => (r.hooks, r.max_retries, r.backoff_ms),
+            None => (FaultHooks::none(), 0, 0),
+        };
+        // phase-start snapshots live in the OS temp dir, one pair per
+        // (process, job) — cleaned up when the job reaches a terminal state
+        let snapshot = recovery_on.then(|| {
+            let safe: String = spec
+                .name
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+                .collect();
+            std::env::temp_dir().join(format!("mbs-recovery-{}-{safe}", std::process::id()))
+        });
         let now = Instant::now();
         Ok(JobExec {
             name: spec.name.clone(),
@@ -702,7 +831,7 @@ impl JobExec {
             eval_ds,
             prefetch: cfg.prefetch,
             n_smu_full,
-            phase: JobPhase::Train { epoch: 0 },
+            phase: phase0,
             stream: None,
             lane,
             lane_queue: VecDeque::new(),
@@ -718,6 +847,20 @@ impl JobExec {
             stage_totals: StageTimers::default(),
             run_start: now,
             mu: res.mu,
+            entry,
+            size,
+            reservation: Some(reservation),
+            claim_bytes,
+            hooks,
+            step_attempts: 0,
+            retries_left: max_retries,
+            retries_used: 0,
+            recovered: 0,
+            backoff_ms,
+            snapshot,
+            last_ckpt: 0,
+            ckpt_done: false,
+            resume_skip,
             cfg,
         })
     }
@@ -730,6 +873,12 @@ impl JobExec {
         self.rt_before = self.rt.timers();
         self.acc = Accumulation::default();
         self.assemble = Duration::ZERO;
+        // recovery enabled: every phase start is an update boundary, so
+        // snapshot here — a mid-phase fault replays the phase from scratch
+        // and lands bit-identical to an uninterrupted run
+        if let Some(snap) = self.snapshot.clone() {
+            self.rt.save_checkpoint(&snap)?;
+        }
         match self.phase {
             JobPhase::Train { epoch } => {
                 let plan = EpochPlan::new(
@@ -738,14 +887,30 @@ impl JobExec {
                     self.cfg.seed,
                     epoch as u64,
                 );
-                self.stream = Some(stream_epoch(
+                let mut stream = stream_epoch(
                     self.cfg.streaming,
                     self.train_ds.clone(),
                     plan,
                     self.planner.clone(),
                     self.prefetch,
                     self.pool.clone(),
-                ));
+                );
+                // `--resume` fast-forward: recycle the micro-batches whose
+                // updates the checkpoint already applied — from here on the
+                // device-op sequence matches the uninterrupted run's
+                while self.resume_skip > 0 {
+                    match stream.next() {
+                        Some(item) => {
+                            let update_done = item.plan.is_last(item.mb.j);
+                            self.pool.give(item.mb);
+                            if update_done {
+                                self.resume_skip -= 1;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+                self.stream = Some(stream);
                 Ok(true)
             }
             JobPhase::Eval { .. } | JobPhase::FinalEval => {
@@ -849,14 +1014,33 @@ impl JobExec {
     /// submission stay warm across other jobs' turns. Returns false once
     /// every phase is complete.
     fn step(&mut self) -> Result<bool> {
+        self.maybe_checkpoint()?;
         loop {
             if self.phase == JobPhase::Done {
+                self.final_checkpoint()?;
                 return Ok(false);
             }
             if self.stream.is_none() && !self.begin_phase()? {
                 continue; // phase completed immediately (empty eval set)
             }
-            let item = self.stream.as_mut().expect("phase begun").next();
+            let mut item = self.stream.as_mut().expect("phase begun").next();
+            // per-attempt fault checks, before the turn touches the
+            // pipeline: a step fault surfaces right here (recycling the
+            // item's staging buffer); a lane note rides the submission
+            // below; an arena fault armed here fires at this turn's charge
+            let lane_fault = if item.is_some() {
+                match self.check_faults() {
+                    Ok(f) => f,
+                    Err(e) => {
+                        if let Some(it) = item.take() {
+                            self.pool.give(it.mb);
+                        }
+                        return Err(e);
+                    }
+                }
+            } else {
+                None
+            };
             let pass = match self.phase {
                 JobPhase::Train { .. } => Pass::Train { sched: &self.sched },
                 _ => Pass::Eval,
@@ -893,16 +1077,17 @@ impl JobExec {
                             &mut self.ledger,
                             &self.fp,
                             &self.pool,
-                            self.lane.as_mut().expect("overlap jobs own a lane"),
+                            self.lane.as_mut().ok_or_else(lane_desync)?,
                             &mut self.lane_queue,
                         )?)
                     };
                     submit_to_lane(
-                        self.lane.as_mut().expect("overlap jobs own a lane"),
+                        self.lane.as_mut().ok_or_else(lane_desync)?,
                         &mut self.lane_queue,
                         &mut self.lane_seq,
                         pass,
                         item,
+                        lane_fault,
                     )?;
                     let executed = if let Some(current) = self.pending.take() {
                         step_in_flight(
@@ -934,7 +1119,7 @@ impl JobExec {
                             &mut self.ledger,
                             &self.fp,
                             &self.pool,
-                            self.lane.as_mut().expect("overlap jobs own a lane"),
+                            self.lane.as_mut().ok_or_else(lane_desync)?,
                             &mut self.lane_queue,
                         )?;
                         if let Some(current) = self.pending.take() {
@@ -969,9 +1154,187 @@ impl JobExec {
         }
     }
 
+    /// Run the per-attempt fault checks for one arriving micro-batch.
+    /// Consumes one attempt number (monotonic across recoveries). A `step`
+    /// fault surfaces as [`MbsError::Fault`] right here; an `arena` fault
+    /// arms the tenant's next ledger charge; a `lane` fault returns the
+    /// note to ride the upload-lane submission (overlap mode only).
+    fn check_faults(&mut self) -> Result<Option<String>> {
+        let attempt = self.step_attempts;
+        self.step_attempts += 1;
+        if self.hooks.is_empty() {
+            return Ok(None);
+        }
+        if let Some(note) = self.hooks.check(FaultKind::Step, attempt) {
+            return Err(MbsError::Fault(note));
+        }
+        if let Some(note) = self.hooks.check(FaultKind::Arena, attempt) {
+            self.ledger.inject_charge_fault(&note);
+        }
+        if self.cfg.overlap {
+            Ok(self.hooks.check(FaultKind::Lane, attempt))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Can the recovery state machine absorb this error? Requires the
+    /// machine to be enabled (snapshots exist), the error to be transient
+    /// by contract ([`MbsError::recoverable`]), and retries to remain.
+    fn can_recover(&self, err: &MbsError) -> bool {
+        self.snapshot.is_some() && err.recoverable() && self.retries_left > 0
+    }
+
+    /// Retry bookkeeping + the per-job linear backoff that precedes a
+    /// recovery attempt.
+    fn note_retry(&mut self, err: &MbsError) {
+        self.retries_left -= 1;
+        self.retries_used += 1;
+        eprintln!(
+            "[mbs] job '{}': recoverable fault ({err}); recovery attempt {} ({} left)",
+            self.name, self.retries_used, self.retries_left
+        );
+        if self.backoff_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.backoff_ms * self.retries_used as u64));
+        }
+    }
+
+    /// The recovery state machine (rust/docs/ARCHITECTURE.md): quiesce →
+    /// release → re-claim → re-plan → replay. Called between turns by the
+    /// driving loops after a recoverable fault, never mid-step. On return
+    /// the job is parked exactly at its current phase's start with a clean
+    /// pipeline; the next turn re-opens the phase's stream and the replay
+    /// is bit-identical to an uninterrupted run (the identity oracle).
+    fn recover(&mut self, engine: &mut Engine) -> Result<()> {
+        let snap = self.snapshot.clone().ok_or_else(|| {
+            MbsError::Runtime(format!("job '{}': recovery requested but not enabled", self.name))
+        })?;
+        // 1. quiesce: stop the lane (joins its thread, returning leases),
+        //    drain the stream recycling every staging buffer, drop the
+        //    staged slot, reset the device double-buffer
+        self.lane = None;
+        self.lane_queue.clear();
+        self.pending = None;
+        if let Some(stream) = self.stream.take() {
+            for item in stream {
+                self.pool.give(item.mb);
+            }
+        }
+        self.rt.reset_pipeline();
+        // 2. release every arena charge this tenant holds — reservation,
+        //    in-flight inputs, anything a mid-step abort left live — so
+        //    the shared capacity is whole while we re-plan
+        self.ledger.release_all();
+        self.reservation = None;
+        // 3. re-claim the durable reservation; if even that no longer
+        //    fits, the job fails terminally (structured OOM — the caller's
+        //    graceful-degradation path) while siblings keep their bytes
+        self.reservation = Some(self.ledger.alloc("resident reservation", self.claim_bytes)?);
+        // 4. re-run the micro-batch planner (paper Alg. 1) against the
+        //    transient budget that is actually free now: genuine pressure
+        //    shrinks mu; a transient injected fault re-picks the same one
+        if self.cfg.mu.is_auto() {
+            let res = planner::auto_mu_transient(
+                &self.entry,
+                self.size,
+                self.cfg.batch,
+                self.cfg.eval_len,
+                self.ledger.remaining(),
+                self.cfg.overlap,
+            )?;
+            if res.mu != self.mu {
+                eprintln!(
+                    "[mbs] job '{}': recovery re-planned mu {} -> {}",
+                    self.name, self.mu, res.mu
+                );
+                self.adopt_resolution(engine, &res)?;
+            }
+        }
+        // 5. replay: restore the phase-start snapshot and let the next
+        //    turn re-open the phase's stream from its beginning
+        self.rt.load_checkpoint(&snap)?;
+        if self.cfg.overlap {
+            self.lane = Some(UploadLane::spawn(self.pool.clone(), LANE_DEPTH, &self.name)?);
+        }
+        self.stream = None;
+        self.recovered += 1;
+        Ok(())
+    }
+
+    /// Swap the job onto a re-planned resolution (shrink-mu recovery):
+    /// new runtime variant, footprint, planner and accumulation-step
+    /// count, plus a staging pool re-warmed for the new micro-batch size.
+    /// The update scheduler survives — it is a function of the config and
+    /// the restored update counter, not of mu.
+    fn adopt_resolution(&mut self, engine: &mut Engine, res: &Resolution) -> Result<()> {
+        let mut rt = engine.load_model(&self.cfg.model, self.size, res.mu)?;
+        rt.set_overlap(self.cfg.overlap);
+        rt.set_label(&self.name);
+        self.rt = rt;
+        self.fp = res.footprint.clone();
+        self.planner = Planner::new(res.mu, !self.cfg.use_mbs, self.cfg.norm_mode);
+        self.n_smu_full = if self.cfg.use_mbs { self.cfg.batch.div_ceil(res.mu) } else { 1 };
+        let max_prefetch = if self.cfg.prefetch_auto {
+            self.cfg.prefetch.max(prefetch_cap(self.n_smu_full))
+        } else {
+            self.cfg.prefetch
+        };
+        let lane_extra = if self.cfg.overlap { UploadLane::extra_buffers(LANE_DEPTH) } else { 0 };
+        let retained = BufPool::buffers_for(max_prefetch) + lane_extra;
+        let pool = Arc::new(BufPool::bounded(retained));
+        pool.warm(retained, self.train_ds.as_ref(), res.mu);
+        self.pool = pool;
+        self.mu = res.mu;
+        Ok(())
+    }
+
+    /// `--checkpoint-every`: save to the configured checkpoint path when
+    /// the update counter has crossed the interval since the last save.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let (Some(every), Some(path)) = (self.cfg.checkpoint_every, self.cfg.checkpoint.clone())
+        else {
+            return Ok(());
+        };
+        if self.rt.updates > self.last_ckpt && self.rt.updates % every == 0 {
+            self.rt.save_checkpoint(Path::new(&path))?;
+            self.last_ckpt = self.rt.updates;
+        }
+        Ok(())
+    }
+
+    /// The final `--checkpoint` save when the run completes (covers the
+    /// tail `--checkpoint-every` missed), exactly once.
+    fn final_checkpoint(&mut self) -> Result<()> {
+        if self.ckpt_done {
+            return Ok(());
+        }
+        self.ckpt_done = true;
+        if let Some(path) = self.cfg.checkpoint.clone() {
+            self.rt.save_checkpoint(Path::new(&path))?;
+            self.last_ckpt = self.rt.updates;
+        }
+        Ok(())
+    }
+
+    /// Delete the phase-start snapshot pair (best-effort): the job reached
+    /// a terminal state and recovery is over.
+    fn cleanup_snapshot(&self) {
+        if let Some(snap) = &self.snapshot {
+            std::fs::remove_file(snap.with_extension("bin")).ok();
+            std::fs::remove_file(snap.with_extension("json")).ok();
+        }
+    }
+
+    /// `(faults_injected, retries, recovered)` — the per-job resilience
+    /// counters the multi-tenant report surfaces.
+    fn fault_counters(&self) -> (u64, u64, u64) {
+        (self.hooks.injected(), self.retries_used as u64, self.recovered)
+    }
+
     /// Assemble the job's [`TrainReport`] — field-for-field what the solo
     /// [`train`] path reports, so the identity oracle can compare them.
     fn into_report(self, capacity_bytes: u64) -> Result<TrainReport> {
+        self.cleanup_snapshot();
         let final_eval = self.final_eval.ok_or_else(|| {
             MbsError::Runtime(format!("job '{}' finished without a final eval", self.name))
         })?;
@@ -1001,6 +1364,29 @@ impl JobExec {
     }
 }
 
+/// A job's terminal verdict inside a multi-tenant run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Trained to completion (possibly after recoveries).
+    Completed,
+    /// Admitted but died mid-run: retries exhausted on a recoverable
+    /// fault, or a fatal error — evicted so the survivors keep running.
+    Failed,
+    /// Admission refused the job; it never ran.
+    Rejected,
+}
+
+impl JobOutcome {
+    /// The `outcome` key written to `BENCH_jobs.json`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobOutcome::Completed => "completed",
+            JobOutcome::Failed => "failed",
+            JobOutcome::Rejected => "rejected",
+        }
+    }
+}
+
 /// One job's outcome inside a multi-tenant run.
 #[derive(Debug, Clone)]
 pub struct JobRun {
@@ -1008,8 +1394,20 @@ pub struct JobRun {
     pub name: String,
     /// Admission verdict (admit / shrink-mu / reject) with its arithmetic.
     pub admission: AdmissionOutcome,
-    /// The full per-job training report — `None` for rejected jobs.
+    /// The full per-job training report — `None` for rejected and failed
+    /// jobs.
     pub report: Option<TrainReport>,
+    /// Terminal verdict (completed / failed / rejected).
+    pub outcome: JobOutcome,
+    /// The terminal error for failed jobs, rendered via `Display` — a
+    /// retry-exhausted OOM keeps its structured arithmetic here.
+    pub error: Option<String>,
+    /// Deterministic faults injected into this job by the fault plan.
+    pub faults_injected: u64,
+    /// Recovery attempts this job consumed.
+    pub retries: u64,
+    /// Recoveries that completed (quiesce → release → re-plan → replay).
+    pub recovered: u64,
 }
 
 /// Everything a finished multi-tenant run reports (`mbs jobs`).
@@ -1065,6 +1463,24 @@ pub fn train_jobs(
     set: &JobSet,
     capacity_bytes: u64,
 ) -> Result<JobsReport> {
+    train_jobs_faulted(engine, set, capacity_bytes, None)
+}
+
+/// [`train_jobs`] with an optional deterministic [`FaultPlan`]
+/// (`mbs jobs --faults spec.json`). With a plan, the per-job recovery
+/// state machine is armed (phase-start snapshots, bounded retries with
+/// backoff, shrink-mu re-planning) and job failures degrade gracefully:
+/// a retry-exhausted or fatally-errored job is evicted — its arena
+/// residency released, its [`JobRun`] marked [`JobOutcome::Failed`] with
+/// the terminal error — while the surviving tenants keep training.
+/// Without a plan the historical contract holds: the first job error
+/// aborts the whole run.
+pub fn train_jobs_faulted(
+    engine: &mut Engine,
+    set: &JobSet,
+    capacity_bytes: u64,
+    plan: Option<&FaultPlan>,
+) -> Result<JobsReport> {
     set.validate()?;
     // resolve each job against the manifest and run admission (pure
     // capacity arithmetic — nothing is loaded yet)
@@ -1089,12 +1505,14 @@ pub fn train_jobs(
     for (spec, verdict) in set.jobs.iter().zip(&verdicts) {
         match &verdict.outcome {
             AdmissionOutcome::Admitted { resolution, resident_claim_bytes, .. } => {
+                let recovery = plan.map(|p| RecoveryCfg::from_plan(p, &spec.name));
                 execs.push(Some(JobExec::new(
                     engine,
                     spec,
                     resolution,
                     *resident_claim_bytes,
                     &arena,
+                    recovery,
                 )?));
             }
             AdmissionOutcome::Rejected { .. } => execs.push(None),
@@ -1105,20 +1523,59 @@ pub fn train_jobs(
     // job drains; any step that would exceed the shared capacity fails
     // inside the arena at the exact instant (that failure path IS the
     // every-step cross-job assertion)
+    let isolate = plan.is_some();
+    let n = execs.len();
     let run_start = Instant::now();
     let mut live: Vec<bool> = execs.iter().map(Option::is_some).collect();
+    let mut failures: Vec<Option<String>> = vec![None; n];
+    let mut counters: Vec<(u64, u64, u64)> = vec![(0, 0, 0); n];
     loop {
         let mut progressed = false;
-        for (i, slot) in execs.iter_mut().enumerate() {
+        for i in 0..n {
             if !live[i] {
                 continue;
             }
-            let exec = slot.as_mut().expect("live implies exec");
-            if exec.step()? {
-                progressed = true;
-            } else {
+            let Some(exec) = execs[i].as_mut() else {
                 live[i] = false;
+                continue;
+            };
+            let err = match exec.step() {
+                Ok(true) => {
+                    progressed = true;
+                    continue;
+                }
+                Ok(false) => {
+                    live[i] = false;
+                    continue;
+                }
+                Err(e) => e,
+            };
+            // recoverable fault with retries left: run the recovery state
+            // machine between turns; its own failure is terminal
+            let err = if exec.can_recover(&err) {
+                exec.note_retry(&err);
+                match exec.recover(engine) {
+                    Ok(()) => {
+                        progressed = true;
+                        continue;
+                    }
+                    Err(re) => re,
+                }
+            } else {
+                err
+            };
+            if !isolate {
+                return Err(err);
             }
+            // graceful degradation: evict the job — harvest its counters,
+            // drop its exec so every arena byte it held frees for the
+            // survivors — and keep the round-robin running
+            eprintln!("[mbs] job '{}': failed terminally, evicting: {err}", exec.name);
+            counters[i] = exec.fault_counters();
+            exec.cleanup_snapshot();
+            failures[i] = Some(err.to_string());
+            execs[i] = None;
+            live[i] = false;
         }
         debug_assert!(arena.peak() <= arena.capacity(), "arena accounting broke");
         if !progressed {
@@ -1128,12 +1585,28 @@ pub fn train_jobs(
     let total_wall = run_start.elapsed();
 
     let mut jobs = Vec::with_capacity(set.jobs.len());
-    for (slot, verdict) in execs.into_iter().zip(verdicts) {
-        let report = match slot {
-            Some(exec) => Some(exec.into_report(capacity_bytes)?),
-            None => None,
+    for (i, verdict) in verdicts.into_iter().enumerate() {
+        let (report, outcome, error) = match execs[i].take() {
+            Some(exec) => {
+                counters[i] = exec.fault_counters();
+                (Some(exec.into_report(capacity_bytes)?), JobOutcome::Completed, None)
+            }
+            None => match failures[i].take() {
+                Some(msg) => (None, JobOutcome::Failed, Some(msg)),
+                None => (None, JobOutcome::Rejected, None),
+            },
         };
-        jobs.push(JobRun { name: verdict.name, admission: verdict.outcome, report });
+        let (faults_injected, retries, recovered) = counters[i];
+        jobs.push(JobRun {
+            name: verdict.name,
+            admission: verdict.outcome,
+            report,
+            outcome,
+            error,
+            faults_injected,
+            retries,
+            recovered,
+        });
     }
     Ok(JobsReport {
         capacity_bytes,

@@ -36,6 +36,13 @@ pub enum MbsError {
     #[error("runtime error: {0}")]
     Runtime(String),
 
+    /// A deterministic injected fault (fault-injection plans,
+    /// `--faults spec.json`). Always transient by construction: the
+    /// recovery state machine treats it as retryable, unlike
+    /// [`MbsError::Runtime`] which signals a genuine defect.
+    #[error("injected fault: {0}")]
+    Fault(String),
+
     /// Filesystem error (artifacts, checkpoints, reports).
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
@@ -60,5 +67,15 @@ impl MbsError {
     /// Is this the structured device-OOM error (a paper "Failed" cell)?
     pub fn is_oom(&self) -> bool {
         matches!(self, MbsError::Oom { .. })
+    }
+
+    /// May a job-level retry (checkpoint → release → re-plan → replay)
+    /// clear this error? True for memory pressure ([`MbsError::Oom`] —
+    /// shrinking mu against the freed transient budget can fit the step)
+    /// and for injected transients ([`MbsError::Fault`]). Config,
+    /// manifest, data, IO, and runtime-protocol errors are deterministic:
+    /// replaying them would fail identically, so they stay fatal.
+    pub fn recoverable(&self) -> bool {
+        matches!(self, MbsError::Oom { .. } | MbsError::Fault(_))
     }
 }

@@ -86,8 +86,8 @@ pub mod util;
 
 pub use config::{MicroBatchSpec, TrainConfig};
 pub use coordinator::{
-    train, train_jobs, ExecutionPlan, Feasibility, FrontierGrid, JobSet, JobSpec, JobsReport,
-    NormalizationMode, Planner, SetFeasibility, TrainReport,
+    train, train_jobs, train_jobs_faulted, ExecutionPlan, Feasibility, FrontierGrid, JobOutcome,
+    JobSet, JobSpec, JobsReport, NormalizationMode, Planner, SetFeasibility, TrainReport,
 };
 pub use error::{MbsError, Result};
 pub use manifest::Manifest;
@@ -97,8 +97,9 @@ pub use runtime::Engine;
 pub mod prelude {
     pub use crate::config::{MicroBatchSpec, TrainConfig};
     pub use crate::coordinator::{
-        train, train_jobs, ExecutionPlan, Feasibility, FrontierGrid, JobSet, JobSpec,
-        JobsReport, NormalizationMode, Planner, SetFeasibility, TrainReport,
+        train, train_jobs, train_jobs_faulted, ExecutionPlan, Feasibility, FrontierGrid,
+        JobOutcome, JobSet, JobSpec, JobsReport, NormalizationMode, Planner, SetFeasibility,
+        TrainReport,
     };
     pub use crate::data::{BufPool, Dataset, PoolStats, SynthCarvana, SynthFlowers, SynthText};
     pub use crate::error::{MbsError, Result};

@@ -15,13 +15,14 @@ use std::time::{Duration, Instant};
 
 use mbs::coordinator::tenancy::{self, AdmissionOutcome, AdmissionRequest, JobAdmission};
 use mbs::coordinator::{
-    datasets_for, frontier, stream_epoch, train, train_jobs, JobsReport, NormalizationMode,
-    Planner, StreamingPolicy,
+    datasets_for, frontier, stream_epoch, train, train_jobs_faulted, JobsReport,
+    NormalizationMode, Planner, StreamingPolicy,
 };
 use mbs::data::{loader, BufPool, Dataset, EpochPlan};
 use mbs::memory::{Footprint, MIB};
 use mbs::metrics::bench_report::{self, BenchReport, JsonValue};
 use mbs::metrics::Table;
+use mbs::runtime::FaultPlan;
 use mbs::util::cli::Args;
 use mbs::{Engine, JobSet, Manifest, MbsError, MicroBatchSpec, TrainConfig, TrainReport};
 
@@ -67,12 +68,19 @@ USAGE: mbs <subcommand> [flags]
            [--streaming double-buffered|sync] [--overlap on|off|async|serial]
            [--prefetch N|auto] [--size N] [--seed N]
            [--dataset-len N] [--eval-len N] [--lr F] [--lr-decay F]
+           [--checkpoint stem] [--checkpoint-every N] [--resume stem]
+           [--faults spec.json]
            [--config file.cfg] [--artifacts dir] [--csv out.csv]
            --overlap on (default; alias: async) stages micro-batch j+1 on a
            dedicated upload-lane thread while j executes, so upload time is
            hidden in real wall clock; off (alias: serial) is the inline
            byte-identity oracle. --prefetch auto tunes the window per
-           epoch from the stage timers.
+           epoch from the stage timers. --checkpoint writes <stem>.bin +
+           <stem>.json at the end (and every N updates with
+           --checkpoint-every); --resume restores one before training.
+           --faults arms the seeded deterministic fault injector: faulted
+           runs checkpoint, release residency, re-plan mu, and replay —
+           final report bit-identical to the fault-free run.
   sweep    --model <key> --batches 16,32,64 [same flags as train]
   frontier --capacities 1,2,4,8 --batches 8,32,64,128,256 [--dry-run=true]
            [--model <key> | --task classification|segmentation|lm]
@@ -86,7 +94,7 @@ USAGE: mbs <subcommand> [flags]
            feasible point (the full throughput surface) — needs --model +
            artifacts
   jobs     --spec jobs.json [--capacity-mib N] [--dry-run=true]
-           [--out BENCH_jobs.json] [--artifacts dir]
+           [--faults spec.json] [--out BENCH_jobs.json] [--artifacts dir]
            [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            run a multi-tenant job set against ONE shared capacity: the
            admission planner admits / shrinks-mu / rejects each job in
@@ -96,7 +104,13 @@ USAGE: mbs <subcommand> [flags]
            bit-identical to solo runs). --dry-run prints the admission
            table only — jobs naming a \"task\" use synthetic models, no
            artifacts needed. --compare trend-gates aggregate_items_per_sec
-           and wall_overlap_efficiency against a previous BENCH_jobs.json
+           and wall_overlap_efficiency against a previous BENCH_jobs.json.
+           --faults spec.json injects seeded deterministic faults (arena /
+           lane / step) per job: faulted jobs checkpoint + recover with
+           bounded retries, retry-exhausted jobs are evicted while the
+           survivors finish (per-job outcome / faults_injected / retries /
+           recovered land in BENCH_jobs.json; in --dry-run the spec is
+           validated and faults_planned reported, no artifacts needed)
   bench    --model <key> [same flags as train] [--out BENCH_streaming.json]
            [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            full streaming hot-path benchmark (items/sec, per-stage means,
@@ -447,14 +461,21 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
         set.jobs.len()
     );
 
+    // a fault spec arms the deterministic-injection recovery state machine
+    // (train mode) or annotates the admission plan (dry-run)
+    let plan = match args.get("faults") {
+        Some(path) => Some(FaultPlan::load(path)?),
+        None => None,
+    };
+
     if dry_run {
-        return jobs_dry_run(args, &set, capacity_bytes, &out);
+        return jobs_dry_run(args, &set, capacity_bytes, &out, plan.as_ref());
     }
 
     // train for real: every job must name a manifest model
     let manifest = Manifest::load(artifacts_dir(args))?;
     let mut engine = Engine::new(manifest)?;
-    let report = train_jobs(&mut engine, &set, capacity_bytes)?;
+    let report = train_jobs_faulted(&mut engine, &set, capacity_bytes, plan.as_ref())?;
     // the acceptance invariant, restated at the top level: the arena
     // refuses any charge that would exceed capacity, so the recorded
     // cross-job peak must sit within it
@@ -466,8 +487,8 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
     );
 
     let mut table = Table::new(&[
-        "job", "model", "batch", "admission", "mu", "n_smu", "items/sec", "best metric",
-        "updates",
+        "job", "model", "batch", "admission", "outcome", "mu", "n_smu", "items/sec",
+        "best metric", "updates",
     ]);
     for job in &report.jobs {
         match (&job.report, &job.admission) {
@@ -478,6 +499,7 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
                     r.model.clone(),
                     r.batch.to_string(),
                     job.admission.label().to_string(),
+                    job.outcome.as_str().to_string(),
                     r.mu.to_string(),
                     r.batch.div_ceil(r.mu).to_string(),
                     format!("{:.1}", t.items_per_sec),
@@ -485,12 +507,15 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
                     r.updates.to_string(),
                 ]);
             }
+            // no report: rejected at admission, or admitted but evicted
+            // after exhausting its recovery retries (outcome = failed)
             _ => {
                 table.row(&[
                     job.name.clone(),
                     "-".into(),
                     "-".into(),
-                    "reject".into(),
+                    job.admission.label().to_string(),
+                    job.outcome.as_str().to_string(),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -499,6 +524,9 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
                 ]);
                 if let AdmissionOutcome::Rejected { reason } = &job.admission {
                     println!("[mbs] jobs: '{}' rejected: {reason}", job.name);
+                }
+                if let Some(err) = &job.error {
+                    println!("[mbs] jobs: '{}' failed: {err}", job.name);
                 }
             }
         }
@@ -529,6 +557,14 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
         .num("wall_overlap_efficiency", set_stages.wall_overlap_efficiency(), 4)
         .num("arena_peak_mib", report.arena_peak_bytes as f64 / MIB as f64, 3)
         .num("total_wall_s", report.total_wall.as_secs_f64(), 6)
+        .field(
+            "resilience",
+            bench_report::resilience_value(
+                report.jobs.iter().map(|j| j.faults_injected).sum(),
+                report.jobs.iter().map(|j| j.retries).sum(),
+                report.jobs.iter().map(|j| j.recovered).sum(),
+            ),
+        )
         .field("jobs", jobs_train_value(&report));
     rep.write(&out)?;
     println!("[mbs] wrote {out}");
@@ -549,6 +585,7 @@ fn jobs_dry_run(
     set: &JobSet,
     capacity_bytes: u64,
     out: &str,
+    plan: Option<&FaultPlan>,
 ) -> Result<(), MbsError> {
     let manifest = if set.jobs.iter().any(|j| j.task.is_none()) {
         Some(Manifest::load(artifacts_dir(args))?)
@@ -615,14 +652,21 @@ fn jobs_dry_run(
     let mut rep = BenchReport::new("jobs", "dry-run");
     rep.uint("capacity_mib", capacity_bytes / MIB)
         .str_field("set_class", set_class.class_name())
-        .field("jobs", jobs_admission_value(&requests, &verdicts));
+        .field("jobs", jobs_admission_value(&requests, &verdicts, plan));
     rep.write(out)?;
     println!("[mbs] wrote {out}");
     Ok(())
 }
 
-/// The dry-run `jobs` array: one admission entry per job.
-fn jobs_admission_value(requests: &[AdmissionRequest], verdicts: &[JobAdmission]) -> JsonValue {
+/// The dry-run `jobs` array: one admission entry per job. With a fault
+/// plan (`--faults`), each entry also records the planned outcome and how
+/// many of the plan's fault specs target it — so CI can smoke-test a
+/// committed fault spec without artifacts.
+fn jobs_admission_value(
+    requests: &[AdmissionRequest],
+    verdicts: &[JobAdmission],
+    plan: Option<&FaultPlan>,
+) -> JsonValue {
     JsonValue::Arr(
         requests
             .iter()
@@ -633,6 +677,14 @@ fn jobs_admission_value(requests: &[AdmissionRequest], verdicts: &[JobAdmission]
                 j.push("model", JsonValue::Str(req.entry.name.clone()));
                 j.push("batch", JsonValue::UInt(req.batch as u64));
                 j.push("admission", JsonValue::Str(v.outcome.label().to_string()));
+                let admitted = matches!(v.outcome, AdmissionOutcome::Admitted { .. });
+                j.push(
+                    "outcome",
+                    JsonValue::Str(if admitted { "planned" } else { "rejected" }.into()),
+                );
+                if let Some(p) = plan {
+                    j.push("faults_planned", JsonValue::UInt(p.entries_for(&v.name) as u64));
+                }
                 j.push(
                     "lane",
                     JsonValue::Str(if req.overlap { "async" } else { "serial" }.into()),
@@ -677,6 +729,13 @@ fn jobs_train_value(report: &JobsReport) -> JsonValue {
                 let mut j = JsonValue::obj();
                 j.push("name", JsonValue::Str(job.name.clone()));
                 j.push("admission", JsonValue::Str(job.admission.label().to_string()));
+                j.push("outcome", JsonValue::Str(job.outcome.as_str().to_string()));
+                if let Some(err) = &job.error {
+                    j.push("error", JsonValue::Str(err.clone()));
+                }
+                j.push("faults_injected", JsonValue::UInt(job.faults_injected));
+                j.push("retries", JsonValue::UInt(job.retries));
+                j.push("recovered", JsonValue::UInt(job.recovered));
                 match (&job.report, &job.admission) {
                     (Some(r), AdmissionOutcome::Admitted { solo_mu, .. }) => {
                         let t = boundary_timing(r);

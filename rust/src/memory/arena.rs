@@ -33,6 +33,10 @@ pub(super) struct ArenaCore {
     pub(super) peak: u64,
     /// Tenant ledgers created so far (diagnostic).
     pub(super) tenants: usize,
+    /// One-shot armed fault: the next charge by the named tenant fails
+    /// with structured OOM even if it would fit (deterministic fault
+    /// injection — [`crate::runtime::faults`]). `(tenant, note)`.
+    pub(super) fault: Option<(String, String)>,
 }
 
 impl ArenaCore {
@@ -40,6 +44,22 @@ impl ArenaCore {
     /// OOM naming `tag` when the request does not fit *right now* — this
     /// failure path IS the every-instant cross-job capacity assertion.
     pub(super) fn charge(&mut self, tag: &str, bytes: u64) -> Result<()> {
+        // armed injected fault: tags carry the "{tenant}: {tag}" prefix
+        // (Ledger::alloc), so the match is per-tenant — sibling jobs'
+        // charges pass through untouched. One-shot: firing disarms.
+        let fault_hits = self
+            .fault
+            .as_ref()
+            .is_some_and(|(tenant, _)| tag.starts_with(&format!("{tenant}: ")));
+        if fault_hits {
+            let (_, note) = self.fault.take().unwrap_or_default();
+            return Err(MbsError::Oom {
+                needed_bytes: self.used.saturating_add(bytes),
+                available_bytes: self.capacity - self.used,
+                capacity_bytes: self.capacity,
+                context: format!("arena alloc '{tag}' (injected fault: {note})"),
+            });
+        }
         if self.used.saturating_add(bytes) > self.capacity {
             return Err(MbsError::Oom {
                 needed_bytes: self.used.saturating_add(bytes),
@@ -95,6 +115,7 @@ impl Arena {
                 used: 0,
                 peak: 0,
                 tenants: 0,
+                fault: None,
             })),
         }
     }
@@ -146,6 +167,19 @@ impl Arena {
     pub fn tenants(&self) -> usize {
         self.core.borrow().tenants
     }
+
+    /// Arm a one-shot injected fault: the *next* charge by `tenant` fails
+    /// with the structured OOM arithmetic (context flagged
+    /// `injected fault`), then the arm clears. Sibling tenants are
+    /// unaffected. Re-arming before the fault fires replaces the note.
+    pub fn arm_fault(&self, tenant: &str, note: &str) {
+        self.core.borrow_mut().fault = Some((tenant.to_string(), note.to_string()));
+    }
+
+    /// Is a fault currently armed (diagnostic / tests)?
+    pub fn fault_armed(&self) -> bool {
+        self.core.borrow().fault.is_some()
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +218,39 @@ mod tests {
         let err = a.alloc("resident", 11).unwrap_err();
         assert!(err.is_oom());
         assert!(err.to_string().contains("job-a"), "{err}");
+    }
+
+    #[test]
+    fn armed_fault_fires_once_for_its_tenant_only() {
+        let arena = Arena::new(100);
+        let mut a = arena.tenant("job-a");
+        let mut b = arena.tenant("job-b");
+        arena.arm_fault("job-a", "test transient");
+        assert!(arena.fault_armed());
+        // the sibling passes through untouched while the fault is armed
+        let rb = b.alloc("resident", 10).unwrap();
+        assert!(arena.fault_armed());
+        let err = a.alloc("resident", 10).unwrap_err();
+        assert!(err.is_oom(), "injected arena fault must be structured OOM: {err}");
+        assert!(err.recoverable());
+        let msg = err.to_string();
+        assert!(msg.contains("injected fault: test transient"), "{msg}");
+        assert!(msg.contains("job-a"), "{msg}");
+        // the OOM arithmetic reflects the real arena state at fire time
+        match err {
+            MbsError::Oom { needed_bytes, available_bytes, capacity_bytes, .. } => {
+                assert_eq!(needed_bytes, 20); // 10 live + 10 requested
+                assert_eq!(available_bytes, 90);
+                assert_eq!(capacity_bytes, 100);
+            }
+            other => panic!("want Oom, got {other:?}"),
+        }
+        // one-shot: the retry succeeds, and nothing was charged by the miss
+        assert!(!arena.fault_armed());
+        let ra = a.alloc("resident", 10).unwrap();
+        assert_eq!(arena.used(), 20);
+        a.free(ra).unwrap();
+        b.free(rb).unwrap();
     }
 
     #[test]

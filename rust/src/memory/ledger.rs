@@ -135,6 +135,28 @@ impl Ledger {
         self.live.len()
     }
 
+    /// Arm a one-shot injected fault against *this tenant's* next charge
+    /// ([`Arena::arm_fault`](super::Arena::arm_fault) with this ledger's
+    /// tenant name) — the deterministic-fault-injection entry point the
+    /// job executor uses.
+    pub fn inject_charge_fault(&self, note: &str) {
+        self.core.borrow_mut().fault = Some((self.tenant.clone(), note.to_string()));
+    }
+
+    /// Release every live allocation this tenant holds (recovery quiesce:
+    /// a faulted job hands its whole residency — reservation and any
+    /// leaked transients — back to the arena before re-planning).
+    /// Returns the bytes released.
+    pub fn release_all(&mut self) -> u64 {
+        let released = self.used;
+        if released > 0 {
+            self.core.borrow_mut().release(released);
+        }
+        self.live.clear();
+        self.used = 0;
+        released
+    }
+
     /// Tag breakdown of this tenant's live bytes, for diagnostics.
     pub fn by_tag(&self) -> BTreeMap<String, u64> {
         let mut out: BTreeMap<String, u64> = BTreeMap::new();
@@ -210,6 +232,40 @@ mod tests {
         let tags = l.by_tag();
         assert_eq!(tags["params"], 300);
         assert_eq!(tags["input"], 200);
+    }
+
+    #[test]
+    fn inject_charge_fault_is_tenant_scoped_and_one_shot() {
+        let arena = crate::memory::Arena::new(100);
+        let mut t = arena.tenant("victim");
+        let mut s = arena.tenant("sibling");
+        t.inject_charge_fault("simulated pressure");
+        let sid = s.alloc("x", 10).unwrap(); // sibling unaffected
+        let err = t.alloc("x", 10).unwrap_err();
+        assert!(err.is_oom());
+        assert!(err.to_string().contains("simulated pressure"), "{err}");
+        assert_eq!(t.used(), 0, "a refused charge must not count as live");
+        t.alloc("x", 10).unwrap(); // one-shot: retry passes
+        s.free(sid).unwrap();
+    }
+
+    #[test]
+    fn release_all_returns_everything_to_the_arena() {
+        let arena = crate::memory::Arena::new(100);
+        let mut t = arena.tenant("job");
+        let a = t.alloc("resident", 40).unwrap();
+        let _b = t.alloc("transient", 20).unwrap();
+        assert_eq!(arena.used(), 60);
+        assert_eq!(t.release_all(), 60);
+        assert_eq!(t.used(), 0);
+        assert_eq!(t.live_count(), 0);
+        assert_eq!(arena.used(), 0);
+        // freeing the stale ids after release_all is an error, not UB
+        assert!(t.free(a).is_err());
+        // the tenant is still usable afterwards (re-claim path)
+        let c = t.alloc("resident", 40).unwrap();
+        t.free(c).unwrap();
+        assert_eq!(t.release_all(), 0, "idempotent when nothing is live");
     }
 
     #[test]

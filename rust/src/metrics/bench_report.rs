@@ -228,6 +228,18 @@ pub fn stage_means_value(stages: &StageTimers, micro_steps: u64, updates: u64) -
     v
 }
 
+/// The shared `resilience` measurement object (schema: ARCHITECTURE.md):
+/// per-job fault-injection counters from the recovery state machine —
+/// faults the plan actually fired, recovery attempts consumed, and
+/// recoveries that completed (checkpoint restored, job resumed).
+pub fn resilience_value(faults_injected: u64, retries: u64, recovered: u64) -> JsonValue {
+    let mut v = JsonValue::obj();
+    v.push("faults_injected", JsonValue::UInt(faults_injected));
+    v.push("retries", JsonValue::UInt(retries));
+    v.push("recovered", JsonValue::UInt(recovered));
+    v
+}
+
 /// One compared metric in a trend check.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompareRow {

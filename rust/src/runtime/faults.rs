@@ -1,0 +1,379 @@
+//! Seeded, deterministic fault injection for the recovery state machine.
+//!
+//! A [`FaultPlan`] (`--faults spec.json`) names transient failures to
+//! inject at chosen `(job, step)` points so the checkpoint → release →
+//! re-plan → replay recovery path ([`crate::coordinator::trainer`]) can be
+//! exercised — and its bit-identity oracle proven — without a flaky
+//! device. Three [`FaultKind`]s cover the layers a real tenancy fault
+//! enters through:
+//!
+//!   - [`FaultKind::Arena`]: arms the shared [`Arena`](crate::memory::Arena)
+//!     so the job's *next* charge fails with the structured
+//!     [`MbsError::Oom`](crate::error::MbsError::Oom) arithmetic — the
+//!     memory-pressure path, exercising shrink-mu re-planning;
+//!   - [`FaultKind::Lane`]: the upload-lane worker reports a staging
+//!     failure for one micro-batch (surfaced at the consuming `recv` with
+//!     the job label, like every lane error);
+//!   - [`FaultKind::Step`]: the job loop fails before the device step —
+//!     the generic transient (a poisoned execution, a lost device).
+//!
+//! Determinism contract: a fault entry triggers either at an exact 0-based
+//! work-item attempt (`"at-step": n`) or by a seeded hash-Bernoulli draw
+//! (`"prob": p`, via [`crate::util::hash::fnv1a64`] over
+//! `"{seed}:{job}:{kind}:{attempt}"`). Attempt numbers count every work
+//! item a job *attempts*, monotonically across recoveries — a replayed
+//! step gets a fresh attempt number, so an `at-step` entry never re-fires
+//! during its own replay and `times` (default 1) bounds prob entries.
+
+use std::collections::BTreeMap;
+
+use crate::error::{MbsError, Result};
+use crate::util::hash::{fnv1a64, fraction};
+use crate::util::json::Json;
+
+/// Which layer an injected fault enters through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Arm the job's next arena charge to fail with structured OOM.
+    Arena,
+    /// Fail staging one micro-batch on the upload lane.
+    Lane,
+    /// Fail the job loop before a device step (generic transient).
+    Step,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "arena" => Some(FaultKind::Arena),
+            "lane" => Some(FaultKind::Lane),
+            "step" => Some(FaultKind::Step),
+            _ => None,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Arena => "arena",
+            FaultKind::Lane => "lane",
+            FaultKind::Step => "step",
+        }
+    }
+}
+
+/// When a fault entry fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Fire at exactly this 0-based work-item attempt.
+    AtStep(u64),
+    /// Fire per attempt with this probability (seeded hash-Bernoulli).
+    Prob(f64),
+}
+
+/// One fault entry of a plan: which job(s), which layer, when, how often.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Job name the entry applies to; `"*"` matches every job.
+    pub job: String,
+    /// Which layer the fault enters through.
+    pub kind: FaultKind,
+    /// When it fires.
+    pub trigger: Trigger,
+    /// Maximum firings per job (default 1; prob entries need a bound or a
+    /// job could never finish).
+    pub times: u64,
+}
+
+/// A parsed fault-injection plan (`--faults spec.json`).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed mixed into every probability draw.
+    pub seed: u64,
+    /// Recovery attempts per job before it is marked failed (default 3).
+    pub max_retries: u32,
+    /// Per-job linear backoff between retries, milliseconds (default 0).
+    pub backoff_ms: u64,
+    /// The fault entries, in spec order.
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse a plan from JSON text. Schema:
+    ///
+    /// ```json
+    /// {
+    ///   "seed": 7, "max_retries": 3, "backoff_ms": 0,
+    ///   "faults": [
+    ///     {"job": "*", "kind": "step", "at-step": 3},
+    ///     {"job": "cls", "kind": "arena", "prob": 0.05, "times": 2}
+    ///   ]
+    /// }
+    /// ```
+    ///
+    /// Exactly one of `at-step` / `prob` per entry; unknown kinds and
+    /// out-of-range probabilities are config errors.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let bad = |msg: String| MbsError::Config(format!("faults spec: {msg}"));
+        let doc = Json::parse(text).map_err(|e| bad(e.to_string()))?;
+        let seed = doc.get("seed").and_then(Json::as_u64).unwrap_or(0);
+        let max_retries = doc
+            .get("max_retries")
+            .or_else(|| doc.get("max-retries"))
+            .and_then(Json::as_u64)
+            .unwrap_or(3) as u32;
+        let backoff_ms = doc
+            .get("backoff_ms")
+            .or_else(|| doc.get("backoff-ms"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        let entries = doc
+            .get("faults")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing 'faults' array".into()))?;
+        let mut specs = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let job = e
+                .get("job")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad(format!("fault #{i}: missing 'job'")))?
+                .to_string();
+            let kind_s = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad(format!("fault #{i}: missing 'kind'")))?;
+            let kind = FaultKind::parse(kind_s).ok_or_else(|| {
+                bad(format!(
+                    "fault #{i}: unknown kind '{kind_s}' (want arena | lane | step)"
+                ))
+            })?;
+            let at = e.get("at-step").or_else(|| e.get("at_step")).and_then(Json::as_u64);
+            let prob = e.get("prob").and_then(Json::as_f64);
+            let trigger = match (at, prob) {
+                (Some(n), None) => Trigger::AtStep(n),
+                (None, Some(p)) if (0.0..=1.0).contains(&p) => Trigger::Prob(p),
+                (None, Some(p)) => {
+                    return Err(bad(format!("fault #{i}: prob {p} outside [0, 1]")))
+                }
+                _ => {
+                    return Err(bad(format!(
+                        "fault #{i}: exactly one of 'at-step' / 'prob' required"
+                    )))
+                }
+            };
+            let times = e.get("times").and_then(Json::as_u64).unwrap_or(1);
+            if times == 0 {
+                return Err(bad(format!("fault #{i}: times must be positive")));
+            }
+            specs.push(FaultSpec { job, kind, trigger, times });
+        }
+        Ok(FaultPlan { seed, max_retries, backoff_ms, specs })
+    }
+
+    /// Load a plan from a JSON file.
+    pub fn load(path: &str) -> Result<FaultPlan> {
+        FaultPlan::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// The per-job hook view: the entries matching `job` (by name or
+    /// `"*"`), each with its own firing budget. Sibling jobs' hooks are
+    /// independent — a wildcard entry fires up to `times` per job.
+    pub fn hooks_for(&self, job: &str) -> FaultHooks {
+        let entries = self
+            .specs
+            .iter()
+            .filter(|s| s.job == "*" || s.job == job)
+            .map(|s| Armed { kind: s.kind, trigger: s.trigger, remaining: s.times })
+            .collect();
+        FaultHooks { seed: self.seed, job: job.to_string(), entries, injected: 0 }
+    }
+
+    /// How many plan entries apply to `job` (dry-run attribution).
+    pub fn entries_for(&self, job: &str) -> usize {
+        self.specs.iter().filter(|s| s.job == "*" || s.job == job).count()
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Armed {
+    kind: FaultKind,
+    trigger: Trigger,
+    remaining: u64,
+}
+
+/// One job's live view of a [`FaultPlan`]: the executor consults it once
+/// per work-item attempt and per layer. Default ([`FaultHooks::none`]) is
+/// empty — every check is a cheap no-op.
+#[derive(Debug, Clone, Default)]
+pub struct FaultHooks {
+    seed: u64,
+    job: String,
+    entries: Vec<Armed>,
+    injected: u64,
+}
+
+impl FaultHooks {
+    /// Hooks that never fire (no `--faults` plan configured).
+    pub fn none() -> FaultHooks {
+        FaultHooks::default()
+    }
+
+    /// Does this job have any fault entries at all?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Should a `kind` fault fire at work-item `attempt`? Consumes one
+    /// firing from the first matching armed entry and returns the
+    /// diagnostic note to thread into the error.
+    pub fn check(&mut self, kind: FaultKind, attempt: u64) -> Option<String> {
+        for entry in self.entries.iter_mut() {
+            if entry.kind != kind || entry.remaining == 0 {
+                continue;
+            }
+            let fires = match entry.trigger {
+                Trigger::AtStep(n) => n == attempt,
+                Trigger::Prob(p) => {
+                    let key =
+                        format!("{}:{}:{}:{attempt}", self.seed, self.job, kind.name());
+                    fraction(fnv1a64(key.as_bytes())) < p
+                }
+            };
+            if fires {
+                entry.remaining -= 1;
+                self.injected += 1;
+                return Some(format!(
+                    "{} fault for job '{}' at attempt {attempt}",
+                    kind.name(),
+                    self.job
+                ));
+            }
+        }
+        None
+    }
+
+    /// Total faults this job's hooks have fired so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Remaining firing budget per kind (diagnostics / tests).
+    pub fn remaining(&self) -> BTreeMap<&'static str, u64> {
+        let mut out = BTreeMap::new();
+        for e in &self.entries {
+            *out.entry(e.kind.name()).or_default() += e.remaining;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"{
+        "seed": 7, "max_retries": 2, "backoff_ms": 0,
+        "faults": [
+            {"job": "*", "kind": "step", "at-step": 3},
+            {"job": "cls", "kind": "arena", "prob": 0.5, "times": 2},
+            {"job": "seg", "kind": "lane", "at-step": 0}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_full_spec() {
+        let plan = FaultPlan::parse(SPEC).unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.max_retries, 2);
+        assert_eq!(plan.backoff_ms, 0);
+        assert_eq!(plan.specs.len(), 3);
+        assert_eq!(plan.specs[0].job, "*");
+        assert_eq!(plan.specs[0].kind, FaultKind::Step);
+        assert_eq!(plan.specs[0].trigger, Trigger::AtStep(3));
+        assert_eq!(plan.specs[1].times, 2);
+        // attribution: the wildcard applies to both, the named ones to one
+        assert_eq!(plan.entries_for("cls"), 2);
+        assert_eq!(plan.entries_for("seg"), 2);
+        assert_eq!(plan.entries_for("other"), 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        let bad = |s: &str| FaultPlan::parse(s).unwrap_err().to_string();
+        assert!(bad(r#"{"faults": [{"job": "a", "kind": "bogus", "at-step": 0}]}"#)
+            .contains("unknown kind"));
+        assert!(bad(r#"{"faults": [{"job": "a", "kind": "step"}]}"#)
+            .contains("exactly one of"));
+        assert!(bad(
+            r#"{"faults": [{"job": "a", "kind": "step", "at-step": 0, "prob": 0.5}]}"#
+        )
+        .contains("exactly one of"));
+        assert!(bad(r#"{"faults": [{"job": "a", "kind": "step", "prob": 1.5}]}"#)
+            .contains("outside"));
+        assert!(bad(r#"{"faults": [{"job": "a", "kind": "step", "at-step": 1, "times": 0}]}"#)
+            .contains("times must be positive"));
+        assert!(bad(r#"{"seed": 1}"#).contains("missing 'faults'"));
+        assert!(FaultPlan::parse("not json").is_err());
+    }
+
+    #[test]
+    fn at_step_fires_exactly_once_at_its_attempt() {
+        let plan = FaultPlan::parse(SPEC).unwrap();
+        let mut hooks = plan.hooks_for("anyjob");
+        assert!(hooks.check(FaultKind::Step, 0).is_none());
+        assert!(hooks.check(FaultKind::Step, 2).is_none());
+        // wrong kind never matches
+        assert!(hooks.check(FaultKind::Arena, 3).is_none());
+        let note = hooks.check(FaultKind::Step, 3).expect("fires at attempt 3");
+        assert!(note.contains("step fault"), "{note}");
+        assert!(note.contains("anyjob"), "{note}");
+        // budget exhausted: a replayed attempt 3 cannot re-fire
+        assert!(hooks.check(FaultKind::Step, 3).is_none());
+        assert_eq!(hooks.injected(), 1);
+    }
+
+    #[test]
+    fn prob_draws_are_deterministic_and_bounded_by_times() {
+        let plan = FaultPlan::parse(SPEC).unwrap();
+        let fire = |hooks: &mut FaultHooks| {
+            (0..200).filter(|&a| hooks.check(FaultKind::Arena, a).is_some()).count()
+        };
+        let mut a = plan.hooks_for("cls");
+        let mut b = plan.hooks_for("cls");
+        let fired_a: Vec<u64> =
+            (0..200).filter(|&i| a.check(FaultKind::Arena, i + 1000).is_some()).collect();
+        let fired_b: Vec<u64> =
+            (0..200).filter(|&i| b.check(FaultKind::Arena, i + 1000).is_some()).collect();
+        assert_eq!(fired_a, fired_b, "same seed, same job: same draws");
+        assert_eq!(fired_a.len(), 2, "times caps prob firings");
+        // a different seed moves the draws
+        let mut other_seed = FaultPlan { seed: 999, ..plan.clone() }.hooks_for("cls");
+        let _ = fire(&mut other_seed); // deterministic, just different
+        // a job the arena entry doesn't name never fires it
+        let mut seg = plan.hooks_for("seg");
+        assert_eq!(
+            (0..200).filter(|&a| seg.check(FaultKind::Arena, a).is_some()).count(),
+            0
+        );
+    }
+
+    #[test]
+    fn none_hooks_never_fire() {
+        let mut hooks = FaultHooks::none();
+        assert!(hooks.is_empty());
+        for a in 0..50 {
+            assert!(hooks.check(FaultKind::Step, a).is_none());
+            assert!(hooks.check(FaultKind::Arena, a).is_none());
+            assert!(hooks.check(FaultKind::Lane, a).is_none());
+        }
+        assert_eq!(hooks.injected(), 0);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let plan = FaultPlan::parse(r#"{"faults": []}"#).unwrap();
+        assert_eq!(plan.seed, 0);
+        assert_eq!(plan.max_retries, 3);
+        assert_eq!(plan.backoff_ms, 0);
+        assert!(plan.hooks_for("x").is_empty());
+    }
+}

@@ -13,9 +13,11 @@
 
 pub mod buffers;
 pub mod checkpoint;
+pub mod faults;
 pub mod model;
 pub mod upload_lane;
 
+pub use faults::{FaultHooks, FaultKind, FaultPlan};
 pub use model::{ModelRuntime, StepOutput};
 pub use upload_lane::{LaneJob, StagedBatch, UploadLane};
 

@@ -475,6 +475,18 @@ impl ModelRuntime {
         self.slot_staged -= 1;
     }
 
+    /// Abandon every staged-but-unexecuted micro-batch and reset the
+    /// ping-pong to its initial state (recovery quiesce: a faulted job
+    /// drains its pipeline before replaying from a checkpoint, so no
+    /// stale input pairs with a replayed step). The per-slot upload
+    /// timers are preserved — wall time was genuinely spent.
+    pub fn reset_pipeline(&mut self) {
+        self.input_slots[0].release();
+        self.input_slots[1].release();
+        self.slot_head = 0;
+        self.slot_staged = 0;
+    }
+
     /// Run one micro-batch accumulation step (fwd + bwd + grad accumulate):
     /// the serial stage-then-execute fusion, one slot live at a time.
     /// `scale` is the loss-normalization factor chosen by the coordinator.

@@ -24,7 +24,15 @@
 //! returning every leased buffer to the pool — and is then joined, so an
 //! early epoch abort can neither hang nor leak a lease. A staging error
 //! recycles the offending lease on the worker and reaches the consumer as
-//! the `Err` of the completion that would have carried the slot.
+//! the `Err` of the completion that would have carried the slot — labeled
+//! with the owning job's name (the same tenant-naming contract the arena
+//! uses), so a multi-tenant failure names its tenant.
+//!
+//! Fault injection: a [`LaneJob`] may carry an injected staging fault
+//! ([`crate::runtime::faults`]); the worker recycles the lease and reports
+//! it like any staging error, but the consumer's `recv` maps it to the
+//! *recoverable* [`MbsError::Fault`] — genuine staging errors stay
+//! [`MbsError::Runtime`] (deterministic, fatal).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -45,6 +53,11 @@ pub struct LaneJob {
     pub mb: MicroBatchHost,
     /// Loss-normalization scale for this micro-batch (`None` for eval).
     pub scale: Option<f32>,
+    /// Injected staging fault for this micro-batch (deterministic fault
+    /// injection): the worker fails the job with this note instead of
+    /// staging it, and `recv` surfaces a recoverable
+    /// [`MbsError::Fault`]. `None` (the normal case) stages as usual.
+    pub fault: Option<String>,
 }
 
 /// A staged micro-batch handed back by the lane, ready for the engine
@@ -70,7 +83,15 @@ pub struct StagedBatch {
 #[derive(Debug)]
 struct Completion {
     seq: u64,
-    result: std::result::Result<StagedBatch, String>,
+    result: std::result::Result<StagedBatch, StagingError>,
+}
+
+/// A worker-side staging failure: the message plus whether it was an
+/// injected fault (recoverable) or a genuine validation error (fatal).
+#[derive(Debug)]
+struct StagingError {
+    msg: String,
+    injected: bool,
 }
 
 /// Handle to the upload-lane worker thread. Submissions and completions
@@ -88,6 +109,9 @@ pub struct UploadLane {
     handle: Option<thread::JoinHandle<()>>,
     /// The shared staging pool (to recycle a job the worker never saw).
     pool: Arc<BufPool>,
+    /// Owning job's name, prefixed onto every lane error (the tenant-
+    /// naming contract the arena's OOM contexts follow).
+    label: String,
 }
 
 impl UploadLane {
@@ -102,8 +126,11 @@ impl UploadLane {
 
     /// Spawn the lane worker over channels bounded at `depth` (clamped to
     /// at least 1). Staging copies are leased from — and every buffer is
-    /// eventually returned to — `pool`.
-    pub fn spawn(pool: Arc<BufPool>, depth: usize) -> UploadLane {
+    /// eventually returned to — `pool`. `label` names the owning job in
+    /// every error this lane surfaces. Spawn failure (thread exhaustion)
+    /// is a structured error, not a panic — a recovering job re-spawning
+    /// its lane must never take the whole arena down.
+    pub fn spawn(pool: Arc<BufPool>, depth: usize, label: &str) -> Result<UploadLane> {
         let depth = depth.max(1);
         let (jobs_tx, jobs_rx) = mpsc::sync_channel::<LaneJob>(depth);
         let (done_tx, done_rx) = mpsc::sync_channel::<Completion>(depth);
@@ -114,24 +141,29 @@ impl UploadLane {
                 // once the consumer is gone there is no one to stage for:
                 // keep draining, but only to return leases to the pool
                 let mut draining = false;
-                while let Ok(LaneJob { seq, mb, scale }) = jobs_rx.recv() {
+                while let Ok(LaneJob { seq, mb, scale, fault }) = jobs_rx.recv() {
                     if draining {
                         worker_pool.give(mb);
                         continue;
                     }
                     let started = Instant::now();
-                    let result = match validate(&mb) {
-                        Err(msg) => {
-                            worker_pool.give(mb); // an error never leaks the lease
-                            Err(msg)
-                        }
-                        Ok(()) => {
-                            let mut staged = worker_pool.lease();
-                            stage_copy(&mut staged, &mb);
-                            // the original re-enters circulation immediately:
-                            // assembly is no longer paced by the device
-                            worker_pool.give(mb);
-                            Ok(staged)
+                    let result = if let Some(note) = fault {
+                        worker_pool.give(mb); // a fault never leaks the lease
+                        Err(StagingError { msg: note, injected: true })
+                    } else {
+                        match validate(&mb) {
+                            Err(msg) => {
+                                worker_pool.give(mb); // nor does an error
+                                Err(StagingError { msg, injected: false })
+                            }
+                            Ok(()) => {
+                                let mut staged = worker_pool.lease();
+                                stage_copy(&mut staged, &mb);
+                                // the original re-enters circulation immediately:
+                                // assembly is no longer paced by the device
+                                worker_pool.give(mb);
+                                Ok(staged)
+                            }
                         }
                     };
                     let finished = Instant::now();
@@ -150,8 +182,16 @@ impl UploadLane {
                     }
                 }
             })
-            .expect("spawn upload-lane thread");
-        UploadLane { jobs: Some(jobs_tx), done: Some(done_rx), handle: Some(handle), pool }
+            .map_err(|e| {
+                MbsError::Runtime(format!("{label}: spawning upload-lane thread failed: {e}"))
+            })?;
+        Ok(UploadLane {
+            jobs: Some(jobs_tx),
+            done: Some(done_rx),
+            handle: Some(handle),
+            pool,
+            label: label.to_string(),
+        })
     }
 
     /// Queue a micro-batch for staging. Blocks once `depth` jobs are
@@ -160,13 +200,14 @@ impl UploadLane {
     /// error is reported here rather than at the next `recv`.
     pub fn submit(&mut self, job: LaneJob) -> Result<()> {
         let jobs = self.jobs.as_ref().ok_or_else(|| {
-            MbsError::Runtime("upload lane already shut down".to_string())
+            MbsError::Runtime(format!("{}: upload lane already shut down", self.label))
         })?;
         if let Err(mpsc::SendError(job)) = jobs.send(job) {
             self.pool.give(job.mb);
-            return Err(MbsError::Runtime(
-                "upload lane worker disconnected before accepting a job".to_string(),
-            ));
+            return Err(MbsError::Runtime(format!(
+                "{}: upload lane worker disconnected before accepting a job",
+                self.label
+            )));
         }
         Ok(())
     }
@@ -176,17 +217,24 @@ impl UploadLane {
     /// the step that would have consumed the slot.
     pub fn recv(&mut self) -> Result<StagedBatch> {
         let done = self.done.as_ref().ok_or_else(|| {
-            MbsError::Runtime("upload lane already shut down".to_string())
+            MbsError::Runtime(format!("{}: upload lane already shut down", self.label))
         })?;
         match done.recv() {
             Ok(Completion { result: Ok(staged), .. }) => Ok(staged),
-            Ok(Completion { seq, result: Err(msg) }) => Err(MbsError::Runtime(format!(
-                "upload lane: staging micro-batch {seq} failed: {msg}"
+            Ok(Completion { seq, result: Err(e) }) => {
+                let msg = format!(
+                    "{}: upload lane: staging micro-batch {seq} failed: {}",
+                    self.label, e.msg
+                );
+                // injected faults are transient by construction — the
+                // recovery state machine retries them; genuine staging
+                // errors would replay identically, so they stay fatal
+                Err(if e.injected { MbsError::Fault(msg) } else { MbsError::Runtime(msg) })
+            }
+            Err(_) => Err(MbsError::Runtime(format!(
+                "{}: upload lane worker exited before completing a staged micro-batch",
+                self.label
             ))),
-            Err(_) => Err(MbsError::Runtime(
-                "upload lane worker exited before completing a staged micro-batch"
-                    .to_string(),
-            )),
         }
     }
 }
@@ -284,10 +332,10 @@ mod tests {
     fn staged_copies_are_byte_identical_and_fifo() {
         let ds = SynthFlowers::new(8, 10, 40, 1);
         let pool = Arc::new(BufPool::bounded(16));
-        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let mut lane = UploadLane::spawn(pool.clone(), 2, "test-job").unwrap();
         let originals = assembled(&ds, 20, 8); // 8 + 8 + 4 (ragged tail)
         for (seq, mb) in originals.iter().enumerate() {
-            lane.submit(LaneJob { seq: seq as u64, mb: mb.clone(), scale: Some(0.25) })
+            lane.submit(LaneJob { seq: seq as u64, mb: mb.clone(), scale: Some(0.25), fault: None })
                 .unwrap();
         }
         for (seq, original) in originals.iter().enumerate() {
@@ -314,13 +362,13 @@ mod tests {
     fn shutdown_on_drop_drains_queued_jobs_without_leaking() {
         let ds = SynthFlowers::new(8, 10, 64, 1);
         let pool = Arc::new(BufPool::bounded(32));
-        let mut lane = UploadLane::spawn(pool.clone(), 1);
+        let mut lane = UploadLane::spawn(pool.clone(), 1, "test-job").unwrap();
         // submit more than the channel depth so some jobs are still queued
         // (and the worker may be parked on a full completion send)
         let originals = assembled(&ds, 64, 8);
         let n = originals.len() as u64;
         for (seq, mb) in originals.into_iter().enumerate() {
-            lane.submit(LaneJob { seq: seq as u64, mb, scale: None }).unwrap();
+            lane.submit(LaneJob { seq: seq as u64, mb, scale: None, fault: None }).unwrap();
         }
         drop(lane); // must join, not hang, with completions never consumed
         let s = pool.stats();
@@ -332,7 +380,7 @@ mod tests {
     #[test]
     fn staging_error_propagates_and_recycles_the_lease() {
         let pool = Arc::new(BufPool::bounded(4));
-        let mut lane = UploadLane::spawn(pool.clone(), 1);
+        let mut lane = UploadLane::spawn(pool.clone(), 1, "test-job").unwrap();
         // a corrupt micro-batch: claims more live samples than its mask
         let corrupt = MicroBatchHost {
             x: Buf::F32(vec![0.0; 8]),
@@ -341,7 +389,7 @@ mod tests {
             actual: 5,
             j: 0,
         };
-        lane.submit(LaneJob { seq: 7, mb: corrupt, scale: None }).unwrap();
+        lane.submit(LaneJob { seq: 7, mb: corrupt, scale: None, fault: None }).unwrap();
         let err = lane.recv().expect_err("corrupt batch must fail staging");
         let msg = err.to_string();
         assert!(msg.contains("micro-batch 7"), "{msg}");
@@ -352,16 +400,61 @@ mod tests {
         // the lane is still alive and stages good batches afterwards
         let ds = SynthFlowers::new(8, 10, 8, 1);
         let good = assembled(&ds, 8, 8).remove(0);
-        lane.submit(LaneJob { seq: 8, mb: good, scale: None }).unwrap();
+        lane.submit(LaneJob { seq: 8, mb: good, scale: None, fault: None }).unwrap();
         let staged = lane.recv().expect("lane survives an error");
         assert_eq!(staged.seq, 8);
         pool.give(staged.mb);
     }
 
     #[test]
+    fn injected_fault_is_recoverable_and_labeled_with_the_tenant() {
+        let ds = SynthFlowers::new(8, 10, 8, 1);
+        let pool = Arc::new(BufPool::bounded(4));
+        let mut lane = UploadLane::spawn(pool.clone(), 1, "job-cls").unwrap();
+        let good = assembled(&ds, 8, 8).remove(0);
+        lane.submit(LaneJob {
+            seq: 3,
+            mb: good,
+            scale: Some(0.5),
+            fault: Some("lane fault for job 'job-cls' at attempt 3".into()),
+        })
+        .unwrap();
+        let err = lane.recv().expect_err("injected fault must fail the completion");
+        assert!(err.recoverable(), "injected lane faults must be retryable: {err}");
+        assert!(matches!(err, MbsError::Fault(_)), "{err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("job-cls:"), "tenant label missing: {msg}");
+        assert!(msg.contains("micro-batch 3"), "{msg}");
+        // the lease went back despite the fault, and the lane survives
+        assert_eq!(pool.stats().returns, 1);
+        let again = assembled(&ds, 8, 8).remove(0);
+        lane.submit(LaneJob { seq: 4, mb: again, scale: None, fault: None }).unwrap();
+        let staged = lane.recv().expect("lane survives an injected fault");
+        assert_eq!(staged.seq, 4);
+        pool.give(staged.mb);
+    }
+
+    #[test]
+    fn genuine_staging_error_is_not_recoverable() {
+        let pool = Arc::new(BufPool::bounded(4));
+        let mut lane = UploadLane::spawn(pool, 1, "job-seg").unwrap();
+        let corrupt = MicroBatchHost {
+            x: Buf::F32(vec![0.0; 8]),
+            y: Buf::I32(vec![0; 2]),
+            mask: vec![1.0, 1.0],
+            actual: 5,
+            j: 0,
+        };
+        lane.submit(LaneJob { seq: 0, mb: corrupt, scale: None, fault: None }).unwrap();
+        let err = lane.recv().expect_err("corrupt batch fails");
+        assert!(!err.recoverable(), "validation errors are deterministic: {err}");
+        assert!(err.to_string().contains("job-seg:"), "{err}");
+    }
+
+    #[test]
     fn mask_padding_mismatch_is_a_staging_error() {
         let pool = Arc::new(BufPool::bounded(4));
-        let mut lane = UploadLane::spawn(pool, 1);
+        let mut lane = UploadLane::spawn(pool, 1, "test-job").unwrap();
         let bad_mask = MicroBatchHost {
             x: Buf::F32(vec![0.0; 8]),
             y: Buf::I32(vec![0; 4]),
@@ -369,7 +462,7 @@ mod tests {
             actual: 2,
             j: 0,
         };
-        lane.submit(LaneJob { seq: 0, mb: bad_mask, scale: None }).unwrap();
+        lane.submit(LaneJob { seq: 0, mb: bad_mask, scale: None, fault: None }).unwrap();
         let msg = lane.recv().expect_err("mask hole must fail").to_string();
         assert!(msg.contains("mask[1]"), "{msg}");
     }
@@ -382,13 +475,14 @@ mod tests {
         let pool = Arc::new(BufPool::bounded(UploadLane::extra_buffers(2) + 4));
         pool.warm(UploadLane::extra_buffers(2) + 4, &ds, 4);
         for epoch in 0..50 {
-            let mut lane = UploadLane::spawn(pool.clone(), 2);
+            let mut lane = UploadLane::spawn(pool.clone(), 2, "test-job").unwrap();
             let mbs_list = assembled(&ds, 24, 4);
             let n = mbs_list.len();
             for (seq, mb) in mbs_list.into_iter().enumerate() {
                 let mut leased = pool.lease();
                 stage_copy(&mut leased, &mb);
-                lane.submit(LaneJob { seq: seq as u64, mb: leased, scale: None }).unwrap();
+                lane.submit(LaneJob { seq: seq as u64, mb: leased, scale: None, fault: None })
+                    .unwrap();
                 // consume every other completion promptly; leave the rest
                 // queued so some epochs drop the lane with a full channel
                 if seq % 2 == 0 {

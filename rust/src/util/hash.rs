@@ -1,0 +1,90 @@
+//! FNV-1a 64-bit hashing (offline build: hand-rolled, no external crates).
+//!
+//! Two consumers, both needing *stable* (cross-run, cross-platform) hashes
+//! rather than HashMap-grade ones:
+//!   - checkpoint payload checksums ([`crate::runtime::checkpoint`]): the
+//!     metadata records the FNV-1a digest of the `.bin` payload so a
+//!     truncated or bit-flipped checkpoint fails structurally on load
+//!     instead of restoring garbage parameters;
+//!   - deterministic fault sampling ([`crate::runtime::faults`]): a
+//!     probability-triggered fault fires iff the digest of
+//!     `"{seed}:{job}:{kind}:{attempt}"` falls below the threshold, so the
+//!     same plan replays the same faults on every run.
+
+/// The FNV-1a 64-bit digest of `bytes`.
+///
+/// ```
+/// use mbs::util::hash::fnv1a64;
+/// assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+/// assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+/// ```
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Map a digest to a uniform fraction in `[0, 1)` for threshold
+/// comparisons against a probability.
+///
+/// FNV-1a's avalanche is weak for short inputs — keys differing only in
+/// a trailing counter produce digests whose *high* bits barely move — so
+/// the digest is first run through the splitmix64 finalizer (a bijective
+/// xorshift-multiply mixer) before the top 53 bits (the full f64
+/// mantissa) are taken. Without the finalizer, per-entry fault draws
+/// degenerate to all-or-nothing across attempts.
+pub fn fraction(digest: u64) -> f64 {
+    let mut z = digest;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // reference vectors from the FNV spec's test suite
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fraction_in_unit_interval() {
+        for digest in [0u64, 1, u64::MAX, 0xcbf29ce484222325] {
+            let f = fraction(digest);
+            assert!((0.0..1.0).contains(&f), "fraction({digest}) = {f}");
+        }
+        assert_eq!(fraction(0), 0.0);
+    }
+
+    #[test]
+    fn fraction_decorrelates_counter_keys() {
+        // the property the fault sampler depends on: digests of keys that
+        // differ only in a trailing counter must land on both sides of a
+        // 0.5 threshold, not cluster (FNV-1a's raw high bits cluster)
+        let draws = (0..200)
+            .filter(|a| fraction(fnv1a64(format!("7:cls:arena:{a}").as_bytes())) < 0.5)
+            .count();
+        assert!((60..140).contains(&draws), "biased draws: {draws}/200 below 0.5");
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_digest() {
+        let base = fnv1a64(b"checkpoint payload");
+        let mut flipped = b"checkpoint payload".to_vec();
+        flipped[3] ^= 1;
+        assert_ne!(base, fnv1a64(&flipped));
+        // truncation changes it too (the checksum's whole job)
+        assert_ne!(base, fnv1a64(&b"checkpoint payload"[..8]));
+    }
+}

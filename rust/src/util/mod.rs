@@ -3,6 +3,7 @@
 //! plus small stats helpers and the shared terminal-table renderer.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

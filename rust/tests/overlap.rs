@@ -176,7 +176,7 @@ fn lane_early_abort_returns_every_pool_lease() {
     let planner = Planner::new(8, false, NormalizationMode::Paper);
     let plan = EpochPlan::new(64, 16, 0, 0);
     {
-        let mut lane = UploadLane::spawn(pool.clone(), 2);
+        let mut lane = UploadLane::spawn(pool.clone(), 2, "overlap-test").expect("spawn lane");
         let mut seq = 0u64;
         for (i, item) in stream_epoch(
             StreamingPolicy::Synchronous,
@@ -188,7 +188,8 @@ fn lane_early_abort_returns_every_pool_lease() {
         )
         .enumerate()
         {
-            lane.submit(LaneJob { seq, mb: item.mb, scale: Some(1.0) }).expect("submit");
+            lane.submit(LaneJob { seq, mb: item.mb, scale: Some(1.0), fault: None })
+                .expect("submit");
             seq += 1;
             if i == 2 {
                 // consume one completion so the abort also covers a

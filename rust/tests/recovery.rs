@@ -1,0 +1,336 @@
+//! Fault-injection + recovery tests (artifact-gated, see
+//! rust/docs/TESTING.md): the headline oracle is that a run which faults
+//! and recovers — checkpoint at the last update boundary, residency
+//! released, mu re-planned, replay from the checkpoint — produces a final
+//! `TrainReport` bit-identical to the fault-free run. Plus graceful
+//! degradation (a retry-exhausted job is evicted while its sibling
+//! finishes) and the `--checkpoint` / `--resume` round trip.
+
+mod common;
+
+use std::path::PathBuf;
+
+use mbs::coordinator::JobOutcome;
+use mbs::runtime::FaultPlan;
+use mbs::{MicroBatchSpec, TrainConfig};
+
+/// Write a fault spec to a unique temp file and return its path.
+fn fault_spec(tag: &str, body: &str) -> PathBuf {
+    let path =
+        std::env::temp_dir().join(format!("mbs-faults-{}-{tag}.json", std::process::id()));
+    std::fs::write(&path, body).expect("write fault spec");
+    path
+}
+
+/// A small solo configuration (mirrors the jobs.rs fixture scale).
+fn solo_cfg(overlap: bool) -> TrainConfig {
+    TrainConfig::builder("microresnet18")
+        .batch(24)
+        .epochs(2)
+        .dataset_len(48)
+        .eval_len(16)
+        .seed(3)
+        .overlap(overlap)
+        .build()
+}
+
+/// Assert two TrainReports agree bit-for-bit on everything deterministic.
+fn assert_reports_identical(a: &mbs::TrainReport, b: &mbs::TrainReport, what: &str) {
+    assert_eq!(a.mu, b.mu, "{what}: mu");
+    assert_eq!(a.updates, b.updates, "{what}: updates");
+    assert_eq!(a.train_epochs.len(), b.train_epochs.len(), "{what}");
+    for (x, y) in a.train_epochs.iter().zip(&b.train_epochs) {
+        assert_eq!(
+            x.mean_loss.to_bits(),
+            y.mean_loss.to_bits(),
+            "{what}: epoch {} train loss diverged: {} vs {}",
+            x.epoch,
+            x.mean_loss,
+            y.mean_loss
+        );
+        assert_eq!(x.primary_metric.to_bits(), y.primary_metric.to_bits(), "{what}");
+        assert_eq!(x.micro_steps, y.micro_steps, "{what}");
+        assert_eq!(x.updates, y.updates, "{what}");
+    }
+    for (x, y) in a.eval_epochs.iter().zip(&b.eval_epochs) {
+        assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits(), "{what}: eval");
+    }
+    assert_eq!(
+        a.final_eval.mean_loss.to_bits(),
+        b.final_eval.mean_loss.to_bits(),
+        "{what}: final eval"
+    );
+    assert_eq!(
+        a.final_eval.primary_metric.to_bits(),
+        b.final_eval.primary_metric.to_bits(),
+        "{what}: final metric"
+    );
+}
+
+#[test]
+fn solo_step_fault_recovery_is_bit_identical() {
+    // THE oracle: inject a transient step failure mid-epoch; the recovery
+    // state machine checkpoints, releases, re-plans and replays — and the
+    // final report must be indistinguishable from the fault-free run
+    let Some(mut engine) = common::engine() else { return };
+    let clean = mbs::train(&mut engine, &solo_cfg(false)).expect("fault-free run");
+
+    let spec = fault_spec(
+        "solo-step",
+        r#"{"seed": 7, "max_retries": 3,
+            "faults": [{"job": "*", "kind": "step", "at-step": 3}]}"#,
+    );
+    let mut cfg = solo_cfg(false);
+    cfg.faults = Some(spec.to_string_lossy().into_owned());
+    let faulted = mbs::train(&mut engine, &cfg).expect("faulted run must recover");
+    assert_reports_identical(&clean, &faulted, "step-fault recovery");
+    std::fs::remove_file(&spec).ok();
+}
+
+#[test]
+fn solo_arena_and_lane_faults_recover_bit_identical() {
+    // the other two injection layers: a refused arena charge (structured
+    // OOM, the shrink-mu pressure path) and an upload-lane staging error
+    // (async mode only) — same oracle, same recovery machinery
+    let Some(mut engine) = common::engine() else { return };
+    for (tag, overlap, body) in [
+        (
+            "solo-arena",
+            false,
+            r#"{"seed": 7, "faults": [{"job": "*", "kind": "arena", "at-step": 5}]}"#,
+        ),
+        (
+            "solo-lane",
+            true,
+            r#"{"seed": 7, "faults": [{"job": "*", "kind": "lane", "at-step": 2}]}"#,
+        ),
+    ] {
+        let clean = mbs::train(&mut engine, &solo_cfg(overlap)).expect("fault-free run");
+        let spec = fault_spec(tag, body);
+        let mut cfg = solo_cfg(overlap);
+        cfg.faults = Some(spec.to_string_lossy().into_owned());
+        let faulted = mbs::train(&mut engine, &cfg).expect("faulted run must recover");
+        assert_reports_identical(&clean, &faulted, tag);
+        std::fs::remove_file(&spec).ok();
+    }
+}
+
+/// The jobs.rs heterogeneous fixture, rebuilt here (serial lanes).
+fn heterogeneous_set(engine: &mbs::Engine) -> (mbs::JobSet, u64) {
+    use mbs::coordinator::tenancy::{resident_claim, transient_bytes, JobSpec};
+    use mbs::memory::Footprint;
+    let rn = engine.manifest().model("microresnet18").unwrap().clone();
+    let un = engine.manifest().model("microunet").unwrap().clone();
+    let fp_rn = Footprint::from_manifest(&rn, rn.variant(16, 8).unwrap());
+    let fp_un = Footprint::from_manifest(&un, un.variant(24, 8).unwrap());
+    let claim = resident_claim(&rn, 16).unwrap() + resident_claim(&un, 24).unwrap();
+    let transient = transient_bytes(&fp_rn, 8, 24, 16, false)
+        .max(transient_bytes(&fp_un, 8, 16, 8, false));
+    let capacity = claim + transient;
+    let cls = TrainConfig::builder("microresnet18")
+        .batch(24)
+        .epochs(2)
+        .dataset_len(48)
+        .eval_len(16)
+        .seed(3)
+        .overlap(false)
+        .build();
+    let seg = TrainConfig::builder("microunet")
+        .size(24)
+        .batch(16)
+        .epochs(2)
+        .dataset_len(32)
+        .eval_len(8)
+        .seed(5)
+        .overlap(false)
+        .build();
+    let set = mbs::JobSet {
+        capacity_mib: None,
+        jobs: vec![
+            JobSpec { name: "cls".into(), task: None, cfg: cls },
+            JobSpec { name: "seg".into(), task: None, cfg: seg },
+        ],
+    };
+    (set, capacity)
+}
+
+#[test]
+fn jobs_recovery_identity_and_counters() {
+    // multi-tenant arm of the oracle: fault one tenant of the shared
+    // arena; after recovery both jobs' reports must match the fault-free
+    // interleaved run bit for bit, and the fault counters must attribute
+    // the injection to the right job
+    let Some(mut engine) = common::engine() else { return };
+    let (set, capacity) = heterogeneous_set(&engine);
+    let clean = mbs::train_jobs(&mut engine, &set, capacity).expect("fault-free jobs run");
+
+    let plan = FaultPlan::parse(
+        r#"{"seed": 11, "max_retries": 3,
+            "faults": [{"job": "cls", "kind": "step", "at-step": 4}]}"#,
+    )
+    .unwrap();
+    let faulted = mbs::train_jobs_faulted(&mut engine, &set, capacity, Some(&plan))
+        .expect("faulted jobs run must recover");
+    assert!(faulted.arena_peak_bytes <= faulted.capacity_bytes);
+
+    for (a, b) in clean.jobs.iter().zip(&faulted.jobs) {
+        assert_eq!(b.outcome, JobOutcome::Completed, "job {}: {:?}", b.name, b.error);
+        let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
+        assert_reports_identical(ra, rb, &format!("jobs recovery, job {}", a.name));
+    }
+    let cls = &faulted.jobs[0];
+    assert_eq!(cls.faults_injected, 1, "the cls step fault must have fired");
+    assert_eq!(cls.retries, 1);
+    assert_eq!(cls.recovered, 1);
+    let seg = &faulted.jobs[1];
+    assert_eq!(seg.faults_injected, 0, "seg had no fault entries");
+    assert_eq!(seg.recovered, 0);
+}
+
+#[test]
+fn retry_exhaustion_evicts_job_while_sibling_completes() {
+    // graceful degradation: a job whose faults outlast its retry budget is
+    // marked failed — structured OOM arithmetic in its error — and its
+    // residency frees so the surviving tenant still finishes, identical to
+    // running without the doomed sibling's interference
+    let Some(mut engine) = common::engine() else { return };
+    let (set, capacity) = heterogeneous_set(&engine);
+
+    let plan = FaultPlan::parse(
+        r#"{"seed": 13, "max_retries": 2,
+            "faults": [{"job": "cls", "kind": "arena", "prob": 1.0, "times": 50}]}"#,
+    )
+    .unwrap();
+    let report = mbs::train_jobs_faulted(&mut engine, &set, capacity, Some(&plan))
+        .expect("the set run itself must not abort");
+
+    let cls = &report.jobs[0];
+    assert_eq!(cls.outcome, JobOutcome::Failed, "cls must exhaust its retries");
+    assert!(cls.report.is_none(), "an evicted job carries no report");
+    let err = cls.error.as_ref().expect("failed jobs record their terminal error");
+    assert!(err.contains("injected fault"), "structured fault context lost: {err}");
+    assert!(cls.retries >= 2, "both retries must have been consumed: {}", cls.retries);
+
+    let seg = &report.jobs[1];
+    assert_eq!(seg.outcome, JobOutcome::Completed, "survivor: {:?}", seg.error);
+    let r = seg.report.as_ref().expect("survivor carries a report");
+    assert!(r.updates > 0);
+    assert!(report.arena_peak_bytes <= report.capacity_bytes);
+}
+
+#[test]
+fn checkpoint_then_resume_matches_uninterrupted_run() {
+    // preempt/resume: train 1 epoch and checkpoint, then resume a 2-epoch
+    // schedule from it — the resumed run replays exactly epoch 1 and its
+    // final eval is bit-identical to the uninterrupted 2-epoch run
+    let Some(mut engine) = common::engine() else { return };
+    let stem = std::env::temp_dir().join(format!("mbs-resume-{}", std::process::id()));
+    let stem_s = stem.to_string_lossy().into_owned();
+
+    let full = mbs::train(&mut engine, &solo_cfg(false)).expect("uninterrupted run");
+
+    let mut first = solo_cfg(false);
+    first.epochs = 1;
+    first.checkpoint = Some(stem_s.clone());
+    let half = mbs::train(&mut engine, &first).expect("first epoch + checkpoint");
+    assert_eq!(half.train_epochs.len(), 1);
+
+    let mut resumed_cfg = solo_cfg(false);
+    resumed_cfg.resume = Some(stem_s.clone());
+    let resumed = mbs::train(&mut engine, &resumed_cfg).expect("resumed run");
+    // only the remaining epoch is replayed...
+    assert_eq!(resumed.train_epochs.len(), 1, "resume must skip the completed epoch");
+    // ...and it is the SAME epoch 1 the uninterrupted run saw
+    let (a, b) = (&full.train_epochs[1], &resumed.train_epochs[0]);
+    assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "epoch 1 loss diverged");
+    assert_eq!(a.micro_steps, b.micro_steps);
+    assert_eq!(
+        full.final_eval.mean_loss.to_bits(),
+        resumed.final_eval.mean_loss.to_bits(),
+        "final eval diverged after resume"
+    );
+    std::fs::remove_file(stem.with_extension("bin")).ok();
+    std::fs::remove_file(stem.with_extension("json")).ok();
+}
+
+#[test]
+fn resume_mid_epoch_skips_consumed_updates() {
+    // the partial-epoch path: a checkpoint whose update counter is not an
+    // epoch multiple resumes inside the epoch, consuming the already-done
+    // updates from the stream before training restarts. The update counter
+    // is metadata (not covered by the payload checksum), so a doctored
+    // counter stands in for a mid-epoch save.
+    let Some(mut engine) = common::engine() else { return };
+    let stem = std::env::temp_dir().join(format!("mbs-midresume-{}", std::process::id()));
+    let stem_s = stem.to_string_lossy().into_owned();
+
+    let mut first = solo_cfg(false);
+    first.epochs = 1;
+    first.checkpoint = Some(stem_s.clone());
+    let one = mbs::train(&mut engine, &first).expect("one-epoch run");
+    let per_epoch = one.train_epochs[0].updates;
+    assert!(per_epoch >= 2, "fixture needs >= 2 updates per epoch, got {per_epoch}");
+
+    // rewind the counter to mid-epoch: 1 update into epoch 0
+    let meta_path = stem.with_extension("json");
+    let meta = std::fs::read_to_string(&meta_path).unwrap();
+    let doctored =
+        meta.replace(&format!("\"updates\": {per_epoch}"), "\"updates\": 1");
+    assert_ne!(doctored, meta, "update counter not found in checkpoint metadata");
+    std::fs::write(&meta_path, doctored).unwrap();
+
+    let mut resumed_cfg = solo_cfg(false);
+    resumed_cfg.epochs = 1;
+    resumed_cfg.resume = Some(stem_s.clone());
+    let resumed = mbs::train(&mut engine, &resumed_cfg).expect("mid-epoch resume");
+    assert_eq!(resumed.train_epochs.len(), 1);
+    // `updates` is cumulative (rt.updates at epoch end): resuming from 1
+    // must land on the same total; the skipped mini-batch shows up as the
+    // missing micro-steps (the fixture's batches are uniform, so one
+    // update's worth divides evenly)
+    assert_eq!(
+        resumed.train_epochs[0].updates, per_epoch,
+        "the resumed epoch must land on the full run's cumulative update count"
+    );
+    let full_steps = one.train_epochs[0].micro_steps;
+    let per_update = full_steps / per_epoch as usize;
+    assert_eq!(
+        resumed.train_epochs[0].micro_steps,
+        full_steps - per_update,
+        "exactly one update's micro-steps must have been skipped"
+    );
+    std::fs::remove_file(stem.with_extension("bin")).ok();
+    std::fs::remove_file(&meta_path).ok();
+}
+
+#[test]
+fn checkpoint_every_writes_periodic_checkpoints() {
+    // --checkpoint-every N: the stem must exist (and validate) after the
+    // run; a pinned-mu rerun resumed from the final checkpoint does no
+    // further training (schedule already complete) but still evals
+    let Some(mut engine) = common::engine() else { return };
+    let stem = std::env::temp_dir().join(format!("mbs-periodic-{}", std::process::id()));
+    let stem_s = stem.to_string_lossy().into_owned();
+
+    let mut cfg = solo_cfg(false);
+    cfg.mu = MicroBatchSpec::Fixed(8);
+    cfg.checkpoint = Some(stem_s.clone());
+    cfg.checkpoint_every = Some(1);
+    let report = mbs::train(&mut engine, &cfg).expect("checkpointed run");
+    assert!(stem.with_extension("bin").exists(), "missing checkpoint payload");
+    assert!(stem.with_extension("json").exists(), "missing checkpoint metadata");
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.checkpoint = None;
+    resume_cfg.checkpoint_every = None;
+    resume_cfg.resume = Some(stem_s);
+    let resumed = mbs::train(&mut engine, &resume_cfg).expect("resume from final state");
+    assert!(resumed.train_epochs.is_empty(), "schedule was already complete");
+    assert_eq!(
+        report.final_eval.mean_loss.to_bits(),
+        resumed.final_eval.mean_loss.to_bits(),
+        "final-state resume must evaluate the identical parameters"
+    );
+    std::fs::remove_file(stem.with_extension("bin")).ok();
+    std::fs::remove_file(stem.with_extension("json")).ok();
+}
