@@ -175,6 +175,36 @@ def export_model(
     return entry
 
 
+def export_variant(model_key: str, size: int, mu: int, out_dir: str, quiet: bool) -> None:
+    """Lower exactly one (model, size, mu) variant's accum/eval pair.
+
+    The on-demand path behind the rust artifact manager
+    (`rust/src/runtime/artifacts.rs`): the manifest metadata for an
+    arbitrary mu is derived rust-side (shapes re-lead, memory estimates are
+    per-sample), so only the two HLO payloads are produced here — the
+    manifest on disk is left untouched.
+    """
+    spec = MODELS[model_key]
+    params = init_params(spec, 0)
+    aparams = _abstract(params)
+    accum = build_accum_step(spec)
+    eval_step = build_eval_step(spec)
+    (x_shape, x_dtype), (y_shape, y_dtype) = spec.io_shapes(mu, size)
+    x = _sds(x_shape, x_dtype)
+    y = _sds(y_shape, y_dtype)
+    mask = _sds((mu,), jnp.float32)
+    scale = _sds((1,), jnp.float32)
+    tag = f"{model_key}_s{size}_mu{mu}"
+    acc_lowered = jax.jit(accum).lower(aparams, aparams, x, y, mask, scale)
+    with open(os.path.join(out_dir, f"{tag}.accum.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(acc_lowered))
+    ev_lowered = jax.jit(eval_step).lower(aparams, x, y, mask)
+    with open(os.path.join(out_dir, f"{tag}.eval.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(ev_lowered))
+    if not quiet:
+        print(f"  variant -> {tag} (on demand)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out-dir", default="../artifacts")
@@ -188,8 +218,31 @@ def main() -> None:
         "lowering, no params.bin) — feeds `mbs frontier --dry-run --model` so "
         "CI catches manifest-footprint drift without a full export",
     )
+    ap.add_argument(
+        "--variant",
+        action="append",
+        default=None,
+        metavar="MODEL:SIZE:MU",
+        help="lower exactly this variant's accum/eval HLO pair and exit "
+        "without touching manifest.json (the rust artifact manager's "
+        "on-demand compile path); repeatable",
+    )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
+
+    if args.variant:
+        for spec_str in args.variant:
+            try:
+                model_key, size_s, mu_s = spec_str.split(":")
+                size, mu = int(size_s), int(mu_s)
+            except ValueError:
+                ap.error(f"--variant wants MODEL:SIZE:MU, got {spec_str!r}")
+            if model_key not in MODELS:
+                ap.error(f"--variant: unknown model {model_key!r}")
+            if not args.quiet:
+                print(f"[aot] {model_key} s{size} mu{mu} (single variant)")
+            export_variant(model_key, size, mu, args.out_dir, args.quiet)
+        return
 
     model_keys = args.models or sorted({mk for mk, _, _ in VARIANTS})
     manifest = {"version": 1, "seed": args.seed, "models": {}}

@@ -26,7 +26,10 @@ pub enum MicroBatchSpec {
     /// Derive `mu` from the memory model: largest exported variant whose
     /// step fits `capacity - resident_bytes`.
     Auto,
-    /// Use exactly this exported micro-batch size.
+    /// Use exactly this micro-batch size. Need not be exported: the
+    /// artifact manager (`runtime/artifacts.rs`) compiles unexported
+    /// variants on demand, so memory — not export coverage — is the
+    /// binding constraint.
     Fixed(usize),
 }
 
@@ -126,7 +129,7 @@ pub struct TrainConfig {
     /// Image size or sequence length; `None` = manifest default.
     pub size: Option<usize>,
     /// Micro-batch size: planner-derived (`Auto`, the default — paper
-    /// Alg. 1) or pinned to an exported variant (`Fixed`).
+    /// Alg. 1) or pinned (`Fixed`, compiled on demand when unexported).
     pub mu: MicroBatchSpec,
     /// Mini-batch size N_B.
     pub batch: usize,
@@ -394,7 +397,7 @@ impl TrainConfigBuilder {
         self.cfg.size = Some(v);
         self
     }
-    /// Pin the micro-batch size to an exported variant.
+    /// Pin the micro-batch size (compiled on demand when unexported).
     pub fn mu(mut self, v: usize) -> Self {
         self.cfg.mu = MicroBatchSpec::Fixed(v);
         self

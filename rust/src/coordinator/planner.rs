@@ -364,7 +364,11 @@ pub fn resolve(
     let budget = ledger.remaining();
     match cfg.mu {
         MicroBatchSpec::Fixed(mu) => {
-            let variant = entry.variant(size, mu)?.clone();
+            // any mu is resolvable, not just exported ones: the artifact
+            // manager (runtime/artifacts.rs) compiles missing variants on
+            // demand, so planning derives the metadata and lets memory
+            // admission decide
+            let variant = entry.derive_variant(size, mu)?;
             let footprint = Footprint::from_manifest(entry, &variant);
             let mem = MemoryModel::new(budget, footprint.clone());
             mem.check_resident()?;
@@ -440,12 +444,14 @@ pub fn resolve(
 /// exported one under `Auto`, the named one under `Fixed`.
 pub fn default_capacity(entry: &ModelEntry, size: usize, spec: &MicroBatchSpec) -> Result<u64> {
     let variant = match spec {
-        MicroBatchSpec::Fixed(mu) => entry.variant(size, *mu)?,
-        MicroBatchSpec::Auto => *candidates(entry, size)?
+        // derived, so a pinned unexported mu sizes its own capacity
+        MicroBatchSpec::Fixed(mu) => entry.derive_variant(size, *mu)?,
+        MicroBatchSpec::Auto => (*candidates(entry, size)?
             .last()
-            .expect("candidates are non-empty"),
+            .expect("candidates are non-empty"))
+        .clone(),
     };
-    let fp = Footprint::from_manifest(entry, variant);
+    let fp = Footprint::from_manifest(entry, &variant);
     Ok(MemoryModel::capacity_for_native_max(&fp, 2 * variant.mu))
 }
 

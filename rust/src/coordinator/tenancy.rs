@@ -582,9 +582,12 @@ fn solo_resolution(req: &AdmissionRequest, capacity_bytes: u64) -> Result<Resolu
     }
 }
 
-/// Resolve a pinned `mu` to its exported variant + footprint.
+/// Resolve a pinned `mu` to a variant + footprint. Derived, not looked
+/// up: the artifact manager (runtime/artifacts.rs) compiles unexported
+/// variants on demand, so admission may propose *any* mu at an exported
+/// size — memory, not export coverage, is the binding constraint.
 fn fixed_resolution(req: &AdmissionRequest, mu: usize) -> Result<Resolution> {
-    let variant = req.entry.variant(req.size, mu)?.clone();
+    let variant = req.entry.derive_variant(req.size, mu)?;
     let footprint = Footprint::from_manifest(&req.entry, &variant);
     Ok(Resolution { mu, variant, footprint })
 }

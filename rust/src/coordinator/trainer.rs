@@ -1232,7 +1232,11 @@ impl JobExec {
         self.reservation = Some(self.ledger.alloc("resident reservation", self.claim_bytes)?);
         // 4. re-run the micro-batch planner (paper Alg. 1) against the
         //    transient budget that is actually free now: genuine pressure
-        //    shrinks mu; a transient injected fault re-picks the same one
+        //    shrinks mu; a transient injected fault re-picks the same one.
+        //    The re-planned mu need not be exported — adopt_resolution
+        //    resolves it through the engine's artifact manager
+        //    (runtime/artifacts.rs), which serves the cache or compiles
+        //    the variant on demand instead of failing the recovery
         if self.cfg.mu.is_auto() {
             let res = planner::auto_mu_transient(
                 &self.entry,

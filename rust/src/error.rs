@@ -43,6 +43,29 @@ pub enum MbsError {
     #[error("injected fault: {0}")]
     Fault(String),
 
+    /// The artifact manager's compiler backend failed to produce an
+    /// executable for a requested variant (`runtime/artifacts.rs`).
+    /// Deterministic by contract — re-running the same export would fail
+    /// identically — so it stays fatal, unlike [`MbsError::CompileTimeout`].
+    #[error("compile error for variant {key}: {reason}")]
+    Compile {
+        /// Canonical variant key (`model:sSIZE:muMU:overlap`).
+        key: String,
+        /// Backend diagnostic (exit status, missing output file, …).
+        reason: String,
+    },
+
+    /// The compiler backend exceeded its wall-clock budget. Transient by
+    /// contract (a loaded machine, a wedged subprocess): the recovery
+    /// state machine may retry it.
+    #[error("compile timeout for variant {key}: gave up after {waited_ms} ms")]
+    CompileTimeout {
+        /// Canonical variant key (`model:sSIZE:muMU:overlap`).
+        key: String,
+        /// Milliseconds waited before giving up.
+        waited_ms: u64,
+    },
+
     /// Filesystem error (artifacts, checkpoints, reports).
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
@@ -71,11 +94,16 @@ impl MbsError {
 
     /// May a job-level retry (checkpoint → release → re-plan → replay)
     /// clear this error? True for memory pressure ([`MbsError::Oom`] —
-    /// shrinking mu against the freed transient budget can fit the step)
-    /// and for injected transients ([`MbsError::Fault`]). Config,
-    /// manifest, data, IO, and runtime-protocol errors are deterministic:
-    /// replaying them would fail identically, so they stay fatal.
+    /// shrinking mu against the freed transient budget can fit the step),
+    /// for injected transients ([`MbsError::Fault`]), and for compile
+    /// timeouts ([`MbsError::CompileTimeout`] — a stuck backend may
+    /// succeed on retry). Config, manifest, data, IO, runtime-protocol,
+    /// and compile-failure errors are deterministic: replaying them would
+    /// fail identically, so they stay fatal.
     pub fn recoverable(&self) -> bool {
-        matches!(self, MbsError::Oom { .. } | MbsError::Fault(_))
+        matches!(
+            self,
+            MbsError::Oom { .. } | MbsError::Fault(_) | MbsError::CompileTimeout { .. }
+        )
     }
 }

@@ -22,7 +22,7 @@ use mbs::data::{loader, BufPool, Dataset, EpochPlan};
 use mbs::memory::{Footprint, MIB};
 use mbs::metrics::bench_report::{self, BenchReport, JsonValue};
 use mbs::metrics::Table;
-use mbs::runtime::FaultPlan;
+use mbs::runtime::{ArtifactManager, FaultPlan, MockCompiler, VariantKey};
 use mbs::util::cli::Args;
 use mbs::{Engine, JobSet, Manifest, MbsError, MicroBatchSpec, TrainConfig, TrainReport};
 
@@ -373,13 +373,26 @@ fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
                     }
                 }
                 // classification said feasible; a runtime refusal (e.g. a
-                // missing exported variant) downgrades to an untimed point
-                // rather than aborting the sweep
+                // compile failure from the artifact manager's backend —
+                // unexported variants now compile on demand instead of
+                // being missing) downgrades to an untimed point rather
+                // than aborting the sweep
                 Err(e) => eprintln!(
                     "[mbs] frontier: timed run failed at capacity={} MiB batch={batch}: {e}",
                     capacity_bytes / MIB
                 ),
             }
+        }
+        if let Some(stats) = engine.artifact_stats() {
+            println!(
+                "[mbs] frontier: artifact cache — {} compiled on demand, {} hits, \
+                 {} coalesced, {} evicted ({} corrupt)",
+                stats.compiles,
+                stats.hits,
+                stats.coalesced,
+                stats.evictions,
+                stats.corrupt_evictions
+            );
         }
     }
 
@@ -984,6 +997,13 @@ fn bench_assemble_only(args: &Args) -> Result<BenchReport, MbsError> {
         run_streamed(StreamingPolicy::Synchronous);
     let (overlap_secs, _, _) = run_streamed(StreamingPolicy::DoubleBuffered);
 
+    // arm 4: the artifact-cache cold/warm micro-bench. A mock-backed
+    // manager over a throwaway dir fetches a small mu ladder twice: the
+    // cold pass compiles every variant, the warm pass must be pure cache
+    // hits. `warm_hit_rate` is counter arithmetic (no wall clock), so the
+    // --compare trend gate can hold it at 1.0 without machine noise.
+    let cache_arm = bench_artifact_cache(&task, size, overlap)?;
+
     let total_items = (dataset_len * epochs) as f64;
     let rate = |secs: f64| if secs > 0.0 { total_items / secs } else { 0.0 };
     let fresh_rate = rate(fresh_secs);
@@ -1021,8 +1041,51 @@ fn bench_assemble_only(args: &Args) -> Result<BenchReport, MbsError> {
             },
             6,
         )
-        .field("pool", bench_report::pool_value(&stats));
+        .field("pool", bench_report::pool_value(&stats))
+        .field("artifact_cache", cache_arm);
     Ok(rep)
+}
+
+/// The assemble-only bench's artifact-cache arm: cold-fetch a mu ladder
+/// through a mock-backed [`ArtifactManager`], re-fetch it warm, and report
+/// the counters. Deterministic by construction — the mock compiler has no
+/// latency and the hit accounting is integer — so `warm_hit_rate` is a
+/// stable trend key (anything below 1.0 means the cache contract broke).
+fn bench_artifact_cache(task: &str, size: usize, overlap: bool) -> Result<JsonValue, MbsError> {
+    let cache = std::env::temp_dir().join(format!("mbs-bench-cache-{}", std::process::id()));
+    std::fs::remove_dir_all(&cache).ok();
+    let manager = ArtifactManager::new(&cache, Arc::new(MockCompiler::new()), 32)?;
+    let mus = [1usize, 2, 4, 8, 16, 32];
+    let key = |mu: usize| VariantKey {
+        model: format!("bench-{task}"),
+        size,
+        mu,
+        overlap,
+    };
+    // the manifest fingerprint is fixed: the bench measures the cache, not
+    // a real export, and a constant keeps digests (and reports) stable
+    let fingerprint = 0xbe7c_u64;
+    for &mu in &mus {
+        manager.fetch(&key(mu), fingerprint)?;
+    }
+    let cold = manager.stats();
+    for &mu in &mus {
+        manager.fetch(&key(mu), fingerprint)?;
+    }
+    let warm = manager.stats();
+    let warm_hits = warm.hits - cold.hits;
+    let warm_fetches = mus.len() as u64;
+    std::fs::remove_dir_all(&cache).ok();
+
+    let mut v = JsonValue::obj();
+    v.push("variants", JsonValue::UInt(warm_fetches));
+    v.push("cold_compiles", JsonValue::UInt(cold.compiles));
+    v.push("warm_hits", JsonValue::UInt(warm_hits));
+    v.push(
+        "warm_hit_rate",
+        JsonValue::fixed(warm_hits as f64 / warm_fetches as f64, 6),
+    );
+    Ok(v)
 }
 
 fn cmd_inspect(args: &Args) -> Result<(), MbsError> {

@@ -200,6 +200,12 @@ impl Manifest {
                     elems: req_u64(leaf, "elems", &ctx)? as usize,
                 });
             }
+            // canonicalize leaf order by byte offset: the python
+            // `--metadata-only` export (`shapes.param_index`) and the full
+            // export (`shapes.dump_params`) can list multi-output models'
+            // leaves in different orders, and cache keys / contiguity
+            // validation must not depend on which path wrote the manifest
+            param_leaves.sort_by(|a, b| a.offset.cmp(&b.offset));
             let mut variants = Vec::new();
             for v in req(m, "variants", &ctx)?.as_arr().unwrap_or(&[]) {
                 variants.push(Variant {
@@ -307,6 +313,78 @@ impl ModelEntry {
             })
     }
 
+    /// Stable FNV-1a digest of the entry's export metadata — the
+    /// manifest half of an artifact-cache key
+    /// ([`crate::runtime::artifacts`]). Covers everything that changes
+    /// what a compile of this model would produce (identity, optimizer
+    /// ABI, parameter layout), over leaves in canonical (byte-offset)
+    /// order so the digest is identical whichever export path —
+    /// `--metadata-only` or full — wrote the manifest.
+    pub fn fingerprint(&self) -> u64 {
+        let mut leaves: Vec<&ParamLeaf> = self.param_leaves.iter().collect();
+        leaves.sort_by(|a, b| a.offset.cmp(&b.offset));
+        let mut text = format!(
+            "{}|{}|{}:{}|{}|{}",
+            self.name, self.task, self.optimizer.kind, self.optimizer.slots,
+            self.param_bytes, self.default_size
+        );
+        for leaf in leaves {
+            text.push_str(&format!("|{}@{}x{}:{:?}", leaf.name, leaf.offset, leaf.elems, leaf.shape));
+        }
+        crate::util::hash::fnv1a64(text.as_bytes())
+    }
+
+    /// The variant for `(size, mu)`, synthesized from an exported sibling
+    /// when `mu` itself was never exported. A variant's memory metadata is
+    /// mu-independent (`activation_bytes_per_sample` is per sample,
+    /// `fixed_bytes` batch-free) and its IO shapes only carry `mu` in the
+    /// leading dim, so any exported variant at the same `size` is a valid
+    /// template; the HLO file names follow the `compile.aot` convention
+    /// (`<model>_s<size>_mu<mu>.{accum,eval}.hlo.txt`) and are compiled on
+    /// demand by the artifact manager when absent on disk. Admission may
+    /// therefore propose *any* positive mu at an exported size — only an
+    /// unexported size (no shape template) remains a manifest error.
+    pub fn derive_variant(&self, size: usize, mu: usize) -> Result<Variant> {
+        if let Ok(v) = self.variant(size, mu) {
+            return Ok(v.clone());
+        }
+        if mu == 0 {
+            return Err(MbsError::Manifest(format!("{}: mu must be positive", self.name)));
+        }
+        let template = self
+            .variants
+            .iter()
+            .find(|v| v.size == size)
+            .ok_or_else(|| {
+                MbsError::Manifest(format!(
+                    "{}: no exported variant at size={size} to derive mu={mu} from \
+                     (have sizes: {:?})",
+                    self.name,
+                    self.sizes()
+                ))
+            })?;
+        let relead = |shape: &[usize]| -> Vec<usize> {
+            let mut s = shape.to_vec();
+            if s.first() == Some(&template.mu) {
+                s[0] = mu;
+            }
+            s
+        };
+        let tag = format!("{}_s{size}_mu{mu}", self.name);
+        Ok(Variant {
+            mu,
+            size,
+            x_shape: relead(&template.x_shape),
+            x_dtype: template.x_dtype.clone(),
+            y_shape: relead(&template.y_shape),
+            y_dtype: template.y_dtype.clone(),
+            accum_hlo: format!("{tag}.accum.hlo.txt"),
+            eval_hlo: format!("{tag}.eval.hlo.txt"),
+            activation_bytes_per_sample: template.activation_bytes_per_sample,
+            fixed_bytes: template.fixed_bytes,
+        })
+    }
+
     /// Largest exported mu for a given size — the "native maximum" micro-batch.
     pub fn max_mu(&self, size: usize) -> Option<usize> {
         self.variants.iter().filter(|v| v.size == size).map(|v| v.mu).max()
@@ -362,6 +440,100 @@ mod tests {
         let rn = man.model("microresnet18").unwrap();
         assert_eq!(rn.max_mu(16), Some(16));
         assert!(rn.sizes().contains(&32));
+    }
+
+    /// A minimal two-leaf manifest document with the leaves listed in the
+    /// given order (offsets stay truthful, only the listing order moves —
+    /// the `--metadata-only` vs full-export disagreement).
+    fn two_leaf_doc(leaves_json: &str) -> String {
+        format!(
+            r#"{{"seed": 1, "models": {{"m": {{
+                "task": "classification",
+                "optimizer": {{"kind": "sgdm", "slots": 1,
+                               "hyper_names": ["lr"], "hyper_defaults": [0.01]}},
+                "params_bin": "m.params.bin",
+                "param_leaves": [{leaves_json}],
+                "param_bytes": 24,
+                "apply_hlo": "m.apply.hlo.txt",
+                "metric_semantics": "classification",
+                "default_size": 16,
+                "variants": [{{"mu": 4, "size": 16,
+                    "x_shape": [4, 16, 16, 3], "x_dtype": "f32",
+                    "y_shape": [4], "y_dtype": "i32",
+                    "accum_hlo": "m_s16_mu4.accum.hlo.txt",
+                    "eval_hlo": "m_s16_mu4.eval.hlo.txt",
+                    "activation_bytes_per_sample": 1000, "fixed_bytes": 64}}]
+            }}}}}}"#
+        )
+    }
+
+    fn load_doc(doc: &str, tag: &str) -> Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!("mbs-man-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        let out = Manifest::load(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        out
+    }
+
+    const LEAF_A: &str = r#"{"name": "dense.w", "shape": [2, 2], "offset": 0, "elems": 4}"#;
+    const LEAF_B: &str = r#"{"name": "dense.b", "shape": [2], "offset": 16, "elems": 2}"#;
+
+    #[test]
+    fn leaf_order_round_trips_across_export_paths() {
+        // the full export lists [A, B]; --metadata-only may list [B, A];
+        // both must load (contiguity is validated post-canonicalization)
+        // and agree on leaf order and on the cache-key fingerprint
+        let in_order = load_doc(&two_leaf_doc(&format!("{LEAF_A}, {LEAF_B}")), "ord").unwrap();
+        let permuted = load_doc(&two_leaf_doc(&format!("{LEAF_B}, {LEAF_A}")), "perm").unwrap();
+        let a = in_order.model("m").unwrap();
+        let b = permuted.model("m").unwrap();
+        let names = |e: &ModelEntry| -> Vec<String> {
+            e.param_leaves.iter().map(|l| l.name.clone()).collect()
+        };
+        assert_eq!(names(a), vec!["dense.w", "dense.b"], "canonical = offset order");
+        assert_eq!(names(a), names(b), "both export paths canonicalize identically");
+        assert_eq!(a.fingerprint(), b.fingerprint(), "cache keys stable across paths");
+    }
+
+    #[test]
+    fn fingerprint_tracks_export_metadata() {
+        let base = load_doc(&two_leaf_doc(&format!("{LEAF_A}, {LEAF_B}")), "fp").unwrap();
+        let moved = load_doc(
+            &two_leaf_doc(&format!(
+                "{LEAF_A}, {}",
+                LEAF_B.replace("dense.b", "dense.bias")
+            )),
+            "fp2",
+        )
+        .unwrap();
+        assert_ne!(
+            base.model("m").unwrap().fingerprint(),
+            moved.model("m").unwrap().fingerprint(),
+            "renamed leaf must change the fingerprint"
+        );
+    }
+
+    #[test]
+    fn derive_variant_synthesizes_unexported_mus() {
+        let man = load_doc(&two_leaf_doc(&format!("{LEAF_A}, {LEAF_B}")), "dv").unwrap();
+        let m = man.model("m").unwrap();
+        // exported mu: the derived variant IS the exported one
+        let exact = m.derive_variant(16, 4).unwrap();
+        assert_eq!(exact.accum_hlo, "m_s16_mu4.accum.hlo.txt");
+        // unexported mu: shapes re-lead, memory metadata carries over,
+        // file names follow the compile.aot convention
+        let d = m.derive_variant(16, 6).unwrap();
+        assert_eq!(d.mu, 6);
+        assert_eq!(d.x_shape, vec![6, 16, 16, 3]);
+        assert_eq!(d.y_shape, vec![6]);
+        assert_eq!(d.accum_hlo, "m_s16_mu6.accum.hlo.txt");
+        assert_eq!(d.eval_hlo, "m_s16_mu6.eval.hlo.txt");
+        assert_eq!(d.activation_bytes_per_sample, 1000);
+        assert_eq!(d.fixed_bytes, 64);
+        // unexported size: no shape template, still a manifest error
+        assert!(m.derive_variant(99, 4).is_err());
+        assert!(m.derive_variant(16, 0).is_err());
     }
 
     #[test]

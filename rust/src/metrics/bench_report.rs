@@ -285,12 +285,17 @@ impl CompareOutcome {
 /// suffix rule deliberately covers `BENCH_jobs.json`'s
 /// `aggregate_items_per_sec` (and every per-job `items_per_sec` leaf), so
 /// `mbs bench --compare` gates the multi-tenant aggregate throughput the
-/// same way it gates the solo pipeline's.
+/// same way it gates the solo pipeline's. `warm_hit_rate` — the artifact
+/// cache's warm-pass hit fraction under the deterministic mock backend
+/// (`BENCH_streaming.json`'s `artifact_cache` object) — is pure counter
+/// arithmetic (hits / fetches), machine-noise-free, and gates the cache
+/// contract itself: a drop means fetches started recompiling.
 pub fn is_trend_key(key: &str) -> bool {
     key.ends_with("items_per_sec")
         || key == "pooled_speedup"
         || key == "overlap_efficiency"
         || key == "wall_overlap_efficiency"
+        || key == "warm_hit_rate"
 }
 
 fn collect_numeric(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
@@ -495,6 +500,10 @@ mod tests {
         // the multi-tenant aggregate (and per-job throughput leaves) ride
         // the same suffix rule — BENCH_jobs.json is gated like the rest
         assert!(is_trend_key("aggregate_items_per_sec"));
+        // the artifact cache's warm-pass hit fraction gates; its raw
+        // counters (compiles, evictions) are not throughput-shaped
+        assert!(is_trend_key("warm_hit_rate"));
+        assert!(!is_trend_key("cold_compiles"));
         assert!(!is_trend_key("assemble_mean_ms"));
         assert!(!is_trend_key("epoch_wall_mean_s"));
         assert!(!is_trend_key("upload_hidden"));
@@ -526,5 +535,25 @@ mod tests {
         let per_job =
             out.rows.iter().find(|r| r.path == "jobs[0].items_per_sec").unwrap();
         assert!(!per_job.regressed, "2% drop is within the threshold");
+    }
+
+    #[test]
+    fn compare_gates_artifact_cache_hit_rate() {
+        // the nested artifact_cache object in BENCH_streaming.json: the
+        // warm hit rate rides the trend gate, the raw counters do not
+        let prev = Json::parse(
+            r#"{"bench":"streaming","mode":"assemble-only",
+                "artifact_cache": {"warm_hit_rate": 1.0, "cold_compiles": 3.0}}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(
+            r#"{"bench":"streaming","mode":"assemble-only",
+                "artifact_cache": {"warm_hit_rate": 0.5, "cold_compiles": 9.0}}"#,
+        )
+        .unwrap();
+        let out = compare(&prev, &cur, 0.2);
+        assert_eq!(out.rows.len(), 1, "only the hit rate is trend-tracked");
+        assert_eq!(out.rows[0].path, "artifact_cache.warm_hit_rate");
+        assert!(out.rows[0].regressed, "a cache that stopped hitting must gate");
     }
 }

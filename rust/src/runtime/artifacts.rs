@@ -1,0 +1,912 @@
+//! Compile-in-the-loop executable artifact manager.
+//!
+//! Everything downstream of export used to be frozen: executables were
+//! per-(model, size, mu) artifacts baked at `compile.aot` time, so
+//! admission could never propose a mu that was not exported and
+//! `mbs frontier` could only time variants that happened to exist on
+//! disk. This module makes requesting a variant a cheap, cached,
+//! concurrent-safe operation:
+//!
+//! ```text
+//!            fetch(VariantKey, manifest fingerprint)
+//!                            |
+//!              digest = FNV-1a(canonical key | fingerprint)
+//!                            v
+//!   <cache>/<digest>.meta.json          hit? -> checksum-validate
+//!   <cache>/<digest>.accum.hlo.txt            |  corrupt -> evict,
+//!   <cache>/<digest>.eval.hlo.txt             |  fall through to compile
+//!                            |
+//!             miss: in-flight already? -> wait (coalesce)
+//!                   else lead: CompilerBackend::compile
+//!                            |
+//!              write tmp -> rename (payloads, then meta)
+//!                   LRU-evict beyond max_entries
+//! ```
+//!
+//! Design points:
+//!  * **Content addressing**: the cache key is the FNV-1a digest
+//!    ([`crate::util::hash::fnv1a64`]) of the canonical variant key plus
+//!    the manifest entry's metadata fingerprint
+//!    ([`crate::manifest::ModelEntry::fingerprint`]) — re-exporting a
+//!    model with a different parameter layout invalidates its cached
+//!    executables without any explicit flush.
+//!  * **Coalescing**: concurrent fetches of one uncached variant elect a
+//!    single leader; the rest wait on a condvar and read the leader's
+//!    result from disk (compile count == 1). A leader that fails records
+//!    the error so its waiters surface the same structured
+//!    [`MbsError::Compile`] without re-compiling; a *later* fresh fetch
+//!    retries. A leader that panics releases its claim via an RAII guard,
+//!    so waiters are never stranded and no `.tmp` files leak.
+//!  * **Crash safety / corruption**: entries mirror
+//!    [`crate::runtime::checkpoint`] — payloads land via
+//!    write-tmp-then-rename, then the metadata JSON (magic, canonical
+//!    key, byte lengths, per-payload FNV-1a checksums) that vouches for
+//!    them. A bit-flipped or truncated entry fails validation on hit, is
+//!    evicted, and is transparently recompiled.
+//!  * **Bounded size**: an LRU list over on-disk entries; inserting
+//!    beyond `max_entries` evicts the least-recently-used entry's files.
+//!    Handles pin payload *bytes* in memory, never files — callers that
+//!    read by path (the PJRT compile) do so immediately after fetch.
+//!  * **Backends**: the [`CompilerBackend`] trait keeps the python
+//!    exporter ([`PythonAotCompiler`], `python -m compile.aot --variant`)
+//!    behind the same seam as the deterministic [`MockCompiler`], so the
+//!    whole cache contract is proven in tier-1 tests with no artifacts.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::error::{MbsError, Result};
+use crate::runtime::faults::{FaultHooks, FaultKind};
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+
+const MAGIC: &str = "mbs-artifact-v1";
+
+/// Default bound on cached variant entries per manager.
+pub const DEFAULT_MAX_ENTRIES: usize = 32;
+
+/// Canonical identity of one requested executable variant.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct VariantKey {
+    /// Manifest model name.
+    pub model: String,
+    /// Image size (px) or sequence length.
+    pub size: usize,
+    /// Static micro-batch size.
+    pub mu: usize,
+    /// Overlapped-pipeline specialization flag. Exported HLO is
+    /// overlap-agnostic today, but the flag is part of the cache identity
+    /// so an overlap-specialized export can land without a format break.
+    pub overlap: bool,
+}
+
+impl VariantKey {
+    /// The canonical string form hashed into the cache digest and echoed
+    /// in errors: `model:sSIZE:muMU:overlap|serial`.
+    pub fn canonical(&self) -> String {
+        format!(
+            "{}:s{}:mu{}:{}",
+            self.model,
+            self.size,
+            self.mu,
+            if self.overlap { "overlap" } else { "serial" }
+        )
+    }
+
+    /// Content address of this key under a manifest fingerprint
+    /// ([`crate::manifest::ModelEntry::fingerprint`]).
+    pub fn digest(&self, manifest_fingerprint: u64) -> u64 {
+        fnv1a64(format!("{}|{manifest_fingerprint:016x}", self.canonical()).as_bytes())
+    }
+}
+
+/// What one backend compile produces: the HLO text payload pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompiledArtifact {
+    /// HLO text of the gradient-accumulation step.
+    pub accum_hlo: Vec<u8>,
+    /// HLO text of the forward-only eval step.
+    pub eval_hlo: Vec<u8>,
+}
+
+/// The compile seam: the python AOT exporter and the deterministic test
+/// mock sit behind the same trait, so every consumer of the artifact
+/// manager is testable without python, jax, or artifacts.
+pub trait CompilerBackend: Send + Sync {
+    /// Produce the HLO payload pair for `key`. Must be deterministic per
+    /// key for the cache's byte-identity contract to hold.
+    fn compile(&self, key: &VariantKey) -> Result<CompiledArtifact>;
+
+    /// Backend label for diagnostics.
+    fn name(&self) -> &'static str;
+}
+
+/// A checked-out cache entry. Payload bytes are pinned in memory (shared,
+/// immutable); the paths point at the on-disk entry, which a later LRU
+/// eviction may remove — read promptly or use the bytes.
+#[derive(Debug, Clone)]
+pub struct ArtifactHandle {
+    /// The requested variant.
+    pub key: VariantKey,
+    /// Content address the entry is stored under.
+    pub digest: u64,
+    /// On-disk path of the accum-step HLO text.
+    pub accum_path: PathBuf,
+    /// On-disk path of the eval-step HLO text.
+    pub eval_path: PathBuf,
+    /// Accum-step HLO text.
+    pub accum_hlo: Arc<Vec<u8>>,
+    /// Eval-step HLO text.
+    pub eval_hlo: Arc<Vec<u8>>,
+}
+
+/// Point-in-time counters of one manager (all monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArtifactStats {
+    /// Fetches served from a validated on-disk entry.
+    pub hits: u64,
+    /// Fetches that led a backend compile (== backend invocations that
+    /// were attempted, successful or not).
+    pub compiles: u64,
+    /// Fetches that waited on another thread's in-flight compile.
+    pub coalesced: u64,
+    /// Entries evicted by the LRU bound.
+    pub evictions: u64,
+    /// Entries evicted because checksum validation failed on hit.
+    pub corrupt_evictions: u64,
+    /// Backend compiles that returned an error.
+    pub compile_errors: u64,
+}
+
+impl ArtifactStats {
+    /// Fraction of fetches served from cache (hits / (hits + compiles));
+    /// 1.0 for an idle manager so warm-cache gates read naturally.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.compiles;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct State {
+    /// Digests a leader is currently compiling.
+    in_flight: HashSet<u64>,
+    /// Last leader error per digest, surfaced to that compile's waiters;
+    /// cleared when a fresh fetch retries the digest.
+    failed: HashMap<u64, String>,
+    /// On-disk entries, least-recently-used first.
+    lru: Vec<u64>,
+}
+
+struct Inner {
+    dir: PathBuf,
+    backend: Arc<dyn CompilerBackend>,
+    max_entries: usize,
+    state: Mutex<State>,
+    cond: Condvar,
+    hits: AtomicU64,
+    compiles: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
+    corrupt_evictions: AtomicU64,
+    compile_errors: AtomicU64,
+}
+
+/// Content-addressed, coalescing, bounded executable artifact cache.
+/// Cloning shares the manager (`Arc` inside); every method takes `&self`,
+/// so one manager can serve concurrent tenants.
+#[derive(Clone)]
+pub struct ArtifactManager {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for ArtifactManager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactManager")
+            .field("dir", &self.inner.dir)
+            .field("backend", &self.inner.backend.name())
+            .field("max_entries", &self.inner.max_entries)
+            .finish()
+    }
+}
+
+/// Releases a leader's in-flight claim even if the compile panics, so
+/// waiters are woken (with a recorded failure) instead of stranded.
+struct InFlightGuard<'a> {
+    inner: &'a Inner,
+    digest: u64,
+    armed: bool,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut state = lock_state(&self.inner.state);
+        state.in_flight.remove(&self.digest);
+        state
+            .failed
+            .insert(self.digest, "compile aborted (leader panicked or was dropped)".into());
+        self.inner.cond.notify_all();
+    }
+}
+
+/// Poison-tolerant lock: a panicking test backend must not wedge every
+/// other thread's fetch (the state it guards is repaired by the guard's
+/// failure bookkeeping, never left half-written across a panic point).
+fn lock_state(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Write `bytes` to `<final>.tmp` then rename into place (the
+/// checkpoint.rs crash-safety primitive). The tmp sibling is removed on
+/// any write failure, so error paths leak nothing.
+fn write_atomic(final_path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp = final_path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    if let Err(e) = std::fs::write(&tmp, bytes) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
+    if let Err(e) = std::fs::rename(&tmp, final_path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
+    Ok(())
+}
+
+impl ArtifactManager {
+    /// A manager rooted at `dir` (created if absent) over `backend`,
+    /// keeping at most `max_entries` entries on disk.
+    pub fn new(
+        dir: impl AsRef<Path>,
+        backend: Arc<dyn CompilerBackend>,
+        max_entries: usize,
+    ) -> Result<ArtifactManager> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let max_entries = max_entries.max(1);
+        let manager = ArtifactManager {
+            inner: Arc::new(Inner {
+                dir,
+                backend,
+                max_entries,
+                state: Mutex::new(State::default()),
+                cond: Condvar::new(),
+                hits: AtomicU64::new(0),
+                compiles: AtomicU64::new(0),
+                coalesced: AtomicU64::new(0),
+                evictions: AtomicU64::new(0),
+                corrupt_evictions: AtomicU64::new(0),
+                compile_errors: AtomicU64::new(0),
+            }),
+        };
+        manager.adopt_existing_entries()?;
+        Ok(manager)
+    }
+
+    /// The cache directory this manager owns.
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    /// The backend label (diagnostics).
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.backend.name()
+    }
+
+    /// Snapshot the manager's counters.
+    pub fn stats(&self) -> ArtifactStats {
+        let i = &self.inner;
+        ArtifactStats {
+            hits: i.hits.load(Ordering::Relaxed),
+            compiles: i.compiles.load(Ordering::Relaxed),
+            coalesced: i.coalesced.load(Ordering::Relaxed),
+            evictions: i.evictions.load(Ordering::Relaxed),
+            corrupt_evictions: i.corrupt_evictions.load(Ordering::Relaxed),
+            compile_errors: i.compile_errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Entries currently on disk (diagnostics / tests).
+    pub fn cached_entries(&self) -> usize {
+        lock_state(&self.inner.state).lru.len()
+    }
+
+    /// Resolve `key` to an executable handle: validated cache hit, or a
+    /// (coalesced) backend compile. `manifest_fingerprint` is the model
+    /// entry's metadata digest — part of the content address, so stale
+    /// entries from an older export can never be served.
+    pub fn fetch(&self, key: &VariantKey, manifest_fingerprint: u64) -> Result<ArtifactHandle> {
+        let digest = key.digest(manifest_fingerprint);
+        let inner = &self.inner;
+        let mut waited = false;
+        let mut state = lock_state(&inner.state);
+        while state.in_flight.contains(&digest) {
+            if !waited {
+                inner.coalesced.fetch_add(1, Ordering::Relaxed);
+                waited = true;
+            }
+            state = inner
+                .cond
+                .wait(state)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        // try the on-disk entry under the lock (validation races nothing:
+        // eviction and insertion both hold the same lock)
+        match self.validate_on_disk(digest, key) {
+            Ok(Some(handle)) => {
+                touch_lru(&mut state.lru, digest);
+                inner.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(handle);
+            }
+            Ok(None) => {}
+            Err(reason) => {
+                // corrupt or truncated: evict the entry and recompile —
+                // the caller never sees the corruption
+                self.remove_entry_files(digest);
+                state.lru.retain(|d| *d != digest);
+                inner.corrupt_evictions.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[mbs] artifacts: evicting corrupt cache entry {digest:016x} \
+                     for {} ({reason})",
+                    key.canonical()
+                );
+            }
+        }
+        // a waiter whose leader failed surfaces the same structured error
+        // instead of stampeding the backend; a later fresh fetch retries
+        if waited {
+            if let Some(reason) = state.failed.get(&digest) {
+                return Err(MbsError::Compile { key: key.canonical(), reason: reason.clone() });
+            }
+        }
+        state.failed.remove(&digest);
+        state.in_flight.insert(digest);
+        drop(state);
+
+        let mut guard = InFlightGuard { inner, digest, armed: true };
+        inner.compiles.fetch_add(1, Ordering::Relaxed);
+        let outcome = inner.backend.compile(key).and_then(|artifact| {
+            self.store(digest, key, &artifact)?;
+            Ok(artifact)
+        });
+        guard.armed = false;
+        let mut state = lock_state(&inner.state);
+        state.in_flight.remove(&digest);
+        let result = match outcome {
+            Ok(artifact) => {
+                touch_lru(&mut state.lru, digest);
+                while state.lru.len() > inner.max_entries {
+                    let victim = state.lru.remove(0);
+                    self.remove_entry_files(victim);
+                    inner.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(ArtifactHandle {
+                    key: key.clone(),
+                    digest,
+                    accum_path: self.accum_path(digest),
+                    eval_path: self.eval_path(digest),
+                    accum_hlo: Arc::new(artifact.accum_hlo),
+                    eval_hlo: Arc::new(artifact.eval_hlo),
+                })
+            }
+            Err(e) => {
+                state.failed.insert(digest, e.to_string());
+                inner.compile_errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        };
+        inner.cond.notify_all();
+        result
+    }
+
+    fn meta_path(&self, digest: u64) -> PathBuf {
+        self.inner.dir.join(format!("{digest:016x}.meta.json"))
+    }
+
+    fn accum_path(&self, digest: u64) -> PathBuf {
+        self.inner.dir.join(format!("{digest:016x}.accum.hlo.txt"))
+    }
+
+    fn eval_path(&self, digest: u64) -> PathBuf {
+        self.inner.dir.join(format!("{digest:016x}.eval.hlo.txt"))
+    }
+
+    /// Load + checksum-validate the on-disk entry for `digest`.
+    /// `Ok(None)` = not cached; `Err(reason)` = present but corrupt.
+    fn validate_on_disk(
+        &self,
+        digest: u64,
+        key: &VariantKey,
+    ) -> std::result::Result<Option<ArtifactHandle>, String> {
+        let meta_path = self.meta_path(digest);
+        let meta_text = match std::fs::read_to_string(&meta_path) {
+            Ok(t) => t,
+            // no metadata = no entry (a crash between payload and meta
+            // renames leaves payload orphans, overwritten on recompile)
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("unreadable metadata: {e}")),
+        };
+        let meta = Json::parse(&meta_text).map_err(|e| format!("metadata: {e}"))?;
+        let get_str = |k: &str| meta.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+        let get_u64 = |k: &str| meta.get(k).and_then(Json::as_u64).unwrap_or(u64::MAX);
+        if get_str("magic") != MAGIC {
+            return Err("not an mbs artifact entry".into());
+        }
+        if get_str("key") != key.canonical() {
+            return Err(format!(
+                "entry is for '{}', requested '{}' (digest collision or stale entry)",
+                get_str("key"),
+                key.canonical()
+            ));
+        }
+        let read_payload = |path: &Path, len_key: &str, sum_key: &str| {
+            let bytes = std::fs::read(path)
+                .map_err(|e| format!("unreadable payload {}: {e}", path.display()))?;
+            if bytes.len() as u64 != get_u64(len_key) {
+                return Err(format!(
+                    "payload {} is {} bytes, metadata says {}",
+                    path.display(),
+                    bytes.len(),
+                    get_u64(len_key)
+                ));
+            }
+            let recorded = u64::from_str_radix(&get_str(sum_key), 16)
+                .map_err(|_| format!("malformed checksum '{}'", get_str(sum_key)))?;
+            let actual = fnv1a64(&bytes);
+            if recorded != actual {
+                return Err(format!(
+                    "payload {} checksum mismatch: metadata says {recorded:016x}, \
+                     payload hashes to {actual:016x} (corrupt or truncated entry)",
+                    path.display()
+                ));
+            }
+            Ok(bytes)
+        };
+        let accum = read_payload(&self.accum_path(digest), "accum_bytes", "accum_checksum")?;
+        let eval = read_payload(&self.eval_path(digest), "eval_bytes", "eval_checksum")?;
+        Ok(Some(ArtifactHandle {
+            key: key.clone(),
+            digest,
+            accum_path: self.accum_path(digest),
+            eval_path: self.eval_path(digest),
+            accum_hlo: Arc::new(accum),
+            eval_hlo: Arc::new(eval),
+        }))
+    }
+
+    /// Persist a compiled artifact: payloads first (tmp → rename), then
+    /// the metadata that vouches for them — a crash mid-store leaves at
+    /// worst payload orphans that the next compile overwrites, never a
+    /// metadata file pointing at half-written payloads.
+    fn store(&self, digest: u64, key: &VariantKey, artifact: &CompiledArtifact) -> Result<()> {
+        write_atomic(&self.accum_path(digest), &artifact.accum_hlo)?;
+        write_atomic(&self.eval_path(digest), &artifact.eval_hlo)?;
+        let meta = format!(
+            "{{\"magic\": \"{MAGIC}\", \"key\": \"{}\", \"backend\": \"{}\", \
+             \"accum_bytes\": {}, \"accum_checksum\": \"{:016x}\", \
+             \"eval_bytes\": {}, \"eval_checksum\": \"{:016x}\"}}",
+            key.canonical(),
+            self.inner.backend.name(),
+            artifact.accum_hlo.len(),
+            fnv1a64(&artifact.accum_hlo),
+            artifact.eval_hlo.len(),
+            fnv1a64(&artifact.eval_hlo),
+        );
+        write_atomic(&self.meta_path(digest), meta.as_bytes())
+    }
+
+    fn remove_entry_files(&self, digest: u64) {
+        // meta first: with it gone the entry no longer exists, whatever
+        // happens to the payload removals
+        std::fs::remove_file(self.meta_path(digest)).ok();
+        std::fs::remove_file(self.accum_path(digest)).ok();
+        std::fs::remove_file(self.eval_path(digest)).ok();
+    }
+
+    /// Re-adopt entries a previous process left in the cache dir (their
+    /// digests, from the metadata file names) so the LRU bound covers
+    /// them; validation still happens per fetch.
+    fn adopt_existing_entries(&self) -> Result<()> {
+        let mut state = lock_state(&self.inner.state);
+        for entry in std::fs::read_dir(&self.inner.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(hex) = name.strip_suffix(".meta.json") {
+                if let Ok(digest) = u64::from_str_radix(hex, 16) {
+                    if !state.lru.contains(&digest) {
+                        state.lru.push(digest);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Move `digest` to the most-recently-used end.
+fn touch_lru(lru: &mut Vec<u64>, digest: u64) {
+    lru.retain(|d| *d != digest);
+    lru.push(digest);
+}
+
+// ---------------------------------------------------------------------------
+// Backends
+// ---------------------------------------------------------------------------
+
+/// Deterministic in-process compiler for the tier-1 test harness:
+/// configurable latency, failure injection through the existing
+/// [`FaultPlan`](crate::runtime::faults::FaultPlan) machinery (a
+/// [`FaultKind::Step`] entry fires per compile *attempt*), and
+/// compile-count accounting. Payloads are a pure function of the key, so
+/// coalesced and repeated fetches are byte-identical by construction.
+pub struct MockCompiler {
+    latency: Duration,
+    hooks: Mutex<FaultHooks>,
+    compiles: AtomicU64,
+}
+
+impl Default for MockCompiler {
+    fn default() -> Self {
+        MockCompiler::new()
+    }
+}
+
+impl MockCompiler {
+    /// A mock that always succeeds instantly.
+    pub fn new() -> MockCompiler {
+        MockCompiler {
+            latency: Duration::ZERO,
+            hooks: Mutex::new(FaultHooks::none()),
+            compiles: AtomicU64::new(0),
+        }
+    }
+
+    /// Sleep this long per compile (coalescing tests need a window in
+    /// which concurrent fetches can pile up).
+    pub fn with_latency(mut self, latency: Duration) -> MockCompiler {
+        self.latency = latency;
+        self
+    }
+
+    /// Inject failures: a [`FaultKind::Step`] hook entry firing at
+    /// compile attempt `n` (0-based, counted across all keys) turns that
+    /// compile into a structured [`MbsError::Compile`].
+    pub fn with_faults(mut self, hooks: FaultHooks) -> MockCompiler {
+        self.hooks = Mutex::new(hooks);
+        self
+    }
+
+    /// Backend compiles attempted so far (the coalescing oracle).
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// The deterministic payload for `key` — exposed so tests can assert
+    /// byte identity against an independent rendering.
+    pub fn render(key: &VariantKey, role: &str) -> Vec<u8> {
+        let canon = key.canonical();
+        format!(
+            "HloModule mock_{role}_{}_s{}_mu{} // {canon} digest={:016x}\n\
+             ROOT tuple.0 = () tuple()\n",
+            key.model,
+            key.size,
+            key.mu,
+            fnv1a64(format!("{role}|{canon}").as_bytes())
+        )
+        .into_bytes()
+    }
+}
+
+impl CompilerBackend for MockCompiler {
+    fn compile(&self, key: &VariantKey) -> Result<CompiledArtifact> {
+        let attempt = self.compiles.fetch_add(1, Ordering::SeqCst);
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        let note = lock_hooks(&self.hooks).check(FaultKind::Step, attempt);
+        if let Some(note) = note {
+            return Err(MbsError::Compile {
+                key: key.canonical(),
+                reason: format!("injected: {note}"),
+            });
+        }
+        Ok(CompiledArtifact {
+            accum_hlo: MockCompiler::render(key, "accum"),
+            eval_hlo: MockCompiler::render(key, "eval"),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+}
+
+fn lock_hooks(m: &Mutex<FaultHooks>) -> MutexGuard<'_, FaultHooks> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// The real backend: shells out to `python -m compile.aot --variant
+/// MODEL:SIZE:MU` in a scratch directory, with a wall-clock timeout
+/// (exceeding it kills the subprocess and yields the *recoverable*
+/// [`MbsError::CompileTimeout`]), and reads back the two HLO text files
+/// the exporter names by convention.
+pub struct PythonAotCompiler {
+    python: String,
+    compile_dir: PathBuf,
+    scratch_dir: PathBuf,
+    timeout: Duration,
+}
+
+impl PythonAotCompiler {
+    /// Backend invoking `python` (e.g. `"python3"`) with the `compile`
+    /// package importable from `compile_dir`, writing its intermediate
+    /// exports under `scratch_dir`.
+    pub fn new(
+        python: impl Into<String>,
+        compile_dir: impl AsRef<Path>,
+        scratch_dir: impl AsRef<Path>,
+    ) -> PythonAotCompiler {
+        PythonAotCompiler {
+            python: python.into(),
+            compile_dir: compile_dir.as_ref().to_path_buf(),
+            scratch_dir: scratch_dir.as_ref().to_path_buf(),
+            timeout: Duration::from_secs(600),
+        }
+    }
+
+    /// The conventional layout for an engine over `<repo>/rust/artifacts`:
+    /// the python package lives at `<repo>/python`, overridable with
+    /// `MBS_COMPILE_DIR`; the interpreter defaults to `python3`,
+    /// overridable with `MBS_PYTHON`.
+    pub fn for_manifest_dir(manifest_dir: &Path, scratch_dir: &Path) -> PythonAotCompiler {
+        let compile_dir = std::env::var("MBS_COMPILE_DIR").map(PathBuf::from).unwrap_or_else(
+            |_| {
+                let candidates =
+                    [manifest_dir.join("../../python"), manifest_dir.join("../python")];
+                candidates
+                    .iter()
+                    .find(|p| p.join("compile").join("aot.py").exists())
+                    .cloned()
+                    .unwrap_or_else(|| candidates[0].clone())
+            },
+        );
+        let python = std::env::var("MBS_PYTHON").unwrap_or_else(|_| "python3".into());
+        PythonAotCompiler::new(python, compile_dir, scratch_dir)
+    }
+
+    /// Override the wall-clock compile budget.
+    pub fn with_timeout(mut self, timeout: Duration) -> PythonAotCompiler {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Wait for `child` up to the timeout, killing it on expiry.
+    fn wait_with_timeout(
+        &self,
+        mut child: std::process::Child,
+        key: &VariantKey,
+    ) -> Result<std::process::ExitStatus> {
+        let start = Instant::now();
+        loop {
+            if let Some(status) = child.try_wait()? {
+                return Ok(status);
+            }
+            if start.elapsed() >= self.timeout {
+                child.kill().ok();
+                child.wait().ok();
+                return Err(MbsError::CompileTimeout {
+                    key: key.canonical(),
+                    waited_ms: start.elapsed().as_millis() as u64,
+                });
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+impl CompilerBackend for PythonAotCompiler {
+    fn compile(&self, key: &VariantKey) -> Result<CompiledArtifact> {
+        let scratch = self.scratch_dir.join(format!(
+            "pyaot-{}-{:016x}",
+            std::process::id(),
+            key.digest(0)
+        ));
+        std::fs::create_dir_all(&scratch)?;
+        let run = || -> Result<CompiledArtifact> {
+            let mut child = std::process::Command::new(&self.python)
+                .args(["-m", "compile.aot", "--quiet", "--variant"])
+                .arg(format!("{}:{}:{}", key.model, key.size, key.mu))
+                .arg("--out-dir")
+                .arg(&scratch)
+                .current_dir(&self.compile_dir)
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::piped())
+                .spawn()
+                .map_err(|e| MbsError::Compile {
+                    key: key.canonical(),
+                    reason: format!("cannot spawn {}: {e}", self.python),
+                })?;
+            // drain stderr on a thread so a chatty exporter can't fill the
+            // pipe and deadlock against the wait loop
+            let reader = child.stderr.take().map(|mut pipe| {
+                std::thread::spawn(move || {
+                    use std::io::Read;
+                    let mut buf = String::new();
+                    pipe.read_to_string(&mut buf).ok();
+                    buf
+                })
+            });
+            let status = self.wait_with_timeout(child, key)?;
+            let err_text = reader.and_then(|r| r.join().ok()).unwrap_or_default();
+            if !status.success() {
+                let tail: Vec<&str> = err_text.lines().rev().take(5).collect();
+                let tail = tail.into_iter().rev().collect::<Vec<_>>().join(" | ");
+                return Err(MbsError::Compile {
+                    key: key.canonical(),
+                    reason: format!("exporter exited with {status}: {tail}"),
+                });
+            }
+            let tag = format!("{}_s{}_mu{}", key.model, key.size, key.mu);
+            let read = |suffix: &str| -> Result<Vec<u8>> {
+                let path = scratch.join(format!("{tag}.{suffix}.hlo.txt"));
+                std::fs::read(&path).map_err(|e| MbsError::Compile {
+                    key: key.canonical(),
+                    reason: format!("exporter produced no {}: {e}", path.display()),
+                })
+            };
+            Ok(CompiledArtifact { accum_hlo: read("accum")?, eval_hlo: read("eval")? })
+        };
+        let out = run();
+        std::fs::remove_dir_all(&scratch).ok();
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "python-aot"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::faults::FaultPlan;
+
+    fn key(mu: usize) -> VariantKey {
+        VariantKey { model: "microresnet18".into(), size: 16, mu, overlap: false }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mbs-art-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn mock_manager(tag: &str, max_entries: usize) -> (ArtifactManager, Arc<MockCompiler>) {
+        let backend = Arc::new(MockCompiler::new());
+        let mgr = ArtifactManager::new(tmp_dir(tag), backend.clone(), max_entries).unwrap();
+        (mgr, backend)
+    }
+
+    #[test]
+    fn canonical_key_and_digest_are_stable() {
+        let k = key(8);
+        assert_eq!(k.canonical(), "microresnet18:s16:mu8:serial");
+        assert_eq!(k.digest(7), k.digest(7));
+        assert_ne!(k.digest(7), k.digest(8), "manifest fingerprint is part of the address");
+        assert_ne!(
+            k.digest(7),
+            VariantKey { overlap: true, ..k.clone() }.digest(7),
+            "overlap flag is part of the address"
+        );
+    }
+
+    #[test]
+    fn miss_compiles_then_hits_from_disk() {
+        let (mgr, backend) = mock_manager("hit", 8);
+        let h1 = mgr.fetch(&key(8), 1).unwrap();
+        assert_eq!(backend.compiles(), 1);
+        assert!(h1.accum_path.exists() && h1.eval_path.exists());
+        let h2 = mgr.fetch(&key(8), 1).unwrap();
+        assert_eq!(backend.compiles(), 1, "second fetch must be a cache hit");
+        assert_eq!(h1.accum_hlo, h2.accum_hlo);
+        assert_eq!(h1.eval_hlo, h2.eval_hlo);
+        assert_eq!(*h1.accum_hlo, MockCompiler::render(&key(8), "accum"));
+        let stats = mgr.stats();
+        assert_eq!((stats.compiles, stats.hits), (1, 1));
+        std::fs::remove_dir_all(mgr.dir()).ok();
+    }
+
+    #[test]
+    fn lru_bound_evicts_oldest_and_recompiles() {
+        let (mgr, backend) = mock_manager("lru", 2);
+        mgr.fetch(&key(1), 1).unwrap();
+        mgr.fetch(&key(2), 1).unwrap();
+        mgr.fetch(&key(1), 1).unwrap(); // touch: mu=1 is now most recent
+        mgr.fetch(&key(4), 1).unwrap(); // evicts mu=2, the LRU entry
+        assert_eq!(mgr.cached_entries(), 2);
+        assert_eq!(mgr.stats().evictions, 1);
+        let before = backend.compiles();
+        mgr.fetch(&key(1), 1).unwrap();
+        assert_eq!(backend.compiles(), before, "mu=1 must have survived");
+        mgr.fetch(&key(2), 1).unwrap();
+        assert_eq!(backend.compiles(), before + 1, "mu=2 was evicted, recompiles");
+        std::fs::remove_dir_all(mgr.dir()).ok();
+    }
+
+    #[test]
+    fn manager_adopts_entries_from_a_previous_process() {
+        let dir = tmp_dir("adopt");
+        let backend = Arc::new(MockCompiler::new());
+        {
+            let mgr = ArtifactManager::new(&dir, backend.clone(), 8).unwrap();
+            mgr.fetch(&key(8), 1).unwrap();
+        }
+        let mgr = ArtifactManager::new(&dir, backend.clone(), 8).unwrap();
+        assert_eq!(mgr.cached_entries(), 1, "previous process's entry adopted");
+        mgr.fetch(&key(8), 1).unwrap();
+        assert_eq!(backend.compiles(), 1, "adopted entry serves the hit");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_compile_failure_is_structured_and_retryable() {
+        let plan = FaultPlan::parse(
+            r#"{"faults": [{"job": "compiler", "kind": "step", "at-step": 0}]}"#,
+        )
+        .unwrap();
+        let backend = Arc::new(MockCompiler::new().with_faults(plan.hooks_for("compiler")));
+        let mgr = ArtifactManager::new(tmp_dir("fault"), backend.clone(), 8).unwrap();
+        let err = mgr.fetch(&key(8), 1).unwrap_err();
+        assert!(
+            matches!(err, MbsError::Compile { .. }),
+            "want structured compile error, got {err:?}"
+        );
+        assert!(!err.recoverable(), "a failed compile is deterministic");
+        assert_eq!(mgr.stats().compile_errors, 1);
+        // the fault budget is spent: a fresh fetch retries and succeeds
+        mgr.fetch(&key(8), 1).unwrap();
+        assert_eq!(backend.compiles(), 2);
+        std::fs::remove_dir_all(mgr.dir()).ok();
+    }
+
+    #[test]
+    fn timeout_error_is_recoverable() {
+        let err = MbsError::CompileTimeout { key: key(8).canonical(), waited_ms: 5 };
+        assert!(err.recoverable(), "a stuck backend may succeed on retry");
+        assert!(err.to_string().contains("compile timeout"));
+    }
+
+    #[test]
+    fn python_backend_times_out_and_kills() {
+        // `sleep` stands in for a wedged exporter: spawn succeeds, the
+        // deadline passes, the child is killed, and the structured
+        // timeout error names the variant
+        let scratch = tmp_dir("timeout");
+        let backend = PythonAotCompiler::new("sleep", "/tmp", &scratch)
+            .with_timeout(Duration::from_millis(100));
+        // "sleep -m compile.aot ..." exits immediately with a usage error
+        // on some systems; accept either structured outcome, never a hang
+        let t0 = Instant::now();
+        let out = backend.compile(&key(8));
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        match out {
+            Err(MbsError::CompileTimeout { key: k, .. }) => {
+                assert!(k.contains("microresnet18"));
+            }
+            Err(MbsError::Compile { .. }) => {}
+            other => panic!("want a structured compile/timeout error, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&scratch).ok();
+    }
+}

@@ -11,17 +11,23 @@
 //!    the per-micro-batch hot path uploads only x/y/mask/scale and
 //!    downloads only two scalars (loss_sum) + a 4-vector (metrics).
 
+pub mod artifacts;
 pub mod buffers;
 pub mod checkpoint;
 pub mod faults;
 pub mod model;
 pub mod upload_lane;
 
+pub use artifacts::{
+    ArtifactHandle, ArtifactManager, ArtifactStats, CompiledArtifact, CompilerBackend,
+    MockCompiler, PythonAotCompiler, VariantKey,
+};
 pub use faults::{FaultHooks, FaultKind, FaultPlan};
 pub use model::{ModelRuntime, StepOutput};
 pub use upload_lane::{LaneJob, StagedBatch, UploadLane};
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::error::{MbsError, Result};
 use crate::manifest::{Manifest, ModelEntry, Variant};
@@ -31,13 +37,17 @@ pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     exe_cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    /// Lazily-constructed executable artifact manager for variants the
+    /// export did not bake (see [`artifacts`]). `None` until the first
+    /// unexported variant is requested or a backend is injected.
+    artifacts: Option<ArtifactManager>,
 }
 
 impl Engine {
     /// CPU PJRT client over the given artifact directory.
     pub fn new(manifest: Manifest) -> Result<Engine> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, exe_cache: HashMap::new() })
+        Ok(Engine { client, manifest, exe_cache: HashMap::new(), artifacts: None })
     }
 
     /// The manifest this engine serves artifacts from.
@@ -76,16 +86,86 @@ impl Engine {
         self.exe_cache.len()
     }
 
-    /// Build a [`ModelRuntime`] for `(model, size, mu)`: compiles accum /
-    /// eval / apply executables and uploads initial params + zeroed
-    /// accumulator + optimizer slots.
+    /// Build a [`ModelRuntime`] for `(model, size, mu)`: resolves the
+    /// variant through the artifact manager (exported HLO on disk, cache
+    /// hit, or on-demand compile), compiles accum / eval / apply
+    /// executables, and uploads initial params + zeroed accumulator +
+    /// optimizer slots. Any mu is loadable, not just exported ones —
+    /// recovery's re-planned mu and admission's proposals land here.
     pub fn load_model(&mut self, model: &str, size: usize, mu: usize) -> Result<ModelRuntime> {
         let entry: ModelEntry = self.manifest.model(model)?.clone();
-        let variant: Variant = entry.variant(size, mu)?.clone();
+        let variant: Variant = self.resolve_variant(&entry, size, mu)?;
         let accum = self.load_executable(&variant.accum_hlo)?;
         let eval = self.load_executable(&variant.eval_hlo)?;
         let apply = self.load_executable(&entry.apply_hlo)?;
         ModelRuntime::new(self.client.clone(), entry, variant, accum, eval, apply, &self.manifest)
+    }
+
+    /// Resolve `(size, mu)` for `entry` to a [`Variant`] whose HLO paths
+    /// are loadable: an exported variant whose files exist is used as-is;
+    /// anything else is derived metadata-side
+    /// ([`ModelEntry::derive_variant`]) with its HLO payload pair fetched
+    /// through the [`ArtifactManager`] (cache hit or backend compile),
+    /// the variant's paths rewritten to the cache entry. Absolute cache
+    /// paths pass through [`Manifest::path`] unchanged (`Path::join` with
+    /// an absolute path yields that path).
+    pub fn resolve_variant(
+        &mut self,
+        entry: &ModelEntry,
+        size: usize,
+        mu: usize,
+    ) -> Result<Variant> {
+        if let Ok(v) = entry.variant(size, mu) {
+            if self.manifest.path(&v.accum_hlo).exists() && self.manifest.path(&v.eval_hlo).exists()
+            {
+                return Ok(v.clone());
+            }
+        }
+        let mut variant = entry.derive_variant(size, mu)?;
+        let key = VariantKey { model: entry.name.clone(), size, mu, overlap: false };
+        let fingerprint = entry.fingerprint();
+        let handle = self.artifact_manager()?.fetch(&key, fingerprint)?;
+        variant.accum_hlo = handle
+            .accum_path
+            .to_str()
+            .ok_or_else(|| MbsError::Runtime(format!("non-utf8 path {:?}", handle.accum_path)))?
+            .to_string();
+        variant.eval_hlo = handle
+            .eval_path
+            .to_str()
+            .ok_or_else(|| MbsError::Runtime(format!("non-utf8 path {:?}", handle.eval_path)))?
+            .to_string();
+        Ok(variant)
+    }
+
+    /// The engine's artifact manager, constructing the default one on
+    /// first use: cache at `<artifact-dir>/cache`, python AOT backend
+    /// (`python3 -m compile.aot --variant`, overridable via `MBS_PYTHON` /
+    /// `MBS_COMPILE_DIR`).
+    pub fn artifact_manager(&mut self) -> Result<&ArtifactManager> {
+        if self.artifacts.is_none() {
+            let cache_dir = self.manifest.dir.join("cache");
+            let backend =
+                PythonAotCompiler::for_manifest_dir(&self.manifest.dir, &cache_dir.join("scratch"));
+            self.artifacts = Some(ArtifactManager::new(
+                cache_dir,
+                Arc::new(backend),
+                artifacts::DEFAULT_MAX_ENTRIES,
+            )?);
+        }
+        Ok(self.artifacts.as_ref().expect("just constructed"))
+    }
+
+    /// Replace the compile backend (tests inject [`MockCompiler`]; a
+    /// shared manager from another engine can be installed too, since
+    /// managers clone shallowly).
+    pub fn set_artifact_manager(&mut self, manager: ArtifactManager) {
+        self.artifacts = Some(manager);
+    }
+
+    /// Counters of the artifact manager, if one has been constructed.
+    pub fn artifact_stats(&self) -> Option<ArtifactStats> {
+        self.artifacts.as_ref().map(ArtifactManager::stats)
     }
 }
 

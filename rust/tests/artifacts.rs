@@ -1,0 +1,274 @@
+//! Artifact-manager contract tests against the deterministic
+//! `MockCompiler` backend — the compile-in-the-loop cache proven with no
+//! compiled artifacts, no python, no PJRT (tier-1, never skipped; see
+//! rust/docs/TESTING.md). Covers the ISSUE acceptance criteria:
+//! coalescing (8 concurrent fetches of one uncached variant → exactly 1
+//! backend compile, byte-identical handles, no leaked `.tmp` files even
+//! across a panicking backend) and corruption recovery (bit-flip /
+//! truncate → checksum detection, eviction, transparent recompile; a
+//! structured non-panic error when the backend also fails).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mbs::error::MbsError;
+use mbs::runtime::{
+    ArtifactHandle, ArtifactManager, CompiledArtifact, CompilerBackend, FaultPlan, MockCompiler,
+    VariantKey,
+};
+
+fn key(mu: usize) -> VariantKey {
+    VariantKey { model: "microresnet18".into(), size: 16, mu, overlap: false }
+}
+
+const FINGERPRINT: u64 = 0x00c0_ffee;
+
+fn teardown(mgr: &ArtifactManager) {
+    std::fs::remove_dir_all(mgr.dir()).ok();
+}
+
+#[test]
+fn eight_concurrent_fetches_coalesce_to_one_compile() {
+    // the headline: N threads race for one uncached variant; the latency
+    // window guarantees they overlap the leader's in-flight compile
+    let backend = Arc::new(MockCompiler::new().with_latency(Duration::from_millis(150)));
+    let mgr = common::manager_with("coalesce", backend.clone(), 8);
+    const N: usize = 8;
+
+    let handles: Vec<ArtifactHandle> = std::thread::scope(|s| {
+        let threads: Vec<_> = (0..N)
+            .map(|_| {
+                let mgr = mgr.clone();
+                s.spawn(move || mgr.fetch(&key(8), FINGERPRINT).expect("coalesced fetch"))
+            })
+            .collect();
+        threads.into_iter().map(|t| t.join().expect("no fetch panics")).collect()
+    });
+
+    assert_eq!(backend.compiles(), 1, "exactly one backend compile for {N} racing fetches");
+    let stats = mgr.stats();
+    assert_eq!(stats.compiles, 1);
+    assert_eq!(stats.compile_errors, 0);
+    // every fetch is accounted: 1 leader compile; each other fetch lands
+    // a disk hit (having waited — coalesced — or arrived after the fact)
+    assert_eq!(stats.hits + stats.compiles, N as u64, "fetch accounting: {stats:?}");
+    assert!(stats.coalesced <= stats.hits, "waiters are a subset of hits: {stats:?}");
+
+    // all handles byte-identical, and equal to the deterministic render
+    let expect_accum = MockCompiler::render(&key(8), "accum");
+    let expect_eval = MockCompiler::render(&key(8), "eval");
+    for h in &handles {
+        assert_eq!(*h.accum_hlo, expect_accum, "accum payload diverged");
+        assert_eq!(*h.eval_hlo, expect_eval, "eval payload diverged");
+        assert_eq!(h.digest, key(8).digest(FINGERPRINT));
+        assert!(h.accum_path.exists() && h.eval_path.exists());
+    }
+    assert!(
+        common::tmp_files(mgr.dir()).is_empty(),
+        "write-tmp-then-rename must leave no .tmp files"
+    );
+    teardown(&mgr);
+}
+
+/// Backend that sleeps, then panics — the leader dies mid-compile.
+struct PanickingCompiler {
+    delay: Duration,
+}
+
+impl CompilerBackend for PanickingCompiler {
+    fn compile(&self, _key: &VariantKey) -> mbs::error::Result<CompiledArtifact> {
+        std::thread::sleep(self.delay);
+        panic!("compiler backend died mid-compile");
+    }
+
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+}
+
+#[test]
+fn leader_panic_frees_waiters_and_leaks_no_tmp_files() {
+    let backend = Arc::new(PanickingCompiler { delay: Duration::from_millis(400) });
+    let mgr = common::manager_with("panic", backend, 8);
+
+    let (leader, waiter) = std::thread::scope(|s| {
+        let m1 = mgr.clone();
+        let leader = s.spawn(move || m1.fetch(&key(8), FINGERPRINT));
+        // give the leader a comfortable head start into its 400 ms sleep
+        // so this fetch coalesces onto it rather than leading itself
+        std::thread::sleep(Duration::from_millis(100));
+        let m2 = mgr.clone();
+        let waiter = s.spawn(move || m2.fetch(&key(8), FINGERPRINT));
+        (leader.join(), waiter.join())
+    });
+
+    assert!(leader.is_err(), "the leader thread itself panicked");
+    match waiter {
+        // the common case: the waiter coalesced, the RAII guard recorded
+        // the aborted compile, and the waiter got a structured error
+        Ok(Err(MbsError::Compile { key: k, reason })) => {
+            assert!(k.contains("microresnet18"), "error names the variant: {k}");
+            assert!(reason.contains("aborted"), "error names the abort: {reason}");
+        }
+        // the timing-race case: the waiter arrived late, led its own
+        // compile, and panicked identically — still no hang, no tmp leak
+        Err(_) => {}
+        other => panic!("waiter must fail structurally or panic as leader, got {other:?}"),
+    }
+    assert_eq!(mgr.cached_entries(), 0, "nothing may be cached after a panic");
+    assert!(
+        common::tmp_files(mgr.dir()).is_empty(),
+        "a panicked compile must leak no .tmp files"
+    );
+    teardown(&mgr);
+}
+
+#[test]
+fn bit_flip_is_detected_evicted_and_recompiled_transparently() {
+    let (mgr, backend) = common::mock_manager("bitflip", 8);
+    let first = mgr.fetch(&key(8), FINGERPRINT).expect("cold fetch");
+
+    // flip one bit in the cached accum payload
+    let mut bytes = std::fs::read(&first.accum_path).unwrap();
+    bytes[7] ^= 0x40;
+    std::fs::write(&first.accum_path, &bytes).unwrap();
+
+    let again = mgr.fetch(&key(8), FINGERPRINT).expect("corruption must be invisible to callers");
+    assert_eq!(*again.accum_hlo, MockCompiler::render(&key(8), "accum"), "payload restored");
+    assert_eq!(backend.compiles(), 2, "recompile after eviction");
+    let stats = mgr.stats();
+    assert_eq!(stats.corrupt_evictions, 1, "the flipped entry was evicted: {stats:?}");
+    // and the restored entry is a clean hit from here on
+    mgr.fetch(&key(8), FINGERPRINT).unwrap();
+    assert_eq!(backend.compiles(), 2);
+    assert!(common::tmp_files(mgr.dir()).is_empty());
+    teardown(&mgr);
+}
+
+#[test]
+fn truncation_is_detected_evicted_and_recompiled_transparently() {
+    let (mgr, backend) = common::mock_manager("trunc", 8);
+    let first = mgr.fetch(&key(8), FINGERPRINT).expect("cold fetch");
+
+    // truncate the eval payload (a crashed writer / torn copy)
+    let bytes = std::fs::read(&first.eval_path).unwrap();
+    std::fs::write(&first.eval_path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let again = mgr.fetch(&key(8), FINGERPRINT).expect("truncation must be invisible to callers");
+    assert_eq!(*again.eval_hlo, MockCompiler::render(&key(8), "eval"));
+    assert_eq!(backend.compiles(), 2);
+    assert_eq!(mgr.stats().corrupt_evictions, 1);
+    teardown(&mgr);
+}
+
+#[test]
+fn corrupt_metadata_is_evicted_and_recompiled() {
+    let (mgr, backend) = common::mock_manager("meta", 8);
+    let first = mgr.fetch(&key(8), FINGERPRINT).expect("cold fetch");
+    let meta = first.accum_path.with_file_name(format!(
+        "{:016x}.meta.json",
+        key(8).digest(FINGERPRINT)
+    ));
+    assert!(meta.exists(), "metadata file must sit next to the payloads");
+    std::fs::write(&meta, "{\"magic\": \"not-an-artifact\"}").unwrap();
+
+    mgr.fetch(&key(8), FINGERPRINT).expect("bad metadata must be invisible to callers");
+    assert_eq!(backend.compiles(), 2);
+    assert_eq!(mgr.stats().corrupt_evictions, 1);
+    teardown(&mgr);
+}
+
+#[test]
+fn corruption_with_failing_backend_surfaces_structured_error() {
+    // entry corrupted AND the backend cannot recompile: the caller gets
+    // the structured compile error — never a panic, never the corrupt bytes
+    let plan = FaultPlan::parse(
+        // attempt 0 is the successful cold compile; attempt 1 (the
+        // post-corruption recompile) is the injected failure
+        r#"{"faults": [{"job": "compiler", "kind": "step", "at-step": 1}]}"#,
+    )
+    .unwrap();
+    let backend = Arc::new(MockCompiler::new().with_faults(plan.hooks_for("compiler")));
+    let mgr = common::manager_with("corrupt-fail", backend.clone(), 8);
+
+    let first = mgr.fetch(&key(8), FINGERPRINT).expect("cold fetch");
+    let mut bytes = std::fs::read(&first.accum_path).unwrap();
+    bytes[3] ^= 0x01;
+    std::fs::write(&first.accum_path, &bytes).unwrap();
+
+    let err = mgr.fetch(&key(8), FINGERPRINT).expect_err("backend failure must surface");
+    match &err {
+        MbsError::Compile { key: k, reason } => {
+            assert!(k.contains("microresnet18"), "{k}");
+            assert!(reason.contains("injected"), "{reason}");
+        }
+        other => panic!("want MbsError::Compile, got {other:?}"),
+    }
+    assert!(!err.recoverable(), "compile failure is deterministic, stays fatal");
+    let stats = mgr.stats();
+    assert_eq!(stats.corrupt_evictions, 1);
+    assert_eq!(stats.compile_errors, 1);
+    // the fault budget is spent: the next fetch recovers end-to-end
+    let healed = mgr.fetch(&key(8), FINGERPRINT).expect("retry after transient backend fault");
+    assert_eq!(*healed.accum_hlo, MockCompiler::render(&key(8), "accum"));
+    assert_eq!(backend.compiles(), 3);
+    assert!(common::tmp_files(mgr.dir()).is_empty());
+    teardown(&mgr);
+}
+
+#[test]
+fn distinct_variants_and_fingerprints_do_not_collide() {
+    let (mgr, backend) = common::mock_manager("distinct", 8);
+    let h8 = mgr.fetch(&key(8), FINGERPRINT).unwrap();
+    let h4 = mgr.fetch(&key(4), FINGERPRINT).unwrap();
+    assert_ne!(h8.digest, h4.digest);
+    assert_ne!(h8.accum_hlo, h4.accum_hlo, "payloads are per-variant");
+    // a re-export that changes the manifest fingerprint invalidates the
+    // cached entry without any explicit flush: same key, new digest
+    let h8b = mgr.fetch(&key(8), FINGERPRINT + 1).unwrap();
+    assert_ne!(h8.digest, h8b.digest);
+    assert_eq!(backend.compiles(), 3, "three distinct content addresses, three compiles");
+    assert_eq!(mgr.stats().hits, 0);
+    teardown(&mgr);
+}
+
+#[test]
+fn warm_restart_adopts_the_cache_from_a_previous_manager() {
+    // process-restart story: a new manager over the same dir serves hits
+    // from the previous one's entries (checksums re-validated per fetch)
+    let dir = common::cache_dir("restart");
+    let backend = Arc::new(MockCompiler::new());
+    {
+        let mgr = ArtifactManager::new(&dir, backend.clone(), 8).unwrap();
+        mgr.fetch(&key(8), FINGERPRINT).unwrap();
+        mgr.fetch(&key(4), FINGERPRINT).unwrap();
+    }
+    let mgr = ArtifactManager::new(&dir, backend.clone(), 8).unwrap();
+    assert_eq!(mgr.cached_entries(), 2, "both entries adopted");
+    mgr.fetch(&key(8), FINGERPRINT).unwrap();
+    mgr.fetch(&key(4), FINGERPRINT).unwrap();
+    assert_eq!(backend.compiles(), 2, "warm restart: zero recompiles");
+    assert_eq!(mgr.stats().hits, 2);
+    teardown(&mgr);
+}
+
+#[test]
+fn lru_bound_holds_under_many_variants() {
+    let (mgr, backend) = common::mock_manager("lru-many", 3);
+    for mu in 1..=9usize {
+        mgr.fetch(&key(mu), FINGERPRINT).unwrap();
+    }
+    assert_eq!(mgr.cached_entries(), 3, "bound holds");
+    assert_eq!(mgr.stats().evictions, 6);
+    // the three most recent survive; older ones recompile
+    mgr.fetch(&key(9), FINGERPRINT).unwrap();
+    assert_eq!(backend.compiles(), 9, "mu=9 was resident");
+    mgr.fetch(&key(1), FINGERPRINT).unwrap();
+    assert_eq!(backend.compiles(), 10, "mu=1 was evicted long ago");
+    // on-disk file count matches the bound: 3 files per entry
+    let files = std::fs::read_dir(mgr.dir()).unwrap().count();
+    assert_eq!(files, 9, "3 entries x (meta + accum + eval)");
+    teardown(&mgr);
+}

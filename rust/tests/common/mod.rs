@@ -13,7 +13,9 @@
 #![allow(dead_code)] // each integration test binary uses a subset of these
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
+use mbs::runtime::{ArtifactManager, CompilerBackend, MockCompiler};
 use mbs::{Engine, Manifest};
 
 pub fn artifacts_dir() -> Option<PathBuf> {
@@ -48,6 +50,47 @@ pub fn artifacts_dir() -> Option<PathBuf> {
 pub fn engine() -> Option<Engine> {
     let dir = artifacts_dir()?;
     Some(Engine::new(Manifest::load(dir).expect("manifest parses")).expect("engine"))
+}
+
+/// A unique temp directory for one test's artifact cache, cleared of any
+/// previous run's leftovers. Callers remove it when done.
+pub fn cache_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mbs-it-cache-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Mock-backed artifact manager over a fresh temp cache dir: the whole
+/// cache contract (coalescing, eviction, corruption recovery) is provable
+/// with no compiled artifacts and no python — the tier-1 replacement for
+/// the `MBS_ARTIFACTS`-gated variant-resolution paths.
+pub fn mock_manager(tag: &str, max_entries: usize) -> (ArtifactManager, Arc<MockCompiler>) {
+    let backend = Arc::new(MockCompiler::new());
+    let mgr = ArtifactManager::new(cache_dir(tag), backend.clone(), max_entries)
+        .expect("artifact manager over temp dir");
+    (mgr, backend)
+}
+
+/// Same, with a caller-supplied backend (latency / fault injection).
+pub fn manager_with(
+    tag: &str,
+    backend: Arc<dyn CompilerBackend>,
+    max_entries: usize,
+) -> ArtifactManager {
+    ArtifactManager::new(cache_dir(tag), backend, max_entries)
+        .expect("artifact manager over temp dir")
+}
+
+/// Any `.tmp` siblings the write-tmp-then-rename discipline would leak on
+/// a crashed or panicked store (must always be empty after a fetch,
+/// successful or not).
+pub fn tmp_files(dir: &std::path::Path) -> Vec<String> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".tmp"))
+        .collect()
 }
 
 /// Max |a-b| over two leaf vectors.

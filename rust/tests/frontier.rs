@@ -1,11 +1,17 @@
 //! Integration tests for the frontier sweep + shared bench schema, through
 //! the public API only. These are planner-level (pure capacity arithmetic)
 //! and run on a clean checkout — no compiled artifacts needed, never
-//! skipped (see rust/docs/TESTING.md).
+//! skipped (see rust/docs/TESTING.md). The `--time-all` variant-resolution
+//! path is covered here too, against the mock-backed artifact manager
+//! instead of compiled artifacts.
+
+mod common;
 
 use mbs::coordinator::frontier::{synthetic_entry, Feasibility, FrontierGrid};
+use mbs::coordinator::planner::auto_mu;
 use mbs::memory::MIB;
 use mbs::metrics::bench_report;
+use mbs::runtime::VariantKey;
 use mbs::util::json::Json;
 
 /// The documented dry-run default grid produces all three classes and a
@@ -135,6 +141,53 @@ fn overlap_priced_grid_is_a_subset_of_the_serial_one() {
     );
     // the overlap grid's feasible region is what --time-all would sweep
     assert!(overlapped.feasible_points().len() <= serial.feasible_points().len());
+}
+
+/// The `--time-all` resolution story with no artifacts anywhere: every
+/// feasible sweep point's planned variant resolves through the artifact
+/// manager — compiled on demand by the mock backend on the cold sweep
+/// (one compile per distinct mu, thanks to content addressing), served
+/// entirely from cache on the warm one. This is the same planner → key →
+/// fetch chain `mbs frontier --time-all` drives, minus PJRT.
+#[test]
+fn time_all_feasible_points_resolve_through_the_artifact_manager() {
+    let entry = synthetic_entry("classification").unwrap();
+    let capacities: Vec<u64> = [1u64, 2, 4, 8].iter().map(|&m| m * MIB).collect();
+    let batches = [8usize, 32, 64, 128, 256];
+    let grid = FrontierGrid::sweep(&entry, 16, 0, &capacities, &batches, false).unwrap();
+    let feasible = grid.feasible_points();
+    assert!(!feasible.is_empty(), "fixture must have a feasible region");
+
+    let (mgr, backend) = common::mock_manager("frontier-sweep", 32);
+    let fingerprint = entry.fingerprint();
+    let mut planned_mus = std::collections::BTreeSet::new();
+    for &(capacity, batch) in &feasible {
+        let res = auto_mu(&entry, 16, batch, 0, capacity, false)
+            .expect("a point classified feasible must plan");
+        planned_mus.insert(res.mu);
+        let key =
+            VariantKey { model: entry.name.clone(), size: 16, mu: res.mu, overlap: false };
+        let handle = mgr.fetch(&key, fingerprint).expect("sweep point resolves on demand");
+        assert!(handle.accum_path.exists() && handle.eval_path.exists());
+    }
+    assert_eq!(
+        backend.compiles() as usize,
+        planned_mus.len(),
+        "cold sweep: one compile per distinct planned mu, the rest coalesce into hits"
+    );
+
+    // the warm sweep — a re-run over the same grid — compiles nothing
+    let cold_compiles = mgr.stats().compiles;
+    for &(capacity, batch) in &feasible {
+        let res = auto_mu(&entry, 16, batch, 0, capacity, false).unwrap();
+        let key =
+            VariantKey { model: entry.name.clone(), size: 16, mu: res.mu, overlap: false };
+        mgr.fetch(&key, fingerprint).expect("warm sweep point");
+    }
+    let warm = mgr.stats();
+    assert_eq!(warm.compiles, cold_compiles, "warm sweep must be all cache hits");
+    assert!(warm.hits >= feasible.len() as u64);
+    std::fs::remove_dir_all(mgr.dir()).ok();
 }
 
 /// The --compare trend check over real report files: a throughput drop

@@ -10,8 +10,11 @@ mod common;
 
 use std::path::PathBuf;
 
-use mbs::coordinator::JobOutcome;
-use mbs::runtime::FaultPlan;
+use mbs::coordinator::frontier::synthetic_entry;
+use mbs::coordinator::planner::{auto_mu, auto_mu_transient};
+use mbs::coordinator::{plan_admission, AdmissionRequest, JobOutcome};
+use mbs::memory::MIB;
+use mbs::runtime::{FaultPlan, VariantKey};
 use mbs::{MicroBatchSpec, TrainConfig};
 
 /// Write a fault spec to a unique temp file and return its path.
@@ -65,6 +68,77 @@ fn assert_reports_identical(a: &mbs::TrainReport, b: &mbs::TrainReport, what: &s
         b.final_eval.primary_metric.to_bits(),
         "{what}: final metric"
     );
+}
+
+/// Recovery's re-plan chain at the artifact layer, with no artifacts and
+/// no PJRT (tier-1, never skipped): a shrunken post-fault budget
+/// re-plans a smaller mu, and the re-planned variant is *fetchable* — the
+/// artifact manager compiles it on demand — instead of recovery failing
+/// on a missing export. Replaying the original mu afterwards is a pure
+/// cache hit, mirroring `JobExec::recover` → `adopt_resolution` →
+/// `Engine::load_model`.
+#[test]
+fn replanned_mu_fetches_fresh_variant_instead_of_failing() {
+    let entry = synthetic_entry("classification").unwrap();
+    // healthy plan at 4 MiB — the documented fixture point (mu = 32)
+    let healthy = auto_mu(&entry, 16, 1024, 0, 4 * MIB, false).unwrap();
+    assert_eq!(healthy.mu, 32, "fixture anchor moved");
+    // post-fault re-plan against a much tighter *transient* budget — the
+    // exact query JobExec::recover step 4 runs after releasing residency
+    let replanned = auto_mu_transient(&entry, 16, 1024, 0, MIB, false)
+        .expect("the re-plan itself must fit the shrunken budget");
+    assert!(replanned.mu <= healthy.mu, "pressure can never grow mu");
+
+    let (mgr, backend) = common::mock_manager("replan", 8);
+    let fingerprint = entry.fingerprint();
+    let key = |mu: usize| VariantKey {
+        model: entry.name.clone(),
+        size: 16,
+        mu,
+        overlap: false,
+    };
+    mgr.fetch(&key(healthy.mu), fingerprint).expect("healthy variant");
+    mgr.fetch(&key(replanned.mu), fingerprint).expect("re-planned variant compiles on demand");
+    let distinct = if replanned.mu == healthy.mu { 1 } else { 2 };
+    assert_eq!(backend.compiles() as usize, distinct);
+    // the replay path re-fetches what it already has: zero new compiles
+    mgr.fetch(&key(healthy.mu), fingerprint).unwrap();
+    mgr.fetch(&key(replanned.mu), fingerprint).unwrap();
+    assert_eq!(backend.compiles() as usize, distinct, "replay must be all cache hits");
+    std::fs::remove_dir_all(mgr.dir()).ok();
+}
+
+/// Admission may pin a mu that was never exported: `plan_admission`
+/// derives the variant (synthetic exports are powers of two — 12 is not
+/// one) and the manager compiles it on demand. Before the artifact
+/// manager this was a manifest error at admission time.
+#[test]
+fn admission_accepts_unexported_pinned_mu_and_manager_compiles_it() {
+    let entry = synthetic_entry("classification").unwrap();
+    let req = AdmissionRequest {
+        name: "pinned".into(),
+        entry: entry.clone(),
+        size: 16,
+        batch: 24,
+        eval_len: 0,
+        mu: MicroBatchSpec::Fixed(12),
+        overlap: false,
+    };
+    let verdicts = plan_admission(&[req], 16 * MIB);
+    assert_eq!(verdicts.len(), 1);
+    assert!(
+        verdicts[0].outcome.is_admitted(),
+        "unexported pinned mu must admit on memory grounds: {:?}",
+        verdicts[0].outcome
+    );
+    assert_eq!(verdicts[0].outcome.mu(), Some(12));
+
+    let (mgr, backend) = common::mock_manager("pinned-mu", 4);
+    let key = VariantKey { model: entry.name.clone(), size: 16, mu: 12, overlap: false };
+    let handle = mgr.fetch(&key, entry.fingerprint()).expect("derived variant compiles");
+    assert_eq!(backend.compiles(), 1);
+    assert!(handle.accum_path.exists());
+    std::fs::remove_dir_all(mgr.dir()).ok();
 }
 
 #[test]
