@@ -76,7 +76,7 @@ fn lane_staging_comparison(iters: usize) -> Result<()> {
                 let mut mb = pool.lease();
                 loader::assemble_into(&mut mb, ds.as_ref(), &indices, mu, 0);
                 mb.j = j;
-                lane.submit(LaneJob { seq, mb, scale: None, fault: None })?;
+                lane.submit(LaneJob { seq, mb, scale: None, fault: None, stall: None })?;
                 seq += 1;
                 let staged = lane.recv()?;
                 sink += fake_execute(&staged.mb);
@@ -94,7 +94,7 @@ fn lane_staging_comparison(iters: usize) -> Result<()> {
                 let mut mb = pool.lease();
                 loader::assemble_into(&mut mb, ds.as_ref(), &indices, mu, 0);
                 mb.j = j;
-                lane.submit(LaneJob { seq, mb, scale: None, fault: None })?;
+                lane.submit(LaneJob { seq, mb, scale: None, fault: None, stall: None })?;
                 seq += 1;
                 if let Some(prev) = pending.take() {
                     sink += fake_execute(&prev.mb);

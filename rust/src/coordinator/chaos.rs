@@ -1,0 +1,699 @@
+//! Exhaustive fault-space sweep (`mbs chaos`) — the capstone proof that
+//! the watchdog + recovery machinery leaves the executor with no silent
+//! failure mode.
+//!
+//! The sweep enumerates every injection point the fault plan schema can
+//! express against a job set — `(job, surface, step)` over the error
+//! surfaces (`step`, `arena`, `lane`, `compile`, `checkpoint`) and the
+//! hang surfaces (`stall` on lane / step / checkpoint, with the injected
+//! delay sized to 3x the watchdog deadline so conversion MUST trip) —
+//! then runs the set once per point under a one-entry [`FaultPlan`] and
+//! classifies the outcome against a fault-free baseline:
+//!
+//! * **clean** — the fault never fired (the point sits beyond the run's
+//!   attempt axis); every job must still be bit-identical to baseline.
+//! * **recovered** — the fault fired and the recovery state machine
+//!   replayed it; every completed job bit-identical to baseline
+//!   ([`fingerprint`], `f64::to_bits` over the whole numeric report).
+//! * **evicted** — the fault fired and the job degraded into a clean
+//!   structured eviction (`outcome: "failed"` with the terminal error
+//!   recorded) while its siblings finished bit-identically.
+//! * **hung** — the fault fired and *nothing* accounted for it: no retry,
+//!   no recovery, no eviction. This is the silent-absorption shape — in
+//!   production, an unconverted stall is a wedged executor. The watchdog
+//!   deadlines make this state unreachable by construction, and the sweep
+//!   asserts `hung == 0`.
+//! * **diverged** — a job completed but its report's bits moved: the
+//!   recovery identity oracle failed. Like `hung`, must be zero.
+//!
+//! `BENCH_chaos.json` aggregates per-surface counts plus the
+//! trend-tracked `recovered_fraction` (recoveries over fired points).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::coordinator::tenancy::JobSet;
+use crate::coordinator::trainer::{train_jobs, train_jobs_faulted, JobOutcome, TrainReport};
+use crate::error::{MbsError, Result};
+use crate::metrics::EpochStats;
+use crate::runtime::{Deadlines, Engine, FaultKind, FaultPlan, FaultSpec, StallSurface, Trigger};
+use crate::util::hash::fnv1a64;
+
+/// One fault shape the sweep can inject — the product of the plan
+/// schema's `kind` and (for stalls) `surface` axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Injection {
+    /// Transient step fault before a device step.
+    Step,
+    /// Structured OOM armed on the job's next arena charge.
+    Arena,
+    /// Staging failure on the upload lane (overlap jobs only).
+    Lane,
+    /// Wall-clock delay on the upload-lane worker (overlap jobs only) —
+    /// converted by the lane-recv deadline.
+    StallLane,
+    /// Wall-clock delay on the executor thread (serial jobs only) —
+    /// converted by the step deadline.
+    StallStep,
+    /// Wall-clock delay inside the snapshot-save window — converted by
+    /// the checkpoint deadline.
+    StallCheckpoint,
+    /// Engine variant-resolve failure (the compile/artifact seam).
+    Compile,
+    /// Checkpoint-save failure after the atomic snapshot write.
+    Checkpoint,
+}
+
+impl Injection {
+    /// Stable surface name — the per-surface aggregation key of
+    /// `BENCH_chaos.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Injection::Step => "step",
+            Injection::Arena => "arena",
+            Injection::Lane => "lane",
+            Injection::StallLane => "stall-lane",
+            Injection::StallStep => "stall-step",
+            Injection::StallCheckpoint => "stall-checkpoint",
+            Injection::Compile => "compile",
+            Injection::Checkpoint => "checkpoint",
+        }
+    }
+
+    /// Every surface, in report order.
+    pub fn all() -> [Injection; 8] {
+        [
+            Injection::Step,
+            Injection::Arena,
+            Injection::Lane,
+            Injection::StallLane,
+            Injection::StallStep,
+            Injection::StallCheckpoint,
+            Injection::Compile,
+            Injection::Checkpoint,
+        ]
+    }
+}
+
+/// One `(job, surface, step)` cell of the sweep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InjectionPoint {
+    /// Target job name (`"*"` for the engine-global compile seam).
+    pub job: String,
+    /// Which surface the fault enters through.
+    pub injection: Injection,
+    /// 0-based attempt index on that surface's axis (micro-step attempts
+    /// for step/arena/lane/stalls, snapshot saves for checkpoint,
+    /// engine-level resolves for compile).
+    pub at: u64,
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct ChaosCfg {
+    /// Uniform watchdog deadline for every surface, milliseconds. Stall
+    /// injections sleep 3x this, so conversion is forced.
+    pub deadline_ms: u64,
+    /// Attempt indices to inject at, per surface axis.
+    pub steps: Vec<u64>,
+    /// Seed stamped into every generated plan (prob draws + backoff
+    /// jitter; the sweep itself uses `at-step` triggers).
+    pub seed: u64,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> ChaosCfg {
+        ChaosCfg { deadline_ms: 250, steps: vec![0, 3], seed: 7 }
+    }
+}
+
+/// How many snapshot saves (`begin_phase` calls) an uninterrupted run of
+/// this job performs — the checkpoint surface's attempt axis.
+fn phase_count(epochs: usize, skip_eval: bool) -> u64 {
+    if skip_eval {
+        // train epochs + the one FinalEval sweep
+        epochs as u64 + 1
+    } else {
+        // train + eval per epoch
+        2 * epochs as u64
+    }
+}
+
+/// Enumerate every injection point for `set`: the full (job, surface,
+/// step) product, restricted to surfaces the job actually exercises
+/// (lane surfaces need overlap mode, the serial stall needs serial mode)
+/// and to checkpoint steps an uninterrupted run actually reaches. The
+/// engine-global compile seam contributes one point per admitted-job
+/// resolve (materialization order), under the wildcard job.
+pub fn enumerate(set: &JobSet, steps: &[u64]) -> Vec<InjectionPoint> {
+    let mut points = Vec::new();
+    for spec in &set.jobs {
+        let overlap = spec.cfg.overlap;
+        let phases = phase_count(spec.cfg.epochs, spec.cfg.skip_eval);
+        for &at in steps {
+            let mut push = |injection| {
+                points.push(InjectionPoint { job: spec.name.clone(), injection, at })
+            };
+            push(Injection::Step);
+            push(Injection::Arena);
+            if overlap {
+                push(Injection::Lane);
+                push(Injection::StallLane);
+            } else {
+                push(Injection::StallStep);
+            }
+            if at < phases {
+                push(Injection::Checkpoint);
+                push(Injection::StallCheckpoint);
+            }
+        }
+    }
+    // the compile seam is engine-global: attempt i is the i-th variant
+    // resolve of the run, i.e. job i's materialization load
+    for i in 0..set.jobs.len() as u64 {
+        points.push(InjectionPoint { job: "*".into(), injection: Injection::Compile, at: i });
+    }
+    points
+}
+
+/// Build the one-entry [`FaultPlan`] for a single injection point: short
+/// uniform watchdog deadlines, a 3x-deadline stall length, and a retry
+/// budget generous enough that a single injected fault always has a
+/// recovery attempt available.
+pub fn plan_for(point: &InjectionPoint, cfg: &ChaosCfg) -> FaultPlan {
+    let (kind, surface) = match point.injection {
+        Injection::Step => (FaultKind::Step, StallSurface::Auto),
+        Injection::Arena => (FaultKind::Arena, StallSurface::Auto),
+        Injection::Lane => (FaultKind::Lane, StallSurface::Auto),
+        Injection::StallLane => (FaultKind::Stall, StallSurface::Lane),
+        Injection::StallStep => (FaultKind::Stall, StallSurface::Step),
+        Injection::StallCheckpoint => (FaultKind::Stall, StallSurface::Checkpoint),
+        Injection::Compile => (FaultKind::Compile, StallSurface::Auto),
+        Injection::Checkpoint => (FaultKind::Checkpoint, StallSurface::Auto),
+    };
+    let stall_ms = cfg.deadline_ms.saturating_mul(3).max(1);
+    FaultPlan {
+        seed: cfg.seed,
+        max_retries: 3,
+        backoff_ms: 0,
+        watchdog: Some(Deadlines::uniform(Duration::from_millis(cfg.deadline_ms))),
+        specs: vec![FaultSpec {
+            job: point.job.clone(),
+            kind,
+            trigger: Trigger::AtStep(point.at),
+            times: 1,
+            stall_ms,
+            surface,
+        }],
+    }
+}
+
+/// Render a plan back into the on-disk `--faults spec.json` schema. The
+/// dry-run sweep round-trips every generated plan through
+/// [`FaultPlan::parse`] to prove the sweep only exercises configurations
+/// a user could commit to a spec file.
+pub fn plan_json(plan: &FaultPlan) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{{\n  \"seed\": {},\n  \"max_retries\": {},\n  \"backoff_ms\": {},\n",
+        plan.seed, plan.max_retries, plan.backoff_ms
+    ));
+    if let Some(w) = &plan.watchdog {
+        s.push_str(&format!(
+            "  \"watchdog\": {{\"lane-recv-ms\": {}, \"step-ms\": {}, \
+             \"compile-ms\": {}, \"checkpoint-ms\": {}}},\n",
+            w.lane_recv.as_millis(),
+            w.step.as_millis(),
+            w.compile.as_millis(),
+            w.checkpoint.as_millis()
+        ));
+    }
+    s.push_str("  \"faults\": [\n");
+    for (i, spec) in plan.specs.iter().enumerate() {
+        let trigger = match spec.trigger {
+            Trigger::AtStep(n) => format!("\"at-step\": {n}"),
+            Trigger::Prob(p) => format!("\"prob\": {p}"),
+        };
+        let kind = match spec.kind {
+            FaultKind::Arena => "arena",
+            FaultKind::Lane => "lane",
+            FaultKind::Step => "step",
+            FaultKind::Stall => "stall",
+            FaultKind::Compile => "compile",
+            FaultKind::Checkpoint => "checkpoint",
+        };
+        let surface = match spec.surface {
+            StallSurface::Auto => "auto",
+            StallSurface::Lane => "lane",
+            StallSurface::Step => "step",
+            StallSurface::Checkpoint => "checkpoint",
+        };
+        s.push_str(&format!(
+            "    {{\"job\": \"{}\", \"kind\": \"{kind}\", {trigger}, \"times\": {}, \
+             \"stall-ms\": {}, \"surface\": \"{surface}\"}}{}\n",
+            spec.job,
+            spec.times,
+            spec.stall_ms,
+            if i + 1 < plan.specs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Round-trip one point's generated plan through the on-disk schema and
+/// verify nothing was lost — the artifact-free half of the sweep (CI's
+/// `chaos --dry-run`).
+pub fn validate_point(point: &InjectionPoint, cfg: &ChaosCfg) -> Result<()> {
+    let plan = plan_for(point, cfg);
+    let parsed = FaultPlan::parse(&plan_json(&plan))?;
+    let (a, b) = (format!("{plan:?}"), format!("{parsed:?}"));
+    if a != b {
+        return Err(MbsError::Runtime(format!(
+            "chaos: plan for ({}, {}, {}) did not survive the spec round-trip:\n \
+             generated: {a}\n re-parsed: {b}",
+            point.job,
+            point.injection.name(),
+            point.at
+        )));
+    }
+    Ok(())
+}
+
+/// Bit-exact fingerprint of a [`TrainReport`]'s numeric outcome: FNV over
+/// `f64::to_bits` of every loss/metric plus the integer counters the
+/// recovery identity oracle checks. Two runs with equal fingerprints made
+/// the same optimizer updates with the same numerics.
+pub fn fingerprint(r: &TrainReport) -> u64 {
+    fn push_epoch(bytes: &mut Vec<u8>, e: &EpochStats) {
+        bytes.extend_from_slice(&e.mean_loss.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&e.primary_metric.to_bits().to_le_bytes());
+        // tag the Option so None cannot collide with Some(0.0)
+        match e.secondary_metric {
+            Some(v) => {
+                bytes.push(1);
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            None => bytes.push(0),
+        }
+        bytes.extend_from_slice(&(e.samples as u64).to_le_bytes());
+        bytes.extend_from_slice(&(e.micro_steps as u64).to_le_bytes());
+        bytes.extend_from_slice(&e.updates.to_le_bytes());
+    }
+    let mut bytes: Vec<u8> = Vec::new();
+    bytes.extend_from_slice(&(r.mu as u64).to_le_bytes());
+    bytes.extend_from_slice(&r.updates.to_le_bytes());
+    for e in r.train_epochs.iter().chain(r.eval_epochs.iter()) {
+        push_epoch(&mut bytes, e);
+    }
+    push_epoch(&mut bytes, &r.final_eval);
+    fnv1a64(&bytes)
+}
+
+/// Terminal classification of one injection point's run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// The fault never fired; the run matched baseline bit-for-bit.
+    Clean,
+    /// Fired, recovered, bit-identical to baseline.
+    Recovered,
+    /// Fired; the target job degraded into a structured eviction while
+    /// the survivors stayed bit-identical.
+    Evicted,
+    /// Fired and silently absorbed — no retry, recovery or eviction.
+    /// Must be zero by construction (the watchdog converts every hang).
+    Hung,
+    /// A completed job's report bits moved — the identity oracle failed.
+    Diverged,
+}
+
+impl Verdict {
+    /// The `verdict` string in `BENCH_chaos.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Verdict::Clean => "clean",
+            Verdict::Recovered => "recovered",
+            Verdict::Evicted => "evicted",
+            Verdict::Hung => "hung",
+            Verdict::Diverged => "diverged",
+        }
+    }
+}
+
+/// One classified injection point.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    /// The cell that was injected.
+    pub point: InjectionPoint,
+    /// Its classification.
+    pub verdict: Verdict,
+    /// Faults the plan actually fired in this run (job hooks + the
+    /// engine's compile seam).
+    pub fired: u64,
+    /// Recovery attempts consumed across the set.
+    pub retries: u64,
+    /// Recoveries that completed across the set.
+    pub recovered: u64,
+    /// Terminal error of an evicted job, or the divergence note.
+    pub detail: Option<String>,
+}
+
+/// Per-surface verdict counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SurfaceCounts {
+    /// Points whose fault never fired.
+    pub clean: u64,
+    /// Points that recovered bit-identically.
+    pub recovered: u64,
+    /// Points that degraded into a structured eviction.
+    pub evicted: u64,
+    /// Points silently absorbed — the invariant is that this is zero.
+    pub hung: u64,
+    /// Points whose surviving reports diverged — must also be zero.
+    pub diverged: u64,
+}
+
+impl SurfaceCounts {
+    fn add(&mut self, v: Verdict) {
+        match v {
+            Verdict::Clean => self.clean += 1,
+            Verdict::Recovered => self.recovered += 1,
+            Verdict::Evicted => self.evicted += 1,
+            Verdict::Hung => self.hung += 1,
+            Verdict::Diverged => self.diverged += 1,
+        }
+    }
+}
+
+/// Everything a finished sweep reports (`BENCH_chaos.json`).
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Every classified point, in enumeration order.
+    pub points: Vec<PointResult>,
+}
+
+impl ChaosReport {
+    /// Verdict counts folded per surface name.
+    pub fn by_surface(&self) -> BTreeMap<&'static str, SurfaceCounts> {
+        let mut map: BTreeMap<&'static str, SurfaceCounts> = BTreeMap::new();
+        for p in &self.points {
+            map.entry(p.point.injection.name()).or_default().add(p.verdict);
+        }
+        map
+    }
+
+    /// Total verdict counts across every surface.
+    pub fn totals(&self) -> SurfaceCounts {
+        let mut t = SurfaceCounts::default();
+        for p in &self.points {
+            t.add(p.verdict);
+        }
+        t
+    }
+
+    /// Points whose fault actually fired.
+    pub fn fired_points(&self) -> u64 {
+        let t = self.totals();
+        t.recovered + t.evicted + t.hung + t.diverged
+    }
+
+    /// Trend-tracked: recoveries over fired points (1.0 when nothing
+    /// fired — a vacuous sweep gates as perfect rather than as a
+    /// spurious regression).
+    pub fn recovered_fraction(&self) -> f64 {
+        let fired = self.fired_points();
+        if fired == 0 {
+            1.0
+        } else {
+            self.totals().recovered as f64 / fired as f64
+        }
+    }
+}
+
+/// Classify one faulted run against the baseline fingerprints.
+fn classify(
+    point: &InjectionPoint,
+    run: &crate::coordinator::trainer::JobsReport,
+    compile_fired: u64,
+    baseline: &BTreeMap<String, u64>,
+) -> PointResult {
+    let mut fired = compile_fired;
+    let mut retries = 0;
+    let mut recovered = 0;
+    let mut evicted: Option<String> = None;
+    let mut diverged: Option<String> = None;
+    for job in &run.jobs {
+        fired += job.faults_injected;
+        retries += job.retries;
+        recovered += job.recovered;
+        match (&job.report, job.outcome) {
+            (Some(r), JobOutcome::Completed) => {
+                if let Some(base) = baseline.get(&job.name) {
+                    if fingerprint(r) != *base {
+                        diverged = Some(format!(
+                            "job '{}' completed with diverged report bits",
+                            job.name
+                        ));
+                    }
+                }
+            }
+            (_, JobOutcome::Failed) => {
+                evicted = Some(format!(
+                    "job '{}' evicted: {}",
+                    job.name,
+                    job.error.as_deref().unwrap_or("(no error recorded)")
+                ));
+            }
+            _ => {}
+        }
+    }
+    let (verdict, detail) = if let Some(note) = diverged {
+        (Verdict::Diverged, Some(note))
+    } else if fired == 0 {
+        (Verdict::Clean, None)
+    } else if let Some(note) = evicted {
+        (Verdict::Evicted, Some(note))
+    } else if recovered > 0 {
+        (Verdict::Recovered, None)
+    } else {
+        (Verdict::Hung, Some("fault fired with no retry, recovery or eviction".into()))
+    };
+    PointResult { point: point.clone(), verdict, fired, retries, recovered, detail }
+}
+
+/// Run the full sweep: one fault-free baseline (the fingerprint oracle),
+/// then one faulted run per enumerated injection point, classified
+/// against it. The baseline must complete every admitted job — a job set
+/// that cannot run clean cannot anchor an identity oracle.
+pub fn run_sweep(
+    engine: &mut Engine,
+    set: &JobSet,
+    capacity_bytes: u64,
+    cfg: &ChaosCfg,
+) -> Result<ChaosReport> {
+    let base = train_jobs(engine, set, capacity_bytes)?;
+    let mut baseline: BTreeMap<String, u64> = BTreeMap::new();
+    for job in &base.jobs {
+        match (&job.report, job.outcome) {
+            (Some(r), JobOutcome::Completed) => {
+                baseline.insert(job.name.clone(), fingerprint(r));
+            }
+            (_, JobOutcome::Rejected) => {}
+            _ => {
+                return Err(MbsError::Runtime(format!(
+                    "chaos: baseline run failed job '{}' — fix the set before sweeping",
+                    job.name
+                )));
+            }
+        }
+    }
+    let points = enumerate(set, &cfg.steps);
+    let mut results = Vec::with_capacity(points.len());
+    for point in &points {
+        validate_point(point, cfg)?;
+        let plan = plan_for(point, cfg);
+        let run = train_jobs_faulted(engine, set, capacity_bytes, Some(&plan))?;
+        let compile_fired = engine.compile_faults_injected();
+        results.push(classify(point, &run, compile_fired, &baseline));
+    }
+    Ok(ChaosReport { points: results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::coordinator::tenancy::JobSpec;
+
+    fn job(name: &str, overlap: bool) -> JobSpec {
+        let mut cfg = TrainConfig::default_for(name);
+        cfg.overlap = overlap;
+        cfg.epochs = 2;
+        JobSpec { name: name.into(), task: Some("classification".into()), cfg }
+    }
+
+    fn two_job_set() -> JobSet {
+        JobSet {
+            capacity_mib: Some(4),
+            jobs: vec![job("async-cls", true), job("serial-seg", false)],
+        }
+    }
+
+    #[test]
+    fn enumeration_covers_every_applicable_surface_per_job() {
+        let set = two_job_set();
+        let points = enumerate(&set, &[0, 3]);
+        let count = |job: &str, inj: Injection| {
+            points.iter().filter(|p| p.job == job && p.injection == inj).count()
+        };
+        // overlap job: step/arena/lane/stall-lane at both steps; no serial stall
+        assert_eq!(count("async-cls", Injection::Step), 2);
+        assert_eq!(count("async-cls", Injection::Arena), 2);
+        assert_eq!(count("async-cls", Injection::Lane), 2);
+        assert_eq!(count("async-cls", Injection::StallLane), 2);
+        assert_eq!(count("async-cls", Injection::StallStep), 0);
+        // serial job: the stall lands on the executor thread instead
+        assert_eq!(count("serial-seg", Injection::Lane), 0);
+        assert_eq!(count("serial-seg", Injection::StallLane), 0);
+        assert_eq!(count("serial-seg", Injection::StallStep), 2);
+        // checkpoint axis: epochs=2 without skip_eval -> 4 phases, so both
+        // enumerated steps are reachable
+        assert_eq!(count("async-cls", Injection::Checkpoint), 2);
+        assert_eq!(count("async-cls", Injection::StallCheckpoint), 2);
+        // the compile seam enumerates engine-globally, one per materialize
+        assert_eq!(count("*", Injection::Compile), 2);
+    }
+
+    #[test]
+    fn enumeration_drops_unreachable_checkpoint_steps() {
+        let mut set = two_job_set();
+        set.jobs.truncate(1);
+        set.jobs[0].cfg.epochs = 1;
+        set.jobs[0].cfg.skip_eval = true; // 2 phases: Train{0} + FinalEval
+        let points = enumerate(&set, &[0, 3]);
+        let ckpt: Vec<u64> = points
+            .iter()
+            .filter(|p| p.injection == Injection::Checkpoint)
+            .map(|p| p.at)
+            .collect();
+        assert_eq!(ckpt, vec![0], "step 3 exceeds the 2-phase axis");
+    }
+
+    #[test]
+    fn every_enumerated_plan_survives_the_spec_round_trip() {
+        let set = two_job_set();
+        let cfg = ChaosCfg::default();
+        for point in enumerate(&set, &cfg.steps) {
+            validate_point(&point, &cfg).unwrap_or_else(|e| {
+                panic!("point ({}, {}, {}): {e}", point.job, point.injection.name(), point.at)
+            });
+        }
+    }
+
+    #[test]
+    fn generated_plans_force_conversion_by_construction() {
+        let cfg = ChaosCfg { deadline_ms: 100, steps: vec![1], seed: 9 };
+        let point = InjectionPoint {
+            job: "j".into(),
+            injection: Injection::StallLane,
+            at: 1,
+        };
+        let plan = plan_for(&point, &cfg);
+        let spec = &plan.specs[0];
+        assert_eq!(spec.kind, FaultKind::Stall);
+        assert_eq!(spec.surface, StallSurface::Lane);
+        // the stall outruns the deadline 3x: the watchdog MUST trip
+        assert_eq!(spec.stall_ms, 300);
+        let w = plan.watchdog.expect("sweep plans always override deadlines");
+        assert_eq!(w.lane_recv, Duration::from_millis(100));
+        assert_eq!(w.checkpoint, Duration::from_millis(100));
+        assert_eq!(plan.max_retries, 3, "a single fault always has retries in hand");
+    }
+
+    #[test]
+    fn verdict_accounting_rolls_up_per_surface() {
+        let point = |inj, v| PointResult {
+            point: InjectionPoint { job: "j".into(), injection: inj, at: 0 },
+            verdict: v,
+            fired: u64::from(v != Verdict::Clean),
+            retries: 0,
+            recovered: u64::from(v == Verdict::Recovered),
+            detail: None,
+        };
+        let report = ChaosReport {
+            points: vec![
+                point(Injection::Step, Verdict::Recovered),
+                point(Injection::Step, Verdict::Clean),
+                point(Injection::Arena, Verdict::Recovered),
+                point(Injection::Compile, Verdict::Evicted),
+            ],
+        };
+        let by = report.by_surface();
+        assert_eq!(by["step"].recovered, 1);
+        assert_eq!(by["step"].clean, 1);
+        assert_eq!(by["arena"].recovered, 1);
+        assert_eq!(by["compile"].evicted, 1);
+        let t = report.totals();
+        assert_eq!((t.recovered, t.evicted, t.hung, t.diverged), (2, 1, 0, 0));
+        assert_eq!(report.fired_points(), 3);
+        assert!((report.recovered_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovered_fraction_is_vacuously_perfect_when_nothing_fires() {
+        let report = ChaosReport {
+            points: vec![PointResult {
+                point: InjectionPoint { job: "j".into(), injection: Injection::Step, at: 9 },
+                verdict: Verdict::Clean,
+                fired: 0,
+                retries: 0,
+                recovered: 0,
+                detail: None,
+            }],
+        };
+        assert_eq!(report.recovered_fraction(), 1.0);
+        assert_eq!(report.fired_points(), 0);
+    }
+
+    #[test]
+    fn fingerprints_separate_bitwise_different_reports() {
+        // two reports differing in one loss bit must fingerprint apart;
+        // build them from the cheap synthetic pieces (no artifacts)
+        use crate::metrics::StageTimers;
+        let eval = |loss: f64| EpochStats {
+            epoch: 0,
+            mean_loss: loss,
+            primary_metric: 0.5,
+            secondary_metric: None,
+            samples: 8,
+            micro_steps: 2,
+            updates: 1,
+            wall: Duration::ZERO,
+            stages: StageTimers::default(),
+        };
+        let report = |loss: f64| TrainReport {
+            model: "m".into(),
+            use_mbs: true,
+            batch: 8,
+            mu: 4,
+            train_epochs: vec![eval(loss)],
+            eval_epochs: vec![eval(loss)],
+            final_eval: eval(loss),
+            total_wall: Duration::ZERO,
+            epoch_wall_mean: Duration::ZERO,
+            native_max_batch: 8,
+            capacity_bytes: 1,
+            output_mode: "tuple".into(),
+            updates: 1,
+            stages: StageTimers::default(),
+            pool: Default::default(),
+            overlap: false,
+            prefetch: 0,
+            ledger_peak_bytes: 0,
+        };
+        let a = fingerprint(&report(0.25));
+        let b = fingerprint(&report(0.25 + f64::EPSILON));
+        assert_ne!(a, b, "a single ULP of loss drift must change the fingerprint");
+        assert_eq!(a, fingerprint(&report(0.25)), "fingerprints are deterministic");
+    }
+}

@@ -18,8 +18,14 @@
 //!   grid-callable, classifying every point as Native / MBS(mu) / OOM
 //!   (the paper's headline figure as an instrument), plus the
 //!   co-residency classifier for job *sets* ([`classify_set`])
+//! * [`chaos`] — the exhaustive fault-space sweep (`mbs chaos`): every
+//!   `(job, surface, step)` injection point run under a one-entry fault
+//!   plan with short watchdog deadlines, classified against a fault-free
+//!   baseline (recovered / evicted / hung / diverged; the sweep's
+//!   invariant is `hung == 0` and `diverged == 0`)
 
 pub mod accumulator;
+pub mod chaos;
 pub mod frontier;
 pub mod planner;
 pub mod scheduler;
@@ -29,6 +35,10 @@ pub mod tenancy;
 pub mod trainer;
 
 pub use accumulator::{Accumulation, NormalizationMode};
+pub use chaos::{
+    run_sweep, ChaosCfg, ChaosReport, Injection, InjectionPoint, PointResult, SurfaceCounts,
+    Verdict,
+};
 pub use frontier::{classify, classify_set, Feasibility, FrontierGrid, GridPoint, SetFeasibility};
 pub use planner::{
     auto_mu, auto_mu_transient, default_capacity, ExecutionPlan, Planner, Resolution,

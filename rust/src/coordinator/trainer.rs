@@ -53,7 +53,11 @@ use crate::manifest::ModelEntry;
 use crate::memory::ledger::AllocId;
 use crate::memory::{Arena, Footprint, Ledger, MemoryModel};
 use crate::metrics::{EpochStats, MetricKind, StageTimers};
-use crate::runtime::{Engine, FaultHooks, FaultKind, FaultPlan, LaneJob, ModelRuntime, UploadLane};
+use crate::runtime::{
+    Engine, FaultHooks, FaultKind, FaultPlan, LaneJob, ModelRuntime, StallSurface, Surface,
+    UploadLane, Watchdog,
+};
+use crate::util::hash::{fnv1a64, fraction};
 
 use super::accumulator::{Accumulation, NormalizationMode};
 use super::planner::{self, ExecutionPlan, Planner, Resolution};
@@ -266,6 +270,7 @@ fn step_in_flight(
 /// `StageTimers::upload_concurrent` measures. The plan rides a host-side
 /// FIFO (the lane only sees host buffers); [`place_staged`] re-pairs it
 /// with the staged copy by position.
+#[allow(clippy::too_many_arguments)]
 fn submit_to_lane(
     lane: &mut UploadLane,
     queue: &mut VecDeque<Arc<ExecutionPlan>>,
@@ -273,13 +278,14 @@ fn submit_to_lane(
     pass: Pass<'_>,
     item: StreamItem,
     fault: Option<String>,
+    stall: Option<Duration>,
 ) -> Result<()> {
     let StreamItem { plan, mb, .. } = item;
     let scale = match pass {
         Pass::Train { .. } => Some(plan.scales[mb.j]),
         Pass::Eval => None,
     };
-    lane.submit(LaneJob { seq: *seq, mb, scale, fault })?;
+    lane.submit(LaneJob { seq: *seq, mb, scale, fault, stall })?;
     *seq += 1;
     queue.push_back(plan);
     Ok(())
@@ -297,7 +303,10 @@ fn lane_desync() -> MbsError {
 /// runtime's execute windows (`upload_concurrent`), charge the ledger for
 /// the input-slot residency, upload, and recycle the staging copy. Any
 /// staging error the lane hit surfaces here — at the step that would have
-/// consumed the slot.
+/// consumed the slot. The wait is bounded by the watchdog's lane-recv
+/// deadline: a lane that never completes its staging surfaces as a
+/// recoverable [`MbsError::Deadline`] instead of hanging the executor.
+#[allow(clippy::too_many_arguments)]
 fn place_staged(
     rt: &mut ModelRuntime,
     ledger: &mut Ledger,
@@ -305,8 +314,9 @@ fn place_staged(
     pool: &BufPool,
     lane: &mut UploadLane,
     queue: &mut VecDeque<Arc<ExecutionPlan>>,
+    deadline: Duration,
 ) -> Result<InFlight> {
-    let staged = lane.recv()?;
+    let staged = lane.recv_deadline(deadline)?;
     let plan = queue.pop_front().ok_or_else(|| {
         MbsError::Runtime("upload lane completed a staging with no queued plan".into())
     })?;
@@ -374,14 +384,18 @@ fn run_epoch(
         let mut queue: VecDeque<Arc<ExecutionPlan>> = VecDeque::new();
         let mut seq = 0u64;
         let mut pending: Option<InFlight> = None;
+        // standalone epochs (eval entry points) run under the default
+        // deadlines — generous enough to never fire on a healthy run, but a
+        // wedged lane still converts to a structured fault, not a hang
+        let lane_deadline = Watchdog::default().deadline(Surface::LaneRecv);
         for item in stream {
             assemble += item.assemble;
             let placed = if queue.is_empty() {
                 None
             } else {
-                Some(place_staged(rt, ledger, fp, pool, &mut lane, &mut queue)?)
+                Some(place_staged(rt, ledger, fp, pool, &mut lane, &mut queue, lane_deadline)?)
             };
-            submit_to_lane(&mut lane, &mut queue, &mut seq, pass, item, None)?;
+            submit_to_lane(&mut lane, &mut queue, &mut seq, pass, item, None, None)?;
             if let Some(current) = pending.take() {
                 step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
             }
@@ -392,7 +406,7 @@ fn run_epoch(
         // drain: the lane still holds the final submission, the device
         // slot the one before it
         while !queue.is_empty() {
-            let placed = place_staged(rt, ledger, fp, pool, &mut lane, &mut queue)?;
+            let placed = place_staged(rt, ledger, fp, pool, &mut lane, &mut queue, lane_deadline)?;
             if let Some(current) = pending.take() {
                 step_in_flight(rt, ledger, fp, pass, &mut acc, current)?;
             }
@@ -572,6 +586,13 @@ pub fn train(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainReport> {
         Some(path) => Some(FaultPlan::load(path)?),
         None => None,
     };
+    // compile faults live on the engine (the compile seam is shared across
+    // tenants, not per-job): arm them for this run, or clear a previous
+    // run's hooks so plans never leak across entry points
+    match &plan {
+        Some(p) if p.has_compile_entries() => engine.arm_compile_faults(p.compile_hooks()),
+        _ => engine.disarm_compile_faults(),
+    }
 
     // ------------------------------------------------------------------
     // memory admission + planning (paper section 1 + Alg. 1): the ledger's
@@ -648,6 +669,11 @@ struct RecoveryCfg {
     hooks: FaultHooks,
     max_retries: u32,
     backoff_ms: u64,
+    /// Plan seed, reused for the deterministic backoff-jitter draw.
+    seed: u64,
+    /// Wall-clock deadlines for every blocking surface — the plan's
+    /// `watchdog` overrides, or the generous defaults.
+    watchdog: Watchdog,
 }
 
 impl RecoveryCfg {
@@ -656,8 +682,23 @@ impl RecoveryCfg {
             hooks: plan.hooks_for(job),
             max_retries: plan.max_retries,
             backoff_ms: plan.backoff_ms,
+            seed: plan.seed,
+            watchdog: plan.watchdog.map(Watchdog::new).unwrap_or_default(),
         }
     }
+}
+
+/// Seeded retry-backoff jitter: keep the linear base but draw the actual
+/// sleep uniformly from `[base/2, base]` via an FNV hash of
+/// `"{seed}:{job}:backoff:{attempt}"`. Co-resident jobs that fault on the
+/// same turn desynchronize their retries instead of thundering together,
+/// and the draw is a pure function of the plan — same spec, same sleeps.
+fn backoff_with_jitter(base_ms: u64, seed: u64, job: &str, attempt: u32) -> u64 {
+    if base_ms == 0 {
+        return 0;
+    }
+    let f = fraction(fnv1a64(format!("{seed}:{job}:backoff:{attempt}").as_bytes()));
+    base_ms / 2 + (f * (base_ms / 2 + 1) as f64) as u64
 }
 
 /// One tenant's live execution state: everything the solo [`train`] loop
@@ -728,6 +769,17 @@ struct JobExec {
     /// Completed recoveries (quiesce → release → re-plan → replay).
     recovered: u64,
     backoff_ms: u64,
+    /// Plan seed for the deterministic backoff-jitter draw.
+    fault_seed: u64,
+    /// Wall-clock watchdog: bounds every blocking surface (lane recv,
+    /// micro-step execute, checkpoint save/load) and converts expiry into
+    /// a recoverable [`MbsError::Deadline`] — a hang becomes a fault the
+    /// recovery state machine already knows how to absorb.
+    watchdog: Watchdog,
+    /// Monotonic snapshot-save attempt counter (the `checkpoint` fault
+    /// axis). Like `step_attempts`, deliberately NOT reset by recovery so
+    /// at-step checkpoint faults fire exactly once.
+    ckpt_attempts: u64,
     /// Phase-start snapshot base path; the recovery state machine is
     /// enabled iff this is set.
     snapshot: Option<PathBuf>,
@@ -803,9 +855,9 @@ impl JobExec {
         };
         let planner = Planner::new(res.mu, !cfg.use_mbs, cfg.norm_mode);
         let recovery_on = recovery.is_some();
-        let (hooks, max_retries, backoff_ms) = match recovery {
-            Some(r) => (r.hooks, r.max_retries, r.backoff_ms),
-            None => (FaultHooks::none(), 0, 0),
+        let (hooks, max_retries, backoff_ms, fault_seed, watchdog) = match recovery {
+            Some(r) => (r.hooks, r.max_retries, r.backoff_ms, r.seed, r.watchdog),
+            None => (FaultHooks::none(), 0, 0, 0, Watchdog::default()),
         };
         // phase-start snapshots live in the OS temp dir, one pair per
         // (process, job) — cleaned up when the job reaches a terminal state
@@ -857,6 +909,9 @@ impl JobExec {
             retries_used: 0,
             recovered: 0,
             backoff_ms,
+            fault_seed,
+            watchdog,
+            ckpt_attempts: 0,
             snapshot,
             last_ckpt: 0,
             ckpt_done: false,
@@ -877,7 +932,23 @@ impl JobExec {
         // snapshot here — a mid-phase fault replays the phase from scratch
         // and lands bit-identical to an uninterrupted run
         if let Some(snap) = self.snapshot.clone() {
+            let attempt = self.ckpt_attempts;
+            self.ckpt_attempts += 1;
+            // an injected checkpoint stall lands inside the timed window,
+            // so a short watchdog deadline converts it into a recoverable
+            // Deadline fault — the hang-to-fault contract for this surface
+            let t0 = Instant::now();
+            if let Some(d) = self.hooks.check_stall(StallSurface::Checkpoint, attempt) {
+                std::thread::sleep(d);
+            }
             self.rt.save_checkpoint(&snap)?;
+            self.watchdog.observe(Surface::CheckpointSave, t0.elapsed())?;
+            // the torn-write fault fires AFTER the atomic save: the on-disk
+            // snapshot is valid and current, so the recovery this error
+            // triggers replays from it bit-identically
+            if let Some(note) = self.hooks.check(FaultKind::Checkpoint, attempt) {
+                return Err(MbsError::Fault(note));
+            }
         }
         match self.phase {
             JobPhase::Train { epoch } => {
@@ -1028,7 +1099,7 @@ impl JobExec {
             // pipeline: a step fault surfaces right here (recycling the
             // item's staging buffer); a lane note rides the submission
             // below; an arena fault armed here fires at this turn's charge
-            let lane_fault = if item.is_some() {
+            let (lane_fault, stall) = if item.is_some() {
                 match self.check_faults() {
                     Ok(f) => f,
                     Err(e) => {
@@ -1039,7 +1110,7 @@ impl JobExec {
                     }
                 }
             } else {
-                None
+                (None, None)
             };
             let pass = match self.phase {
                 JobPhase::Train { .. } => Pass::Train { sched: &self.sched },
@@ -1049,6 +1120,12 @@ impl JobExec {
                 match item {
                     Some(item) => {
                         self.assemble += item.assemble;
+                        // an injected step stall sleeps inside the timed
+                        // window, so the watchdog sees it as a wedged step
+                        let t0 = Instant::now();
+                        if let Some(d) = stall {
+                            std::thread::sleep(d);
+                        }
                         exec_serial_item(
                             &mut self.rt,
                             &mut self.ledger,
@@ -1058,6 +1135,7 @@ impl JobExec {
                             &self.pool,
                             item,
                         )?;
+                        self.watchdog.observe(Surface::Step, t0.elapsed())?;
                         return Ok(true);
                     }
                     None => self.finish_phase(),
@@ -1079,6 +1157,7 @@ impl JobExec {
                             &self.pool,
                             self.lane.as_mut().ok_or_else(lane_desync)?,
                             &mut self.lane_queue,
+                            self.watchdog.deadline(Surface::LaneRecv),
                         )?)
                     };
                     submit_to_lane(
@@ -1088,8 +1167,10 @@ impl JobExec {
                         pass,
                         item,
                         lane_fault,
+                        stall,
                     )?;
                     let executed = if let Some(current) = self.pending.take() {
+                        let t0 = Instant::now();
                         step_in_flight(
                             &mut self.rt,
                             &mut self.ledger,
@@ -1098,6 +1179,7 @@ impl JobExec {
                             &mut self.acc,
                             current,
                         )?;
+                        self.watchdog.observe(Surface::Step, t0.elapsed())?;
                         true
                     } else {
                         false
@@ -1121,8 +1203,10 @@ impl JobExec {
                             &self.pool,
                             self.lane.as_mut().ok_or_else(lane_desync)?,
                             &mut self.lane_queue,
+                            self.watchdog.deadline(Surface::LaneRecv),
                         )?;
                         if let Some(current) = self.pending.take() {
+                            let t0 = Instant::now();
                             step_in_flight(
                                 &mut self.rt,
                                 &mut self.ledger,
@@ -1131,6 +1215,7 @@ impl JobExec {
                                 &mut self.acc,
                                 current,
                             )?;
+                            self.watchdog.observe(Surface::Step, t0.elapsed())?;
                             self.pending = Some(placed);
                             return Ok(true);
                         }
@@ -1138,6 +1223,7 @@ impl JobExec {
                         continue;
                     }
                     if let Some(current) = self.pending.take() {
+                        let t0 = Instant::now();
                         step_in_flight(
                             &mut self.rt,
                             &mut self.ledger,
@@ -1146,6 +1232,7 @@ impl JobExec {
                             &mut self.acc,
                             current,
                         )?;
+                        self.watchdog.observe(Surface::Step, t0.elapsed())?;
                         return Ok(true);
                     }
                     self.finish_phase();
@@ -1157,13 +1244,16 @@ impl JobExec {
     /// Run the per-attempt fault checks for one arriving micro-batch.
     /// Consumes one attempt number (monotonic across recoveries). A `step`
     /// fault surfaces as [`MbsError::Fault`] right here; an `arena` fault
-    /// arms the tenant's next ledger charge; a `lane` fault returns the
-    /// note to ride the upload-lane submission (overlap mode only).
-    fn check_faults(&mut self) -> Result<Option<String>> {
+    /// arms the tenant's next ledger charge; a `lane` fault note rides the
+    /// upload-lane submission (overlap mode only). The second element is
+    /// an injected `stall` delay for this turn: under overlap it rides the
+    /// lane job (and trips the lane-recv deadline), serially it lands
+    /// inside the step's timed window (and trips the step deadline).
+    fn check_faults(&mut self) -> Result<(Option<String>, Option<Duration>)> {
         let attempt = self.step_attempts;
         self.step_attempts += 1;
         if self.hooks.is_empty() {
-            return Ok(None);
+            return Ok((None, None));
         }
         if let Some(note) = self.hooks.check(FaultKind::Step, attempt) {
             return Err(MbsError::Fault(note));
@@ -1172,9 +1262,12 @@ impl JobExec {
             self.ledger.inject_charge_fault(&note);
         }
         if self.cfg.overlap {
-            Ok(self.hooks.check(FaultKind::Lane, attempt))
+            let note = self.hooks.check(FaultKind::Lane, attempt);
+            let stall = self.hooks.check_stall(StallSurface::Lane, attempt);
+            Ok((note, stall))
         } else {
-            Ok(None)
+            let stall = self.hooks.check_stall(StallSurface::Step, attempt);
+            Ok((None, stall))
         }
     }
 
@@ -1185,8 +1278,9 @@ impl JobExec {
         self.snapshot.is_some() && err.recoverable() && self.retries_left > 0
     }
 
-    /// Retry bookkeeping + the per-job linear backoff that precedes a
-    /// recovery attempt.
+    /// Retry bookkeeping + the per-job backoff that precedes a recovery
+    /// attempt: linear in the retry count, with a seeded jitter draw so
+    /// co-faulting tenants desynchronize ([`backoff_with_jitter`]).
     fn note_retry(&mut self, err: &MbsError) {
         self.retries_left -= 1;
         self.retries_used += 1;
@@ -1195,7 +1289,9 @@ impl JobExec {
             self.name, self.retries_used, self.retries_left
         );
         if self.backoff_ms > 0 {
-            std::thread::sleep(Duration::from_millis(self.backoff_ms * self.retries_used as u64));
+            let base = self.backoff_ms * self.retries_used as u64;
+            let ms = backoff_with_jitter(base, self.fault_seed, &self.name, self.retries_used);
+            std::thread::sleep(Duration::from_millis(ms));
         }
     }
 
@@ -1255,8 +1351,11 @@ impl JobExec {
             }
         }
         // 5. replay: restore the phase-start snapshot and let the next
-        //    turn re-open the phase's stream from its beginning
+        //    turn re-open the phase's stream from its beginning; the load
+        //    is watchdog-bounded like every other blocking surface
+        let t0 = Instant::now();
         self.rt.load_checkpoint(&snap)?;
+        self.watchdog.observe(Surface::CheckpointLoad, t0.elapsed())?;
         if self.cfg.overlap {
             self.lane = Some(UploadLane::spawn(self.pool.clone(), LANE_DEPTH, &self.name)?);
         }
@@ -1300,7 +1399,9 @@ impl JobExec {
             return Ok(());
         };
         if self.rt.updates > self.last_ckpt && self.rt.updates % every == 0 {
+            let t0 = Instant::now();
             self.rt.save_checkpoint(Path::new(&path))?;
+            self.watchdog.observe(Surface::CheckpointSave, t0.elapsed())?;
             self.last_ckpt = self.rt.updates;
         }
         Ok(())
@@ -1314,7 +1415,9 @@ impl JobExec {
         }
         self.ckpt_done = true;
         if let Some(path) = self.cfg.checkpoint.clone() {
+            let t0 = Instant::now();
             self.rt.save_checkpoint(Path::new(&path))?;
+            self.watchdog.observe(Surface::CheckpointSave, t0.elapsed())?;
             self.last_ckpt = self.rt.updates;
         }
         Ok(())
@@ -1503,21 +1606,42 @@ pub fn train_jobs_faulted(
     }
     let verdicts = tenancy::plan_admission(&requests, capacity_bytes);
 
+    // compile faults live on the engine — the compile seam is shared
+    // across tenants, so the hooks are armed once here (or cleared, so a
+    // previous run's plan never leaks into this one)
+    match plan {
+        Some(p) if p.has_compile_entries() => engine.arm_compile_faults(p.compile_hooks()),
+        _ => engine.disarm_compile_faults(),
+    }
+
     // materialize the admitted jobs as tenants of one arena
+    let isolate = plan.is_some();
     let arena = Arena::new(capacity_bytes);
-    let mut execs: Vec<Option<JobExec>> = Vec::with_capacity(set.jobs.len());
-    for (spec, verdict) in set.jobs.iter().zip(&verdicts) {
+    let n = set.jobs.len();
+    let mut execs: Vec<Option<JobExec>> = Vec::with_capacity(n);
+    let mut failures: Vec<Option<String>> = vec![None; n];
+    for (i, (spec, verdict)) in set.jobs.iter().zip(&verdicts).enumerate() {
         match &verdict.outcome {
             AdmissionOutcome::Admitted { resolution, resident_claim_bytes, .. } => {
                 let recovery = plan.map(|p| RecoveryCfg::from_plan(p, &spec.name));
-                execs.push(Some(JobExec::new(
-                    engine,
-                    spec,
-                    resolution,
-                    *resident_claim_bytes,
-                    &arena,
-                    recovery,
-                )?));
+                match JobExec::new(engine, spec, resolution, *resident_claim_bytes, &arena, recovery)
+                {
+                    Ok(exec) => execs.push(Some(exec)),
+                    // graceful degradation (fault plans only): a job that
+                    // cannot even materialize — e.g. an injected compile
+                    // fault at model load — is evicted, not fatal to its
+                    // siblings; its tenant ledger drop frees every arena
+                    // byte the partial materialization claimed
+                    Err(e) if isolate => {
+                        eprintln!(
+                            "[mbs] job '{}': failed to materialize, evicting: {e}",
+                            spec.name
+                        );
+                        failures[i] = Some(e.to_string());
+                        execs.push(None);
+                    }
+                    Err(e) => return Err(e),
+                }
             }
             AdmissionOutcome::Rejected { .. } => execs.push(None),
         }
@@ -1527,11 +1651,8 @@ pub fn train_jobs_faulted(
     // job drains; any step that would exceed the shared capacity fails
     // inside the arena at the exact instant (that failure path IS the
     // every-step cross-job assertion)
-    let isolate = plan.is_some();
-    let n = execs.len();
     let run_start = Instant::now();
     let mut live: Vec<bool> = execs.iter().map(Option::is_some).collect();
-    let mut failures: Vec<Option<String>> = vec![None; n];
     let mut counters: Vec<(u64, u64, u64)> = vec![(0, 0, 0); n];
     loop {
         let mut progressed = false;
@@ -1679,6 +1800,22 @@ mod tests {
     #[test]
     fn tune_prefetch_ignores_empty_epochs() {
         assert_eq!(tune_prefetch(3, &StageTimers::default(), 0, 8), 3);
+    }
+
+    #[test]
+    fn backoff_jitter_is_seeded_bounded_and_job_decorrelated() {
+        // zero base (the smoke specs' `backoff_ms: 0`) stays exactly zero
+        assert_eq!(backoff_with_jitter(0, 7, "cls-64", 1), 0);
+        for attempt in 1..=8u32 {
+            let ms = backoff_with_jitter(100, 7, "cls-64", attempt);
+            assert!((50..=100).contains(&ms), "attempt {attempt}: {ms}ms outside [base/2, base]");
+            // pure function of (base, seed, job, attempt): reproducible
+            assert_eq!(ms, backoff_with_jitter(100, 7, "cls-64", attempt));
+        }
+        // co-faulting jobs draw different sleeps — that is the point
+        let a: Vec<u64> = (1..=8).map(|i| backoff_with_jitter(100, 7, "cls-64", i)).collect();
+        let b: Vec<u64> = (1..=8).map(|i| backoff_with_jitter(100, 7, "seg-32", i)).collect();
+        assert_ne!(a, b);
     }
 
     #[test]

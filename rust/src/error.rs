@@ -66,6 +66,21 @@ pub enum MbsError {
         waited_ms: u64,
     },
 
+    /// A wall-clock watchdog deadline expired on a blocking surface
+    /// (`runtime/watchdog.rs`): a stalled lane `recv`, a wedged
+    /// micro-step, a compile fetch or checkpoint write that never
+    /// returned. Always transient by construction — the hang is
+    /// *converted* into a fault precisely so the recovery state machine
+    /// can quiesce, release, and replay instead of freezing the arena.
+    #[error("deadline expired on {surface} after {elapsed_ms} ms (watchdog)")]
+    Deadline {
+        /// Watched surface name (`lane-recv`, `step`, `compile`,
+        /// `checkpoint-save`, `checkpoint-load`).
+        surface: String,
+        /// Milliseconds elapsed when the watchdog fired.
+        elapsed_ms: u64,
+    },
+
     /// Filesystem error (artifacts, checkpoints, reports).
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
@@ -97,13 +112,18 @@ impl MbsError {
     /// shrinking mu against the freed transient budget can fit the step),
     /// for injected transients ([`MbsError::Fault`]), and for compile
     /// timeouts ([`MbsError::CompileTimeout`] — a stuck backend may
-    /// succeed on retry). Config, manifest, data, IO, runtime-protocol,
-    /// and compile-failure errors are deterministic: replaying them would
-    /// fail identically, so they stay fatal.
+    /// succeed on retry), and for watchdog expiries ([`MbsError::Deadline`]
+    /// — a hang converted to a fault so the arena can reclaim the tenant).
+    /// Config, manifest, data, IO, runtime-protocol, and compile-failure
+    /// errors are deterministic: replaying them would fail identically, so
+    /// they stay fatal.
     pub fn recoverable(&self) -> bool {
         matches!(
             self,
-            MbsError::Oom { .. } | MbsError::Fault(_) | MbsError::CompileTimeout { .. }
+            MbsError::Oom { .. }
+                | MbsError::Fault(_)
+                | MbsError::CompileTimeout { .. }
+                | MbsError::Deadline { .. }
         )
     }
 }

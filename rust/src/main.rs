@@ -5,6 +5,7 @@
 //!   sweep     batch-size sweep at fixed capacity (one table-4/5 row block)
 //!   frontier  capacity×batch feasibility grid -> table + BENCH_frontier.json
 //!   jobs      multi-tenant job set sharing one capacity -> table + BENCH_jobs.json
+//!   chaos     exhaustive fault-space sweep over a job set -> BENCH_chaos.json
 //!   bench     streaming hot-path benchmark -> machine-readable JSON
 //!   inspect   show manifest variants, footprints and native-max batches
 //!   info      platform / artifact summary
@@ -15,8 +16,8 @@ use std::time::{Duration, Instant};
 
 use mbs::coordinator::tenancy::{self, AdmissionOutcome, AdmissionRequest, JobAdmission};
 use mbs::coordinator::{
-    datasets_for, frontier, stream_epoch, train, train_jobs_faulted, JobsReport,
-    NormalizationMode, Planner, StreamingPolicy,
+    chaos, datasets_for, frontier, stream_epoch, train, train_jobs_faulted, JobOutcome,
+    JobsReport, NormalizationMode, Planner, StreamingPolicy,
 };
 use mbs::data::{loader, BufPool, Dataset, EpochPlan};
 use mbs::memory::{Footprint, MIB};
@@ -40,6 +41,7 @@ fn main() -> ExitCode {
         Some("sweep") => cmd_sweep(&args),
         Some("frontier") => cmd_frontier(&args),
         Some("jobs") => cmd_jobs(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
@@ -110,7 +112,26 @@ USAGE: mbs <subcommand> [flags]
            bounded retries, retry-exhausted jobs are evicted while the
            survivors finish (per-job outcome / faults_injected / retries /
            recovered land in BENCH_jobs.json; in --dry-run the spec is
-           validated and faults_planned reported, no artifacts needed)
+           validated and faults_planned reported, no artifacts needed).
+           Exits non-zero when any job's outcome is failed — scripts and
+           CI key off the exit code, not the table.
+  chaos    --spec jobs.json [--capacity-mib N] [--dry-run=true]
+           [--deadline-ms N] [--steps 0,3] [--seed N]
+           [--out BENCH_chaos.json] [--artifacts dir]
+           [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
+           exhaustive fault-space sweep: enumerate every (job, surface,
+           step) injection point the fault-plan schema can express — step /
+           arena / lane / compile / checkpoint faults plus wall-clock
+           stalls on the lane, step and checkpoint surfaces — then run the
+           set once per point under short watchdog deadlines and classify
+           each run against a fault-free baseline. Recovered runs must be
+           bit-identical (f64::to_bits fingerprint), evictions must be
+           structured, and hung must be ZERO by construction: every
+           injected stall outruns its deadline 3x, so the watchdog
+           converts it into a recoverable fault. --dry-run round-trips
+           every generated plan through the fault-spec parser, no
+           artifacts needed. --compare trend-gates recovered_fraction.
+           Exits non-zero if any point hangs or diverges.
   bench    --model <key> [same flags as train] [--out BENCH_streaming.json]
            [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
            full streaming hot-path benchmark (items/sec, per-stage means,
@@ -581,13 +602,203 @@ fn cmd_jobs(args: &Args) -> Result<(), MbsError> {
         .field("jobs", jobs_train_value(&report));
     rep.write(&out)?;
     println!("[mbs] wrote {out}");
-    trend_compare(args, &out)
+    trend_compare(args, &out)?;
+
+    // a failed job must fail the process: the report records the eviction,
+    // but scripts and CI key off the exit code
+    let failed: Vec<&str> = report
+        .jobs
+        .iter()
+        .filter(|j| j.outcome == JobOutcome::Failed)
+        .map(|j| j.name.as_str())
+        .collect();
+    if !failed.is_empty() {
+        return Err(MbsError::Runtime(format!(
+            "{} job(s) failed: {}",
+            failed.len(),
+            failed.join(", ")
+        )));
+    }
+    Ok(())
 }
 
 /// The set-level verdict folded from the per-job admissions.
 fn jobs_set_class(report: &JobsReport) -> &'static str {
     frontier::SetFeasibility::from_outcomes(report.jobs.iter().map(|j| &j.admission))
         .class_name()
+}
+
+/// `mbs chaos` — the exhaustive fault-space sweep (see [`chaos`]): every
+/// `(job, surface, step)` injection point the fault-plan schema can
+/// express, run under short watchdog deadlines and classified against a
+/// fault-free baseline. The process fails if any point hangs or diverges.
+fn cmd_chaos(args: &Args) -> Result<(), MbsError> {
+    let spec_path = args
+        .get("spec")
+        .ok_or_else(|| MbsError::Config("--spec jobs.json is required".into()))?;
+    let dry_run = args.get_bool("dry-run");
+    let out = args.get_or("out", "BENCH_chaos.json").to_string();
+    let mut set = JobSet::load(spec_path)?;
+    if let Some(mib) = args.get_parse::<u64>("capacity-mib").map_err(MbsError::Config)? {
+        set.capacity_mib = Some(mib);
+    }
+    let capacity_mib = set.capacity_mib.ok_or_else(|| {
+        MbsError::Config(
+            "no shared capacity: set 'capacity_mib' in the spec or pass --capacity-mib".into(),
+        )
+    })?;
+    if capacity_mib == 0 {
+        return Err(MbsError::Config("capacity must be positive MiB".into()));
+    }
+    let capacity_bytes = capacity_mib * MIB;
+    let cfg = chaos::ChaosCfg {
+        deadline_ms: args.get_parse_or("deadline-ms", 250).map_err(MbsError::Config)?,
+        steps: match args.get("steps") {
+            Some(raw) => parse_list(raw, "--steps")?,
+            None => vec![0, 3],
+        },
+        seed: args.get_parse_or("seed", 7).map_err(MbsError::Config)?,
+    };
+    let points = chaos::enumerate(&set, &cfg.steps);
+    println!(
+        "[mbs] chaos: {} injection point(s) over {} job(s) sharing {capacity_mib} MiB \
+         (spec {spec_path}, deadline {} ms, steps {:?}, dry_run={dry_run})",
+        points.len(),
+        set.jobs.len(),
+        cfg.deadline_ms,
+        cfg.steps
+    );
+
+    if dry_run {
+        // artifact-free half: prove every generated plan is a legal spec
+        // file a user could have committed
+        for point in &points {
+            chaos::validate_point(point, &cfg)?;
+        }
+        let mut per: std::collections::BTreeMap<&'static str, u64> =
+            std::collections::BTreeMap::new();
+        for p in &points {
+            *per.entry(p.injection.name()).or_default() += 1;
+        }
+        let mut table = Table::new(&["surface", "points"]);
+        let mut surfaces: Vec<JsonValue> = Vec::new();
+        for (surface, n) in &per {
+            table.row(&[surface.to_string(), n.to_string()]);
+            let mut j = JsonValue::obj();
+            j.push("surface", JsonValue::Str(surface.to_string()));
+            j.push("points", JsonValue::UInt(*n));
+            surfaces.push(j);
+        }
+        println!("{}", table.render());
+        println!(
+            "[mbs] chaos: every generated plan survived the fault-spec round-trip"
+        );
+        let mut rep = BenchReport::new("chaos", "dry-run");
+        rep.uint("capacity_mib", capacity_mib)
+            .uint("points", points.len() as u64)
+            .uint("deadline_ms", cfg.deadline_ms)
+            .field("surfaces", JsonValue::Arr(surfaces));
+        rep.write(&out)?;
+        println!("[mbs] wrote {out}");
+        return Ok(());
+    }
+
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut engine = Engine::new(manifest)?;
+    let report = chaos::run_sweep(&mut engine, &set, capacity_bytes, &cfg)?;
+
+    let by = report.by_surface();
+    let mut table = Table::new(&[
+        "surface", "points", "clean", "recovered", "evicted", "hung", "diverged",
+    ]);
+    let mut surfaces: Vec<JsonValue> = Vec::new();
+    for (surface, c) in &by {
+        let n = c.clean + c.recovered + c.evicted + c.hung + c.diverged;
+        table.row(&[
+            surface.to_string(),
+            n.to_string(),
+            c.clean.to_string(),
+            c.recovered.to_string(),
+            c.evicted.to_string(),
+            c.hung.to_string(),
+            c.diverged.to_string(),
+        ]);
+        let mut j = JsonValue::obj();
+        j.push("surface", JsonValue::Str(surface.to_string()));
+        j.push("points", JsonValue::UInt(n));
+        j.push("clean", JsonValue::UInt(c.clean));
+        j.push("recovered", JsonValue::UInt(c.recovered));
+        j.push("evicted", JsonValue::UInt(c.evicted));
+        j.push("hung", JsonValue::UInt(c.hung));
+        j.push("diverged", JsonValue::UInt(c.diverged));
+        surfaces.push(j);
+    }
+    println!("{}", table.render());
+    for p in &report.points {
+        if let Some(detail) = &p.detail {
+            println!(
+                "[mbs] chaos: ({}, {}, {}) -> {}: {detail}",
+                p.point.job,
+                p.point.injection.name(),
+                p.point.at,
+                p.verdict.name()
+            );
+        }
+    }
+    let totals = report.totals();
+    println!(
+        "[mbs] chaos: {} point(s) — {} clean, {} recovered, {} evicted, {} hung, \
+         {} diverged; recovered_fraction {:.3}",
+        report.points.len(),
+        totals.clean,
+        totals.recovered,
+        totals.evicted,
+        totals.hung,
+        totals.diverged,
+        report.recovered_fraction()
+    );
+
+    let mut results: Vec<JsonValue> = Vec::new();
+    for p in &report.points {
+        let mut j = JsonValue::obj();
+        j.push("job", JsonValue::Str(p.point.job.clone()));
+        j.push("surface", JsonValue::Str(p.point.injection.name().to_string()));
+        j.push("at", JsonValue::UInt(p.point.at));
+        j.push("verdict", JsonValue::Str(p.verdict.name().to_string()));
+        j.push("fired", JsonValue::UInt(p.fired));
+        j.push("retries", JsonValue::UInt(p.retries));
+        j.push("recovered", JsonValue::UInt(p.recovered));
+        if let Some(detail) = &p.detail {
+            j.push("detail", JsonValue::Str(detail.clone()));
+        }
+        results.push(j);
+    }
+    let mut rep = BenchReport::new("chaos", "sweep");
+    rep.uint("capacity_mib", capacity_mib)
+        .uint("points", report.points.len() as u64)
+        .uint("deadline_ms", cfg.deadline_ms)
+        .uint("fired_points", report.fired_points())
+        // trend-tracked: recoveries over fired points
+        .num("recovered_fraction", report.recovered_fraction(), 4)
+        .uint("clean", totals.clean)
+        .uint("recovered", totals.recovered)
+        .uint("evicted", totals.evicted)
+        .uint("hung", totals.hung)
+        .uint("diverged", totals.diverged)
+        .field("surfaces", JsonValue::Arr(surfaces))
+        .field("results", JsonValue::Arr(results));
+    rep.write(&out)?;
+    println!("[mbs] wrote {out}");
+    trend_compare(args, &out)?;
+
+    if totals.hung > 0 || totals.diverged > 0 {
+        return Err(MbsError::Runtime(format!(
+            "chaos: invariant violated — {} hung, {} diverged (see {out})",
+            totals.hung, totals.diverged
+        )));
+    }
+    println!("[mbs] chaos: invariant holds — zero hung, zero diverged");
+    Ok(())
 }
 
 /// Admission-only `mbs jobs --dry-run`: resolve each job's model entry

@@ -290,12 +290,17 @@ impl CompareOutcome {
 /// (`BENCH_streaming.json`'s `artifact_cache` object) — is pure counter
 /// arithmetic (hits / fetches), machine-noise-free, and gates the cache
 /// contract itself: a drop means fetches started recompiling.
+/// `recovered_fraction` — `BENCH_chaos.json`'s recovered-over-fired ratio
+/// from the fault-space sweep — is likewise counter arithmetic and gates
+/// the recovery contract: a drop means injection points that used to
+/// replay cleanly started evicting (or worse).
 pub fn is_trend_key(key: &str) -> bool {
     key.ends_with("items_per_sec")
         || key == "pooled_speedup"
         || key == "overlap_efficiency"
         || key == "wall_overlap_efficiency"
         || key == "warm_hit_rate"
+        || key == "recovered_fraction"
 }
 
 fn collect_numeric(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
@@ -503,6 +508,11 @@ mod tests {
         // the artifact cache's warm-pass hit fraction gates; its raw
         // counters (compiles, evictions) are not throughput-shaped
         assert!(is_trend_key("warm_hit_rate"));
+        // the chaos sweep's recovered-over-fired ratio gates the recovery
+        // contract; its raw per-surface counters are not trend keys
+        assert!(is_trend_key("recovered_fraction"));
+        assert!(!is_trend_key("recovered"));
+        assert!(!is_trend_key("hung"));
         assert!(!is_trend_key("cold_compiles"));
         assert!(!is_trend_key("assemble_mean_ms"));
         assert!(!is_trend_key("epoch_wall_mean_s"));

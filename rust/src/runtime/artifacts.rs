@@ -547,7 +547,7 @@ fn touch_lru(lru: &mut Vec<u64>, digest: u64) {
 /// Deterministic in-process compiler for the tier-1 test harness:
 /// configurable latency, failure injection through the existing
 /// [`FaultPlan`](crate::runtime::faults::FaultPlan) machinery (a
-/// [`FaultKind::Step`] entry fires per compile *attempt*), and
+/// [`FaultKind::Compile`] entry fires per compile *attempt*), and
 /// compile-count accounting. Payloads are a pure function of the key, so
 /// coalesced and repeated fetches are byte-identical by construction.
 pub struct MockCompiler {
@@ -579,7 +579,7 @@ impl MockCompiler {
         self
     }
 
-    /// Inject failures: a [`FaultKind::Step`] hook entry firing at
+    /// Inject failures: a [`FaultKind::Compile`] hook entry firing at
     /// compile attempt `n` (0-based, counted across all keys) turns that
     /// compile into a structured [`MbsError::Compile`].
     pub fn with_faults(mut self, hooks: FaultHooks) -> MockCompiler {
@@ -614,7 +614,7 @@ impl CompilerBackend for MockCompiler {
         if !self.latency.is_zero() {
             std::thread::sleep(self.latency);
         }
-        let note = lock_hooks(&self.hooks).check(FaultKind::Step, attempt);
+        let note = lock_hooks(&self.hooks).check(FaultKind::Compile, attempt);
         if let Some(note) = note {
             return Err(MbsError::Compile {
                 key: key.canonical(),
@@ -862,7 +862,7 @@ mod tests {
     #[test]
     fn injected_compile_failure_is_structured_and_retryable() {
         let plan = FaultPlan::parse(
-            r#"{"faults": [{"job": "compiler", "kind": "step", "at-step": 0}]}"#,
+            r#"{"faults": [{"job": "compiler", "kind": "compile", "at-step": 0}]}"#,
         )
         .unwrap();
         let backend = Arc::new(MockCompiler::new().with_faults(plan.hooks_for("compiler")));

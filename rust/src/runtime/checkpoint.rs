@@ -106,6 +106,20 @@ pub fn validate_checkpoint(
     Ok(CheckpointMeta { updates: get_u64("updates"), n_slots })
 }
 
+/// Read the checkpoint pair at `path` (`<path>.json` + `<path>.bin`)
+/// and validate it against `entry` ([`validate_checkpoint`]): the pure
+/// file half of [`ModelRuntime::load_checkpoint`], split out so corrupt,
+/// truncated, and torn `--resume` checkpoints are testable — structured
+/// errors, never panics — without artifacts or a device. Missing files
+/// surface as [`MbsError::Io`]; every validation failure as
+/// [`MbsError::Runtime`].
+pub fn read_and_validate(path: &Path, entry: &ModelEntry) -> Result<(CheckpointMeta, Vec<u8>)> {
+    let meta_text = std::fs::read_to_string(path.with_extension("json"))?;
+    let bin = std::fs::read(path.with_extension("bin"))?;
+    let meta = validate_checkpoint(&meta_text, &bin, entry)?;
+    Ok((meta, bin))
+}
+
 /// Write `bytes` to `<final>.tmp` then rename into place — the
 /// crash-safety primitive both checkpoint files go through.
 fn write_atomic(final_path: &Path, bytes: &[u8]) -> Result<()> {
@@ -147,9 +161,7 @@ impl ModelRuntime {
     /// ([`validate_checkpoint`]). The gradient accumulator is reset to
     /// zero (a checkpoint boundary is always an update boundary).
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
-        let meta_text = std::fs::read_to_string(path.with_extension("json"))?;
-        let bin = std::fs::read(path.with_extension("bin"))?;
-        let meta = validate_checkpoint(&meta_text, &bin, &self.entry)?;
+        let (meta, bin) = read_and_validate(path, &self.entry)?;
 
         let client = self.client().clone();
         let mut offset = 0usize;
@@ -279,6 +291,84 @@ mod tests {
         );
         let err = validate_checkpoint(&legacy, &bin, &entry).unwrap_err();
         assert!(err.to_string().contains("missing or malformed"), "{err}");
+    }
+
+    /// Write a `(meta, bin)` pair to disk as `<stem>.json`/`<stem>.bin`
+    /// under a unique temp stem, returning the stem path.
+    fn write_pair(tag: &str, meta: &str, bin: &[u8]) -> std::path::PathBuf {
+        let stem = std::env::temp_dir()
+            .join(format!("mbs-ckpt-file-{tag}-{}", std::process::id()));
+        std::fs::write(stem.with_extension("json"), meta).unwrap();
+        std::fs::write(stem.with_extension("bin"), bin).unwrap();
+        stem
+    }
+
+    fn cleanup(stem: &Path) {
+        std::fs::remove_file(stem.with_extension("json")).ok();
+        std::fs::remove_file(stem.with_extension("bin")).ok();
+    }
+
+    #[test]
+    fn read_and_validate_round_trips_a_good_pair() {
+        let entry = entry();
+        let (meta, bin) = good_pair(&entry);
+        let stem = write_pair("good", &meta, &bin);
+        let (ok, read_bin) = read_and_validate(&stem, &entry).unwrap();
+        assert_eq!(ok.updates, 42);
+        assert_eq!(read_bin, bin);
+        cleanup(&stem);
+    }
+
+    #[test]
+    fn bad_magic_on_disk_is_a_structured_error_not_a_panic() {
+        let entry = entry();
+        let (_, bin) = good_pair(&entry);
+        let stem = write_pair("magic", r#"{"magic": "nope"}"#, &bin);
+        let err = read_and_validate(&stem, &entry).unwrap_err();
+        assert!(matches!(err, MbsError::Runtime(_)), "{err:?}");
+        assert!(err.to_string().contains("not an mbs checkpoint"), "{err}");
+        cleanup(&stem);
+    }
+
+    #[test]
+    fn flipped_payload_byte_on_disk_fails_the_checksum() {
+        let entry = entry();
+        let (meta, mut bin) = good_pair(&entry);
+        bin[9] ^= 0x08; // same length, one flipped bit
+        let stem = write_pair("corrupt", &meta, &bin);
+        let err = read_and_validate(&stem, &entry).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        cleanup(&stem);
+    }
+
+    #[test]
+    fn torn_metadata_on_disk_is_a_structured_error() {
+        let entry = entry();
+        let (meta, bin) = good_pair(&entry);
+        // a torn write: the metadata JSON is cut mid-document
+        let stem = write_pair("torn", &meta[..meta.len() / 2], &bin);
+        let err = read_and_validate(&stem, &entry).unwrap_err();
+        assert!(matches!(err, MbsError::Runtime(_)), "{err:?}");
+        cleanup(&stem);
+    }
+
+    #[test]
+    fn truncated_payload_on_disk_is_rejected_by_length() {
+        let entry = entry();
+        let (meta, bin) = good_pair(&entry);
+        let stem = write_pair("trunc", &meta, &bin[..bin.len() - 7]);
+        let err = read_and_validate(&stem, &entry).unwrap_err();
+        assert!(err.to_string().contains("bytes, expected"), "{err}");
+        cleanup(&stem);
+    }
+
+    #[test]
+    fn missing_files_surface_as_io_errors() {
+        let entry = entry();
+        let stem = std::env::temp_dir()
+            .join(format!("mbs-ckpt-file-missing-{}", std::process::id()));
+        let err = read_and_validate(&stem, &entry).unwrap_err();
+        assert!(matches!(err, MbsError::Io(_)), "{err:?}");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! inject at chosen `(job, step)` points so the checkpoint → release →
 //! re-plan → replay recovery path ([`crate::coordinator::trainer`]) can be
 //! exercised — and its bit-identity oracle proven — without a flaky
-//! device. Three [`FaultKind`]s cover the layers a real tenancy fault
+//! device. Six [`FaultKind`]s cover the layers a real tenancy fault
 //! enters through:
 //!
 //!   - [`FaultKind::Arena`]: arms the shared [`Arena`](crate::memory::Arena)
@@ -15,7 +15,17 @@
 //!     failure for one micro-batch (surfaced at the consuming `recv` with
 //!     the job label, like every lane error);
 //!   - [`FaultKind::Step`]: the job loop fails before the device step —
-//!     the generic transient (a poisoned execution, a lost device).
+//!     the generic transient (a poisoned execution, a lost device);
+//!   - [`FaultKind::Stall`]: a seeded wall-clock *delay* (`"stall-ms"`)
+//!     on a watched surface (`"surface"`: lane | step | checkpoint) — the
+//!     hang shape. Nothing errors by itself; the
+//!     [`Watchdog`](crate::runtime::watchdog::Watchdog) must convert the
+//!     stalled wait into a recoverable deadline fault, which is exactly
+//!     what `mbs chaos` proves;
+//!   - [`FaultKind::Compile`]: the engine's variant-resolve chokepoint
+//!     fails (routes the plan into the PR 8 compile/artifact seam);
+//!   - [`FaultKind::Checkpoint`]: the snapshot path reports a torn
+//!     write / corrupt read against the FNV-checksummed checkpoint pair.
 //!
 //! Determinism contract: a fault entry triggers either at an exact 0-based
 //! work-item attempt (`"at-step": n`) or by a seeded hash-Bernoulli draw
@@ -26,8 +36,10 @@
 //! during its own replay and `times` (default 1) bounds prob entries.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use crate::error::{MbsError, Result};
+use crate::runtime::watchdog::Deadlines;
 use crate::util::hash::{fnv1a64, fraction};
 use crate::util::json::Json;
 
@@ -40,6 +52,13 @@ pub enum FaultKind {
     Lane,
     /// Fail the job loop before a device step (generic transient).
     Step,
+    /// Inject a wall-clock delay on a watched surface (the hang shape —
+    /// only the watchdog turns it into an error).
+    Stall,
+    /// Fail the engine's variant resolve (compile/artifact seam).
+    Compile,
+    /// Fail the checkpoint save path after the snapshot write.
+    Checkpoint,
 }
 
 impl FaultKind {
@@ -48,6 +67,9 @@ impl FaultKind {
             "arena" => Some(FaultKind::Arena),
             "lane" => Some(FaultKind::Lane),
             "step" => Some(FaultKind::Step),
+            "stall" => Some(FaultKind::Stall),
+            "compile" => Some(FaultKind::Compile),
+            "checkpoint" => Some(FaultKind::Checkpoint),
             _ => None,
         }
     }
@@ -57,7 +79,46 @@ impl FaultKind {
             FaultKind::Arena => "arena",
             FaultKind::Lane => "lane",
             FaultKind::Step => "step",
+            FaultKind::Stall => "stall",
+            FaultKind::Compile => "compile",
+            FaultKind::Checkpoint => "checkpoint",
         }
+    }
+}
+
+/// Which watched surface a [`FaultKind::Stall`] entry delays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StallSurface {
+    /// Match any work-item surface (lane or step) — the default, so a
+    /// bare stall entry wedges whichever path the job actually uses.
+    #[default]
+    Auto,
+    /// Delay the upload-lane worker before it stages the micro-batch
+    /// (trips the consumer's `recv` deadline).
+    Lane,
+    /// Delay on the executor thread before the device step.
+    Step,
+    /// Delay the checkpoint save inside its watched window.
+    Checkpoint,
+}
+
+impl StallSurface {
+    fn parse(s: &str) -> Option<StallSurface> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(StallSurface::Auto),
+            "lane" => Some(StallSurface::Lane),
+            "step" => Some(StallSurface::Step),
+            "checkpoint" => Some(StallSurface::Checkpoint),
+            _ => None,
+        }
+    }
+
+    /// Does an entry targeting `self` delay a draw at `at`? `Auto`
+    /// covers the work-item surfaces (lane, step) but not checkpoint —
+    /// checkpoint stalls are opt-in because they fire outside the
+    /// per-item attempt axis.
+    fn matches(self, at: StallSurface) -> bool {
+        self == at || (self == StallSurface::Auto && matches!(at, StallSurface::Lane | StallSurface::Step))
     }
 }
 
@@ -82,6 +143,12 @@ pub struct FaultSpec {
     /// Maximum firings per job (default 1; prob entries need a bound or a
     /// job could never finish).
     pub times: u64,
+    /// For [`FaultKind::Stall`]: how long the injected delay runs,
+    /// milliseconds (`"stall-ms"`, default 50). Ignored by other kinds.
+    pub stall_ms: u64,
+    /// For [`FaultKind::Stall`]: which surface is delayed (`"surface"`,
+    /// default `auto`). Ignored by other kinds.
+    pub surface: StallSurface,
 }
 
 /// A parsed fault-injection plan (`--faults spec.json`).
@@ -91,8 +158,14 @@ pub struct FaultPlan {
     pub seed: u64,
     /// Recovery attempts per job before it is marked failed (default 3).
     pub max_retries: u32,
-    /// Per-job linear backoff between retries, milliseconds (default 0).
+    /// Base backoff between retries, milliseconds (default 0). The
+    /// executor scales it by the retry ordinal and adds a seeded jitter
+    /// so co-resident tenants don't re-claim the arena in lockstep.
     pub backoff_ms: u64,
+    /// Watchdog deadline overrides (`"watchdog"` object, optional).
+    /// `None` leaves the generous [`Deadlines::default`] in force; chaos
+    /// sweeps shrink them so injected stalls trip in milliseconds.
+    pub watchdog: Option<Deadlines>,
     /// The fault entries, in spec order.
     pub specs: Vec<FaultSpec>,
 }
@@ -103,15 +176,22 @@ impl FaultPlan {
     /// ```json
     /// {
     ///   "seed": 7, "max_retries": 3, "backoff_ms": 0,
+    ///   "watchdog": {"step-ms": 250, "lane-recv-ms": 250},
     ///   "faults": [
     ///     {"job": "*", "kind": "step", "at-step": 3},
-    ///     {"job": "cls", "kind": "arena", "prob": 0.05, "times": 2}
+    ///     {"job": "cls", "kind": "arena", "prob": 0.05, "times": 2},
+    ///     {"job": "seg", "kind": "stall", "at-step": 1,
+    ///      "surface": "lane", "stall-ms": 750}
     ///   ]
     /// }
     /// ```
     ///
-    /// Exactly one of `at-step` / `prob` per entry; unknown kinds and
-    /// out-of-range probabilities are config errors.
+    /// Exactly one of `at-step` / `prob` per entry; unknown kinds,
+    /// unknown stall surfaces, and out-of-range probabilities are config
+    /// errors. The optional `watchdog` object overrides per-surface
+    /// deadlines (`lane-recv-ms`, `step-ms`, `compile-ms`,
+    /// `checkpoint-ms`; underscore spellings accepted; omitted keys keep
+    /// their generous defaults).
     pub fn parse(text: &str) -> Result<FaultPlan> {
         let bad = |msg: String| MbsError::Config(format!("faults spec: {msg}"));
         let doc = Json::parse(text).map_err(|e| bad(e.to_string()))?;
@@ -126,6 +206,25 @@ impl FaultPlan {
             .or_else(|| doc.get("backoff-ms"))
             .and_then(Json::as_u64)
             .unwrap_or(0);
+        let watchdog = match doc.get("watchdog") {
+            None => None,
+            Some(w) => {
+                let ms = |dashed: &str, snake: &str, default: Duration| {
+                    w.get(dashed)
+                        .or_else(|| w.get(snake))
+                        .and_then(Json::as_u64)
+                        .map(Duration::from_millis)
+                        .unwrap_or(default)
+                };
+                let d = Deadlines::default();
+                Some(Deadlines {
+                    lane_recv: ms("lane-recv-ms", "lane_recv_ms", d.lane_recv),
+                    step: ms("step-ms", "step_ms", d.step),
+                    compile: ms("compile-ms", "compile_ms", d.compile),
+                    checkpoint: ms("checkpoint-ms", "checkpoint_ms", d.checkpoint),
+                })
+            }
+        };
         let entries = doc
             .get("faults")
             .and_then(Json::as_arr)
@@ -143,7 +242,8 @@ impl FaultPlan {
                 .ok_or_else(|| bad(format!("fault #{i}: missing 'kind'")))?;
             let kind = FaultKind::parse(kind_s).ok_or_else(|| {
                 bad(format!(
-                    "fault #{i}: unknown kind '{kind_s}' (want arena | lane | step)"
+                    "fault #{i}: unknown kind '{kind_s}' \
+                     (want arena | lane | step | stall | compile | checkpoint)"
                 ))
             })?;
             let at = e.get("at-step").or_else(|| e.get("at_step")).and_then(Json::as_u64);
@@ -164,9 +264,23 @@ impl FaultPlan {
             if times == 0 {
                 return Err(bad(format!("fault #{i}: times must be positive")));
             }
-            specs.push(FaultSpec { job, kind, trigger, times });
+            let stall_ms = e
+                .get("stall-ms")
+                .or_else(|| e.get("stall_ms"))
+                .and_then(Json::as_u64)
+                .unwrap_or(50);
+            let surface = match e.get("surface").and_then(Json::as_str) {
+                None => StallSurface::Auto,
+                Some(s) => StallSurface::parse(s).ok_or_else(|| {
+                    bad(format!(
+                        "fault #{i}: unknown surface '{s}' \
+                         (want auto | lane | step | checkpoint)"
+                    ))
+                })?,
+            };
+            specs.push(FaultSpec { job, kind, trigger, times, stall_ms, surface });
         }
-        Ok(FaultPlan { seed, max_retries, backoff_ms, specs })
+        Ok(FaultPlan { seed, max_retries, backoff_ms, watchdog, specs })
     }
 
     /// Load a plan from a JSON file.
@@ -182,9 +296,31 @@ impl FaultPlan {
             .specs
             .iter()
             .filter(|s| s.job == "*" || s.job == job)
-            .map(|s| Armed { kind: s.kind, trigger: s.trigger, remaining: s.times })
+            .map(Armed::from_spec)
             .collect();
         FaultHooks { seed: self.seed, job: job.to_string(), entries, injected: 0 }
+    }
+
+    /// The engine-side hook view: every [`FaultKind::Compile`] entry of
+    /// the plan, regardless of its `job` field, armed under the
+    /// pseudo-job `"compiler"`. The engine (and its variant-resolve
+    /// chokepoint) is shared across tenants, so compile faults cannot be
+    /// attributed to one job at the seam — whichever tenant's resolve
+    /// draws the armed attempt takes the fault and recovers.
+    pub fn compile_hooks(&self) -> FaultHooks {
+        let entries = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == FaultKind::Compile)
+            .map(Armed::from_spec)
+            .collect();
+        FaultHooks { seed: self.seed, job: "compiler".to_string(), entries, injected: 0 }
+    }
+
+    /// Does the plan carry any [`FaultKind::Compile`] entries (i.e.
+    /// should the engine arm [`FaultPlan::compile_hooks`])?
+    pub fn has_compile_entries(&self) -> bool {
+        self.specs.iter().any(|s| s.kind == FaultKind::Compile)
     }
 
     /// How many plan entries apply to `job` (dry-run attribution).
@@ -198,6 +334,32 @@ struct Armed {
     kind: FaultKind,
     trigger: Trigger,
     remaining: u64,
+    stall_ms: u64,
+    surface: StallSurface,
+}
+
+impl Armed {
+    fn from_spec(s: &FaultSpec) -> Armed {
+        Armed {
+            kind: s.kind,
+            trigger: s.trigger,
+            remaining: s.times,
+            stall_ms: s.stall_ms,
+            surface: s.surface,
+        }
+    }
+
+    /// Does this entry's trigger fire at `attempt`? (Budget and
+    /// kind/surface matching are the caller's business.)
+    fn fires(&self, seed: u64, job: &str, attempt: u64) -> bool {
+        match self.trigger {
+            Trigger::AtStep(n) => n == attempt,
+            Trigger::Prob(p) => {
+                let key = format!("{seed}:{job}:{}:{attempt}", self.kind.name());
+                fraction(fnv1a64(key.as_bytes())) < p
+            }
+        }
+    }
 }
 
 /// One job's live view of a [`FaultPlan`]: the executor consults it once
@@ -224,21 +386,19 @@ impl FaultHooks {
 
     /// Should a `kind` fault fire at work-item `attempt`? Consumes one
     /// firing from the first matching armed entry and returns the
-    /// diagnostic note to thread into the error.
+    /// diagnostic note to thread into the error. [`FaultKind::Stall`]
+    /// entries never fire here — they inject *delays*, not errors; draw
+    /// them with [`FaultHooks::check_stall`].
     pub fn check(&mut self, kind: FaultKind, attempt: u64) -> Option<String> {
+        if kind == FaultKind::Stall {
+            return None;
+        }
+        let (seed, job) = (self.seed, self.job.clone());
         for entry in self.entries.iter_mut() {
             if entry.kind != kind || entry.remaining == 0 {
                 continue;
             }
-            let fires = match entry.trigger {
-                Trigger::AtStep(n) => n == attempt,
-                Trigger::Prob(p) => {
-                    let key =
-                        format!("{}:{}:{}:{attempt}", self.seed, self.job, kind.name());
-                    fraction(fnv1a64(key.as_bytes())) < p
-                }
-            };
-            if fires {
+            if entry.fires(seed, &job, attempt) {
                 entry.remaining -= 1;
                 self.injected += 1;
                 return Some(format!(
@@ -246,6 +406,33 @@ impl FaultHooks {
                     kind.name(),
                     self.job
                 ));
+            }
+        }
+        None
+    }
+
+    /// Should a [`FaultKind::Stall`] entry delay surface `at` for
+    /// work-item `attempt`? Consumes one firing from the first matching
+    /// armed stall entry and returns the injected delay. The caller
+    /// sleeps (or tells the lane worker to sleep) for that long inside a
+    /// watchdog-observed window — the stall itself is not an error; the
+    /// watchdog converting it into [`MbsError::Deadline`] is the
+    /// behavior under test.
+    ///
+    /// [`MbsError::Deadline`]: crate::error::MbsError::Deadline
+    pub fn check_stall(&mut self, at: StallSurface, attempt: u64) -> Option<Duration> {
+        let (seed, job) = (self.seed, self.job.clone());
+        for entry in self.entries.iter_mut() {
+            if entry.kind != FaultKind::Stall
+                || entry.remaining == 0
+                || !entry.surface.matches(at)
+            {
+                continue;
+            }
+            if entry.fires(seed, &job, attempt) {
+                entry.remaining -= 1;
+                self.injected += 1;
+                return Some(Duration::from_millis(entry.stall_ms));
             }
         }
         None
@@ -364,6 +551,11 @@ mod tests {
             assert!(hooks.check(FaultKind::Step, a).is_none());
             assert!(hooks.check(FaultKind::Arena, a).is_none());
             assert!(hooks.check(FaultKind::Lane, a).is_none());
+            assert!(hooks.check(FaultKind::Compile, a).is_none());
+            assert!(hooks.check(FaultKind::Checkpoint, a).is_none());
+            assert!(hooks.check_stall(StallSurface::Lane, a).is_none());
+            assert!(hooks.check_stall(StallSurface::Step, a).is_none());
+            assert!(hooks.check_stall(StallSurface::Checkpoint, a).is_none());
         }
         assert_eq!(hooks.injected(), 0);
     }
@@ -374,6 +566,95 @@ mod tests {
         assert_eq!(plan.seed, 0);
         assert_eq!(plan.max_retries, 3);
         assert_eq!(plan.backoff_ms, 0);
+        assert!(plan.watchdog.is_none());
         assert!(plan.hooks_for("x").is_empty());
+        assert!(!plan.has_compile_entries());
+        assert!(plan.compile_hooks().is_empty());
+    }
+
+    #[test]
+    fn stall_entries_delay_their_surface_and_never_error() {
+        let plan = FaultPlan::parse(
+            r#"{"faults": [
+                {"job": "j", "kind": "stall", "at-step": 2,
+                 "surface": "lane", "stall-ms": 750},
+                {"job": "j", "kind": "stall", "at-step": 4,
+                 "surface": "checkpoint"}
+            ]}"#,
+        )
+        .unwrap();
+        let mut hooks = plan.hooks_for("j");
+        // stall entries are invisible to the error-injection path
+        assert!(hooks.check(FaultKind::Stall, 2).is_none());
+        assert!(hooks.check(FaultKind::Step, 2).is_none());
+        // wrong surface never matches; checkpoint is opt-in (not Auto)
+        assert!(hooks.check_stall(StallSurface::Step, 2).is_none());
+        assert!(hooks.check_stall(StallSurface::Checkpoint, 2).is_none());
+        let d = hooks.check_stall(StallSurface::Lane, 2).expect("lane stall at 2");
+        assert_eq!(d, Duration::from_millis(750));
+        // budget of 1: the replayed attempt does not re-stall
+        assert!(hooks.check_stall(StallSurface::Lane, 2).is_none());
+        // default stall-ms fills in
+        let d = hooks.check_stall(StallSurface::Checkpoint, 4).expect("ckpt stall at 4");
+        assert_eq!(d, Duration::from_millis(50));
+        assert_eq!(hooks.injected(), 2);
+    }
+
+    #[test]
+    fn auto_surface_matches_lane_and_step_but_not_checkpoint() {
+        let spec = r#"{"faults": [{"job": "*", "kind": "stall", "at-step": 1}]}"#;
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.specs[0].surface, StallSurface::Auto);
+        let mut on_lane = plan.hooks_for("a");
+        assert!(on_lane.check_stall(StallSurface::Lane, 1).is_some());
+        let mut on_step = plan.hooks_for("a");
+        assert!(on_step.check_stall(StallSurface::Step, 1).is_some());
+        let mut on_ckpt = plan.hooks_for("a");
+        assert!(on_ckpt.check_stall(StallSurface::Checkpoint, 1).is_none());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_surface() {
+        let err = FaultPlan::parse(
+            r#"{"faults": [{"job": "a", "kind": "stall", "at-step": 0, "surface": "disk"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown surface"), "{err}");
+    }
+
+    #[test]
+    fn watchdog_overrides_parse_with_defaults_for_omitted_keys() {
+        let plan = FaultPlan::parse(
+            r#"{"watchdog": {"step-ms": 250, "lane_recv_ms": 100}, "faults": []}"#,
+        )
+        .unwrap();
+        let d = plan.watchdog.expect("watchdog object present");
+        assert_eq!(d.step, Duration::from_millis(250));
+        assert_eq!(d.lane_recv, Duration::from_millis(100));
+        // omitted keys keep the generous defaults
+        let defaults = Deadlines::default();
+        assert_eq!(d.compile, defaults.compile);
+        assert_eq!(d.checkpoint, defaults.checkpoint);
+    }
+
+    #[test]
+    fn compile_hooks_collect_every_compile_entry_across_jobs() {
+        let plan = FaultPlan::parse(
+            r#"{"faults": [
+                {"job": "a", "kind": "compile", "at-step": 1},
+                {"job": "b", "kind": "compile", "at-step": 3},
+                {"job": "a", "kind": "step", "at-step": 0}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(plan.has_compile_entries());
+        let mut hooks = plan.compile_hooks();
+        // both compile entries armed, the step entry excluded
+        assert!(hooks.check(FaultKind::Step, 0).is_none());
+        assert!(hooks.check(FaultKind::Compile, 0).is_none());
+        assert!(hooks.check(FaultKind::Compile, 1).is_some());
+        assert!(hooks.check(FaultKind::Compile, 3).is_some());
+        assert_eq!(hooks.injected(), 2);
     }
 }

@@ -17,14 +17,16 @@ pub mod checkpoint;
 pub mod faults;
 pub mod model;
 pub mod upload_lane;
+pub mod watchdog;
 
 pub use artifacts::{
     ArtifactHandle, ArtifactManager, ArtifactStats, CompiledArtifact, CompilerBackend,
     MockCompiler, PythonAotCompiler, VariantKey,
 };
-pub use faults::{FaultHooks, FaultKind, FaultPlan};
+pub use faults::{FaultHooks, FaultKind, FaultPlan, FaultSpec, StallSurface, Trigger};
 pub use model::{ModelRuntime, StepOutput};
 pub use upload_lane::{LaneJob, StagedBatch, UploadLane};
+pub use watchdog::{Deadlines, Surface, Watchdog};
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -41,13 +43,51 @@ pub struct Engine {
     /// export did not bake (see [`artifacts`]). `None` until the first
     /// unexported variant is requested or a backend is injected.
     artifacts: Option<ArtifactManager>,
+    /// Armed `compile`-kind fault hooks (`--faults` plans reach the
+    /// compile/artifact seam through here). Checked at the top of
+    /// [`Engine::resolve_variant`] — the one chokepoint every variant
+    /// resolution passes through, exported or compiled — so the
+    /// injection fires even when the cache never misses.
+    compile_faults: FaultHooks,
+    /// Monotonic count of [`Engine::resolve_variant`] calls, the attempt
+    /// axis for `at-step` compile-fault triggers.
+    compile_attempts: u64,
 }
 
 impl Engine {
     /// CPU PJRT client over the given artifact directory.
     pub fn new(manifest: Manifest) -> Result<Engine> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, exe_cache: HashMap::new(), artifacts: None })
+        Ok(Engine {
+            client,
+            manifest,
+            exe_cache: HashMap::new(),
+            artifacts: None,
+            compile_faults: FaultHooks::none(),
+            compile_attempts: 0,
+        })
+    }
+
+    /// Arm `compile`-kind fault hooks against [`Engine::resolve_variant`].
+    /// Each resolve draws one attempt; a firing hook surfaces as a
+    /// *recoverable* [`MbsError::Fault`] so the recovery state machine
+    /// (or `mbs chaos`) can replay the load.
+    pub fn arm_compile_faults(&mut self, hooks: FaultHooks) {
+        self.compile_faults = hooks;
+        self.compile_attempts = 0;
+    }
+
+    /// Disarm any armed compile-fault hooks (back to the clean engine).
+    /// Runs that take no fault plan call this so hooks never leak across
+    /// chaos sweep points sharing one engine.
+    pub fn disarm_compile_faults(&mut self) {
+        self.compile_faults = FaultHooks::none();
+        self.compile_attempts = 0;
+    }
+
+    /// How many compile faults the armed hooks have injected so far.
+    pub fn compile_faults_injected(&self) -> u64 {
+        self.compile_faults.injected()
     }
 
     /// The manifest this engine serves artifacts from.
@@ -115,6 +155,14 @@ impl Engine {
         size: usize,
         mu: usize,
     ) -> Result<Variant> {
+        let attempt = self.compile_attempts;
+        self.compile_attempts += 1;
+        if let Some(note) = self.compile_faults.check(FaultKind::Compile, attempt) {
+            return Err(MbsError::Fault(format!(
+                "{note} (resolving {}:s{size}:mu{mu})",
+                entry.name
+            )));
+        }
         if let Ok(v) = entry.variant(size, mu) {
             if self.manifest.path(&v.accum_hlo).exists() && self.manifest.path(&v.eval_hlo).exists()
             {

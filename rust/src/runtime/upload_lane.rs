@@ -33,11 +33,21 @@
 //! it like any staging error, but the consumer's `recv` maps it to the
 //! *recoverable* [`MbsError::Fault`] — genuine staging errors stay
 //! [`MbsError::Runtime`] (deterministic, fatal).
+//!
+//! Hang conversion: a [`LaneJob`] may also carry an injected *stall* — the
+//! worker sleeps that long before touching the job, simulating a wedged
+//! staging thread. Nothing errors on the worker side; instead the consumer
+//! calls [`UploadLane::recv_deadline`] (the watchdog-governed wait,
+//! `runtime/watchdog.rs`), which unblocks when the deadline expires and
+//! surfaces the *recoverable* [`MbsError::Deadline`] — the arena reclaims
+//! the tenant instead of freezing behind its `recv`. The worker's eventual
+//! completion for the stalled job is consumed by the lane teardown drain
+//! (recovery respawns the lane), so no lease leaks.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::data::{Buf, BufPool, MicroBatchHost};
 use crate::error::{MbsError, Result};
@@ -58,6 +68,12 @@ pub struct LaneJob {
     /// staging it, and `recv` surfaces a recoverable
     /// [`MbsError::Fault`]. `None` (the normal case) stages as usual.
     pub fault: Option<String>,
+    /// Injected stall (deterministic hang injection): the worker sleeps
+    /// this long before processing the job, simulating wedged staging.
+    /// Not an error by itself — the consumer's
+    /// [`UploadLane::recv_deadline`] converts the overdue wait into a
+    /// recoverable [`MbsError::Deadline`]. `None` is the normal case.
+    pub stall: Option<Duration>,
 }
 
 /// A staged micro-batch handed back by the lane, ready for the engine
@@ -141,10 +157,17 @@ impl UploadLane {
                 // once the consumer is gone there is no one to stage for:
                 // keep draining, but only to return leases to the pool
                 let mut draining = false;
-                while let Ok(LaneJob { seq, mb, scale, fault }) = jobs_rx.recv() {
+                while let Ok(LaneJob { seq, mb, scale, fault, stall }) = jobs_rx.recv() {
                     if draining {
                         worker_pool.give(mb);
                         continue;
+                    }
+                    // injected hang: wedge the worker *before* the staging
+                    // window opens, so the stall is a genuine dead wait the
+                    // consumer's deadline must catch (not credited staging
+                    // time in the `started..finished` overlap window)
+                    if let Some(d) = stall {
+                        thread::sleep(d);
                     }
                     let started = Instant::now();
                     let result = if let Some(note) = fault {
@@ -220,23 +243,52 @@ impl UploadLane {
             MbsError::Runtime(format!("{}: upload lane already shut down", self.label))
         })?;
         match done.recv() {
-            Ok(Completion { result: Ok(staged), .. }) => Ok(staged),
-            Ok(Completion { seq, result: Err(e) }) => {
-                let msg = format!(
-                    "{}: upload lane: staging micro-batch {seq} failed: {}",
-                    self.label, e.msg
-                );
-                // injected faults are transient by construction — the
-                // recovery state machine retries them; genuine staging
-                // errors would replay identically, so they stay fatal
-                Err(if e.injected { MbsError::Fault(msg) } else { MbsError::Runtime(msg) })
-            }
-            Err(_) => Err(MbsError::Runtime(format!(
-                "{}: upload lane worker exited before completing a staged micro-batch",
-                self.label
-            ))),
+            Ok(completion) => complete(&self.label, completion),
+            Err(_) => Err(worker_exited(&self.label)),
         }
     }
+
+    /// [`UploadLane::recv`] with a wall-clock deadline: the watchdog-
+    /// governed wait. When the worker completes in time this is `recv`;
+    /// when the deadline expires first, the caller genuinely unblocks —
+    /// even if the worker is wedged mid-stall — with the *recoverable*
+    /// [`MbsError::Deadline`], and the recovery state machine tears this
+    /// lane down (draining the late completion's lease) and respawns it.
+    pub fn recv_deadline(&mut self, deadline: Duration) -> Result<StagedBatch> {
+        let done = self.done.as_ref().ok_or_else(|| {
+            MbsError::Runtime(format!("{}: upload lane already shut down", self.label))
+        })?;
+        match done.recv_timeout(deadline) {
+            Ok(completion) => complete(&self.label, completion),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(MbsError::Deadline {
+                surface: "lane-recv".to_string(),
+                elapsed_ms: deadline.as_millis() as u64,
+            }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(worker_exited(&self.label)),
+        }
+    }
+}
+
+/// Map a worker completion to the consumer-facing result (shared by
+/// [`UploadLane::recv`] and [`UploadLane::recv_deadline`]).
+fn complete(label: &str, completion: Completion) -> Result<StagedBatch> {
+    match completion {
+        Completion { result: Ok(staged), .. } => Ok(staged),
+        Completion { seq, result: Err(e) } => {
+            let msg =
+                format!("{label}: upload lane: staging micro-batch {seq} failed: {}", e.msg);
+            // injected faults are transient by construction — the
+            // recovery state machine retries them; genuine staging
+            // errors would replay identically, so they stay fatal
+            Err(if e.injected { MbsError::Fault(msg) } else { MbsError::Runtime(msg) })
+        }
+    }
+}
+
+fn worker_exited(label: &str) -> MbsError {
+    MbsError::Runtime(format!(
+        "{label}: upload lane worker exited before completing a staged micro-batch"
+    ))
 }
 
 impl Drop for UploadLane {
@@ -335,7 +387,7 @@ mod tests {
         let mut lane = UploadLane::spawn(pool.clone(), 2, "test-job").unwrap();
         let originals = assembled(&ds, 20, 8); // 8 + 8 + 4 (ragged tail)
         for (seq, mb) in originals.iter().enumerate() {
-            lane.submit(LaneJob { seq: seq as u64, mb: mb.clone(), scale: Some(0.25), fault: None })
+            lane.submit(LaneJob { seq: seq as u64, mb: mb.clone(), scale: Some(0.25), fault: None, stall: None })
                 .unwrap();
         }
         for (seq, original) in originals.iter().enumerate() {
@@ -368,7 +420,7 @@ mod tests {
         let originals = assembled(&ds, 64, 8);
         let n = originals.len() as u64;
         for (seq, mb) in originals.into_iter().enumerate() {
-            lane.submit(LaneJob { seq: seq as u64, mb, scale: None, fault: None }).unwrap();
+            lane.submit(LaneJob { seq: seq as u64, mb, scale: None, fault: None, stall: None }).unwrap();
         }
         drop(lane); // must join, not hang, with completions never consumed
         let s = pool.stats();
@@ -389,7 +441,7 @@ mod tests {
             actual: 5,
             j: 0,
         };
-        lane.submit(LaneJob { seq: 7, mb: corrupt, scale: None, fault: None }).unwrap();
+        lane.submit(LaneJob { seq: 7, mb: corrupt, scale: None, fault: None, stall: None }).unwrap();
         let err = lane.recv().expect_err("corrupt batch must fail staging");
         let msg = err.to_string();
         assert!(msg.contains("micro-batch 7"), "{msg}");
@@ -400,7 +452,7 @@ mod tests {
         // the lane is still alive and stages good batches afterwards
         let ds = SynthFlowers::new(8, 10, 8, 1);
         let good = assembled(&ds, 8, 8).remove(0);
-        lane.submit(LaneJob { seq: 8, mb: good, scale: None, fault: None }).unwrap();
+        lane.submit(LaneJob { seq: 8, mb: good, scale: None, fault: None, stall: None }).unwrap();
         let staged = lane.recv().expect("lane survives an error");
         assert_eq!(staged.seq, 8);
         pool.give(staged.mb);
@@ -417,6 +469,7 @@ mod tests {
             mb: good,
             scale: Some(0.5),
             fault: Some("lane fault for job 'job-cls' at attempt 3".into()),
+            stall: None,
         })
         .unwrap();
         let err = lane.recv().expect_err("injected fault must fail the completion");
@@ -428,7 +481,7 @@ mod tests {
         // the lease went back despite the fault, and the lane survives
         assert_eq!(pool.stats().returns, 1);
         let again = assembled(&ds, 8, 8).remove(0);
-        lane.submit(LaneJob { seq: 4, mb: again, scale: None, fault: None }).unwrap();
+        lane.submit(LaneJob { seq: 4, mb: again, scale: None, fault: None, stall: None }).unwrap();
         let staged = lane.recv().expect("lane survives an injected fault");
         assert_eq!(staged.seq, 4);
         pool.give(staged.mb);
@@ -445,7 +498,7 @@ mod tests {
             actual: 5,
             j: 0,
         };
-        lane.submit(LaneJob { seq: 0, mb: corrupt, scale: None, fault: None }).unwrap();
+        lane.submit(LaneJob { seq: 0, mb: corrupt, scale: None, fault: None, stall: None }).unwrap();
         let err = lane.recv().expect_err("corrupt batch fails");
         assert!(!err.recoverable(), "validation errors are deterministic: {err}");
         assert!(err.to_string().contains("job-seg:"), "{err}");
@@ -462,9 +515,69 @@ mod tests {
             actual: 2,
             j: 0,
         };
-        lane.submit(LaneJob { seq: 0, mb: bad_mask, scale: None, fault: None }).unwrap();
+        lane.submit(LaneJob { seq: 0, mb: bad_mask, scale: None, fault: None, stall: None }).unwrap();
         let msg = lane.recv().expect_err("mask hole must fail").to_string();
         assert!(msg.contains("mask[1]"), "{msg}");
+    }
+
+    #[test]
+    fn injected_stall_trips_recv_deadline_with_a_recoverable_fault() {
+        let ds = SynthFlowers::new(8, 10, 8, 1);
+        let pool = Arc::new(BufPool::bounded(4));
+        let mut lane = UploadLane::spawn(pool.clone(), 1, "job-cls").unwrap();
+        let good = assembled(&ds, 8, 8).remove(0);
+        lane.submit(LaneJob {
+            seq: 0,
+            mb: good,
+            scale: None,
+            fault: None,
+            // wedge the worker well past the consumer's deadline
+            stall: Some(Duration::from_millis(400)),
+        })
+        .unwrap();
+        let err = lane
+            .recv_deadline(Duration::from_millis(30))
+            .expect_err("a 400ms stall must trip a 30ms deadline");
+        assert!(err.recoverable(), "deadline expiries must be retryable: {err}");
+        match &err {
+            MbsError::Deadline { surface, elapsed_ms } => {
+                assert_eq!(surface, "lane-recv");
+                assert_eq!(*elapsed_ms, 30);
+            }
+            other => panic!("expected Deadline, got {other}"),
+        }
+        // recovery drops the lane (joining the wedged worker once its
+        // sleep ends); the shutdown drain keeps the zero-leak invariant
+        drop(lane);
+        let s = pool.stats();
+        assert_eq!(s.leases, s.returns, "stalled shutdown leaked leases: {s:?}");
+    }
+
+    #[test]
+    fn recv_deadline_passes_through_when_the_worker_is_healthy() {
+        let ds = SynthFlowers::new(8, 10, 8, 1);
+        let pool = Arc::new(BufPool::bounded(4));
+        let mut lane = UploadLane::spawn(pool.clone(), 1, "job-cls").unwrap();
+        let good = assembled(&ds, 8, 8).remove(0);
+        lane.submit(LaneJob { seq: 5, mb: good, scale: Some(0.5), fault: None, stall: None })
+            .unwrap();
+        // generous deadline: behaves exactly like recv
+        let staged = lane.recv_deadline(Duration::from_secs(30)).expect("healthy lane");
+        assert_eq!(staged.seq, 5);
+        assert_eq!(staged.scale, Some(0.5));
+        pool.give(staged.mb);
+        // injected *faults* still surface as Fault (not Deadline) here
+        let again = assembled(&ds, 8, 8).remove(0);
+        lane.submit(LaneJob {
+            seq: 6,
+            mb: again,
+            scale: None,
+            fault: Some("lane fault for job 'job-cls' at attempt 6".into()),
+            stall: None,
+        })
+        .unwrap();
+        let err = lane.recv_deadline(Duration::from_secs(30)).expect_err("fault surfaces");
+        assert!(matches!(err, MbsError::Fault(_)), "{err:?}");
     }
 
     #[test]
@@ -481,7 +594,7 @@ mod tests {
             for (seq, mb) in mbs_list.into_iter().enumerate() {
                 let mut leased = pool.lease();
                 stage_copy(&mut leased, &mb);
-                lane.submit(LaneJob { seq: seq as u64, mb: leased, scale: None, fault: None })
+                lane.submit(LaneJob { seq: seq as u64, mb: leased, scale: None, fault: None, stall: None })
                     .unwrap();
                 // consume every other completion promptly; leave the rest
                 // queued so some epochs drop the lane with a full channel

@@ -1,0 +1,218 @@
+//! Wall-clock watchdog: deadlines on every blocking surface.
+//!
+//! The recovery state machine (`coordinator/trainer.rs`) survives
+//! *failures* — a step that errors, an arena claim that OOMs, a lane
+//! completion that reports a fault. What it could not survive before
+//! this module is a *hang*: a lane `recv` that never returns, a wedged
+//! micro-step, a checkpoint write stuck in the filesystem. A hung
+//! tenant holds its arena reservation forever and deadlocks every
+//! co-resident job.
+//!
+//! The watchdog converts hangs into faults. Each blocking surface gets
+//! a wall-clock deadline ([`Deadlines`]); when a surface's elapsed time
+//! exceeds its deadline, the caller receives a *recoverable*
+//! [`MbsError::Deadline`] instead of blocking forever. From there the
+//! ordinary quiesce → release → re-plan → replay machinery takes over:
+//! the tenant is recovered from its phase-start snapshot, or — after
+//! retry exhaustion — cleanly evicted with its reservation released.
+//!
+//! Two enforcement styles, by surface shape:
+//!
+//! * **Pre-emptive** — the upload lane's `recv` is a channel wait, so
+//!   the deadline is enforced *inside* the wait
+//!   ([`UploadLane::recv_deadline`](crate::runtime::upload_lane::UploadLane::recv_deadline)):
+//!   the caller genuinely unblocks when the deadline expires, even if
+//!   the worker thread is wedged.
+//! * **Post-hoc** — micro-step execute, compile fetch, and checkpoint
+//!   save/load run on the caller's own thread, so the watchdog measures
+//!   the elapsed wall clock around the call ([`Watchdog::observe`]) and
+//!   converts an over-deadline completion into the same fault. A
+//!   genuinely-never-returning device call cannot be interrupted from
+//!   safe Rust; what this catches is the realistic failure shape — a
+//!   stall that eventually returns (page-cache pressure, a loaded
+//!   machine, an injected delay) — while keeping the enforcement
+//!   deterministic and thread-free.
+//!
+//! Defaults are generous (minutes): production runs should never trip
+//! them. Chaos sweeps (`mbs chaos`) shrink them via the fault plan's
+//! `watchdog` object so injected stalls trip the deadline in
+//! milliseconds, proving the conversion end-to-end.
+
+use std::time::Duration;
+
+use crate::error::MbsError;
+
+/// A watched blocking surface. Every place the executor can block on
+/// something outside its own control is enumerated here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Surface {
+    /// The upload lane's `done.recv()` — waiting for the staging thread
+    /// to hand back a staged batch.
+    LaneRecv,
+    /// One micro-step execute on the device.
+    Step,
+    /// A compile/artifact fetch through `Engine::resolve_variant`.
+    Compile,
+    /// Writing a phase-start snapshot or user checkpoint.
+    CheckpointSave,
+    /// Reading + validating + restoring a checkpoint.
+    CheckpointLoad,
+}
+
+impl Surface {
+    /// Stable surface name used in [`MbsError::Deadline`] and chaos
+    /// reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Surface::LaneRecv => "lane-recv",
+            Surface::Step => "step",
+            Surface::Compile => "compile",
+            Surface::CheckpointSave => "checkpoint-save",
+            Surface::CheckpointLoad => "checkpoint-load",
+        }
+    }
+}
+
+/// Per-surface wall-clock deadlines. Save and load share the
+/// `checkpoint` budget — both are bounded file-IO over the same pair of
+/// files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Deadlines {
+    /// Deadline for one upload-lane `recv` ([`Surface::LaneRecv`]).
+    pub lane_recv: Duration,
+    /// Deadline for one micro-step execute ([`Surface::Step`]).
+    pub step: Duration,
+    /// Deadline for one variant resolve ([`Surface::Compile`]) — has to
+    /// cover a cold AOT compile, so it is the largest default.
+    pub compile: Duration,
+    /// Deadline for one checkpoint save or load
+    /// ([`Surface::CheckpointSave`] / [`Surface::CheckpointLoad`]).
+    pub checkpoint: Duration,
+}
+
+impl Default for Deadlines {
+    /// Generous production defaults: a healthy run never comes near
+    /// them, so the watchdog is always-on without a flag.
+    fn default() -> Self {
+        Deadlines {
+            lane_recv: Duration::from_secs(120),
+            step: Duration::from_secs(600),
+            compile: Duration::from_secs(1800),
+            checkpoint: Duration::from_secs(300),
+        }
+    }
+}
+
+impl Deadlines {
+    /// Uniform deadlines across every surface — what `mbs chaos` uses
+    /// to make injected stalls trip in milliseconds.
+    pub fn uniform(d: Duration) -> Self {
+        Deadlines { lane_recv: d, step: d, compile: d, checkpoint: d }
+    }
+
+    /// The deadline governing `surface`.
+    pub fn for_surface(&self, surface: Surface) -> Duration {
+        match surface {
+            Surface::LaneRecv => self.lane_recv,
+            Surface::Step => self.step,
+            Surface::Compile => self.compile,
+            Surface::CheckpointSave | Surface::CheckpointLoad => self.checkpoint,
+        }
+    }
+}
+
+/// The watchdog itself: a [`Deadlines`] table plus the conversion from
+/// an expired wait into the recoverable [`MbsError::Deadline`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Watchdog {
+    deadlines: Deadlines,
+}
+
+impl Watchdog {
+    /// A watchdog enforcing `deadlines`.
+    pub fn new(deadlines: Deadlines) -> Self {
+        Watchdog { deadlines }
+    }
+
+    /// The deadline governing `surface`.
+    pub fn deadline(&self, surface: Surface) -> Duration {
+        self.deadlines.for_surface(surface)
+    }
+
+    /// Build the recoverable deadline fault for an expired wait on
+    /// `surface` after `elapsed` of wall clock.
+    pub fn expired(&self, surface: Surface, elapsed: Duration) -> MbsError {
+        MbsError::Deadline {
+            surface: surface.name().to_string(),
+            elapsed_ms: elapsed.as_millis() as u64,
+        }
+    }
+
+    /// Post-hoc check: `Ok(())` when `elapsed` is within `surface`'s
+    /// deadline, the recoverable deadline fault otherwise. Used around
+    /// same-thread blocking calls (step execute, compile, checkpoint
+    /// IO) where the wait cannot be pre-empted.
+    pub fn observe(&self, surface: Surface, elapsed: Duration) -> Result<(), MbsError> {
+        if elapsed > self.deadline(surface) {
+            Err(self.expired(surface, elapsed))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surface_names_are_stable() {
+        assert_eq!(Surface::LaneRecv.name(), "lane-recv");
+        assert_eq!(Surface::Step.name(), "step");
+        assert_eq!(Surface::Compile.name(), "compile");
+        assert_eq!(Surface::CheckpointSave.name(), "checkpoint-save");
+        assert_eq!(Surface::CheckpointLoad.name(), "checkpoint-load");
+    }
+
+    #[test]
+    fn default_deadlines_are_generous_and_surface_mapped() {
+        let d = Deadlines::default();
+        assert!(d.lane_recv >= Duration::from_secs(60));
+        assert!(d.compile >= d.step);
+        assert_eq!(d.for_surface(Surface::CheckpointSave), d.checkpoint);
+        assert_eq!(d.for_surface(Surface::CheckpointLoad), d.checkpoint);
+        assert_eq!(d.for_surface(Surface::LaneRecv), d.lane_recv);
+    }
+
+    #[test]
+    fn observe_converts_expiry_into_recoverable_deadline_fault() {
+        let wd = Watchdog::new(Deadlines::uniform(Duration::from_millis(10)));
+        assert!(wd.observe(Surface::Step, Duration::from_millis(5)).is_ok());
+        let err = wd
+            .observe(Surface::Step, Duration::from_millis(25))
+            .expect_err("25ms > 10ms deadline must expire");
+        assert!(err.recoverable(), "deadline faults must be recoverable: {err}");
+        match err {
+            MbsError::Deadline { surface, elapsed_ms } => {
+                assert_eq!(surface, "step");
+                assert_eq!(elapsed_ms, 25);
+            }
+            other => panic!("expected Deadline, got {other}"),
+        }
+    }
+
+    #[test]
+    fn uniform_deadlines_cover_every_surface() {
+        let wd = Watchdog::new(Deadlines::uniform(Duration::from_millis(7)));
+        for s in [
+            Surface::LaneRecv,
+            Surface::Step,
+            Surface::Compile,
+            Surface::CheckpointSave,
+            Surface::CheckpointLoad,
+        ] {
+            assert_eq!(wd.deadline(s), Duration::from_millis(7));
+            assert!(wd.observe(s, Duration::from_millis(8)).is_err());
+        }
+    }
+}

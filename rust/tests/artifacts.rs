@@ -187,7 +187,7 @@ fn corruption_with_failing_backend_surfaces_structured_error() {
     let plan = FaultPlan::parse(
         // attempt 0 is the successful cold compile; attempt 1 (the
         // post-corruption recompile) is the injected failure
-        r#"{"faults": [{"job": "compiler", "kind": "step", "at-step": 1}]}"#,
+        r#"{"faults": [{"job": "compiler", "kind": "compile", "at-step": 1}]}"#,
     )
     .unwrap();
     let backend = Arc::new(MockCompiler::new().with_faults(plan.hooks_for("compiler")));

@@ -1,0 +1,109 @@
+//! `mbs chaos` fault-space sweep tests (see rust/docs/TESTING.md).
+//!
+//! Tier-1 (artifact-free): the committed smoke spec enumerates a
+//! non-trivial sweep and every generated one-entry fault plan survives a
+//! round-trip through the on-disk fault-spec parser — exactly what CI's
+//! `mbs chaos --dry-run` exercises.
+//!
+//! Artifact-gated: the full sweep over the committed train-smoke spec.
+//! The two invariants the whole PR exists for: `hung == 0` (every
+//! injected stall outruns its watchdog deadline 3x, so the watchdog MUST
+//! convert it into a recoverable fault) and `diverged == 0` (every run
+//! that completes is bit-identical to the fault-free baseline).
+
+mod common;
+
+use std::path::PathBuf;
+
+use mbs::coordinator::chaos::{self, ChaosCfg, Injection, Verdict};
+use mbs::memory::MIB;
+use mbs::JobSet;
+
+fn spec(name: &str) -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("specs")
+        .join(name)
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn smoke_spec_enumerates_a_nontrivial_sweep() {
+    let set = JobSet::load(&spec("jobs-smoke.json")).expect("committed smoke spec parses");
+    let cfg = ChaosCfg::default();
+    let points = chaos::enumerate(&set, &cfg.steps);
+    // at minimum: step + arena at every enumerated step for every job,
+    // plus one engine-global compile point per job
+    assert!(
+        points.len() >= set.jobs.len() * (2 * cfg.steps.len() + 1),
+        "sweep too small: {} points for {} jobs",
+        points.len(),
+        set.jobs.len()
+    );
+    let compile = points.iter().filter(|p| p.injection == Injection::Compile).count();
+    assert_eq!(compile, set.jobs.len(), "one compile point per materialize");
+    assert!(
+        points.iter().all(|p| p.injection != Injection::Compile || p.job == "*"),
+        "compile points are engine-global (wildcard job)"
+    );
+    // every job draws faults on at least one hang surface: that is what
+    // makes the sweep a watchdog test, not just a fault test
+    for job in &set.jobs {
+        assert!(
+            points.iter().any(|p| p.job == job.name
+                && matches!(
+                    p.injection,
+                    Injection::StallLane | Injection::StallStep | Injection::StallCheckpoint
+                )),
+            "job '{}' has no stall point",
+            job.name
+        );
+    }
+}
+
+#[test]
+fn every_smoke_spec_plan_round_trips_through_the_fault_spec_parser() {
+    // the dry-run contract: each generated plan is a legal spec file a
+    // user could have committed, nothing lost in serialization
+    let set = JobSet::load(&spec("jobs-smoke.json")).expect("committed smoke spec parses");
+    let cfg = ChaosCfg::default();
+    for point in chaos::enumerate(&set, &cfg.steps) {
+        chaos::validate_point(&point, &cfg).unwrap_or_else(|e| {
+            panic!("point ({}, {}, {}): {e}", point.job, point.injection.name(), point.at)
+        });
+    }
+}
+
+#[test]
+fn full_sweep_over_train_smoke_spec_has_zero_hung_and_zero_diverged() {
+    // the capstone: every (job, surface, step) point over the committed
+    // train-smoke spec either stays clean, recovers bit-identically, or
+    // degrades into a structured eviction — nothing hangs, nothing drifts
+    let Some(mut engine) = common::engine() else { return };
+    let set =
+        JobSet::load(&spec("jobs-train-smoke.json")).expect("committed train spec parses");
+    let capacity = set.capacity_mib.expect("train-smoke spec pins capacity") * MIB;
+    let cfg = ChaosCfg { deadline_ms: 200, steps: vec![0, 3], seed: 7 };
+    let report = chaos::run_sweep(&mut engine, &set, capacity, &cfg).expect("sweep runs");
+
+    let totals = report.totals();
+    assert_eq!(totals.hung, 0, "a hung point means the watchdog failed to convert a stall");
+    assert_eq!(totals.diverged, 0, "a diverged point breaks the recovery identity oracle");
+    assert!(report.fired_points() > 0, "a smoke sweep that fires nothing proves nothing");
+    assert!(totals.recovered > 0, "step/arena/stall points must recover");
+    assert!(report.recovered_fraction() > 0.0);
+
+    // attempt 0 exists on every axis, so every at=0 point must fire —
+    // stalls included, which is the hang-to-fault conversion itself
+    for p in &report.points {
+        if p.point.at == 0 {
+            assert_ne!(
+                p.verdict,
+                Verdict::Clean,
+                "({}, {}, 0) never fired",
+                p.point.job,
+                p.point.injection.name()
+            );
+        }
+    }
+}

@@ -188,7 +188,7 @@ fn lane_early_abort_returns_every_pool_lease() {
         )
         .enumerate()
         {
-            lane.submit(LaneJob { seq, mb: item.mb, scale: Some(1.0), fault: None })
+            lane.submit(LaneJob { seq, mb: item.mb, scale: Some(1.0), fault: None, stall: None })
                 .expect("submit");
             seq += 1;
             if i == 2 {

@@ -408,3 +408,127 @@ fn checkpoint_every_writes_periodic_checkpoints() {
     std::fs::remove_file(stem.with_extension("bin")).ok();
     std::fs::remove_file(stem.with_extension("json")).ok();
 }
+
+#[test]
+fn corrupt_and_truncated_resume_checkpoints_are_structured_errors() {
+    // a damaged --resume checkpoint must surface as a structured MbsError
+    // from the validated reader (runtime/checkpoint.rs), never a panic or
+    // a silent resume from garbage state
+    let Some(mut engine) = common::engine() else { return };
+    let stem = std::env::temp_dir().join(format!("mbs-corrupt-resume-{}", std::process::id()));
+    let stem_s = stem.to_string_lossy().into_owned();
+
+    let mut first = solo_cfg(false);
+    first.epochs = 1;
+    first.checkpoint = Some(stem_s.clone());
+    mbs::train(&mut engine, &first).expect("checkpointed run");
+    let bin = stem.with_extension("bin");
+    let meta = stem.with_extension("json");
+    let good_bin = std::fs::read(&bin).expect("payload written");
+    let good_meta = std::fs::read(&meta).expect("metadata written");
+
+    let mut resume_cfg = solo_cfg(false);
+    resume_cfg.resume = Some(stem_s.clone());
+
+    // truncated payload: the length/checksum validation must reject it
+    std::fs::write(&bin, &good_bin[..good_bin.len() / 2]).unwrap();
+    let err = mbs::train(&mut engine, &resume_cfg)
+        .expect_err("truncated checkpoint payload must fail the resume");
+    assert!(!err.to_string().is_empty());
+    assert!(!err.recoverable(), "a damaged checkpoint is not a transient fault: {err:?}");
+
+    // corrupt payload bytes at full length: the checksum must catch it
+    let mut flipped = good_bin.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0xff;
+    std::fs::write(&bin, &flipped).unwrap();
+    let err = mbs::train(&mut engine, &resume_cfg)
+        .expect_err("bit-flipped checkpoint payload must fail the resume");
+    assert!(!err.to_string().is_empty());
+
+    // garbage metadata: the json side of the pair is validated too
+    std::fs::write(&bin, &good_bin).unwrap();
+    std::fs::write(&meta, b"{ this is not a checkpoint").unwrap();
+    let err = mbs::train(&mut engine, &resume_cfg)
+        .expect_err("garbage checkpoint metadata must fail the resume");
+    assert!(!err.to_string().is_empty());
+
+    // restore the pair: the resume works again, proving the failures above
+    // were the corruption and nothing else
+    std::fs::write(&meta, &good_meta).unwrap();
+    mbs::train(&mut engine, &resume_cfg).expect("intact checkpoint resumes");
+    std::fs::remove_file(&bin).ok();
+    std::fs::remove_file(&meta).ok();
+}
+
+#[test]
+fn stall_conversion_recovery_is_bit_identical() {
+    // the watchdog contract end to end: an injected wall-clock stall that
+    // outruns its deadline is converted into a recoverable Deadline fault,
+    // and the recovery replay lands bit-identical to the clean run — on
+    // both hang surfaces (upload-lane recv for async jobs, the executor
+    // step for serial jobs)
+    let Some(mut engine) = common::engine() else { return };
+    for (tag, overlap) in [("stall-lane", true), ("stall-step", false)] {
+        let clean = mbs::train(&mut engine, &solo_cfg(overlap)).expect("fault-free run");
+        let spec = fault_spec(
+            tag,
+            r#"{"seed": 7, "max_retries": 3,
+                "watchdog": {"lane-recv-ms": 150, "step-ms": 150,
+                             "compile-ms": 5000, "checkpoint-ms": 5000},
+                "faults": [{"job": "*", "kind": "stall", "at-step": 2, "stall-ms": 450}]}"#,
+        );
+        let mut cfg = solo_cfg(overlap);
+        cfg.faults = Some(spec.to_string_lossy().into_owned());
+        let faulted =
+            mbs::train(&mut engine, &cfg).expect("stalled run must convert and recover");
+        assert_reports_identical(&clean, &faulted, tag);
+        std::fs::remove_file(&spec).ok();
+    }
+}
+
+#[test]
+fn checkpoint_fault_recovery_is_bit_identical() {
+    // the torn-write shape: the checkpoint fault fires AFTER the atomic
+    // snapshot save, so the on-disk snapshot is valid and current and the
+    // recovery it triggers replays the phase bit-identically
+    let Some(mut engine) = common::engine() else { return };
+    let clean = mbs::train(&mut engine, &solo_cfg(false)).expect("fault-free run");
+    let spec = fault_spec(
+        "ckpt-fault",
+        r#"{"seed": 7, "max_retries": 3,
+            "faults": [{"job": "*", "kind": "checkpoint", "at-step": 1}]}"#,
+    );
+    let mut cfg = solo_cfg(false);
+    cfg.faults = Some(spec.to_string_lossy().into_owned());
+    let faulted = mbs::train(&mut engine, &cfg).expect("checkpoint fault must recover");
+    assert_reports_identical(&clean, &faulted, "checkpoint-fault recovery");
+    std::fs::remove_file(&spec).ok();
+}
+
+#[test]
+fn compile_fault_at_materialize_evicts_job_while_sibling_completes() {
+    // the compile/artifact seam: a fault injected at the engine's variant
+    // resolve kills the job being materialized as a structured eviction;
+    // the sibling still trains to completion
+    let Some(mut engine) = common::engine() else { return };
+    let (set, capacity) = heterogeneous_set(&engine);
+
+    let plan = FaultPlan::parse(
+        r#"{"seed": 7, "max_retries": 3,
+            "faults": [{"job": "*", "kind": "compile", "at-step": 0}]}"#,
+    )
+    .unwrap();
+    let report = mbs::train_jobs_faulted(&mut engine, &set, capacity, Some(&plan))
+        .expect("the set run itself must not abort");
+    assert_eq!(engine.compile_faults_injected(), 1, "the resolve fault must have fired");
+
+    let cls = &report.jobs[0];
+    assert_eq!(cls.outcome, JobOutcome::Failed, "first materialize hits resolve attempt 0");
+    let err = cls.error.as_ref().expect("evicted jobs record their terminal error");
+    assert!(err.contains("injected"), "structured fault context lost: {err}");
+
+    let seg = &report.jobs[1];
+    assert_eq!(seg.outcome, JobOutcome::Completed, "survivor: {:?}", seg.error);
+    assert!(seg.report.as_ref().expect("survivor carries a report").updates > 0);
+}
