@@ -446,6 +446,173 @@ impl FrontierGrid {
     }
 }
 
+/// One row of the frontier's device-count axis: how far the largest
+/// feasible (and largest *native*) global batch moves when a uniform
+/// fleet of `devices` devices shares the load.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DevicePoint {
+    /// Per-device capacity, bytes (uniform across the fleet).
+    pub capacity_bytes: u64,
+    /// Number of data-parallel devices.
+    pub devices: usize,
+    /// Largest batch on the axis whose per-device share is feasible
+    /// (`None` when even the smallest batch OOMs every device).
+    pub max_feasible_batch: Option<usize>,
+    /// Largest batch on the axis whose per-device share trains natively —
+    /// the axis along which adding devices visibly buys batch size.
+    pub max_native_batch: Option<usize>,
+    /// Micro-batch size of the per-device share at
+    /// [`max_feasible_batch`](DevicePoint::max_feasible_batch).
+    pub mu: Option<usize>,
+}
+
+/// The frontier's device-count axis: for each `(per-device capacity,
+/// device count)` pair of a *uniform* fleet, the largest feasible global
+/// batch from a batch axis.
+///
+/// A global batch `B` on `D` devices is classified by its **per-device
+/// share** `ceil(B / D)` — the largest sample count any single device
+/// owns under the balanced contiguous sharding of
+/// [`ShardPlan`](crate::coordinator::splitter::ShardPlan) — against one
+/// device's capacity via [`classify`]. Per-device feasibility of the
+/// share is exactly fleet feasibility: every device holds its own full
+/// resident replica (data parallelism), and the shared split plan's
+/// micro-step must fit the busiest device. Because feasibility is
+/// monotone in batch (a tested [`FrontierGrid`] property) and the share
+/// is non-increasing in `D`, both frontier batches are **non-decreasing
+/// in device count** — the tested device-axis law.
+#[derive(Debug, Clone)]
+pub struct DeviceAxis {
+    /// Model key the axis was swept for.
+    pub model: String,
+    /// Image size / sequence length of the swept variants.
+    pub size: usize,
+    /// Eval-set occupancy priced into every classification.
+    pub eval_len: usize,
+    /// Was the overlapped pipeline's staged input slot priced in?
+    pub overlap: bool,
+    /// Per-device capacity axis, bytes.
+    pub capacities_bytes: Vec<u64>,
+    /// Device-count axis.
+    pub device_counts: Vec<usize>,
+    /// Global batch axis the maxima were searched over.
+    pub batches: Vec<usize>,
+    /// Points in row-major order: for each capacity, every device count.
+    pub points: Vec<DevicePoint>,
+}
+
+impl DeviceAxis {
+    /// Sweep the device-count axis (see the type docs for the
+    /// classification rule).
+    pub fn sweep(
+        entry: &ModelEntry,
+        size: usize,
+        eval_len: usize,
+        capacities_bytes: &[u64],
+        device_counts: &[usize],
+        batches: &[usize],
+        overlap: bool,
+    ) -> Result<DeviceAxis> {
+        if capacities_bytes.is_empty() || device_counts.is_empty() || batches.is_empty() {
+            return Err(MbsError::Config(
+                "device axis needs ≥1 capacity, ≥1 device count and ≥1 batch".into(),
+            ));
+        }
+        if device_counts.contains(&0) || batches.contains(&0) {
+            return Err(MbsError::Config(
+                "device axis device counts and batches must be positive".into(),
+            ));
+        }
+        let mut points = Vec::with_capacity(capacities_bytes.len() * device_counts.len());
+        for &capacity in capacities_bytes {
+            let ledger = Ledger::new(capacity);
+            for &devices in device_counts {
+                let mut point = DevicePoint {
+                    capacity_bytes: capacity,
+                    devices,
+                    max_feasible_batch: None,
+                    max_native_batch: None,
+                    mu: None,
+                };
+                for &batch in batches {
+                    let share = batch.div_ceil(devices);
+                    let class = classify(entry, size, share, eval_len, &ledger, overlap)?;
+                    if class.is_feasible()
+                        && point.max_feasible_batch.map_or(true, |b| batch > b)
+                    {
+                        point.max_feasible_batch = Some(batch);
+                        point.mu = class.mu();
+                    }
+                    if matches!(class, Feasibility::Native { .. })
+                        && point.max_native_batch.map_or(true, |b| batch > b)
+                    {
+                        point.max_native_batch = Some(batch);
+                    }
+                }
+                points.push(point);
+            }
+        }
+        Ok(DeviceAxis {
+            model: entry.name.clone(),
+            size,
+            eval_len,
+            overlap,
+            capacities_bytes: capacities_bytes.to_vec(),
+            device_counts: device_counts.to_vec(),
+            batches: batches.to_vec(),
+            points,
+        })
+    }
+
+    /// Render the axis as an aligned terminal table: one row per
+    /// `(capacity, devices)` pair.
+    pub fn render_table(&self) -> Table {
+        let mut table =
+            Table::new(&["capacity (MiB)", "devices", "max feasible N_B", "max native N_B", "mu"]);
+        for p in &self.points {
+            let cell = |v: Option<usize>| {
+                v.map(|b| b.to_string()).unwrap_or_else(|| "-".to_string())
+            };
+            table.row(&[
+                format!("{:.1}", p.capacity_bytes as f64 / MIB as f64),
+                p.devices.to_string(),
+                cell(p.max_feasible_batch),
+                cell(p.max_native_batch),
+                cell(p.mu),
+            ]);
+        }
+        table
+    }
+
+    /// The axis as a JSON array for the `device_axis` field of
+    /// `BENCH_frontier.json` (schema in `rust/docs/ARCHITECTURE.md`).
+    pub fn to_json_value(&self) -> JsonValue {
+        JsonValue::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let mut v = JsonValue::obj();
+                    v.push(
+                        "capacity_mib",
+                        JsonValue::fixed(p.capacity_bytes as f64 / MIB as f64, 3),
+                    );
+                    v.push("devices", JsonValue::UInt(p.devices as u64));
+                    if let Some(b) = p.max_feasible_batch {
+                        v.push("max_feasible_batch", JsonValue::UInt(b as u64));
+                    }
+                    if let Some(b) = p.max_native_batch {
+                        v.push("max_native_batch", JsonValue::UInt(b as u64));
+                    }
+                    if let Some(mu) = p.mu {
+                        v.push("mu", JsonValue::UInt(mu as u64));
+                    }
+                    v
+                })
+                .collect(),
+        )
+    }
+}
+
 /// A task-shaped stand-in [`ModelEntry`] for artifact-free (`--dry-run`)
 /// sweeps: one exported variant per power-of-two `mu` up to 64, with
 /// footprints sized so single-digit-MiB capacities produce all three
@@ -817,6 +984,47 @@ mod tests {
         assert!(FrontierGrid::sweep(&entry, 16, 0, &[], &[8], false).is_err());
         assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[], false).is_err());
         assert!(FrontierGrid::sweep(&entry, 16, 0, &[MIB], &[0], false).is_err());
+        assert!(DeviceAxis::sweep(&entry, 16, 0, &[MIB], &[], &[8], false).is_err());
+        assert!(DeviceAxis::sweep(&entry, 16, 0, &[MIB], &[0], &[8], false).is_err());
+        assert!(DeviceAxis::sweep(&entry, 16, 0, &[MIB], &[1], &[], false).is_err());
+    }
+
+    #[test]
+    fn device_axis_grows_the_native_frontier() {
+        // synthetic classification at 8 MiB: one device trains N_B <= 64
+        // natively (the largest exported variant); two devices halve the
+        // per-device share, so 128 goes native; four devices push 256
+        let entry = synthetic_entry("classification").unwrap();
+        let batches = [8usize, 64, 128, 256];
+        let axis =
+            DeviceAxis::sweep(&entry, 16, 0, &[8 * MIB], &[1, 2, 4], &batches, false).unwrap();
+        assert_eq!(axis.points.len(), 3);
+        let native: Vec<Option<usize>> =
+            axis.points.iter().map(|p| p.max_native_batch).collect();
+        assert_eq!(native, vec![Some(64), Some(128), Some(256)]);
+        // MBS keeps every axis batch feasible at this capacity regardless
+        // of fleet size — the paper's point, restated per device
+        assert!(axis.points.iter().all(|p| p.max_feasible_batch == Some(256)));
+        // a capacity equal to the resident state OOMs at every count:
+        // data parallelism replicates the resident state, it cannot shrink it
+        let starved =
+            DeviceAxis::sweep(&entry, 16, 0, &[MIB], &[1, 2, 4], &batches, false).unwrap();
+        assert!(starved.points.iter().all(|p| p.max_feasible_batch.is_none()));
+        // rendering + JSON shape
+        let rendered = axis.render_table().render();
+        assert_eq!(rendered.lines().count(), 2 + 3);
+        let mut rep = BenchReport::new("frontier", "dry-run");
+        rep.field("device_axis", axis.to_json_value());
+        let parsed = crate::util::json::Json::parse(&rep.to_json()).unwrap();
+        let rows = parsed
+            .get("device_axis")
+            .and_then(crate::util::json::Json::as_arr)
+            .expect("device_axis array");
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows[1].get("max_native_batch").and_then(crate::util::json::Json::as_u64),
+            Some(128)
+        );
     }
 
     #[test]
@@ -892,6 +1100,59 @@ mod tests {
                         ensure(
                             feasible_in(entry, *batch, *capacity, *eval_len, false),
                             format!("batch {batch} fits WITH overlap but not without"),
+                        )?;
+                    }
+                    Ok(())
+                },
+            );
+        }
+
+        #[test]
+        fn device_axis_is_monotone_in_device_count() {
+            // satellite property: for a uniform fleet, the largest feasible
+            // (and largest native) global batch never shrinks when devices
+            // are added — the share each device carries only gets lighter
+            forall(
+                "device axis monotone",
+                150,
+                0xF07,
+                |r| {
+                    let entry = rand_entry(r);
+                    let capacity = r.below(1 << 22);
+                    let batches: Vec<usize> =
+                        (0..4).map(|_| (r.below(512) + 1) as usize).collect();
+                    let counts: Vec<usize> = (1..=4).collect();
+                    let eval_len = r.below(64) as usize;
+                    let overlap = r.below(2) == 1;
+                    (entry, capacity, counts, batches, eval_len, overlap)
+                },
+                |(entry, capacity, counts, batches, eval_len, overlap)| {
+                    let axis = DeviceAxis::sweep(
+                        entry, 16, *eval_len, &[*capacity], counts, batches, *overlap,
+                    )
+                    .map_err(|e| e.to_string())?;
+                    for w in axis.points.windows(2) {
+                        ensure(
+                            w[1].max_feasible_batch.unwrap_or(0)
+                                >= w[0].max_feasible_batch.unwrap_or(0),
+                            format!(
+                                "feasible frontier shrank from {:?} ({} devices) to {:?} ({})",
+                                w[0].max_feasible_batch,
+                                w[0].devices,
+                                w[1].max_feasible_batch,
+                                w[1].devices
+                            ),
+                        )?;
+                        ensure(
+                            w[1].max_native_batch.unwrap_or(0)
+                                >= w[0].max_native_batch.unwrap_or(0),
+                            format!(
+                                "native frontier shrank from {:?} ({} devices) to {:?} ({})",
+                                w[0].max_native_batch,
+                                w[0].devices,
+                                w[1].max_native_batch,
+                                w[1].devices
+                            ),
                         )?;
                     }
                     Ok(())

@@ -9,11 +9,17 @@
 //! * [`accumulator`] — loss-normalization policy (section 3.4, eq. 14-17)
 //! * [`scheduler`] — update points + LR schedules (section 3.3 step 5)
 //! * [`trainer`] — the single plan-driven epoch executor (MBS, the native
-//!   "w/o MBS" baseline and eval are all parameterizations of it), plus
-//!   the round-robin interleaved multi-job executor ([`train_jobs`])
+//!   "w/o MBS" baseline and eval are all parameterizations of it), the
+//!   round-robin interleaved multi-job executor ([`train_jobs`]), and the
+//!   data-parallel fleet executor ([`train_fleet`]: per-device arenas and
+//!   upload lanes, global-order execution — bit-identical to solo)
 //! * [`tenancy`] — multi-tenant admission planning: `jobs.json` specs and
 //!   the deterministic admit / shrink-mu / reject planner over the shared
 //!   [`Arena`](crate::memory::Arena)
+//! * [`placement`] — fleet placement planning: admission generalized to
+//!   *assignment* of a job set across a [`FleetSpec`](crate::memory::FleetSpec)
+//!   of heterogeneous devices (deterministic first-fit-decreasing with
+//!   shrink-mu fallback, tenancy as the per-device feasibility oracle)
 //! * [`frontier`] — capacity × batch feasibility sweeps: the planner made
 //!   grid-callable, classifying every point as Native / MBS(mu) / OOM
 //!   (the paper's headline figure as an instrument), plus the
@@ -27,6 +33,7 @@
 pub mod accumulator;
 pub mod chaos;
 pub mod frontier;
+pub mod placement;
 pub mod planner;
 pub mod scheduler;
 pub mod splitter;
@@ -39,17 +46,21 @@ pub use chaos::{
     run_sweep, ChaosCfg, ChaosReport, Injection, InjectionPoint, PointResult, SurfaceCounts,
     Verdict,
 };
-pub use frontier::{classify, classify_set, Feasibility, FrontierGrid, GridPoint, SetFeasibility};
+pub use frontier::{
+    classify, classify_set, DeviceAxis, DevicePoint, Feasibility, FrontierGrid, GridPoint,
+    SetFeasibility,
+};
+pub use placement::{plan_placement, JobPlacement, PlacementPlan};
 pub use planner::{
     auto_mu, auto_mu_transient, default_capacity, ExecutionPlan, Planner, Resolution,
 };
 pub use scheduler::UpdateScheduler;
-pub use splitter::{MicroRange, SplitPlan};
+pub use splitter::{MicroRange, ShardPlan, SplitPlan};
 pub use streamer::{stream_epoch, EpochStream, StreamingPolicy};
 pub use tenancy::{
     plan_admission, AdmissionOutcome, AdmissionRequest, JobAdmission, JobSet, JobSpec,
 };
 pub use trainer::{
-    datasets_for, evaluate, evaluate_pooled, evaluate_with, train, train_jobs,
-    train_jobs_faulted, JobOutcome, JobRun, JobsReport, TrainReport,
+    datasets_for, evaluate, evaluate_pooled, evaluate_with, train, train_fleet, train_jobs,
+    train_jobs_faulted, DeviceReport, FleetReport, JobOutcome, JobRun, JobsReport, TrainReport,
 };

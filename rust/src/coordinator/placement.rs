@@ -1,0 +1,347 @@
+//! Placement planner: admission becomes *assignment* across a device
+//! fleet.
+//!
+//! Single-device tenancy answers "which jobs fit this capacity, and at
+//! what `mu`?" ([`tenancy::plan_admission`]). With a
+//! [`FleetSpec`](crate::memory::FleetSpec) of heterogeneous devices the
+//! question becomes "which device should host each job?" — a bin-packing
+//! search. This module keeps the search deterministic and reuses the
+//! tenancy planner as its feasibility oracle, so every per-device verdict
+//! carries exactly the admit / shrink-mu / reject contract (and the
+//! properties) single-device admission has:
+//!
+//!  1. **First-fit-decreasing**: jobs are considered in decreasing
+//!     resident-claim order (ties broken by spec order — the sort is
+//!     stable), because placing the fattest resident states first is the
+//!     classic FFD bound on packing waste.
+//!  2. **Devices in spec order**: each job goes to the first device whose
+//!     *whole* tentative set — already-assigned jobs plus the candidate —
+//!     is fully admitted by [`tenancy::plan_admission`] against that
+//!     device's capacity. Shrink-mu fallback comes for free: the planner
+//!     may admit the set by shrinking micro-batches, never by evicting.
+//!  3. **Rejections free their claim**: a job no device can host is
+//!     rejected (with the most-capable device's reason) and occupies
+//!     nothing anywhere — later jobs plan against clean budgets, exactly
+//!     like the single-device planner's phase-2 contract.
+//!
+//! The final per-job outcome is re-derived from one last
+//! [`tenancy::plan_admission`] pass over each device's *final* roster, so
+//! reported `mu`s reflect the finished packing, not the tentative probes.
+
+use crate::memory::FleetSpec;
+
+use super::tenancy::{self, AdmissionOutcome, AdmissionRequest};
+
+/// One job's placement verdict: the device it was assigned to (if any)
+/// plus the tenancy outcome it got there.
+#[derive(Debug, Clone)]
+pub struct JobPlacement {
+    /// The job this verdict is for.
+    pub name: String,
+    /// Assigned device name; `None` when no device can host the job.
+    pub device: Option<String>,
+    /// The tenancy verdict on the assigned device (or the most-capable
+    /// device's rejection when unplaced).
+    pub outcome: AdmissionOutcome,
+}
+
+impl JobPlacement {
+    /// Table cell label: `admit` / `shrink-mu` / `reject`.
+    pub fn label(&self) -> &'static str {
+        self.outcome.label()
+    }
+}
+
+/// A deterministic packing of a job set onto a fleet.
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    /// Per-job verdicts, in request (spec) order.
+    pub placements: Vec<JobPlacement>,
+    /// Request indices assigned to each device rank, in assignment order
+    /// (the order their admission outcomes were planned in).
+    pub rosters: Vec<Vec<usize>>,
+}
+
+impl PlacementPlan {
+    /// Number of jobs that found a device.
+    pub fn placed(&self) -> usize {
+        self.placements.iter().filter(|p| p.device.is_some()).count()
+    }
+
+    /// Number of jobs no device could host.
+    pub fn rejected(&self) -> usize {
+        self.placements.len() - self.placed()
+    }
+
+    /// The device a named job landed on, if any.
+    pub fn device_of(&self, name: &str) -> Option<&str> {
+        self.placements
+            .iter()
+            .find(|p| p.name == name)
+            .and_then(|p| p.device.as_deref())
+    }
+}
+
+/// Pack `reqs` onto `fleet` (see the module docs for the search rules).
+/// Pure function of `(reqs, fleet)` — same inputs, same plan, always.
+pub fn plan_placement(reqs: &[AdmissionRequest], fleet: &FleetSpec) -> PlacementPlan {
+    // FFD order: decreasing resident claim, stable so ties keep spec order.
+    // A claim that cannot even be priced sorts last (it will be rejected by
+    // the per-device planner with a structured reason).
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    let claim = |i: usize| {
+        tenancy::resident_claim(&reqs[i].entry, reqs[i].size).unwrap_or(0)
+    };
+    order.sort_by_key(|&i| std::cmp::Reverse(claim(i)));
+
+    let mut rosters: Vec<Vec<usize>> = vec![Vec::new(); fleet.len()];
+    // rejection verdicts captured during the search, by request index
+    let mut rejected: Vec<Option<AdmissionOutcome>> = vec![None; reqs.len()];
+
+    for &i in &order {
+        let mut placed = false;
+        // the most-capable device's verdict makes the best rejection reason
+        let mut best_reason: Option<(u64, AdmissionOutcome)> = None;
+        for (d, dev) in fleet.devices.iter().enumerate() {
+            let mut tentative: Vec<AdmissionRequest> =
+                rosters[d].iter().map(|&j| reqs[j].clone()).collect();
+            tentative.push(reqs[i].clone());
+            let verdicts = tenancy::plan_admission(&tentative, dev.capacity_bytes);
+            if verdicts.iter().all(|v| v.outcome.is_admitted()) {
+                rosters[d].push(i);
+                placed = true;
+                break;
+            }
+            // keep this job's own verdict from the fattest device probed
+            let own = verdicts.last().expect("one verdict per request").outcome.clone();
+            let own = match own {
+                AdmissionOutcome::Admitted { .. } => AdmissionOutcome::Rejected {
+                    reason: format!(
+                        "device '{}' admits the job alone but not alongside its roster",
+                        dev.name
+                    ),
+                },
+                r @ AdmissionOutcome::Rejected { .. } => r,
+            };
+            let more_capable = match &best_reason {
+                Some((cap, _)) => dev.capacity_bytes > *cap,
+                None => true,
+            };
+            if more_capable {
+                best_reason = Some((dev.capacity_bytes, own));
+            }
+        }
+        if !placed {
+            rejected[i] = Some(best_reason.map(|(_, o)| o).unwrap_or(
+                AdmissionOutcome::Rejected { reason: "fleet has no devices".into() },
+            ));
+        }
+    }
+
+    // final verdicts: one clean admission pass per device over its final
+    // roster — tentative probes may have seen smaller sets, and a later
+    // roommate can legally shrink an earlier job's mu
+    let mut placements: Vec<Option<JobPlacement>> = (0..reqs.len()).map(|_| None).collect();
+    for (d, roster) in rosters.iter().enumerate() {
+        if roster.is_empty() {
+            continue;
+        }
+        let dev = &fleet.devices[d];
+        let set: Vec<AdmissionRequest> = roster.iter().map(|&j| reqs[j].clone()).collect();
+        let verdicts = tenancy::plan_admission(&set, dev.capacity_bytes);
+        for (&j, v) in roster.iter().zip(verdicts) {
+            debug_assert!(
+                v.outcome.is_admitted(),
+                "final roster of '{}' must re-admit '{}'",
+                dev.name,
+                v.name
+            );
+            placements[j] = Some(JobPlacement {
+                name: reqs[j].name.clone(),
+                device: Some(dev.name.clone()),
+                outcome: v.outcome,
+            });
+        }
+    }
+    for (i, slot) in placements.iter_mut().enumerate() {
+        if slot.is_none() {
+            slot.replace(JobPlacement {
+                name: reqs[i].name.clone(),
+                device: None,
+                outcome: rejected[i].take().unwrap_or(AdmissionOutcome::Rejected {
+                    reason: "internal: unplaced job without a rejection verdict".into(),
+                }),
+            });
+        }
+    }
+    PlacementPlan {
+        placements: placements.into_iter().map(|p| p.expect("filled above")).collect(),
+        rosters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MicroBatchSpec;
+    use crate::coordinator::frontier::synthetic_entry;
+    use crate::memory::MIB;
+
+    fn req(name: &str, task: &str, batch: usize) -> AdmissionRequest {
+        let entry = synthetic_entry(task).unwrap();
+        AdmissionRequest {
+            name: name.into(),
+            size: entry.default_size,
+            entry,
+            batch,
+            eval_len: 0,
+            mu: MicroBatchSpec::Auto,
+            overlap: true,
+        }
+    }
+
+    fn fingerprint(plan: &PlacementPlan) -> Vec<(String, Option<String>, &'static str, Option<usize>)> {
+        plan.placements
+            .iter()
+            .map(|p| (p.name.clone(), p.device.clone(), p.label(), p.outcome.mu()))
+            .collect()
+    }
+
+    #[test]
+    fn spreads_jobs_across_devices_in_spec_order() {
+        // two 2 MiB synthetic classification jobs cannot co-reside on
+        // 2 MiB (resident is 1 MiB each, leaving no transient budget for
+        // two), so the second lands on the second device
+        let reqs = vec![req("a", "classification", 32), req("b", "classification", 32)];
+        let fleet = FleetSpec::parse("2,2").unwrap();
+        let plan = plan_placement(&reqs, &fleet);
+        assert_eq!(plan.placed(), 2);
+        assert_eq!(plan.device_of("a"), Some("dev0"));
+        assert_eq!(plan.device_of("b"), Some("dev1"));
+        assert!(plan.placements.iter().all(|p| p.outcome.is_admitted()));
+    }
+
+    #[test]
+    fn rejection_frees_the_claim_for_later_jobs() {
+        // the lm job (1.75 MiB resident) fits nowhere on a 2 MiB fleet
+        // with a roommate, but its rejection must not poison the
+        // classification job's budget
+        let reqs = vec![req("lm", "lm", 64), req("cls", "classification", 32)];
+        let fleet = FleetSpec::parse("2").unwrap();
+        let plan = plan_placement(&reqs, &fleet);
+        // FFD places lm (fatter resident) first and alone on dev0; cls is
+        // then rejected — OR lm is rejected and cls placed, depending on
+        // which fits; assert the invariant rather than the winner:
+        assert_eq!(plan.placed() + plan.rejected(), 2);
+        assert!(plan.placed() >= 1, "one of the two must fit a 2 MiB device");
+        for p in &plan.placements {
+            if p.device.is_none() {
+                let AdmissionOutcome::Rejected { reason } = &p.outcome else {
+                    panic!("unplaced job must carry a rejection")
+                };
+                assert!(!reason.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let reqs = vec![
+            req("a", "classification", 64),
+            req("b", "segmentation", 32),
+            req("c", "lm", 16),
+            req("d", "classification", 16),
+        ];
+        let fleet = FleetSpec::parse("big=4,small=2,small2=2").unwrap();
+        let first = fingerprint(&plan_placement(&reqs, &fleet));
+        for _ in 0..3 {
+            assert_eq!(first, fingerprint(&plan_placement(&reqs, &fleet)));
+        }
+    }
+
+    #[test]
+    fn placed_jobs_are_solo_feasible_on_their_device() {
+        let reqs = vec![
+            req("a", "classification", 64),
+            req("b", "segmentation", 32),
+            req("c", "lm", 16),
+        ];
+        let fleet = FleetSpec::parse("4,2").unwrap();
+        let plan = plan_placement(&reqs, &fleet);
+        for p in plan.placements.iter().filter(|p| p.device.is_some()) {
+            let dev = fleet
+                .devices
+                .iter()
+                .find(|d| Some(d.name.as_str()) == p.device.as_deref())
+                .unwrap();
+            let i = reqs.iter().position(|r| r.name == p.name).unwrap();
+            let solo = tenancy::plan_admission(&reqs[i..=i], dev.capacity_bytes);
+            assert!(
+                solo[0].outcome.is_admitted(),
+                "'{}' placed on '{}' but not solo-feasible there",
+                p.name,
+                dev.name
+            );
+        }
+    }
+
+    #[test]
+    fn per_device_durable_plus_transient_fits_capacity() {
+        // reservations + staged slots + any single job's beyond-staged
+        // transient must fit each device — the fleet restatement of the
+        // single-arena safety property
+        let reqs = vec![
+            req("a", "classification", 64),
+            req("b", "classification", 32),
+            req("c", "segmentation", 32),
+            req("d", "lm", 16),
+        ];
+        let fleet = FleetSpec::parse("4,4,2").unwrap();
+        let plan = plan_placement(&reqs, &fleet);
+        for (d, roster) in plan.rosters.iter().enumerate() {
+            let capacity = fleet.devices[d].capacity_bytes;
+            let outcomes: Vec<&AdmissionOutcome> = roster
+                .iter()
+                .map(|&j| &plan.placements[j].outcome)
+                .collect();
+            let durable: u64 = outcomes
+                .iter()
+                .map(|o| match o {
+                    AdmissionOutcome::Admitted {
+                        resident_claim_bytes, staged_bytes, ..
+                    } => resident_claim_bytes + staged_bytes,
+                    AdmissionOutcome::Rejected { .. } => panic!("roster holds a reject"),
+                })
+                .sum();
+            assert!(durable <= capacity, "durable {durable} > capacity {capacity} (MiB {})", capacity / MIB);
+            for (&j, o) in roster.iter().zip(&outcomes) {
+                let AdmissionOutcome::Admitted { resolution, staged_bytes, .. } = o else {
+                    unreachable!()
+                };
+                let r = &reqs[j];
+                let transient = tenancy::transient_bytes(
+                    &resolution.footprint,
+                    resolution.mu,
+                    r.batch,
+                    r.eval_len,
+                    r.overlap,
+                )
+                .saturating_sub(*staged_bytes);
+                assert!(
+                    durable + transient <= capacity,
+                    "device {d}: durable {durable} + transient {transient} of '{}' > {capacity}",
+                    r.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_well_formed() {
+        let fleet = FleetSpec::parse("2").unwrap();
+        let plan = plan_placement(&[], &fleet);
+        assert_eq!(plan.placed(), 0);
+        assert_eq!(plan.rejected(), 0);
+        assert_eq!(plan.rosters, vec![Vec::<usize>::new()]);
+    }
+}

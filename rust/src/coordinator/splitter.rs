@@ -64,6 +64,62 @@ impl SplitPlan {
     }
 }
 
+/// Assignment of one mini-batch's micro-batches to data-parallel devices.
+///
+/// Device `d` owns a *contiguous block* of micro-batch indices, blocks are
+/// balanced to within one micro-batch, and block order follows device rank
+/// order. Contiguity in global `j` order is what lets the fleet executor
+/// replay the exact solo execution sequence (and therefore stay
+/// bit-identical to it): streaming the blocks in rank order IS the global
+/// order, so the cross-device gradient combine is an *ordered* fold with
+/// the same floating-point association as the single-device run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Number of devices shards were cut for.
+    pub devices: usize,
+    /// Owning device rank for each micro-batch index `j`.
+    pub owners: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Cut `n_smu` micro-batches into contiguous per-device blocks:
+    /// `q = n_smu / devices` each, with the first `n_smu % devices`
+    /// devices taking one extra. Devices beyond `n_smu` own empty blocks
+    /// (a 4-device fleet streaming a 2-micro-batch mini-batch leaves two
+    /// devices idle for that mini-batch).
+    pub fn new(n_smu: usize, devices: usize) -> ShardPlan {
+        assert!(devices > 0, "zero devices");
+        let q = n_smu / devices;
+        let r = n_smu % devices;
+        let mut owners = Vec::with_capacity(n_smu);
+        for d in 0..devices {
+            let len = q + usize::from(d < r);
+            owners.extend((0..len).map(|_| d));
+        }
+        ShardPlan { devices, owners }
+    }
+
+    /// Owning device rank of micro-batch `j`.
+    pub fn owner(&self, j: usize) -> usize {
+        self.owners[j]
+    }
+
+    /// Number of micro-batches device `d` owns.
+    pub fn count(&self, d: usize) -> usize {
+        self.owners.iter().filter(|&&o| o == d).count()
+    }
+
+    /// The contiguous `[lo, hi)` micro-batch block of device `d`
+    /// (`lo == hi` when the device is idle this mini-batch).
+    pub fn block(&self, d: usize) -> (usize, usize) {
+        let lo = self.owners.iter().position(|&o| o == d);
+        match lo {
+            Some(lo) => (lo, lo + self.count(d)),
+            None => (self.owners.len(), self.owners.len()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +187,48 @@ mod tests {
                 ensure(p.n_mu <= n_b, "mu > n_b after clamp")
             },
         );
+    }
+
+    #[test]
+    fn shard_blocks_are_contiguous_balanced_and_exhaustive() {
+        forall(
+            "shard plan",
+            400,
+            0xF1EE7,
+            |r| ((r.below(64) + 1) as usize, (r.below(8) + 1) as usize),
+            |&(n_smu, devices)| {
+                let s = ShardPlan::new(n_smu, devices);
+                ensure(s.owners.len() == n_smu, "owner per micro-batch")?;
+                // rank order + contiguity: owners are non-decreasing
+                ensure(s.owners.windows(2).all(|w| w[0] <= w[1]), "blocks out of rank order")?;
+                let counts: Vec<usize> = (0..devices).map(|d| s.count(d)).collect();
+                ensure(counts.iter().sum::<usize>() == n_smu, "blocks must partition")?;
+                let (min, max) =
+                    (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+                ensure(max - min <= 1, "imbalance > 1 micro-batch")?;
+                for d in 0..devices {
+                    let (lo, hi) = s.block(d);
+                    ensure(hi - lo == s.count(d), "block length != count")?;
+                    for j in lo..hi {
+                        ensure(s.owner(j) == d, "block indexes another device")?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shard_examples() {
+        let s = ShardPlan::new(5, 2);
+        assert_eq!(s.owners, vec![0, 0, 0, 1, 1]);
+        assert_eq!(s.block(0), (0, 3));
+        assert_eq!(s.block(1), (3, 5));
+        // more devices than micro-batches: tail devices idle
+        let s = ShardPlan::new(2, 4);
+        assert_eq!(s.owners, vec![0, 1]);
+        assert_eq!(s.count(3), 0);
+        assert_eq!(s.block(3), (2, 2));
     }
 
     #[test]

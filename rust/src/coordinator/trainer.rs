@@ -41,7 +41,7 @@
 //! arena and drives it to completion, so solo/interleaved bit-identity is
 //! structural (one state machine) rather than an oracle-checked accident.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -51,7 +51,7 @@ use crate::data::{BufPool, Dataset, EpochPlan, PoolStats, SynthCarvana, SynthFlo
 use crate::error::{MbsError, Result};
 use crate::manifest::ModelEntry;
 use crate::memory::ledger::AllocId;
-use crate::memory::{Arena, Footprint, Ledger, MemoryModel};
+use crate::memory::{Arena, FleetSpec, Footprint, Ledger, MemoryModel};
 use crate::metrics::{EpochStats, MetricKind, StageTimers};
 use crate::runtime::{
     Engine, FaultHooks, FaultKind, FaultPlan, LaneJob, ModelRuntime, StallSurface, Surface,
@@ -62,6 +62,7 @@ use crate::util::hash::{fnv1a64, fraction};
 use super::accumulator::{Accumulation, NormalizationMode};
 use super::planner::{self, ExecutionPlan, Planner, Resolution};
 use super::scheduler::UpdateScheduler;
+use super::splitter::ShardPlan;
 use super::streamer::{stream_epoch, EpochStream, StreamItem, StreamingPolicy};
 use super::tenancy::{self, AdmissionOutcome, AdmissionRequest, JobSet, JobSpec};
 
@@ -1739,6 +1740,445 @@ pub fn train_jobs_faulted(
         jobs,
         total_wall,
     })
+}
+
+// ---------------------------------------------------------------------
+// Data-parallel fleet execution (multi-device large-batch streaming)
+// ---------------------------------------------------------------------
+
+/// One device's share of a fleet run.
+#[derive(Debug, Clone)]
+pub struct DeviceReport {
+    /// Device name from the [`FleetSpec`].
+    pub name: String,
+    /// Device capacity, bytes.
+    pub capacity_bytes: u64,
+    /// Micro-batch steps this device executed.
+    pub micro_steps: u64,
+    /// Training + eval samples routed through this device.
+    pub samples: u64,
+    /// High-water mark of this device's residency (resident replica +
+    /// staged inputs + executing step), bytes — within the device's own
+    /// capacity by construction.
+    pub ledger_peak_bytes: u64,
+}
+
+/// Everything a finished fleet run reports (`mbs fleet`).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Per-device shares, in rank order.
+    pub devices: Vec<DeviceReport>,
+    /// The combined run report. Its numeric stats (losses, metrics,
+    /// samples, micro-steps, updates) are **bit-identical** to the same
+    /// configuration's solo [`train`] run at the fleet's min per-device
+    /// capacity — the fleet-identity oracle (`tests/fleet.rs`).
+    pub report: TrainReport,
+}
+
+impl FleetReport {
+    /// Number of devices the run spanned.
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+/// Per-device pipeline state of the fleet executor: the device's arena
+/// tenant (holding its resident replica for the whole run), its dedicated
+/// upload lane (overlap mode), and its share counters. The runtime,
+/// accumulator, scheduler and stream stay *global* — see [`train_fleet`].
+struct ShardExec {
+    name: String,
+    capacity_bytes: u64,
+    ledger: Ledger,
+    lane: Option<UploadLane>,
+    lane_seq: u64,
+    micro_steps: u64,
+    samples: u64,
+}
+
+/// Owning device of micro-batch `j` within a mini-batch of `n_smu`
+/// micro-batches, via the cached balanced-contiguous [`ShardPlan`] (the
+/// ragged final mini-batch of an epoch gets its own, smaller plan).
+fn shard_owner(plans: &mut BTreeMap<usize, ShardPlan>, devices: usize, n_smu: usize, j: usize) -> usize {
+    plans.entry(n_smu).or_insert_with(|| ShardPlan::new(n_smu, devices)).owner(j)
+}
+
+/// Hand one stream item to its owner device's upload lane (the fleet
+/// counterpart of [`submit_to_lane`]: same lane protocol, per-device
+/// lanes, a global FIFO remembering which device each plan went to).
+fn fleet_submit(
+    shards: &mut [ShardExec],
+    d: usize,
+    queue: &mut VecDeque<(Arc<ExecutionPlan>, usize)>,
+    pass: Pass<'_>,
+    item: StreamItem,
+) -> Result<()> {
+    let StreamItem { plan, mb, .. } = item;
+    let scale = match pass {
+        Pass::Train { .. } => Some(plan.scales[mb.j]),
+        Pass::Eval => None,
+    };
+    let shard = &mut shards[d];
+    let lane = shard.lane.as_mut().ok_or_else(lane_desync)?;
+    lane.submit(LaneJob { seq: shard.lane_seq, mb, scale, fault: None, stall: None })?;
+    shard.lane_seq += 1;
+    queue.push_back((plan, d));
+    Ok(())
+}
+
+/// Receive the oldest staging fleet-wide — from the lane of whichever
+/// device the global FIFO says submitted first — and place it into the
+/// shared runtime's idle slot, charging the *owner device's* ledger for
+/// the in-flight input residency. Device order inside the FIFO is global
+/// micro-batch order, so the runtime sees exactly the solo pipeline's
+/// op sequence.
+fn fleet_place_staged(
+    rt: &mut ModelRuntime,
+    shards: &mut [ShardExec],
+    fp: &Footprint,
+    pool: &Arc<BufPool>,
+    queue: &mut VecDeque<(Arc<ExecutionPlan>, usize)>,
+    deadline: Duration,
+) -> Result<(InFlight, usize)> {
+    let (plan, d) = queue.pop_front().ok_or_else(|| {
+        MbsError::Runtime("fleet pipeline completed a staging with no queued plan".into())
+    })?;
+    let shard = &mut shards[d];
+    let lane = shard.lane.as_mut().ok_or_else(lane_desync)?;
+    let staged = lane.recv_deadline(deadline)?;
+    rt.credit_lane_window(staged.started, staged.finished);
+    let inputs =
+        shard.ledger.alloc("in-flight inputs", fp.overlap_bytes(plan.device_samples()))?;
+    rt.stage_inputs(&staged.mb, staged.scale)?;
+    let current = InFlight { plan, j: staged.mb.j, actual: staged.mb.actual, inputs };
+    pool.give(staged.mb);
+    Ok((current, d))
+}
+
+/// The fleet epoch loop: the solo [`run_epoch`] with every per-step
+/// ledger charge routed to the micro-batch's **owner device** (balanced
+/// contiguous [`ShardPlan`] blocks) and, under overlap, per-device upload
+/// lanes. Execution stays in strict global micro-batch order through the
+/// ONE shared runtime, so the cross-device gradient combine is an
+/// *ordered* fold with the same floating-point association as the solo
+/// run — micro-grads stream into the runtime's accumulator in rank order
+/// (paper Alg. 2 scales from the global plan), and losses/metrics fold
+/// into one shared [`Accumulation`] in the same order. That is the whole
+/// bit-identity argument: identical op sequence, identical bits.
+#[allow(clippy::too_many_arguments)]
+fn fleet_epoch(
+    rt: &mut ModelRuntime,
+    shards: &mut [ShardExec],
+    fp: &Footprint,
+    pipe: &PipelineCfg,
+    pool: &Arc<BufPool>,
+    ds: &Arc<dyn Dataset>,
+    epoch_plan: EpochPlan,
+    planner: &Planner,
+    pass: Pass<'_>,
+) -> Result<(Accumulation, StageTimers)> {
+    let devices = shards.len();
+    let mut acc = Accumulation::default();
+    let mut assemble = Duration::ZERO;
+    let rt_before = rt.timers();
+    let stream = stream_epoch(
+        pipe.policy,
+        ds.clone(),
+        epoch_plan,
+        planner.clone(),
+        pipe.prefetch,
+        pool.clone(),
+    );
+    let mut plans: BTreeMap<usize, ShardPlan> = BTreeMap::new();
+    if pipe.overlap {
+        let lane_deadline = Watchdog::default().deadline(Surface::LaneRecv);
+        let mut queue: VecDeque<(Arc<ExecutionPlan>, usize)> = VecDeque::new();
+        let mut pending: Option<(InFlight, usize)> = None;
+        for item in stream {
+            assemble += item.assemble;
+            let placed = if queue.is_empty() {
+                None
+            } else {
+                Some(fleet_place_staged(rt, shards, fp, pool, &mut queue, lane_deadline)?)
+            };
+            let d = shard_owner(&mut plans, devices, item.plan.n_smu(), item.mb.j);
+            fleet_submit(shards, d, &mut queue, pass, item)?;
+            if let Some((current, owner)) = pending.take() {
+                let samples = current.actual as u64;
+                step_in_flight(rt, &mut shards[owner].ledger, fp, pass, &mut acc, current)?;
+                shards[owner].micro_steps += 1;
+                shards[owner].samples += samples;
+            }
+            if let Some(next) = placed {
+                pending = Some(next);
+            }
+        }
+        // drain: the lanes still hold the final submission, the device
+        // slot the one before it — same tail as the solo pipeline
+        while !queue.is_empty() {
+            let placed = fleet_place_staged(rt, shards, fp, pool, &mut queue, lane_deadline)?;
+            if let Some((current, owner)) = pending.take() {
+                let samples = current.actual as u64;
+                step_in_flight(rt, &mut shards[owner].ledger, fp, pass, &mut acc, current)?;
+                shards[owner].micro_steps += 1;
+                shards[owner].samples += samples;
+            }
+            pending = Some(placed);
+        }
+        if let Some((current, owner)) = pending.take() {
+            let samples = current.actual as u64;
+            step_in_flight(rt, &mut shards[owner].ledger, fp, pass, &mut acc, current)?;
+            shards[owner].micro_steps += 1;
+            shards[owner].samples += samples;
+        }
+    } else {
+        for item in stream {
+            assemble += item.assemble;
+            let d = shard_owner(&mut plans, devices, item.plan.n_smu(), item.mb.j);
+            let samples = item.mb.actual as u64;
+            exec_serial_item(rt, &mut shards[d].ledger, fp, pass, &mut acc, pool, item)?;
+            shards[d].micro_steps += 1;
+            shards[d].samples += samples;
+        }
+    }
+    let mut stages = rt.timers().minus(&rt_before);
+    stages.assemble = assemble;
+    Ok((acc, stages))
+}
+
+/// One fleet eval sweep — the fleet counterpart of the solo `eval_epoch`:
+/// the whole set as a single sequential mini-batch under exact
+/// normalization, its micro-batches sharded across the devices.
+#[allow(clippy::too_many_arguments)]
+fn fleet_eval_epoch(
+    rt: &mut ModelRuntime,
+    shards: &mut [ShardExec],
+    fp: &Footprint,
+    pipe: &PipelineCfg,
+    pool: &Arc<BufPool>,
+    kind: MetricKind,
+    ds: &Arc<dyn Dataset>,
+    epoch: usize,
+) -> Result<EpochStats> {
+    let t0 = Instant::now();
+    let len = ds.len();
+    let (acc, stages) = if len == 0 {
+        (Accumulation::default(), StageTimers::default())
+    } else {
+        let planner = Planner::new(rt.variant.mu, false, NormalizationMode::Exact);
+        fleet_epoch(
+            rt,
+            shards,
+            fp,
+            pipe,
+            pool,
+            ds,
+            EpochPlan::sequential(len, len),
+            &planner,
+            Pass::Eval,
+        )?
+    };
+    Ok(EpochStats::from_accumulation(epoch, kind, &acc, rt.updates, t0.elapsed(), stages))
+}
+
+/// Train one configuration data-parallel across a fleet of simulated
+/// devices, returning per-device shares plus a combined [`TrainReport`]
+/// **bit-identical** in its numeric stats to the solo [`train`] run of
+/// the same configuration at the fleet's min per-device capacity.
+///
+/// The design that makes the identity structural rather than accidental:
+///
+/// * **One global split plan.** `mu` is resolved against the *smallest*
+///   device with the *global* batch (exactly the solo planner at that
+///   capacity), so every device streams the same micro-batch size and
+///   the Alg. 2 scales come from the global plan.
+/// * **Per-device memory, global execution.** Every device holds its own
+///   full resident replica and is charged for exactly the steps it owns
+///   (balanced contiguous [`ShardPlan`] blocks — rank order IS global
+///   order), but the micro-batches flow through ONE shared runtime in
+///   strict global order. Floating-point addition is not associative;
+///   streaming per-device blocks in rank order is an ordered cross-device
+///   gradient combine with the solo run's exact association.
+/// * **Per-device pipelines.** Under overlap each device owns an upload
+///   lane and its staged-slot residency; the global FIFO interleaves
+///   their completions back into global order.
+///
+/// Device capacities come from the [`FleetSpec`] (`cfg.capacity_mib` is
+/// not consulted). Fault plans, checkpointing and resume are solo/jobs
+/// features and are rejected here.
+pub fn train_fleet(
+    engine: &mut Engine,
+    cfg: &TrainConfig,
+    spec: &FleetSpec,
+) -> Result<FleetReport> {
+    cfg.validate()?;
+    spec.validate()?;
+    if cfg.faults.is_some() || cfg.resume.is_some() || cfg.checkpoint.is_some() {
+        return Err(MbsError::Config(
+            "fleet runs do not support --faults / --resume / --checkpoint".into(),
+        ));
+    }
+    let entry = engine.manifest().model(&cfg.model)?.clone();
+    let size = cfg.size.unwrap_or(entry.default_size);
+    let kind = MetricKind::parse(&entry.metric_semantics)?;
+    // one global split plan must fit every device: resolve against the
+    // smallest capacity — the solo planner's arithmetic, unchanged
+    let min_cap = spec.min_capacity();
+    let resolution = planner::resolve(&entry, size, cfg, &Ledger::new(min_cap))?;
+    let fp = resolution.footprint.clone();
+
+    // per-device state: each device's arena tenant holds a full resident
+    // replica for the whole run (data parallelism replicates the model)
+    let fleet = spec.build();
+    let mut shards = Vec::with_capacity(spec.devices.len());
+    for (rank, dev) in spec.devices.iter().enumerate() {
+        let mut ledger = fleet.arena(rank).tenant(&cfg.model);
+        ledger.alloc("resident state", fp.resident_bytes())?;
+        shards.push(ShardExec {
+            name: dev.name.clone(),
+            capacity_bytes: dev.capacity_bytes,
+            ledger,
+            lane: None,
+            lane_seq: 0,
+            micro_steps: 0,
+            samples: 0,
+        });
+    }
+
+    let mut rt = engine.load_model(&cfg.model, size, resolution.mu)?;
+    rt.set_overlap(cfg.overlap);
+    rt.set_label(&cfg.model);
+    let (train_ds, eval_ds) = datasets_for(&entry.task, size, cfg)?;
+    let batches_per_epoch = cfg.dataset_len.div_ceil(cfg.batch);
+    let total_updates = (batches_per_epoch * cfg.epochs) as u64;
+    let sched = UpdateScheduler::new(&entry.optimizer, cfg, total_updates);
+    let n_smu_full = if cfg.use_mbs { cfg.batch.div_ceil(resolution.mu) } else { 1 };
+    let mut prefetch = cfg.prefetch;
+    let max_prefetch = if cfg.prefetch_auto {
+        cfg.prefetch.max(prefetch_cap(n_smu_full))
+    } else {
+        cfg.prefetch
+    };
+    // one shared host pool (staging buffers are host memory, not device
+    // memory), sized for the streamer plus every device's lane
+    let lane_extra = if cfg.overlap {
+        UploadLane::extra_buffers(LANE_DEPTH) * shards.len()
+    } else {
+        0
+    };
+    let retained = BufPool::buffers_for(max_prefetch) + lane_extra;
+    let pool = Arc::new(BufPool::bounded(retained));
+    pool.warm(retained, train_ds.as_ref(), resolution.mu);
+    if cfg.overlap {
+        for shard in &mut shards {
+            shard.lane = Some(UploadLane::spawn(pool.clone(), LANE_DEPTH, &shard.name)?);
+        }
+    }
+
+    let planner_train = Planner::new(resolution.mu, !cfg.use_mbs, cfg.norm_mode);
+    let run_start = Instant::now();
+    let mut train_epochs = Vec::with_capacity(cfg.epochs);
+    let mut eval_epochs = Vec::with_capacity(cfg.epochs);
+    let mut stage_totals = StageTimers::default();
+    for epoch in 0..cfg.epochs {
+        let pipe =
+            PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
+        let t0 = Instant::now();
+        let plan = EpochPlan::new(
+            train_ds.len().min(cfg.dataset_len),
+            cfg.batch,
+            cfg.seed,
+            epoch as u64,
+        );
+        let (acc, stages) = fleet_epoch(
+            &mut rt,
+            &mut shards,
+            &fp,
+            &pipe,
+            &pool,
+            &train_ds,
+            plan,
+            &planner_train,
+            Pass::Train { sched: &sched },
+        )?;
+        stage_totals.merge(&stages);
+        if cfg.prefetch_auto {
+            prefetch = tune_prefetch(
+                prefetch,
+                &stages,
+                acc.micro_steps as u64,
+                prefetch_cap(n_smu_full),
+            );
+        }
+        train_epochs.push(EpochStats::from_accumulation(
+            epoch,
+            kind,
+            &acc,
+            rt.updates,
+            t0.elapsed(),
+            stages,
+        ));
+        if !cfg.skip_eval {
+            let pipe =
+                PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
+            eval_epochs.push(fleet_eval_epoch(
+                &mut rt, &mut shards, &fp, &pipe, &pool, kind, &eval_ds, epoch,
+            )?);
+        }
+    }
+    // a skip-eval run still performs the one final sweep, like solo
+    let final_eval = match eval_epochs.last() {
+        Some(e) => e.clone(),
+        None => {
+            let pipe =
+                PipelineCfg { policy: cfg.streaming, prefetch, overlap: cfg.overlap };
+            fleet_eval_epoch(
+                &mut rt,
+                &mut shards,
+                &fp,
+                &pipe,
+                &pool,
+                kind,
+                &eval_ds,
+                cfg.epochs.saturating_sub(1),
+            )?
+        }
+    };
+
+    let epoch_walls: Vec<f64> =
+        train_epochs.iter().map(|e| e.wall.as_secs_f64()).collect();
+    let mem = MemoryModel::new(min_cap, fp.clone());
+    let devices = shards
+        .iter()
+        .map(|s| DeviceReport {
+            name: s.name.clone(),
+            capacity_bytes: s.capacity_bytes,
+            micro_steps: s.micro_steps,
+            samples: s.samples,
+            ledger_peak_bytes: s.ledger.peak(),
+        })
+        .collect();
+    let report = TrainReport {
+        model: cfg.model.clone(),
+        use_mbs: cfg.use_mbs,
+        batch: cfg.batch,
+        mu: resolution.mu,
+        train_epochs,
+        eval_epochs,
+        final_eval,
+        total_wall: run_start.elapsed(),
+        epoch_wall_mean: mean_epoch_wall(&epoch_walls),
+        native_max_batch: mem.native_max_batch(),
+        capacity_bytes: min_cap,
+        output_mode: rt.output_mode_name().to_string(),
+        updates: rt.updates,
+        stages: stage_totals,
+        pool: pool.stats(),
+        overlap: cfg.overlap,
+        prefetch,
+        ledger_peak_bytes: shards.iter().map(|s| s.ledger.peak()).max().unwrap_or(0),
+    };
+    Ok(FleetReport { devices, report })
 }
 
 #[cfg(test)]

@@ -4,6 +4,7 @@
 //!   train     train one configuration (MBS or native baseline), print report
 //!   sweep     batch-size sweep at fixed capacity (one table-4/5 row block)
 //!   frontier  capacity×batch feasibility grid -> table + BENCH_frontier.json
+//!   fleet     multi-device placement + data-parallel streaming -> BENCH_fleet.json
 //!   jobs      multi-tenant job set sharing one capacity -> table + BENCH_jobs.json
 //!   chaos     exhaustive fault-space sweep over a job set -> BENCH_chaos.json
 //!   bench     streaming hot-path benchmark -> machine-readable JSON
@@ -16,11 +17,13 @@ use std::time::{Duration, Instant};
 
 use mbs::coordinator::tenancy::{self, AdmissionOutcome, AdmissionRequest, JobAdmission};
 use mbs::coordinator::{
-    chaos, datasets_for, frontier, stream_epoch, train, train_jobs_faulted, JobOutcome,
-    JobsReport, NormalizationMode, Planner, StreamingPolicy,
+    chaos, datasets_for, frontier, plan_placement, stream_epoch, train, train_fleet,
+    train_jobs_faulted, DeviceReport, JobOutcome, JobsReport, NormalizationMode, Planner,
+    ShardPlan, SplitPlan, StreamingPolicy,
 };
 use mbs::data::{loader, BufPool, Dataset, EpochPlan};
-use mbs::memory::{Footprint, MIB};
+use mbs::memory::{Arena, FleetSpec, Footprint, MIB};
+use mbs::util::json::Json;
 use mbs::metrics::bench_report::{self, BenchReport, JsonValue};
 use mbs::metrics::Table;
 use mbs::runtime::{ArtifactManager, FaultPlan, MockCompiler, VariantKey};
@@ -40,6 +43,7 @@ fn main() -> ExitCode {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("frontier") => cmd_frontier(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("jobs") => cmd_jobs(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("bench") => cmd_bench(&args),
@@ -94,7 +98,27 @@ USAGE: mbs <subcommand> [flags]
            --overlap off); without --dry-run, short timed epochs run along
            the feasibility boundary — or, with --time-all, over every
            feasible point (the full throughput surface) — needs --model +
-           artifacts
+           artifacts. --device-counts 1,2,4 adds the data-parallel axis:
+           the largest feasible global batch per device count (per-device
+           share = ceil(batch / devices)), emitted as the report's
+           device_axis array.
+  fleet    --devices 4,2,2|gpu0=4,gpu1=2 (MiB) | --spec fleet.json
+           [--dry-run=true] [--out BENCH_fleet.json]
+           [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
+           multi-device data parallelism over named arenas. --dry-run
+           needs no artifacts: it bin-packs the spec's jobs across the
+           devices (first-fit-decreasing, admission as the per-device
+           oracle) and measures shard-assembly scaling — one worker
+           thread per device, each with a thread-local named arena,
+           assembling its contiguous ShardPlan block — vs a solo arm:
+           [--task T] [--size N] [--batch N] [--mu N] [--dataset-len N]
+           [--epochs N] [--seed N] [--prefetch N] [--min-speedup F]
+           (exit non-zero when aggregate/solo < F). Without --dry-run,
+           --model trains data-parallel through train_fleet (needs
+           artifacts); the combined report is bit-identical to the solo
+           run at the fleet's min device capacity.
+           fleet_scaling_efficiency = aggregate / (devices x solo) is
+           trend-tracked by --compare.
   jobs     --spec jobs.json [--capacity-mib N] [--dry-run=true]
            [--faults spec.json] [--out BENCH_jobs.json] [--artifacts dir]
            [--compare prev.json] [--compare-threshold F] [--compare-strict=true]
@@ -426,6 +450,27 @@ fn cmd_frontier(args: &Args) -> Result<(), MbsError> {
     if !dry_run {
         rep.str_field("timed_scope", if time_all { "all" } else { "boundary" });
     }
+    // --device-counts 1,2,4: the data-parallel axis — for each capacity and
+    // device count, the largest global batch whose per-device share
+    // (ceil(batch / devices)) still classifies feasible on one device
+    if let Some(raw) = args.get("device-counts") {
+        let counts: Vec<usize> = parse_list(raw, "--device-counts")?;
+        let axis = frontier::DeviceAxis::sweep(
+            &entry,
+            size,
+            eval_len,
+            &capacities_bytes,
+            &counts,
+            &batches,
+            overlap,
+        )?;
+        println!("{}", axis.render_table().render());
+        println!(
+            "(device axis: per-device share = ceil(batch / devices); a batch is feasible \
+             when the share classifies native or MBS on one device of that capacity)"
+        );
+        rep.field("device_axis", axis.to_json_value());
+    }
     rep.write(&out)?;
     println!("[mbs] wrote {out}");
     Ok(())
@@ -458,6 +503,356 @@ fn boundary_timing(report: &TrainReport) -> frontier::BoundaryTiming {
         stages: report.stages,
         pool: report.pool,
     }
+}
+
+/// `fleet` — multi-device data parallelism over named arenas. Dry-run
+/// needs no artifacts: it bin-packs the spec's jobs across the devices
+/// (first-fit-decreasing with tenancy as the per-device oracle) and
+/// measures shard-assembly scaling — one worker thread per device, each
+/// owning a thread-local named [`Arena`] and staging pool, assembling its
+/// contiguous [`ShardPlan`] block of every mini-batch — against a
+/// one-worker solo arm. Full mode trains data-parallel through
+/// [`train_fleet`] (combined report bit-identical to the solo run at the
+/// fleet's min device capacity). Both emit `BENCH_fleet.json`;
+/// `fleet_scaling_efficiency = aggregate / (devices × solo)` is the
+/// trend key `--compare` gates.
+fn cmd_fleet(args: &Args) -> Result<(), MbsError> {
+    let dry_run = args.get_bool("dry-run");
+    let out = args.get_or("out", "BENCH_fleet.json").to_string();
+    let spec_path = args.get("spec");
+    let fleet = match (args.get("devices"), spec_path) {
+        (Some(list), _) => FleetSpec::parse(list)?,
+        (None, Some(path)) => {
+            FleetSpec::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)?
+        }
+        (None, None) => {
+            return Err(MbsError::Config(
+                "fleet needs --devices 4,2,2 (MiB capacities) or --spec fleet.json".into(),
+            ))
+        }
+    };
+    let roster: Vec<String> = fleet
+        .devices
+        .iter()
+        .map(|d| format!("{}={} MiB", d.name, d.capacity_bytes / MIB))
+        .collect();
+    println!("[mbs] fleet: {} device(s) — {}", fleet.len(), roster.join(", "));
+
+    if dry_run {
+        return fleet_dry_run(args, &fleet, spec_path, &out);
+    }
+
+    // full mode: data-parallel training through the shared runtime —
+    // per-device arenas and upload lanes, global-order execution
+    let cfg = build_config(args)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut engine = Engine::new(manifest)?;
+    let fr = train_fleet(&mut engine, &cfg, &fleet)?;
+    let r = &fr.report;
+    let mut table =
+        Table::new(&["device", "capacity (MiB)", "micro steps", "samples", "peak (MiB)"]);
+    for d in &fr.devices {
+        table.row(&[
+            d.name.clone(),
+            (d.capacity_bytes / MIB).to_string(),
+            d.micro_steps.to_string(),
+            d.samples.to_string(),
+            format!("{:.2}", d.ledger_peak_bytes as f64 / MIB as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    let t = boundary_timing(r);
+    println!(
+        "[mbs] fleet: batch={} mu={} updates={} — {:.1} items/sec, best metric {:.4}",
+        r.batch,
+        r.mu,
+        r.updates,
+        t.items_per_sec,
+        r.best_metric()
+    );
+    let mut rep = BenchReport::new("fleet", "train");
+    rep.uint("devices", fr.devices.len() as u64)
+        .str_field("model", &r.model)
+        .uint("batch", r.batch as u64)
+        .uint("mu", r.mu as u64)
+        .uint("updates", r.updates)
+        .num("items_per_sec", t.items_per_sec, 3)
+        .num("best_metric", r.best_metric(), 6)
+        .num("wall_overlap_efficiency", r.stages.wall_overlap_efficiency(), 4)
+        .field("fleet", fleet_devices_value(&fr.devices));
+    rep.write(&out)?;
+    println!("[mbs] wrote {out}");
+    trend_compare(args, &out)
+}
+
+/// The per-device rows of a train-mode `BENCH_fleet.json`.
+fn fleet_devices_value(devices: &[DeviceReport]) -> JsonValue {
+    JsonValue::Arr(
+        devices
+            .iter()
+            .map(|d| {
+                let mut j = JsonValue::obj();
+                j.push("name", JsonValue::Str(d.name.clone()));
+                j.push("capacity_mib", JsonValue::UInt(d.capacity_bytes / MIB));
+                j.push("micro_steps", JsonValue::UInt(d.micro_steps));
+                j.push("samples", JsonValue::UInt(d.samples));
+                j.push(
+                    "ledger_peak_mib",
+                    JsonValue::fixed(d.ledger_peak_bytes as f64 / MIB as f64, 3),
+                );
+                j
+            })
+            .collect(),
+    )
+}
+
+/// The fleet dry-run: placement over the spec's jobs (if present), then
+/// the two-arm shard-assembly scaling measurement.
+fn fleet_dry_run(
+    args: &Args,
+    fleet: &FleetSpec,
+    spec_path: Option<&str>,
+    out: &str,
+) -> Result<(), MbsError> {
+    // placement: bin-pack the spec's jobs across the devices (specs with a
+    // "devices" array only skip straight to the scaling bench)
+    let placement_value = match spec_path {
+        Some(path) if Json::parse(&std::fs::read_to_string(path)?)?.get("jobs").is_some() => {
+            Some(fleet_placement_dry_run(args, fleet, path)?)
+        }
+        _ => None,
+    };
+
+    let task = args.get_or("task", "classification").to_string();
+    let size: usize = bench_flag(args, "size", 16)?;
+    let batch: usize = bench_flag(args, "batch", 64)?;
+    let mu: usize = bench_flag(args, "mu", 8)?;
+    let dataset_len: usize = bench_flag(args, "dataset-len", 8192)?;
+    let epochs: usize = bench_flag(args, "epochs", 3)?;
+    let seed: u64 = bench_flag(args, "seed", 0)?;
+    let prefetch: usize = bench_flag(args, "prefetch", 2)?;
+    let min_speedup: f64 = bench_flag(args, "min-speedup", 0.0)?;
+    if batch == 0 || mu == 0 || dataset_len == 0 || epochs == 0 {
+        return Err(MbsError::Config(
+            "fleet bench needs positive batch, mu, dataset-len and epochs".into(),
+        ));
+    }
+    let mut cfg = TrainConfig::default_for("fleet-bench");
+    cfg.dataset_len = dataset_len;
+    cfg.eval_len = 0;
+    cfg.seed = seed;
+    let (ds, _eval): (Arc<dyn Dataset>, _) = datasets_for(&task, size, &cfg)?;
+    let devices = fleet.len();
+    println!(
+        "[mbs] fleet: assembly scaling, task={task} size={size} batch={batch} mu={mu} \
+         dataset-len={dataset_len} epochs={epochs} workers={devices}"
+    );
+
+    let solo_secs =
+        fleet_assembly_arm(&ds, fleet, 1, batch, mu, dataset_len, epochs, seed, prefetch)?;
+    let fleet_secs =
+        fleet_assembly_arm(&ds, fleet, devices, batch, mu, dataset_len, epochs, seed, prefetch)?;
+    let total_items = (dataset_len * epochs) as f64;
+    let rate = |secs: f64| if secs > 0.0 { total_items / secs } else { 0.0 };
+    let solo_rate = rate(solo_secs);
+    let aggregate_rate = rate(fleet_secs);
+    let speedup = if solo_rate > 0.0 { aggregate_rate / solo_rate } else { 0.0 };
+    let efficiency = if devices > 0 { speedup / devices as f64 } else { 0.0 };
+    println!(
+        "[mbs] fleet: solo {solo_rate:.1} items/sec, {devices} worker(s) \
+         {aggregate_rate:.1} items/sec — speedup {speedup:.2}x, scaling efficiency \
+         {efficiency:.3}"
+    );
+
+    let mut rep = BenchReport::new("fleet", "dry-run");
+    rep.uint("devices", devices as u64)
+        .uint("total_capacity_mib", fleet.total_capacity() / MIB)
+        .str_field("task", &task)
+        .uint("size", size as u64)
+        .uint("batch", batch as u64)
+        .uint("mu", mu as u64)
+        .uint("dataset_len", dataset_len as u64)
+        .uint("epochs", epochs as u64)
+        .num("solo_items_per_sec", solo_rate, 3)
+        .num("aggregate_items_per_sec", aggregate_rate, 3)
+        .num("speedup", speedup, 4)
+        // the trend key: aggregate over (devices x solo), both co-measured
+        // in this process — a drop means device parallelism stopped paying
+        .num("fleet_scaling_efficiency", efficiency, 4)
+        .field(
+            "fleet",
+            JsonValue::Arr(
+                fleet
+                    .devices
+                    .iter()
+                    .map(|d| {
+                        let mut j = JsonValue::obj();
+                        j.push("name", JsonValue::Str(d.name.clone()));
+                        j.push("capacity_mib", JsonValue::UInt(d.capacity_bytes / MIB));
+                        j
+                    })
+                    .collect(),
+            ),
+        );
+    if let Some(p) = placement_value {
+        rep.field("placement", p);
+    }
+    rep.write(out)?;
+    println!("[mbs] wrote {out}");
+    trend_compare(args, out)?;
+    if speedup < min_speedup {
+        return Err(MbsError::Runtime(format!(
+            "fleet assembly speedup {speedup:.3}x is below --min-speedup {min_speedup:.3}x"
+        )));
+    }
+    Ok(())
+}
+
+/// Placement dry-run: admit the spec's jobs across the fleet's devices and
+/// print the per-job verdict table (device column included). Jobs naming a
+/// `"task"` use the synthetic stand-in models (no artifacts); jobs naming
+/// a `"model"` classify against the real manifest metadata.
+fn fleet_placement_dry_run(
+    args: &Args,
+    fleet: &FleetSpec,
+    spec_path: &str,
+) -> Result<JsonValue, MbsError> {
+    let set = JobSet::load(spec_path)?;
+    let manifest = if set.jobs.iter().any(|j| j.task.is_none()) {
+        Some(Manifest::load(artifacts_dir(args))?)
+    } else {
+        None
+    };
+    let mut requests = Vec::with_capacity(set.jobs.len());
+    for spec in &set.jobs {
+        let entry = match &spec.task {
+            Some(task) => frontier::synthetic_entry(task)?,
+            None => manifest
+                .as_ref()
+                .expect("loaded above: some job names a model")
+                .model(&spec.cfg.model)?
+                .clone(),
+        };
+        requests.push(AdmissionRequest::from_spec(spec, entry));
+    }
+    let plan = plan_placement(&requests, fleet);
+
+    let mut table =
+        Table::new(&["job", "model", "batch", "device", "admission", "mu", "n_smu"]);
+    let mut rows = Vec::with_capacity(requests.len());
+    for (req, p) in requests.iter().zip(&plan.placements) {
+        let mut j = JsonValue::obj();
+        j.push("name", JsonValue::Str(p.name.clone()));
+        j.push("model", JsonValue::Str(req.entry.name.clone()));
+        j.push("batch", JsonValue::UInt(req.batch as u64));
+        j.push("admission", JsonValue::Str(p.label().to_string()));
+        match (&p.device, &p.outcome) {
+            (Some(dev), AdmissionOutcome::Admitted { resolution, .. }) => {
+                table.row(&[
+                    p.name.clone(),
+                    req.entry.name.clone(),
+                    req.batch.to_string(),
+                    dev.clone(),
+                    p.label().to_string(),
+                    resolution.mu.to_string(),
+                    req.batch.div_ceil(resolution.mu).to_string(),
+                ]);
+                j.push("device", JsonValue::Str(dev.clone()));
+                j.push("mu", JsonValue::UInt(resolution.mu as u64));
+                j.push(
+                    "n_smu",
+                    JsonValue::UInt(req.batch.div_ceil(resolution.mu) as u64),
+                );
+            }
+            _ => {
+                table.row(&[
+                    p.name.clone(),
+                    req.entry.name.clone(),
+                    req.batch.to_string(),
+                    "-".into(),
+                    "reject".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                if let AdmissionOutcome::Rejected { reason } = &p.outcome {
+                    println!("[mbs] fleet: '{}' rejected: {reason}", p.name);
+                    j.push("reason", JsonValue::Str(reason.clone()));
+                }
+            }
+        }
+        rows.push(j);
+    }
+    println!("{}", table.render());
+    println!(
+        "[mbs] fleet: {} of {} jobs placed across {} device(s)",
+        plan.placed(),
+        requests.len(),
+        fleet.len()
+    );
+    Ok(JsonValue::Arr(rows))
+}
+
+/// One arm of the fleet assembly bench: `threads` workers, each owning a
+/// thread-local named [`Arena`] (arenas are `Rc`-backed and never cross
+/// threads — the fleet is memory-accounting parallelism) and its own warm
+/// staging pool, assembling its contiguous [`ShardPlan`] block of every
+/// mini-batch. Both arms perform the identical total work (every
+/// micro-batch of every mini-batch of every epoch, assembled exactly
+/// once); the return value is the arm's makespan in seconds.
+#[allow(clippy::too_many_arguments)]
+fn fleet_assembly_arm(
+    ds: &Arc<dyn Dataset>,
+    fleet: &FleetSpec,
+    threads: usize,
+    batch: usize,
+    mu: usize,
+    dataset_len: usize,
+    epochs: usize,
+    seed: u64,
+    prefetch: usize,
+) -> Result<f64, MbsError> {
+    let t0 = Instant::now();
+    let results: Vec<Result<(), MbsError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|d| {
+                let ds = ds.clone();
+                let dev = fleet.devices[d % fleet.devices.len()].clone();
+                s.spawn(move || -> Result<(), MbsError> {
+                    let mut ledger =
+                        Arena::named(&dev.name, dev.capacity_bytes).tenant("assembly");
+                    let pool = BufPool::for_prefetch(prefetch);
+                    pool.warm(BufPool::buffers_for(prefetch), ds.as_ref(), mu);
+                    // staged-input pricing: mu samples of f32-sized x + y
+                    let staged = (mu * (ds.x_elems() + ds.y_elems()) * 4) as u64;
+                    for epoch in 0..epochs {
+                        let plan = EpochPlan::new(dataset_len, batch, seed, epoch as u64);
+                        for b in 0..plan.num_batches() {
+                            let indices = plan.batch_indices(b);
+                            let split = SplitPlan::new(indices.len(), mu);
+                            let (lo, hi) = ShardPlan::new(split.n_smu(), threads).block(d);
+                            for j in lo..hi {
+                                let mut mb = pool.lease();
+                                let a = ledger.alloc("staged shard", staged)?;
+                                loader::assemble_into(&mut mb, ds.as_ref(), indices, mu, j);
+                                std::hint::black_box(&mb);
+                                ledger.free(a)?;
+                                pool.give(mb);
+                            }
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("fleet assembly worker panicked"))
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(t0.elapsed().as_secs_f64())
 }
 
 /// `jobs` — multi-tenant device sharing: admit a job set against one

@@ -24,6 +24,9 @@ use crate::error::{MbsError, Result};
 /// The shared accounting every tenant ledger charges into.
 #[derive(Debug)]
 pub(super) struct ArenaCore {
+    /// Device label naming this arena in every error path, so a fleet
+    /// failure is attributable (`device=…, tenant=…`).
+    pub(super) device: String,
     /// Total device capacity, bytes.
     pub(super) capacity: u64,
     /// Bytes currently allocated across every tenant.
@@ -41,23 +44,23 @@ pub(super) struct ArenaCore {
 
 impl ArenaCore {
     /// Charge `bytes` against the shared capacity; fails with a structured
-    /// OOM naming `tag` when the request does not fit *right now* — this
-    /// failure path IS the every-instant cross-job capacity assertion.
-    pub(super) fn charge(&mut self, tag: &str, bytes: u64) -> Result<()> {
-        // armed injected fault: tags carry the "{tenant}: {tag}" prefix
-        // (Ledger::alloc), so the match is per-tenant — sibling jobs'
+    /// OOM naming the device, tenant and `tag` when the request does not
+    /// fit *right now* — this failure path IS the every-instant cross-job
+    /// capacity assertion.
+    pub(super) fn charge(&mut self, tenant: &str, tag: &str, bytes: u64) -> Result<()> {
+        // armed injected fault: the match is per-tenant — sibling jobs'
         // charges pass through untouched. One-shot: firing disarms.
-        let fault_hits = self
-            .fault
-            .as_ref()
-            .is_some_and(|(tenant, _)| tag.starts_with(&format!("{tenant}: ")));
+        let fault_hits = self.fault.as_ref().is_some_and(|(victim, _)| victim == tenant);
         if fault_hits {
             let (_, note) = self.fault.take().unwrap_or_default();
             return Err(MbsError::Oom {
                 needed_bytes: self.used.saturating_add(bytes),
                 available_bytes: self.capacity - self.used,
                 capacity_bytes: self.capacity,
-                context: format!("arena alloc '{tag}' (injected fault: {note})"),
+                context: format!(
+                    "arena alloc '{tag}' (injected fault: {note}; device={}, tenant={tenant})",
+                    self.device
+                ),
             });
         }
         if self.used.saturating_add(bytes) > self.capacity {
@@ -65,7 +68,10 @@ impl ArenaCore {
                 needed_bytes: self.used.saturating_add(bytes),
                 available_bytes: self.capacity - self.used,
                 capacity_bytes: self.capacity,
-                context: format!("arena alloc '{tag}'"),
+                context: format!(
+                    "arena alloc '{tag}' (device={}, tenant={tenant})",
+                    self.device
+                ),
             });
         }
         self.used += bytes;
@@ -107,10 +113,19 @@ pub struct Arena {
 }
 
 impl Arena {
-    /// A fresh arena for a device with `capacity` bytes.
+    /// A fresh arena for a device with `capacity` bytes, under the default
+    /// device label `device0` (the solo-device story).
     pub fn new(capacity: u64) -> Arena {
+        Arena::named("device0", capacity)
+    }
+
+    /// A fresh arena for a *named* device with `capacity` bytes — the
+    /// fleet constructor. The name labels every error this arena raises
+    /// (`device=…, tenant=…`), so multi-device failures are attributable.
+    pub fn named(device: &str, capacity: u64) -> Arena {
         Arena {
             core: Rc::new(RefCell::new(ArenaCore {
+                device: device.to_string(),
                 capacity,
                 used: 0,
                 peak: 0,
@@ -124,6 +139,11 @@ impl Arena {
     /// `--capacity-mib` unit).
     pub fn with_mib(capacity_mib: u64) -> Arena {
         Arena::new(capacity_mib * MIB)
+    }
+
+    /// The device label errors from this arena carry.
+    pub fn device(&self) -> String {
+        self.core.borrow().device.clone()
     }
 
     /// Create a per-tenant ledger view charging into this arena. The name
@@ -218,6 +238,25 @@ mod tests {
         let err = a.alloc("resident", 11).unwrap_err();
         assert!(err.is_oom());
         assert!(err.to_string().contains("job-a"), "{err}");
+    }
+
+    #[test]
+    fn oom_names_the_device_and_tenant() {
+        // fleet attribution: every capacity refusal carries the device
+        // label alongside the tenant, so a multi-device failure pinpoints
+        // *which* simulated device refused the charge
+        let arena = Arena::named("gpu1", 10);
+        assert_eq!(arena.device(), "gpu1");
+        let mut a = arena.tenant("job-a");
+        let err = a.alloc("resident", 11).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("device=gpu1"), "{msg}");
+        assert!(msg.contains("tenant=job-a"), "{msg}");
+        // the solo constructor keeps a stable default label
+        let solo = Arena::new(10);
+        assert_eq!(solo.device(), "device0");
+        let err = solo.tenant("t").alloc("x", 11).unwrap_err();
+        assert!(err.to_string().contains("device=device0"), "{err}");
     }
 
     #[test]

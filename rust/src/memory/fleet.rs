@@ -1,0 +1,315 @@
+//! A fleet of simulated devices with heterogeneous capacities.
+//!
+//! The paper deliberately scopes MBS to one device; composing its
+//! streaming with data parallelism needs the next rung of the memory
+//! model: several [`Arena`]s — one per simulated device, each with its own
+//! capacity and cross-tenant accounting — addressed by name. A
+//! [`FleetSpec`] is the declarative side (parsed from a `fleet.json`
+//! `"devices"` array or a `--devices` CLI list); [`Fleet`] materializes it
+//! as named arenas whose error paths stay attributable
+//! (`device=…, tenant=…` — see [`Arena::named`]).
+//!
+//! Like the single arena, a fleet is single-threaded by design: the
+//! data-parallel *executor* keeps every device-facing operation on the
+//! engine thread (the PJRT client is `Rc`-backed), so the fleet is
+//! memory-accounting parallelism, not thread parallelism. The host-side
+//! assembly benchmark (`mbs fleet --dry-run`) constructs one arena *per
+//! worker thread* instead of sharing a `Fleet` across threads.
+
+use crate::error::{MbsError, Result};
+use crate::util::json::Json;
+
+use super::{Arena, MIB};
+
+/// One simulated device of a fleet: a name and a capacity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceSpec {
+    /// Device label (unique within the fleet; names error paths).
+    pub name: String,
+    /// Device capacity, bytes.
+    pub capacity_bytes: u64,
+}
+
+/// Declarative fleet description: an ordered list of named device
+/// capacities. Order is load-bearing — placement searches devices in spec
+/// order, and the data-parallel splitter assigns shard `d` to device `d`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetSpec {
+    /// The devices, in spec order.
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl FleetSpec {
+    /// A uniform fleet of `count` devices named `dev0..devN-1`, each with
+    /// `capacity_bytes` — the shape the frontier's device-count axis and
+    /// the bit-identity oracle sweep.
+    pub fn uniform(count: usize, capacity_bytes: u64) -> FleetSpec {
+        FleetSpec {
+            devices: (0..count)
+                .map(|d| DeviceSpec { name: format!("dev{d}"), capacity_bytes })
+                .collect(),
+        }
+    }
+
+    /// Parse a `--devices` CLI list of per-device MiB capacities:
+    /// `"4,2,2"` (auto-named `dev0..`) or `"gpu0=4,gpu1=2"` (explicit
+    /// names). Mixing the two spellings is allowed per entry.
+    pub fn parse(raw: &str) -> Result<FleetSpec> {
+        let mut devices = Vec::new();
+        for (i, part) in raw.split(',').enumerate() {
+            let part = part.trim();
+            let (name, cap) = match part.split_once('=') {
+                Some((n, c)) => (n.trim().to_string(), c.trim()),
+                None => (format!("dev{i}"), part),
+            };
+            let capacity_mib: u64 = cap.parse().map_err(|_| {
+                MbsError::Config(format!("--devices: bad capacity '{part}' (want MiB integer)"))
+            })?;
+            devices.push(DeviceSpec { name, capacity_bytes: capacity_mib * MIB });
+        }
+        let spec = FleetSpec { devices };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse the `"devices"` array of a `fleet.json` document:
+    ///
+    /// ```json
+    /// { "devices": [ {"name": "gpu0", "capacity_mib": 4},
+    ///                {"name": "gpu1", "capacity_mib": 2} ] }
+    /// ```
+    pub fn from_json(root: &Json) -> Result<FleetSpec> {
+        let arr = root
+            .get("devices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| MbsError::Config("fleet spec: missing 'devices' array".into()))?;
+        let mut devices = Vec::new();
+        for (i, v) in arr.iter().enumerate() {
+            let obj = v.as_obj().ok_or_else(|| {
+                MbsError::Config(format!("fleet spec: device #{i} must be an object"))
+            })?;
+            let name = match obj.get("name").and_then(Json::as_str) {
+                Some(n) => n.to_string(),
+                None => format!("dev{i}"),
+            };
+            let capacity_mib = obj
+                .get("capacity_mib")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| {
+                    MbsError::Config(format!(
+                        "fleet spec: device '{name}' needs a positive integer 'capacity_mib'"
+                    ))
+                })?;
+            devices.push(DeviceSpec { name, capacity_bytes: capacity_mib * MIB });
+        }
+        let spec = FleetSpec { devices };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural checks: at least one device, unique names, positive
+    /// capacities.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.is_empty() {
+            return Err(MbsError::Config("fleet spec: needs at least one device".into()));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for d in &self.devices {
+            if d.name.is_empty() {
+                return Err(MbsError::Config("fleet spec: empty device name".into()));
+            }
+            if d.capacity_bytes == 0 {
+                return Err(MbsError::Config(format!(
+                    "fleet spec: device '{}' has zero capacity",
+                    d.name
+                )));
+            }
+            if !seen.insert(d.name.as_str()) {
+                return Err(MbsError::Config(format!(
+                    "fleet spec: duplicate device name '{}'",
+                    d.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Is the fleet empty? (Never true for a validated spec.)
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Sum of every device's capacity, bytes.
+    pub fn total_capacity(&self) -> u64 {
+        self.devices.iter().map(|d| d.capacity_bytes).sum()
+    }
+
+    /// The smallest device capacity, bytes (0 for an empty spec). The
+    /// data-parallel planner resolves `mu` against this: one global split
+    /// plan must fit *every* device.
+    pub fn min_capacity(&self) -> u64 {
+        self.devices.iter().map(|d| d.capacity_bytes).min().unwrap_or(0)
+    }
+
+    /// Materialize the spec as live arenas.
+    pub fn build(&self) -> Fleet {
+        Fleet::new(self)
+    }
+}
+
+/// A fleet of live, named [`Arena`]s — the runtime side of a
+/// [`FleetSpec`].
+///
+/// ```
+/// use mbs::memory::{FleetSpec, MIB};
+///
+/// let fleet = FleetSpec::parse("gpu0=4,gpu1=2").unwrap().build();
+/// assert_eq!(fleet.len(), 2);
+/// assert_eq!(fleet.arena(1).capacity(), 2 * MIB);
+/// let mut t = fleet.arena(1).tenant("job");
+/// let err = t.alloc("resident", 3 * MIB).unwrap_err();
+/// assert!(err.to_string().contains("device=gpu1"));
+/// ```
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    devices: Vec<(String, Arena)>,
+}
+
+impl Fleet {
+    /// Build one named arena per device of the spec.
+    pub fn new(spec: &FleetSpec) -> Fleet {
+        Fleet {
+            devices: spec
+                .devices
+                .iter()
+                .map(|d| (d.name.clone(), Arena::named(&d.name, d.capacity_bytes)))
+                .collect(),
+        }
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Is the fleet empty? (Never true when built from a validated spec.)
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Device arena by rank (panics out of range, like slice indexing).
+    pub fn arena(&self, rank: usize) -> &Arena {
+        &self.devices[rank].1
+    }
+
+    /// Device name by rank.
+    pub fn name(&self, rank: usize) -> &str {
+        &self.devices[rank].0
+    }
+
+    /// Device arena by name.
+    pub fn by_name(&self, name: &str) -> Option<&Arena> {
+        self.devices.iter().find(|(n, _)| n == name).map(|(_, a)| a)
+    }
+
+    /// Iterate `(name, arena)` in rank order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Arena)> {
+        self.devices.iter().map(|(n, a)| (n.as_str(), a))
+    }
+
+    /// Sum of every device's capacity, bytes.
+    pub fn total_capacity(&self) -> u64 {
+        self.devices.iter().map(|(_, a)| a.capacity()).sum()
+    }
+
+    /// Sum of live bytes across every device.
+    pub fn total_used(&self) -> u64 {
+        self.devices.iter().map(|(_, a)| a.used()).sum()
+    }
+
+    /// The largest per-device high-water mark — each device's peak never
+    /// exceeds its own capacity by construction, so this is the fleet's
+    /// "worst device pressure" diagnostic.
+    pub fn max_device_peak(&self) -> u64 {
+        self.devices.iter().map(|(_, a)| a.peak()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_devices_list() {
+        let spec = FleetSpec::parse("4,2,2").unwrap();
+        assert_eq!(spec.len(), 3);
+        assert_eq!(spec.devices[0], DeviceSpec { name: "dev0".into(), capacity_bytes: 4 * MIB });
+        assert_eq!(spec.devices[2].name, "dev2");
+        assert_eq!(spec.total_capacity(), 8 * MIB);
+        assert_eq!(spec.min_capacity(), 2 * MIB);
+    }
+
+    #[test]
+    fn parse_named_devices() {
+        let spec = FleetSpec::parse("gpu0=4, gpu1=2").unwrap();
+        assert_eq!(spec.devices[0].name, "gpu0");
+        assert_eq!(spec.devices[1].capacity_bytes, 2 * MIB);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_duplicates() {
+        assert!(FleetSpec::parse("4,x").is_err());
+        assert!(FleetSpec::parse("a=4,a=2").is_err());
+        assert!(FleetSpec::parse("0").is_err(), "zero capacity must be rejected");
+        assert!(FleetSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let root = Json::parse(
+            r#"{"devices": [{"name": "big", "capacity_mib": 8},
+                            {"capacity_mib": 2}]}"#,
+        )
+        .unwrap();
+        let spec = FleetSpec::from_json(&root).unwrap();
+        assert_eq!(spec.devices[0].name, "big");
+        // unnamed devices get rank names
+        assert_eq!(spec.devices[1].name, "dev1");
+        assert!(FleetSpec::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn uniform_fleet_shape() {
+        let spec = FleetSpec::uniform(4, MIB);
+        assert_eq!(spec.len(), 4);
+        assert!(spec.devices.iter().all(|d| d.capacity_bytes == MIB));
+        assert_eq!(spec.devices[3].name, "dev3");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_arenas_are_independent_and_attributable() {
+        let fleet = FleetSpec::parse("a=1,b=2").unwrap().build();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet.total_capacity(), 3 * MIB);
+        let mut ta = fleet.arena(0).tenant("job");
+        let mut tb = fleet.by_name("b").unwrap().tenant("job");
+        // capacities are per-device, not pooled: device a refuses what
+        // device b admits
+        assert!(ta.alloc("x", 2 * MIB).is_err());
+        let id = tb.alloc("x", 2 * MIB).unwrap();
+        assert_eq!(fleet.total_used(), 2 * MIB);
+        assert_eq!(fleet.max_device_peak(), 2 * MIB);
+        // the refusal names the refusing device
+        let msg = ta.alloc("x", 2 * MIB).unwrap_err().to_string();
+        assert!(msg.contains("device=a"), "{msg}");
+        tb.free(id).unwrap();
+        assert_eq!(fleet.total_used(), 0);
+        assert_eq!(fleet.name(1), "b");
+    }
+}

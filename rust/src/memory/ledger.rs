@@ -73,13 +73,17 @@ impl Ledger {
         &self.tenant
     }
 
+    /// The device label of the arena this ledger charges into (solo
+    /// ledgers report the default `device0`).
+    pub fn device(&self) -> String {
+        self.core.borrow().device.clone()
+    }
+
     /// Allocate `bytes` under `tag`; fails with a structured OOM when the
     /// request does not fit the *shared* capacity right now — with sibling
     /// tenants, their live bytes count too.
     pub fn alloc(&mut self, tag: &str, bytes: u64) -> Result<AllocId> {
-        self.core
-            .borrow_mut()
-            .charge(&format!("{}: {tag}", self.tenant), bytes)?;
+        self.core.borrow_mut().charge(&self.tenant, tag, bytes)?;
         let id = AllocId(self.next_id);
         self.next_id += 1;
         self.used += bytes;
@@ -88,7 +92,8 @@ impl Ledger {
         Ok(id)
     }
 
-    /// Release a live allocation; freeing twice is a runtime error.
+    /// Release a live allocation; freeing twice is a runtime error (named
+    /// with the device and tenant, like every arena error path).
     pub fn free(&mut self, id: AllocId) -> Result<()> {
         match self.live.remove(&id) {
             Some((_, bytes)) => {
@@ -96,7 +101,11 @@ impl Ledger {
                 self.core.borrow_mut().release(bytes);
                 Ok(())
             }
-            None => Err(MbsError::Runtime(format!("double free of {id:?}"))),
+            None => Err(MbsError::Runtime(format!(
+                "double free of {id:?} (device={}, tenant={})",
+                self.core.borrow().device,
+                self.tenant
+            ))),
         }
     }
 
@@ -220,7 +229,19 @@ mod tests {
         let mut l = Ledger::new(10);
         let a = l.alloc("a", 5).unwrap();
         l.free(a).unwrap();
-        assert!(l.free(a).is_err());
+        let err = l.free(a).unwrap_err();
+        // pipeline misuse is attributable just like OOM
+        let msg = err.to_string();
+        assert!(msg.contains("device=device0"), "{msg}");
+        assert!(msg.contains("tenant=device"), "{msg}");
+    }
+
+    #[test]
+    fn ledger_reports_its_arena_device() {
+        let arena = crate::memory::Arena::named("npu3", 64);
+        let l = arena.tenant("job");
+        assert_eq!(l.device(), "npu3");
+        assert_eq!(Ledger::new(1).device(), "device0");
     }
 
     #[test]

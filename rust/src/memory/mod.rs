@@ -24,9 +24,11 @@
 //! (`coordinator/tenancy` plans admission against it).
 
 pub mod arena;
+pub mod fleet;
 pub mod ledger;
 
 pub use arena::Arena;
+pub use fleet::{DeviceSpec, Fleet, FleetSpec};
 pub use ledger::Ledger;
 
 use crate::error::{MbsError, Result};

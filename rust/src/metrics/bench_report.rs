@@ -293,7 +293,12 @@ impl CompareOutcome {
 /// `recovered_fraction` — `BENCH_chaos.json`'s recovered-over-fired ratio
 /// from the fault-space sweep — is likewise counter arithmetic and gates
 /// the recovery contract: a drop means injection points that used to
-/// replay cleanly started evicting (or worse).
+/// replay cleanly started evicting (or worse). `fleet_scaling_efficiency`
+/// — `BENCH_fleet.json`'s aggregate throughput over `devices ×` the solo
+/// arm's, both measured in the same process on the same machine — is a
+/// co-measured ratio like `overlap_efficiency`, and gates the
+/// data-parallel scaling story: a drop means adding simulated devices
+/// stopped buying host-side assembly throughput.
 pub fn is_trend_key(key: &str) -> bool {
     key.ends_with("items_per_sec")
         || key == "pooled_speedup"
@@ -301,6 +306,7 @@ pub fn is_trend_key(key: &str) -> bool {
         || key == "wall_overlap_efficiency"
         || key == "warm_hit_rate"
         || key == "recovered_fraction"
+        || key == "fleet_scaling_efficiency"
 }
 
 fn collect_numeric(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
@@ -511,6 +517,10 @@ mod tests {
         // the chaos sweep's recovered-over-fired ratio gates the recovery
         // contract; its raw per-surface counters are not trend keys
         assert!(is_trend_key("recovered_fraction"));
+        // the fleet bench's aggregate-over-(devices x solo) ratio gates the
+        // data-parallel scaling story; device counts and peaks do not
+        assert!(is_trend_key("fleet_scaling_efficiency"));
+        assert!(!is_trend_key("devices"));
         assert!(!is_trend_key("recovered"));
         assert!(!is_trend_key("hung"));
         assert!(!is_trend_key("cold_compiles"));

@@ -1,0 +1,282 @@
+//! Fleet tests: the artifact-free dry-run surface (spec parsing, the
+//! committed smoke spec's placement, the frontier's device-count axis)
+//! plus the artifact-gated headline oracle — a data-parallel
+//! [`train_fleet`](mbs::coordinator::train_fleet) run's combined
+//! `TrainReport` must be **bit-identical** (`f64::to_bits`) to the solo
+//! `train` run of the same configuration at the fleet's min per-device
+//! capacity. Gating follows rust/docs/TESTING.md.
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use mbs::coordinator::frontier::{synthetic_entry, DeviceAxis};
+use mbs::coordinator::tenancy::{transient_bytes, AdmissionRequest};
+use mbs::coordinator::{plan_placement, train_fleet};
+use mbs::memory::{FleetSpec, Footprint, MIB};
+use mbs::util::json::Json;
+use mbs::{JobSet, MicroBatchSpec, TrainConfig};
+
+// ---------------------------------------------------------------------
+// dry-run surface: no artifacts needed
+// ---------------------------------------------------------------------
+
+#[test]
+fn device_spec_parsing_forms() {
+    let bare = FleetSpec::parse("4,2,2").expect("bare list");
+    assert_eq!(bare.len(), 3);
+    assert_eq!(bare.devices[0].name, "dev0");
+    assert_eq!(bare.devices[0].capacity_bytes, 4 * MIB);
+    assert_eq!(bare.min_capacity(), 2 * MIB);
+    assert_eq!(bare.total_capacity(), 8 * MIB);
+
+    let named = FleetSpec::parse("gpu0=4, gpu1=2").expect("named list");
+    assert_eq!(named.devices[1].name, "gpu1");
+    assert_eq!(named.devices[1].capacity_bytes, 2 * MIB);
+
+    assert!(FleetSpec::parse("").is_err(), "empty list must be rejected");
+    assert!(FleetSpec::parse("a=1,a=2").is_err(), "duplicate names must be rejected");
+
+    let uniform = FleetSpec::uniform(3, MIB);
+    assert_eq!(uniform.len(), 3);
+    assert_eq!(uniform.devices[2].name, "dev2");
+}
+
+/// The committed CI smoke spec must keep parsing as BOTH a fleet spec
+/// (its `devices` array) and a job set (its `jobs` array), and its
+/// placement must genuinely exercise multi-device spreading — otherwise
+/// the `fleet` CI job degenerates to a single-device test.
+#[test]
+fn committed_fleet_smoke_spec_parses_and_places_across_devices() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("specs/fleet-smoke.json");
+    let text = std::fs::read_to_string(&path).expect("committed spec readable");
+    let fleet = FleetSpec::from_json(&Json::parse(&text).expect("valid json"))
+        .expect("devices array parses");
+    assert_eq!(fleet.len(), 3);
+    assert_eq!(fleet.devices[0].name, "gpu0");
+    assert!(
+        fleet.devices[0].capacity_bytes > fleet.devices[1].capacity_bytes,
+        "smoke fleet must be heterogeneous"
+    );
+
+    let set = JobSet::from_json_str(&text).expect("jobs array parses");
+    let requests: Vec<AdmissionRequest> = set
+        .jobs
+        .iter()
+        .map(|s| {
+            let task = s.task.as_deref().expect("smoke jobs are synthetic");
+            AdmissionRequest::from_spec(s, synthetic_entry(task).expect("known task"))
+        })
+        .collect();
+    let plan = plan_placement(&requests, &fleet);
+    assert_eq!(plan.placements.len(), requests.len());
+    assert!(plan.placed() >= 2, "smoke spec must place at least two jobs");
+    let used: BTreeSet<&str> =
+        plan.placements.iter().filter_map(|p| p.device.as_deref()).collect();
+    assert!(used.len() >= 2, "placement must spread across devices, got {used:?}");
+    // every assigned device exists in the spec
+    for p in &plan.placements {
+        if let Some(d) = &p.device {
+            assert!(fleet.devices.iter().any(|dev| &dev.name == d), "unknown device {d}");
+        }
+    }
+    // determinism: same inputs, same assignment
+    let again = plan_placement(&requests, &fleet);
+    for (a, b) in plan.placements.iter().zip(&again.placements) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.label(), b.label());
+    }
+}
+
+/// The device-count axis is monotone: more devices shrink the per-device
+/// share (`ceil(batch / devices)`), so the largest feasible — and largest
+/// native — global batch can only grow with the device count.
+#[test]
+fn device_axis_is_monotone_in_device_count_for_every_task() {
+    for task in ["classification", "segmentation", "lm"] {
+        let entry = synthetic_entry(task).expect("synthetic task");
+        let axis = DeviceAxis::sweep(
+            &entry,
+            entry.default_size,
+            0,
+            &[2 * MIB, 8 * MIB],
+            &[1, 2, 4, 8],
+            &[8, 32, 64, 128, 256],
+            true,
+        )
+        .expect("axis sweep");
+        for &cap in &axis.capacities_bytes {
+            let mut per_count: Vec<_> =
+                axis.points.iter().filter(|p| p.capacity_bytes == cap).collect();
+            per_count.sort_by_key(|p| p.devices);
+            for w in per_count.windows(2) {
+                assert!(
+                    w[1].max_feasible_batch.unwrap_or(0)
+                        >= w[0].max_feasible_batch.unwrap_or(0),
+                    "task {task}: feasible frontier shrank with more devices: {w:?}"
+                );
+                assert!(
+                    w[1].max_native_batch.unwrap_or(0) >= w[0].max_native_batch.unwrap_or(0),
+                    "task {task}: native frontier shrank with more devices: {w:?}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// artifact-gated: the fleet-identity oracle
+// ---------------------------------------------------------------------
+
+/// A tight per-device capacity for the oracle runs: the resident state
+/// plus one mu=8 transient at batch 24 / eval 16 — forces the MBS regime
+/// (the global batch's native step cannot fit).
+fn oracle_capacity(engine: &mbs::Engine, overlap: bool) -> u64 {
+    let entry = engine.manifest().model("microresnet18").unwrap().clone();
+    let fp = Footprint::from_manifest(&entry, entry.variant(16, 8).unwrap());
+    fp.resident_bytes() + transient_bytes(&fp, 8, 24, 16, overlap)
+}
+
+fn oracle_cfg(overlap: bool) -> TrainConfig {
+    TrainConfig::builder("microresnet18")
+        .batch(24)
+        .epochs(2)
+        .dataset_len(48)
+        .eval_len(16)
+        .seed(3)
+        .overlap(overlap)
+        .build()
+}
+
+/// Assert every numeric stat of the two reports matches bit for bit.
+fn assert_bit_identical(fleet: &mbs::TrainReport, solo: &mbs::TrainReport, label: &str) {
+    assert_eq!(fleet.mu, solo.mu, "{label}: mu");
+    assert_eq!(fleet.updates, solo.updates, "{label}: updates");
+    assert_eq!(fleet.train_epochs.len(), solo.train_epochs.len(), "{label}");
+    for (a, b) in fleet.train_epochs.iter().zip(&solo.train_epochs) {
+        assert_eq!(
+            a.mean_loss.to_bits(),
+            b.mean_loss.to_bits(),
+            "{label}: epoch {} train loss diverged: {} vs {}",
+            a.epoch,
+            a.mean_loss,
+            b.mean_loss
+        );
+        assert_eq!(a.primary_metric.to_bits(), b.primary_metric.to_bits(), "{label}");
+        assert_eq!(a.samples, b.samples, "{label}");
+        assert_eq!(a.micro_steps, b.micro_steps, "{label}");
+        assert_eq!(a.updates, b.updates, "{label}");
+    }
+    assert_eq!(fleet.eval_epochs.len(), solo.eval_epochs.len(), "{label}");
+    for (a, b) in fleet.eval_epochs.iter().zip(&solo.eval_epochs) {
+        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "{label}: eval loss");
+        assert_eq!(a.primary_metric.to_bits(), b.primary_metric.to_bits(), "{label}");
+        assert_eq!(a.samples, b.samples, "{label}");
+    }
+    assert_eq!(
+        fleet.final_eval.mean_loss.to_bits(),
+        solo.final_eval.mean_loss.to_bits(),
+        "{label}: final eval"
+    );
+    assert_eq!(
+        fleet.final_eval.primary_metric.to_bits(),
+        solo.final_eval.primary_metric.to_bits(),
+        "{label}: final metric"
+    );
+}
+
+/// THE oracle: a 2-device data-parallel run (serial pipeline) must be
+/// bit-identical to the solo run with the fleet's mu pinned — sharding
+/// only moves *where* memory is charged, never what the runtime computes.
+#[test]
+fn fleet_report_bit_identical_to_solo() {
+    let Some(mut engine) = common::engine() else { return };
+    let capacity = oracle_capacity(&engine, false);
+    let spec = FleetSpec::uniform(2, capacity);
+    let cfg = oracle_cfg(false);
+    let fr = train_fleet(&mut engine, &cfg, &spec).expect("fleet run");
+    assert_eq!(fr.devices.len(), 2);
+
+    // every device actually worked, was charged within its own capacity,
+    // and the shares add up to the whole run
+    let total_micro: u64 = fr.devices.iter().map(|d| d.micro_steps).sum();
+    let total_samples: u64 = fr.devices.iter().map(|d| d.samples).sum();
+    let expect_micro: u64 = fr
+        .report
+        .train_epochs
+        .iter()
+        .chain(&fr.report.eval_epochs)
+        .map(|e| e.micro_steps as u64)
+        .sum();
+    let expect_samples: u64 = fr
+        .report
+        .train_epochs
+        .iter()
+        .chain(&fr.report.eval_epochs)
+        .map(|e| e.samples as u64)
+        .sum();
+    assert_eq!(total_micro, expect_micro, "device micro-step shares must partition the run");
+    assert_eq!(total_samples, expect_samples, "device sample shares must partition the run");
+    for d in &fr.devices {
+        assert!(d.micro_steps > 0, "device {} idled for the whole run", d.name);
+        assert!(
+            d.ledger_peak_bytes <= d.capacity_bytes,
+            "device {} peak {} exceeds its capacity {}",
+            d.name,
+            d.ledger_peak_bytes,
+            d.capacity_bytes
+        );
+    }
+
+    // the solo arm: identical configuration, the fleet's mu pinned, on a
+    // roomy single device
+    let mut solo_cfg = cfg.clone();
+    solo_cfg.mu = MicroBatchSpec::Fixed(fr.report.mu);
+    solo_cfg.capacity_mib = Some(capacity.div_ceil(MIB) + 16);
+    let solo = mbs::train(&mut engine, &solo_cfg).expect("solo run");
+    assert_bit_identical(&fr.report, &solo, "serial 2-device fleet");
+}
+
+/// The async-lane variant: per-device upload lanes, global-order
+/// completion — the wall-clock overlap machinery must not cost a single
+/// bit either.
+#[test]
+fn async_fleet_bit_identical_to_solo() {
+    let Some(mut engine) = common::engine() else { return };
+    let capacity = oracle_capacity(&engine, true);
+    let spec = FleetSpec::uniform(2, capacity);
+    let cfg = oracle_cfg(true);
+    let fr = train_fleet(&mut engine, &cfg, &spec).expect("async fleet run");
+    assert!(fr.report.overlap, "fleet run lost its lane mode");
+    for d in &fr.devices {
+        assert!(d.micro_steps > 0, "device {} idled", d.name);
+        assert!(d.ledger_peak_bytes <= d.capacity_bytes, "device {} over capacity", d.name);
+    }
+
+    let mut solo_cfg = cfg.clone();
+    solo_cfg.mu = MicroBatchSpec::Fixed(fr.report.mu);
+    solo_cfg.capacity_mib = Some(capacity.div_ceil(MIB) + 16);
+    let solo = mbs::train(&mut engine, &solo_cfg).expect("solo async run");
+    assert_bit_identical(&fr.report, &solo, "async 2-device fleet");
+}
+
+/// Degenerate fleet: ONE device at an MiB-aligned capacity must match the
+/// solo run at the same capacity under `Auto` mu on both sides — not just
+/// the same losses, the same planner decision.
+#[test]
+fn single_device_fleet_matches_solo_at_equal_capacity() {
+    let Some(mut engine) = common::engine() else { return };
+    let capacity_mib = oracle_capacity(&engine, false).div_ceil(MIB);
+    let spec = FleetSpec::uniform(1, capacity_mib * MIB);
+    let cfg = oracle_cfg(false);
+    let fr = train_fleet(&mut engine, &cfg, &spec).expect("1-device fleet run");
+    assert_eq!(fr.devices.len(), 1);
+
+    let mut solo_cfg = cfg.clone();
+    solo_cfg.capacity_mib = Some(capacity_mib);
+    let solo = mbs::train(&mut engine, &solo_cfg).expect("solo run");
+    assert_eq!(fr.report.mu, solo.mu, "Auto resolution must agree at equal capacity");
+    assert_bit_identical(&fr.report, &solo, "1-device fleet");
+}
